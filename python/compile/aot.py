@@ -1,0 +1,95 @@
+"""AOT: lower the L2 graphs to HLO text + a manifest for the Rust runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the `xla` rust crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+
+The manifest (artifacts/manifest.txt) is a plain-text table, one
+artifact per line:
+
+    spmm_ell <R> <L> <K> <N> <file>
+    matmul   <M> <K> <N> <file>
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# The shape configs compiled by default. The Rust TileExecutor picks the
+# smallest config that fits a tile and zero-pads up to it; tiles larger
+# than every config fall back to the native kernel (counted + reported).
+SPMM_CONFIGS = [
+    # (R, L, K, N)
+    (64, 32, 64, 32),
+    (128, 64, 128, 64),
+    (256, 64, 256, 128),
+    (256, 128, 256, 128),
+    (256, 64, 256, 256),
+]
+
+MATMUL_CONFIGS = [
+    # (M, K, N)
+    (128, 128, 128),
+    (256, 256, 128),
+]
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="only the smallest config (CI)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    spmm_cfgs = SPMM_CONFIGS[:1] if args.quick else SPMM_CONFIGS
+    mm_cfgs = MATMUL_CONFIGS[:1] if args.quick else MATMUL_CONFIGS
+
+    for (r, l, k, n) in spmm_cfgs:
+        name = f"spmm_ell_r{r}_l{l}_k{k}_n{n}.hlo.txt"
+        text = to_hlo_text(model.spmm_tile, model.spmm_tile_specs(r, l, k, n))
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"spmm_ell {r} {l} {k} {n} {name}")
+        print(f"lowered spmm_ell R={r} L={l} K={k} N={n} -> {name} ({len(text)} chars)")
+
+    for (m, k, n) in mm_cfgs:
+        name = f"matmul_m{m}_k{k}_n{n}.hlo.txt"
+        text = to_hlo_text(model.matmul_tile, model.matmul_tile_specs(m, k, n))
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"matmul {m} {k} {n} {name}")
+        print(f"lowered matmul M={m} K={k} N={n} -> {name} ({len(text)} chars)")
+
+    # One GNN layer artifact for the end-to-end example.
+    r, l, k, n, feat = 256, 64, 256, 128, 128
+    name = f"gnn_layer_r{r}_l{l}_k{k}_n{n}_f{feat}.hlo.txt"
+    text = to_hlo_text(model.gnn_layer, model.gnn_layer_specs(r, l, k, n, feat))
+    with open(os.path.join(args.out_dir, name), "w") as f:
+        f.write(text)
+    manifest.append(f"gnn_layer {r} {l} {k} {n} {feat} {name}")
+    print(f"lowered gnn_layer -> {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""L1: K-blocked dense tile matmul Pallas kernel.
+
+The MXU-shaped companion to the ELL SpMM kernel: used for the
+dense×dense sub-products (and as the MXU roofline reference point in
+EXPERIMENTS.md §Perf). Blocks are sized for the 128×128 systolic array;
+the f32 accumulator is carried across the K grid dimension in the output
+ref, with the k==0 step initializing it from C (so the kernel computes
+C + A·B like the SpMM kernel).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, c_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+def matmul(a, b, c, *, bm=128, bn=128, bk=128):
+    """C + A·B, all dense f32. Shapes must divide the block sizes."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and c.shape == (m, n)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b, c)
+
+
+def vmem_bytes(bm, bn, bk):
+    """VMEM working set per grid step (A, B, C blocks + accumulator)."""
+    return 4 * (bm * bk + bk * bn + 2 * bm * bn)

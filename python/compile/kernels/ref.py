@@ -1,0 +1,45 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest checks every Pallas
+kernel against these under interpret mode, and the Rust runtime's
+numerics are transitively anchored here (rust integration tests compare
+PJRT results against the native Rust kernel, which is itself tested
+against dense references).
+"""
+
+import jax.numpy as jnp
+
+
+def spmm_ell_ref(vals, cols, b, c):
+    """C + A·B where A is ELL-packed.
+
+    vals: (R, L) f32 — padded per-row nonzero values (0 padding).
+    cols: (R, L) i32 — padded per-row column indices (0 padding; safe
+        because the padded value is 0).
+    b:    (K, N) f32 dense.
+    c:    (R, N) f32 accumulator input.
+    """
+    # Gather the B rows for every (row, slot) pair: (R, L, N).
+    gathered = b[cols]
+    return c + jnp.einsum("rl,rln->rn", vals, gathered)
+
+
+def matmul_ref(a, b, c):
+    """C + A·B, all dense (the MXU tile product)."""
+    return c + a @ b
+
+
+def ell_pack_ref(dense_a, max_nnz):
+    """Pack a dense matrix into (vals, cols) ELL arrays — reference for
+    the Rust-side packer (mirrors runtime/pjrt.rs::ell_pack)."""
+    import numpy as np
+
+    r, _ = dense_a.shape
+    vals = np.zeros((r, max_nnz), dtype=np.float32)
+    cols = np.zeros((r, max_nnz), dtype=np.int32)
+    for i in range(r):
+        nz = np.nonzero(dense_a[i])[0]
+        assert len(nz) <= max_nnz, "row exceeds ELL capacity"
+        vals[i, : len(nz)] = dense_a[i, nz]
+        cols[i, : len(nz)] = nz
+    return vals, cols

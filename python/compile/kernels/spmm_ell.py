@@ -1,0 +1,64 @@
+"""L1: ELL-packed SpMM Pallas kernel — the local compute hot-spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's local
+kernel is cuSPARSE SpMM on a V100, whose core trick is keeping the dense
+B panel hot in L2/shared memory while streaming the sparse A. On TPU the
+analog is: tile the *row* dimension of A with a BlockSpec so each grid
+step holds an (RB, L) slab of ELL values/indices plus the whole B panel
+in VMEM, and let the VPU do the per-slot gather-multiply-accumulate.
+
+The kernel must be lowered with ``interpret=True`` — real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_ell_kernel(vals_ref, cols_ref, b_ref, c_ref, o_ref, *, max_nnz):
+    """One row-block step: o = c + ELL(vals, cols) · B."""
+    vals = vals_ref[...]  # (RB, L)
+    cols = cols_ref[...]  # (RB, L)
+    b = b_ref[...]        # (K, N) — resident for the whole row block
+    acc = c_ref[...]      # (RB, N)
+
+    def body(l, acc):
+        # Gather one ELL slot's B rows: (RB, N), scaled by the slot value.
+        brows = jnp.take(b, cols[:, l], axis=0)
+        return acc + vals[:, l][:, None] * brows
+
+    acc = jax.lax.fori_loop(0, max_nnz, body, acc)
+    o_ref[...] = acc
+
+
+def spmm_ell(vals, cols, b, c, *, row_block=64):
+    """C + A·B with A in ELL form. Shapes: vals/cols (R, L), b (K, N),
+    c (R, N). R must be a multiple of row_block."""
+    r, max_nnz = vals.shape
+    k, n = b.shape
+    assert c.shape == (r, n), f"c shape {c.shape} != {(r, n)}"
+    assert r % row_block == 0, f"R={r} not a multiple of row_block={row_block}"
+    grid = (r // row_block,)
+    return pl.pallas_call(
+        functools.partial(_spmm_ell_kernel, max_nnz=max_nnz),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, max_nnz), lambda i: (i, 0)),  # vals slab
+            pl.BlockSpec((row_block, max_nnz), lambda i: (i, 0)),  # cols slab
+            pl.BlockSpec((k, n), lambda i: (0, 0)),                # B panel (VMEM-resident)
+            pl.BlockSpec((row_block, n), lambda i: (i, 0)),        # C in
+        ],
+        out_specs=pl.BlockSpec((row_block, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=True,
+    )(vals, cols, b, c)
+
+
+def vmem_bytes(row_block, max_nnz, k, n):
+    """Estimated VMEM working set per grid step (bytes) — the L1 §Perf
+    metric. vals + cols slabs, the B panel, and C in/out."""
+    return 4 * (2 * row_block * max_nnz + k * n + 2 * row_block * n)

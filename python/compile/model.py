@@ -1,0 +1,64 @@
+"""L2: the jax compute graphs the Rust coordinator executes per tile.
+
+These functions are what ``aot.py`` lowers to HLO text. They call the L1
+Pallas kernels (so the kernels lower into the same HLO module) and add
+the little bit of glue the distributed algorithms need:
+
+* ``spmm_tile``   — C_out = C_in + ELL(A) · B, the local multiply of all
+                    the SpMM algorithms (the paper's cuSPARSE call).
+* ``matmul_tile`` — C_out = C_in + A · B, dense tile product.
+* ``gnn_layer``   — relu((C + ELL(A)·B) · W), one graph-convolution
+                    layer: feature propagation (the SpMM) fused with the
+                    per-layer dense transform — used by the end-to-end
+                    GNN example.
+
+Python never runs on the request path: these lower ONCE at build time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul as matmul_kernel
+from compile.kernels import spmm_ell as spmm_kernel
+
+
+def spmm_tile(vals, cols, b, c):
+    """Local SpMM tile op (returns a 1-tuple for stable HLO signature)."""
+    return (spmm_kernel.spmm_ell(vals, cols, b, c),)
+
+
+def matmul_tile(a, b, c):
+    return (matmul_kernel.matmul(a, b, c),)
+
+
+def gnn_layer(vals, cols, b, c, w):
+    """One GNN propagation layer: relu((c + A_ell·b) @ w)."""
+    h = spmm_kernel.spmm_ell(vals, cols, b, c)
+    return (jax.nn.relu(h @ w),)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def spmm_tile_specs(r, l, k, n):
+    return (
+        spec((r, l)),
+        spec((r, l), jnp.int32),
+        spec((k, n)),
+        spec((r, n)),
+    )
+
+
+def matmul_tile_specs(m, k, n):
+    return (spec((m, k)), spec((k, n)), spec((m, n)))
+
+
+def gnn_layer_specs(r, l, k, n, f):
+    return (
+        spec((r, l)),
+        spec((r, l), jnp.int32),
+        spec((k, n)),
+        spec((r, n)),
+        spec((n, f)),
+    )

@@ -1,0 +1,102 @@
+"""L1 kernel correctness: Pallas (interpret mode) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and data; every case must match the reference
+to float32 tolerance. This is the CORE correctness signal for the
+compiled artifacts the Rust runtime executes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+from compile.kernels import spmm_ell as se
+
+
+def make_ell(rng, r, l, k, density=0.5):
+    """Random ELL arrays with ~density of the L slots used."""
+    vals = (rng.random((r, l), dtype=np.float32) - 0.5) * (
+        rng.random((r, l)) < density
+    ).astype(np.float32)
+    cols = rng.integers(0, k, size=(r, l)).astype(np.int32)
+    return jnp.asarray(vals), jnp.asarray(cols)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rb_idx=st.integers(0, 2),
+    blocks=st.integers(1, 3),
+    l=st.sampled_from([1, 4, 16]),
+    k=st.sampled_from([8, 64, 100]),
+    n=st.sampled_from([4, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmm_ell_matches_ref(rb_idx, blocks, l, k, n, seed):
+    row_block = [8, 32, 64][rb_idx]
+    r = row_block * blocks
+    rng = np.random.default_rng(seed)
+    vals, cols = make_ell(rng, r, l, k)
+    b = jnp.asarray(rng.random((k, n), dtype=np.float32) - 0.5)
+    c = jnp.asarray(rng.random((r, n), dtype=np.float32) - 0.5)
+    got = se.spmm_ell(vals, cols, b, c, row_block=row_block)
+    want = ref.spmm_ell_ref(vals, cols, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_spmm_ell_zero_vals_is_identity():
+    r, l, k, n = 64, 8, 32, 16
+    vals = jnp.zeros((r, l), jnp.float32)
+    cols = jnp.zeros((r, l), jnp.int32)
+    b = jnp.ones((k, n), jnp.float32)
+    c = jnp.arange(r * n, dtype=jnp.float32).reshape(r, n)
+    got = se.spmm_ell(vals, cols, b, c)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(c))
+
+
+def test_spmm_ell_rejects_bad_row_block():
+    vals = jnp.zeros((10, 4), jnp.float32)
+    cols = jnp.zeros((10, 4), jnp.int32)
+    b = jnp.zeros((8, 4), jnp.float32)
+    c = jnp.zeros((10, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        se.spmm_ell(vals, cols, b, c, row_block=64)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([128, 256]),
+    k=st.sampled_from([128, 256]),
+    n=st.sampled_from([128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.random((m, k), dtype=np.float32) - 0.5)
+    b = jnp.asarray(rng.random((k, n), dtype=np.float32) - 0.5)
+    c = jnp.asarray(rng.random((m, n), dtype=np.float32) - 0.5)
+    got = mm.matmul(a, b, c)
+    want = ref.matmul_ref(a, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_small_blocks():
+    # Block sizes clamp to the (smaller) matrix dims.
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.random((64, 32), dtype=np.float32))
+    b = jnp.asarray(rng.random((32, 16), dtype=np.float32))
+    c = jnp.zeros((64, 16), jnp.float32)
+    got = mm.matmul(a, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b), rtol=1e-4, atol=1e-4)
+
+
+def test_ell_pack_roundtrip():
+    rng = np.random.default_rng(5)
+    dense = (rng.random((16, 12)) < 0.3) * rng.random((16, 12))
+    dense = dense.astype(np.float32)
+    vals, cols = ref.ell_pack_ref(dense, max_nnz=12)
+    b = jnp.asarray(rng.random((12, 8), dtype=np.float32))
+    c = jnp.zeros((16, 8), jnp.float32)
+    got = ref.spmm_ell_ref(jnp.asarray(vals), jnp.asarray(cols), b, c)
+    np.testing.assert_allclose(np.asarray(got), dense @ np.asarray(b), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,61 @@
+"""L2 model tests: graph shapes, AOT lowering round-trips, manifest."""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_spmm_tile_shapes_and_tuple():
+    args = [jnp.zeros(s.shape, s.dtype) for s in model.spmm_tile_specs(64, 16, 64, 32)]
+    out = model.spmm_tile(*args)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (64, 32)
+
+
+def test_gnn_layer_matches_composition():
+    rng = np.random.default_rng(0)
+    r, l, k, n, f = 64, 8, 64, 16, 16
+    vals = jnp.asarray(rng.random((r, l), dtype=np.float32) * (rng.random((r, l)) < 0.4))
+    cols = jnp.asarray(rng.integers(0, k, (r, l)).astype(np.int32))
+    b = jnp.asarray(rng.random((k, n), dtype=np.float32))
+    c = jnp.zeros((r, n), jnp.float32)
+    w = jnp.asarray(rng.random((n, f), dtype=np.float32) - 0.5)
+    (got,) = model.gnn_layer(vals, cols, b, c, w)
+    want = jax.nn.relu(ref.spmm_ell_ref(vals, cols, b, c) @ w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_lowered_hlo_is_stablehlo_free_text():
+    from compile.aot import to_hlo_text
+
+    text = to_hlo_text(model.spmm_tile, model.spmm_tile_specs(64, 16, 64, 32))
+    assert "HloModule" in text
+    # Static shapes of all four params present.
+    assert "f32[64,16]" in text and "s32[64,16]" in text
+    assert "f32[64,32]" in text
+
+
+def test_aot_quick_writes_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        env = dict(os.environ)
+        proc = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", d, "--quick"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True,
+            text=True,
+            env=env,
+        )
+        assert proc.returncode == 0, proc.stderr
+        manifest = open(os.path.join(d, "manifest.txt")).read().strip().splitlines()
+        assert any(line.startswith("spmm_ell ") for line in manifest)
+        for line in manifest:
+            fname = line.split()[-1]
+            assert os.path.exists(os.path.join(d, fname))

@@ -1,0 +1,53 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. §3.3 optimizations (prefetch + iteration offset) on/off.
+//! 2. Random-permutation load balancing (§1's alternative to
+//!    workstealing): runtime on the skewed matrix vs its randomly
+//!    relabeled version, including the permutation's own cost.
+//! 3. Stationary B vs A vs C for square matrices (§6.1's argument that
+//!    stationary B buys nothing over C).
+use sparta::algorithms::SpmmAlg;
+use sparta::coordinator::{run_spmm, SpmmConfig};
+use sparta::fabric::NetProfile;
+use sparta::matrix::suite;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("── ablation 1: §3.3 optimizations (prefetch + iteration offset) ──");
+    let a = suite::analog_scaled("com-orkut", -1);
+    for (alg, label) in [
+        (SpmmAlg::StationaryC, "optimized (Alg 2)"),
+        (SpmmAlg::StationaryCUnopt, "no prefetch, no offset"),
+    ] {
+        let cfg = SpmmConfig::new(alg, 24, NetProfile::summit(), 128);
+        let r = run_spmm(&a, &cfg).unwrap().report;
+        println!("  {label:<26} makespan {:>10.3} ms  comm {:>8.3} ms", r.makespan_s() * 1e3, r.comm_s() * 1e3);
+    }
+
+    println!("── ablation 2: random permutation vs workstealing (§1) ──");
+    let skewed = suite::analog_scaled("nlpkkt160", -1);
+    let permuted = skewed.random_permutation(7);
+    for (m, label) in [(&skewed, "original (imbalanced)"), (&permuted, "randomly permuted")] {
+        let cfg = SpmmConfig::new(SpmmAlg::StationaryC, 24, NetProfile::summit(), 128);
+        let r = run_spmm(m, &cfg).unwrap().report;
+        println!(
+            "  {label:<26} makespan {:>10.3} ms  load-imb {:>8.3} ms",
+            r.makespan_s() * 1e3,
+            r.load_imb_s() * 1e3
+        );
+    }
+
+    println!("── ablation 3: stationary C vs A vs B (square matrices) ──");
+    let a = suite::analog_scaled("amazon", -1);
+    for alg in [SpmmAlg::StationaryC, SpmmAlg::StationaryA, SpmmAlg::StationaryB] {
+        let cfg = SpmmConfig::new(alg, 24, NetProfile::summit(), 128);
+        let r = run_spmm(&a, &cfg).unwrap().report;
+        println!(
+            "  {:<26} makespan {:>10.3} ms  acc {:>8.3} ms",
+            r.alg,
+            r.makespan_s() * 1e3,
+            r.acc_s() * 1e3
+        );
+    }
+    println!("[ablations in {:.1?}]", t0.elapsed());
+}

@@ -1,0 +1,90 @@
+//! Wall-clock micro-benchmarks of the fabric primitives (§Perf): bulk
+//! put/get word-copy throughput, remote FAA, queue push/pop. Uses the
+//! wallclock profile (no virtual-time charging, no pacing).
+use std::time::Instant;
+
+use sparta::fabric::{Fabric, FabricConfig, NetProfile, QueueHandle, QueueItem};
+use sparta::util::fmt_bytes;
+
+struct Msg([u64; 4]);
+impl QueueItem for Msg {
+    const WORDS: usize = 4;
+    fn encode(&self, out: &mut [u64]) {
+        out.copy_from_slice(&self.0);
+    }
+    fn decode(w: &[u64]) -> Self {
+        Msg([w[0], w[1], w[2], w[3]])
+    }
+}
+
+fn main() {
+    println!("── fabric micro-benchmarks (wall clock) ──");
+    let f = Fabric::new(FabricConfig {
+        nprocs: 2,
+        profile: NetProfile::wallclock(),
+        seg_capacity: 512 << 20,
+        pacing: false,
+    });
+
+    for size in [4usize << 10, 256 << 10, 16 << 20] {
+        let gp = f.alloc_on::<f32>(1, size / 4);
+        let (rates, _) = f.launch(|pe| {
+            if pe.rank() != 0 {
+                return 0.0;
+            }
+            let data = vec![1.0f32; size / 4];
+            let iters = (64 << 20) / size;
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                pe.put(gp, &data);
+            }
+            let put_bw = (iters * size) as f64 / t0.elapsed().as_nanos() as f64;
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let _ = pe.get_vec(gp);
+            }
+            let get_bw = (iters * size) as f64 / t0.elapsed().as_nanos() as f64;
+            println!(
+                "put/get {:<10} put {:>7.2} GB/s   get {:>7.2} GB/s",
+                fmt_bytes(size as f64),
+                put_bw,
+                get_bw
+            );
+            put_bw
+        });
+        assert!(rates[0] > 0.0);
+    }
+
+    // Remote FAA rate under contention.
+    let grid = f.alloc_on::<i64>(0, 1);
+    let t0 = Instant::now();
+    let n_ops = 200_000;
+    f.launch(|pe| {
+        for _ in 0..n_ops {
+            pe.fetch_add(grid, 0, 1);
+        }
+    });
+    let ns = t0.elapsed().as_nanos() as f64 / (2.0 * n_ops as f64);
+    println!("contended remote fetch-and-add          {ns:>10.0} ns/op");
+
+    // Queue throughput (1 producer, 1 consumer).
+    let q = QueueHandle::<Msg>::create(&f, 0, 4096);
+    let n_msgs = 100_000u64;
+    let t0 = Instant::now();
+    f.launch(|pe| {
+        if pe.rank() == 1 {
+            for i in 0..n_msgs {
+                q.push(pe, &Msg([i, 0, 0, 0]));
+            }
+        } else {
+            let mut got = 0;
+            while got < n_msgs {
+                if q.pop_wait(pe).is_some() {
+                    got += 1;
+                }
+            }
+        }
+    });
+    let ns = t0.elapsed().as_nanos() as f64 / n_msgs as f64;
+    println!("remote queue push+pop                   {ns:>10.0} ns/msg");
+}

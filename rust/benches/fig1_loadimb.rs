@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 1 (end-to-end vs per-stage load imbalance).
+use sparta::coordinator::experiments::{fig1, ExpOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = ExpOpts { scale_shift: 0, verify: false, print: true };
+    let out = fig1(&opts);
+    assert!(out.per_stage >= out.end_to_end - 1e-9, "staged must be >= end-to-end");
+    println!("[fig1 regenerated in {:.1?}]", t0.elapsed());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 2 (inter-node rooflines + achieved points).
+use sparta::coordinator::experiments::{fig2, ExpOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = ExpOpts { scale_shift: -1, verify: false, print: true };
+    let pts = fig2(&opts).expect("fig2");
+    assert!(!pts.is_empty());
+    println!("[fig2 regenerated in {:.1?}]", t0.elapsed());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 3 (single-node SpMM runtimes, DGX-2).
+use sparta::coordinator::experiments::{fig3, ExpOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = ExpOpts { scale_shift: -1, verify: false, print: true };
+    let rows = fig3(&opts).expect("fig3");
+    assert!(!rows.is_empty());
+    println!("[fig3 regenerated in {:.1?} ({} rows)]", t0.elapsed(), rows.len());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 4 (multi-node SpMM runtimes, Summit).
+use sparta::coordinator::experiments::{fig4, ExpOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = ExpOpts { scale_shift: -1, verify: false, print: true };
+    let rows = fig4(&opts).expect("fig4");
+    assert!(!rows.is_empty());
+    println!("[fig4 regenerated in {:.1?} ({} rows)]", t0.elapsed(), rows.len());
+}

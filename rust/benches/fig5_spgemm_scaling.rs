@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 5 (SpGEMM strong scaling).
+use sparta::coordinator::experiments::{fig5, ExpOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = ExpOpts { scale_shift: -1, verify: false, print: true };
+    let rows = fig5(&opts).expect("fig5");
+    assert!(!rows.is_empty());
+    println!("[fig5 regenerated in {:.1?} ({} rows)]", t0.elapsed(), rows.len());
+}

@@ -1,0 +1,73 @@
+//! Wall-clock micro-benchmarks of the local kernels (the §Perf L3 hot
+//! paths): CSR SpMM, Gustavson SpGEMM, CSR↔ELL packing, and the PJRT
+//! Pallas kernel when artifacts exist.
+//!
+//! Self-contained timing harness (the offline build has no criterion):
+//! warmup + N timed iterations, reporting ns/op and effective rates.
+use std::time::Instant;
+
+use sparta::matrix::{gen, local_spgemm, local_spmm, Dense};
+use sparta::util::{fmt_flops, Rng};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    for _ in 0..2 {
+        f(); // warmup
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{name:<44} {:>12.0} ns/op", ns);
+    ns
+}
+
+fn main() {
+    println!("── local kernel micro-benchmarks (wall clock) ──");
+    let mut rng = Rng::new(1);
+
+    for (n, deg, ncols) in [(4096, 16, 128), (4096, 16, 512), (16384, 16, 128)] {
+        let a = gen::erdos_renyi(n, deg, 7);
+        let b = Dense::random(n, ncols, &mut rng);
+        let mut c = Dense::zeros(n, ncols);
+        let flops = local_spmm::spmm_flops(&a, ncols);
+        let ns = bench(&format!("spmm n={n} deg={deg} N={ncols}"), 10, || {
+            c.data.fill(0.0);
+            local_spmm::spmm_acc(&a, &b, &mut c);
+        });
+        println!("{:<44} {:>12}", "  effective", fmt_flops(flops / ns * 1e9));
+    }
+
+    for (scale, ef) in [(12u32, 8), (13, 16)] {
+        let a = gen::rmat(scale, ef, 0.55, 0.15, 0.15, 3);
+        let out = local_spgemm::spgemm(&a, &a);
+        let flops = out.flops;
+        let ns = bench(&format!("spgemm rmat scale={scale} ef={ef} (cf={:.2})", out.cf), 10, || {
+            let _ = local_spgemm::spgemm(&a, &a);
+        });
+        println!("{:<44} {:>12}", "  effective", fmt_flops(flops / ns * 1e9));
+    }
+
+    // ELL packing (runtime path prep cost).
+    let a = gen::erdos_renyi(256, 8, 5);
+    bench("ell_pack 256x256 deg=8 (L=64)", 1000, || {
+        let _ = sparta::runtime::pjrt::ell_pack(&a, 256, 64);
+    });
+
+    // PJRT kernel vs native, when artifacts are available.
+    if let Ok(exe) = sparta::runtime::pjrt::TileExecutor::load(std::path::Path::new("artifacts")) {
+        let a = gen::erdos_renyi(256, 8, 5);
+        let b = Dense::random(256, 128, &mut rng);
+        let mut c = Dense::zeros(256, 128);
+        bench("pjrt pallas spmm tile 256x256 N=128", 50, || {
+            exe.spmm_acc(&a, &b, &mut c);
+        });
+        let mut c2 = Dense::zeros(256, 128);
+        bench("native spmm tile 256x256 N=128", 50, || {
+            local_spmm::spmm_acc(&a, &b, &mut c2);
+        });
+        println!("(pjrt executions={} fallbacks={})", exe.executions(), exe.fallbacks());
+    } else {
+        println!("(pjrt benches skipped: run `make artifacts`)");
+    }
+}

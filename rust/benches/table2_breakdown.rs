@@ -1,0 +1,13 @@
+//! Bench: regenerate Table 2 (component breakdowns for SpMM + SpGEMM).
+use sparta::coordinator::experiments::{table1, table2a, table2b, ExpOpts};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let opts = ExpOpts { scale_shift: -1, verify: false, print: true };
+    let t1 = table1(&opts);
+    assert_eq!(t1.len(), 11, "Table 1 has 11 matrices");
+    let a = table2a(&opts).expect("table2a");
+    let b = table2b(&opts).expect("table2b");
+    assert!(!a.is_empty() && !b.is_empty());
+    println!("[table1/2a/2b regenerated in {:.1?}]", t0.elapsed());
+}

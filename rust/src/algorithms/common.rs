@@ -1,0 +1,298 @@
+//! Shared plumbing for the distributed multiply algorithms: problem
+//! contexts, the pending-contribution tracker used for asynchronous
+//! termination, and bulk-synchronous library-overhead models.
+
+use std::collections::HashMap;
+
+use crate::dist::{AccQueues, DistCsr, DistDense, ResGrid2D, ResGrid3D};
+use crate::fabric::{Kind, Pe};
+use crate::matrix::{local_spmm, Coo, Csr, Dense};
+use crate::runtime::TileBackend;
+
+/// Everything a SpMM algorithm needs: the distributed operands, the
+/// accumulation queues, and (for workstealing) reservation grids.
+#[derive(Clone)]
+pub struct SpmmCtx {
+    pub a: DistCsr,
+    pub b: DistDense,
+    pub c: DistDense,
+    pub queues: AccQueues,
+    pub res2d: Option<ResGrid2D>,
+    pub res3d: Option<ResGrid3D>,
+    /// Local multiply backend (native Rust kernel or AOT PJRT kernel).
+    pub backend: TileBackend,
+}
+
+/// SpGEMM context (C = A·B, all sparse).
+#[derive(Clone)]
+pub struct SpgemmCtx {
+    pub a: DistCsr,
+    pub b: DistCsr,
+    pub c: DistCsr,
+    pub queues: AccQueues,
+    pub res2d: Option<ResGrid2D>,
+}
+
+/// Overheads of a bulk-synchronous library baseline, applied on top of
+/// the raw transfer costs (DESIGN.md §1: CombBLAS / PETSc substitution).
+#[derive(Clone, Copy, Debug)]
+pub struct LibOverhead {
+    /// Multiplier on inter-PE transfer time (1.0 = GPUDirect-speed; >1
+    /// models host staging / non-GPUDirect paths).
+    pub comm_factor: f64,
+    /// Extra device-memory staging copies per received tile.
+    pub staging_copies: usize,
+    /// Fixed per-iteration bookkeeping cost, ns.
+    pub per_iter_ns: f64,
+}
+
+impl LibOverhead {
+    /// Our own CUDA-aware MPI SUMMA: direct GPU transfers, only the
+    /// collective's synchronization semantics on top.
+    pub fn mpi() -> Self {
+        LibOverhead { comm_factor: 1.0, staging_copies: 0, per_iter_ns: 10_000.0 }
+    }
+
+    /// CombBLAS-GPU-like: CUDA-aware but with extra staging copies and
+    /// library bookkeeping per iteration.
+    pub fn comblas() -> Self {
+        LibOverhead { comm_factor: 1.25, staging_copies: 1, per_iter_ns: 50_000.0 }
+    }
+
+    /// PETSc-like without GPUDirect: transfers staged through host PCIe
+    /// (the paper observes PETSc "significantly slower, probably because
+    /// it is not utilizing GPUDirect RDMA").
+    pub fn petsc() -> Self {
+        LibOverhead { comm_factor: 3.0, staging_copies: 2, per_iter_ns: 80_000.0 }
+    }
+
+    /// Charge the extra costs for one received tile of `bytes` bytes.
+    pub fn charge_tile(&self, pe: &Pe, src_rank: usize, bytes: f64) {
+        if self.comm_factor > 1.0 {
+            let link = pe.fabric().profile().link(pe.rank(), src_rank);
+            pe.advance(Kind::Comm, (self.comm_factor - 1.0) * link.xfer_ns(bytes));
+        }
+        if self.staging_copies > 0 {
+            let membw = pe.fabric().profile().compute.mem_bw;
+            pe.advance(Kind::Comm, self.staging_copies as f64 * bytes / membw);
+        }
+    }
+}
+
+/// Tracks how many partial contributions each locally-owned C tile is
+/// still waiting for — the asynchronous-termination scheme for the
+/// stationary-A/B and workstealing algorithms.
+///
+/// Every component multiply C[i,j] += A[i,k]·B[k,j] happens exactly once
+/// globally (the loops / reservation grids guarantee it), so the owner
+/// of C[i,j] knows it will receive exactly `t` contributions (local ones
+/// applied directly, remote ones via its accumulation queue).
+pub struct PendingTracker {
+    pending: HashMap<(u32, u32), usize>,
+}
+
+impl PendingTracker {
+    /// Each of `tiles` expects `per_tile` contributions.
+    pub fn new(tiles: &[(usize, usize)], per_tile: usize) -> Self {
+        let pending =
+            tiles.iter().map(|&(i, j)| ((i as u32, j as u32), per_tile)).collect();
+        PendingTracker { pending }
+    }
+
+    pub fn record(&mut self, i: usize, j: usize) {
+        let e = self
+            .pending
+            .get_mut(&(i as u32, j as u32))
+            .unwrap_or_else(|| panic!("contribution for tile ({i},{j}) not owned by this rank"));
+        assert!(*e > 0, "tile ({i},{j}) over-contributed");
+        *e -= 1;
+    }
+
+    pub fn done(&self) -> bool {
+        self.pending.values().all(|&v| v == 0)
+    }
+}
+
+/// Local dense accumulators for this rank's C tiles (SpMM).
+pub struct DenseAccumulators {
+    tiles: HashMap<(u32, u32), Dense>,
+}
+
+impl DenseAccumulators {
+    pub fn new(c: &DistDense, mine: &[(usize, usize)]) -> Self {
+        let tiles = mine
+            .iter()
+            .map(|&(i, j)| {
+                let (r, cc) = c.tile_dims(i, j);
+                ((i as u32, j as u32), Dense::zeros(r, cc))
+            })
+            .collect();
+        DenseAccumulators { tiles }
+    }
+
+    pub fn get_mut(&mut self, i: usize, j: usize) -> &mut Dense {
+        self.tiles.get_mut(&(i as u32, j as u32)).expect("not my tile")
+    }
+
+    /// Accumulate `part` into tile (i, j), charging the add as `kind`.
+    pub fn accumulate(&mut self, pe: &Pe, i: usize, j: usize, part: &Dense, kind: Kind) {
+        let tile = self.get_mut(i, j);
+        tile.add_assign(part);
+        let elems = part.data.len() as f64;
+        pe.charge_kernel_as(elems, 12.0 * elems, kind);
+    }
+
+    /// Write all accumulators back to the distributed C.
+    pub fn flush(&self, pe: &Pe, c: &DistDense) {
+        for (&(i, j), tile) in &self.tiles {
+            c.put_tile_as(pe, i as usize, j as usize, tile, Kind::Comm);
+        }
+    }
+}
+
+/// Local sparse accumulators: partial CSR products per owned C tile,
+/// merged once at the end (cheaper than repeated pairwise adds).
+pub struct SparseAccumulators {
+    parts: HashMap<(u32, u32), Vec<Csr>>,
+}
+
+impl SparseAccumulators {
+    pub fn new(mine: &[(usize, usize)]) -> Self {
+        let parts = mine.iter().map(|&(i, j)| ((i as u32, j as u32), Vec::new())).collect();
+        SparseAccumulators { parts }
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, part: Csr) {
+        self.parts.get_mut(&(i as u32, j as u32)).expect("not my tile").push(part);
+    }
+
+    /// Merge the partials of each tile and replace it in C. The merge is
+    /// charged as accumulation work.
+    pub fn flush(&mut self, pe: &Pe, c: &DistCsr, kind: Kind) {
+        for (&(i, j), parts) in self.parts.iter_mut() {
+            let (tr, tc) = c.tile_dims(i as usize, j as usize);
+            let merged = merge_csr(tr, tc, parts);
+            let nnz_in: usize = parts.iter().map(|p| p.nnz()).sum();
+            pe.charge_kernel_as(nnz_in as f64, 16.0 * nnz_in as f64, kind);
+            c.replace_tile(pe, i as usize, j as usize, &merged);
+        }
+    }
+}
+
+/// Merge sparse partial tiles by concatenation + duplicate summing.
+pub fn merge_csr(nrows: usize, ncols: usize, parts: &[Csr]) -> Csr {
+    let total: usize = parts.iter().map(|p| p.nnz()).sum();
+    let mut coo = Coo::with_capacity(nrows, ncols, total);
+    for p in parts {
+        assert_eq!((p.nrows, p.ncols), (nrows, ncols), "partial tile shape mismatch");
+        for r in 0..p.nrows {
+            let (cs, vs) = p.row(r);
+            for (&cc, &v) in cs.iter().zip(vs) {
+                coo.push(r, cc as usize, v);
+            }
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+/// One local SpMM with cost charging, through the selected backend.
+pub fn local_spmm_charged(pe: &Pe, backend: &TileBackend, a: &Csr, b: &Dense, c: &mut Dense) {
+    backend.spmm_acc(a, b, c);
+    pe.charge_kernel(local_spmm::spmm_flops(a, b.ncols), local_spmm::spmm_bytes(a, b.ncols));
+}
+
+/// Drain this PE's accumulation queue (SpMM flavor): fetch each dense
+/// partial, accumulate, record. Returns how many were applied.
+/// `wait=false` only consumes messages that have arrived in virtual
+/// time (non-blocking interleave); `wait=true` also consumes future
+/// messages, clamping the clock (termination wait).
+pub fn drain_spmm_queue(
+    pe: &Pe,
+    ctx: &SpmmCtx,
+    acc: &mut DenseAccumulators,
+    pending: &mut PendingTracker,
+    wait: bool,
+) -> usize {
+    let mut n = 0;
+    loop {
+        let msg = if wait { ctx.queues.pop_wait(pe) } else { ctx.queues.try_pop(pe) };
+        let Some(msg) = msg else { break };
+        let part = msg.fetch_dense(pe);
+        acc.accumulate(pe, msg.ti as usize, msg.tj as usize, &part, Kind::Acc);
+        pending.record(msg.ti as usize, msg.tj as usize);
+        n += 1;
+    }
+    n
+}
+
+/// Drain this PE's accumulation queue (SpGEMM flavor).
+pub fn drain_spgemm_queue(
+    pe: &Pe,
+    ctx: &SpgemmCtx,
+    acc: &mut SparseAccumulators,
+    pending: &mut PendingTracker,
+    wait: bool,
+) -> usize {
+    let mut n = 0;
+    loop {
+        let msg = if wait { ctx.queues.pop_wait(pe) } else { ctx.queues.try_pop(pe) };
+        let Some(msg) = msg else { break };
+        let part = msg.fetch_sparse(pe);
+        acc.push(msg.ti as usize, msg.tj as usize, part);
+        pending.record(msg.ti as usize, msg.tj as usize);
+        n += 1;
+    }
+    n
+}
+
+/// Spin until `step` reports completion. `step` should drain the
+/// accumulation queue and return whether all contributions have arrived.
+pub fn wait_for_contributions(pe: &Pe, mut step: impl FnMut(&Pe) -> bool) {
+    let mut spins: u64 = 0;
+    while !step(pe) {
+        spins += 1;
+        pe.fabric().check_abort();
+        assert!(spins < 500_000_000, "termination detection stuck: missing contributions");
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn merge_csr_sums_overlaps() {
+        let a = gen::erdos_renyi(20, 3, 1);
+        let merged = merge_csr(20, 20, &[a.clone(), a.clone()]);
+        assert!(merged.max_abs_diff(&a.add(&a)) < 1e-6);
+    }
+
+    #[test]
+    fn merge_csr_empty_parts() {
+        let m = merge_csr(4, 4, &[]);
+        assert_eq!(m.nnz(), 0);
+        let m2 = merge_csr(4, 4, &[Csr::zero(4, 4), Csr::zero(4, 4)]);
+        assert_eq!(m2.nnz(), 0);
+    }
+
+    #[test]
+    fn pending_tracker_counts_down() {
+        let mut p = PendingTracker::new(&[(0, 0), (1, 2)], 3);
+        assert!(!p.done());
+        for _ in 0..3 {
+            p.record(0, 0);
+            p.record(1, 2);
+        }
+        assert!(p.done());
+    }
+
+    #[test]
+    #[should_panic(expected = "over-contributed")]
+    fn pending_tracker_rejects_extra() {
+        let mut p = PendingTracker::new(&[(0, 0)], 1);
+        p.record(0, 0);
+        p.record(0, 0);
+    }
+}

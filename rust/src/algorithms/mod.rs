@@ -1,0 +1,195 @@
+//! The paper's distributed multiply algorithms.
+//!
+//! RDMA (asynchronous, one-sided): stationary-C and stationary-A SpMM /
+//! SpGEMM with prefetch and iteration offsets (§3.2–3.3), random and
+//! locality-aware workstealing (§3.4). Bulk-synchronous baselines:
+//! SUMMA over simulated collectives, with library-overhead models for
+//! the CombBLAS-GPU and PETSc comparisons (§5.4, §6).
+
+pub mod common;
+pub mod spgemm;
+pub mod spmm;
+pub mod spmm_ws;
+
+pub use common::{LibOverhead, SpgemmCtx, SpmmCtx};
+pub use spmm_ws::Stationary;
+
+use crate::fabric::Pe;
+
+/// SpMM algorithm selector — the legend entries of Figures 3 and 4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpmmAlg {
+    /// "S-C RDMA": stationary C (Alg 2).
+    StationaryC,
+    /// "S-A RDMA": stationary A (Alg 1).
+    StationaryA,
+    /// Stationary B (§3.2.2; described but not evaluated in the paper).
+    StationaryB,
+    /// Stationary C with the §3.3 optimizations removed (ablation).
+    StationaryCUnopt,
+    /// "R WS S-A RDMA": stationary A + random workstealing (Alg 3).
+    RandomWsA,
+    /// "LA WS S-C RDMA": locality-aware workstealing, stationary C.
+    LocalityWsC,
+    /// "LA WS S-A RDMA": locality-aware workstealing, stationary A.
+    LocalityWsA,
+    /// "BS SUMMA MPI": bulk-synchronous CUDA-aware MPI SUMMA.
+    SummaMpi,
+    /// "CombBLAS GPU"-like bulk-synchronous baseline.
+    SummaCombBlas,
+}
+
+impl SpmmAlg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpmmAlg::StationaryC => "S-C RDMA",
+            SpmmAlg::StationaryA => "S-A RDMA",
+            SpmmAlg::StationaryB => "S-B RDMA",
+            SpmmAlg::StationaryCUnopt => "S-C RDMA (unopt)",
+            SpmmAlg::RandomWsA => "R WS S-A RDMA",
+            SpmmAlg::LocalityWsC => "LA WS S-C RDMA",
+            SpmmAlg::LocalityWsA => "LA WS S-A RDMA",
+            SpmmAlg::SummaMpi => "BS SUMMA MPI",
+            SpmmAlg::SummaCombBlas => "CombBLAS GPU",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SpmmAlg> {
+        Some(match s {
+            "sc" | "stationary-c" => SpmmAlg::StationaryC,
+            "sa" | "stationary-a" => SpmmAlg::StationaryA,
+            "sb" | "stationary-b" => SpmmAlg::StationaryB,
+            "sc-unopt" => SpmmAlg::StationaryCUnopt,
+            "rws" | "random-ws" => SpmmAlg::RandomWsA,
+            "lws-c" | "locality-ws-c" => SpmmAlg::LocalityWsC,
+            "lws-a" | "locality-ws-a" => SpmmAlg::LocalityWsA,
+            "summa" | "mpi" => SpmmAlg::SummaMpi,
+            "comblas" => SpmmAlg::SummaCombBlas,
+            _ => return None,
+        })
+    }
+
+    /// All variants, in the figures' legend order.
+    pub fn all() -> &'static [SpmmAlg] {
+        &[
+            SpmmAlg::StationaryC,
+            SpmmAlg::StationaryA,
+            SpmmAlg::RandomWsA,
+            SpmmAlg::LocalityWsC,
+            SpmmAlg::LocalityWsA,
+            SpmmAlg::SummaMpi,
+            SpmmAlg::SummaCombBlas,
+        ]
+    }
+
+    /// Does this algorithm need a perfect-square process count?
+    pub fn needs_square(&self) -> bool {
+        matches!(self, SpmmAlg::SummaMpi | SpmmAlg::SummaCombBlas)
+    }
+
+    /// Workstealing grids required?
+    pub fn needs_res2d(&self) -> bool {
+        matches!(self, SpmmAlg::RandomWsA)
+    }
+
+    pub fn needs_res3d(&self) -> bool {
+        matches!(self, SpmmAlg::LocalityWsC | SpmmAlg::LocalityWsA)
+    }
+
+    /// Run this algorithm on one PE.
+    pub fn run(&self, pe: &Pe, ctx: &SpmmCtx) {
+        match self {
+            SpmmAlg::StationaryC => spmm::spmm_stationary_c(pe, ctx),
+            SpmmAlg::StationaryA => spmm::spmm_stationary_a(pe, ctx),
+            SpmmAlg::StationaryB => spmm::spmm_stationary_b(pe, ctx),
+            SpmmAlg::StationaryCUnopt => spmm::spmm_stationary_c_unoptimized(pe, ctx),
+            SpmmAlg::RandomWsA => spmm_ws::spmm_random_ws_a(pe, ctx),
+            SpmmAlg::LocalityWsC => spmm_ws::spmm_locality_ws(pe, ctx, Stationary::C),
+            SpmmAlg::LocalityWsA => spmm_ws::spmm_locality_ws(pe, ctx, Stationary::A),
+            SpmmAlg::SummaMpi => spmm::spmm_summa(pe, ctx, &LibOverhead::mpi()),
+            SpmmAlg::SummaCombBlas => spmm::spmm_summa(pe, ctx, &LibOverhead::comblas()),
+        }
+    }
+}
+
+/// SpGEMM algorithm selector — the legend entries of Figure 5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpgemmAlg {
+    StationaryC,
+    StationaryA,
+    RandomWsA,
+    SummaMpi,
+    /// "PETSc"-like: bulk-synchronous without GPUDirect.
+    SummaPetsc,
+}
+
+impl SpgemmAlg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpgemmAlg::StationaryC => "S-C RDMA",
+            SpgemmAlg::StationaryA => "S-A RDMA",
+            SpgemmAlg::RandomWsA => "R WS S-A RDMA",
+            SpgemmAlg::SummaMpi => "BS SUMMA MPI",
+            SpgemmAlg::SummaPetsc => "PETSc GPU",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SpgemmAlg> {
+        Some(match s {
+            "sc" | "stationary-c" => SpgemmAlg::StationaryC,
+            "sa" | "stationary-a" => SpgemmAlg::StationaryA,
+            "rws" | "random-ws" => SpgemmAlg::RandomWsA,
+            "summa" | "mpi" => SpgemmAlg::SummaMpi,
+            "petsc" => SpgemmAlg::SummaPetsc,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> &'static [SpgemmAlg] {
+        &[
+            SpgemmAlg::StationaryC,
+            SpgemmAlg::StationaryA,
+            SpgemmAlg::RandomWsA,
+            SpgemmAlg::SummaMpi,
+            SpgemmAlg::SummaPetsc,
+        ]
+    }
+
+    pub fn needs_square(&self) -> bool {
+        matches!(self, SpgemmAlg::SummaMpi | SpgemmAlg::SummaPetsc)
+    }
+
+    pub fn needs_res2d(&self) -> bool {
+        matches!(self, SpgemmAlg::RandomWsA)
+    }
+
+    pub fn run(&self, pe: &Pe, ctx: &SpgemmCtx) {
+        match self {
+            SpgemmAlg::StationaryC => spgemm::spgemm_stationary_c(pe, ctx),
+            SpgemmAlg::StationaryA => spgemm::spgemm_stationary_a(pe, ctx),
+            SpgemmAlg::RandomWsA => spgemm::spgemm_random_ws_a(pe, ctx),
+            SpgemmAlg::SummaMpi => spgemm::spgemm_summa(pe, ctx, &LibOverhead::mpi()),
+            SpgemmAlg::SummaPetsc => spgemm::spgemm_summa(pe, ctx, &LibOverhead::petsc()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        assert_eq!(SpmmAlg::from_name("sc"), Some(SpmmAlg::StationaryC));
+        assert_eq!(SpmmAlg::from_name("lws-a"), Some(SpmmAlg::LocalityWsA));
+        assert_eq!(SpmmAlg::from_name("nope"), None);
+        assert_eq!(SpgemmAlg::from_name("petsc"), Some(SpgemmAlg::SummaPetsc));
+    }
+
+    #[test]
+    fn square_requirements() {
+        assert!(SpmmAlg::SummaMpi.needs_square());
+        assert!(!SpmmAlg::StationaryC.needs_square());
+        assert!(SpgemmAlg::SummaPetsc.needs_square());
+    }
+}

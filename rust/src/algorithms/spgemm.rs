@@ -1,0 +1,237 @@
+//! Distributed SpGEMM algorithms (§6.2): C = A·B with all three
+//! matrices sparse. Same stationary-C / stationary-A / SUMMA /
+//! workstealing structure as SpMM, but partial products are sparse
+//! tiles, and the output C is assembled with `replace_tile` +
+//! `renew_tiles`.
+
+use crate::fabric::{Kind, Pe};
+use crate::matrix::{local_spgemm, Csr};
+
+use super::common::{
+    drain_spgemm_queue, wait_for_contributions, LibOverhead, PendingTracker, SparseAccumulators,
+    SpgemmCtx,
+};
+
+/// One local sparse multiply with roofline cost charging.
+fn local_spgemm_charged(pe: &Pe, a: &Csr, b: &Csr) -> Csr {
+    let out = local_spgemm::spgemm(a, b);
+    pe.charge_kernel(out.flops, local_spgemm::spgemm_bytes(a, b, out.c.nnz()));
+    out.c
+}
+
+/// RDMA stationary-C SpGEMM with prefetch + iteration offset (the
+/// sparse analog of Algorithm 2).
+pub fn spgemm_stationary_c(pe: &Pe, ctx: &SpgemmCtx) {
+    let t = ctx.a.t();
+    let my_c = ctx.c.grid.my_tiles(pe.rank());
+    let mut acc = SparseAccumulators::new(&my_c);
+    for &(i, j) in &my_c {
+        let k_off = i + j;
+        let mut buf_a = Some(ctx.a.async_get_tile(pe, i, k_off % t));
+        let mut buf_b = Some(ctx.b.async_get_tile(pe, k_off % t, j));
+        for k_ in 0..t {
+            let local_a = buf_a.take().unwrap().wait(pe);
+            let local_b = buf_b.take().unwrap().wait(pe);
+            if k_ + 1 < t {
+                let kn = (k_ + 1 + k_off) % t;
+                buf_a = Some(ctx.a.async_get_tile(pe, i, kn));
+                buf_b = Some(ctx.b.async_get_tile(pe, kn, j));
+            }
+            let part = local_spgemm_charged(pe, &local_a, &local_b);
+            if part.nnz() > 0 {
+                acc.push(i, j, part);
+            }
+        }
+    }
+    // Merge partials and install the final tiles (owner-only mutation).
+    acc.flush(pe, &ctx.c, Kind::Comp);
+    ctx.c.renew_tiles(pe);
+}
+
+/// RDMA stationary-A SpGEMM (Algorithm 1): partial sparse products are
+/// shipped to the C owners through the accumulation queues.
+pub fn spgemm_stationary_a(pe: &Pe, ctx: &SpgemmCtx) {
+    let t = ctx.a.t();
+    let my_c = ctx.c.grid.my_tiles(pe.rank());
+    let mut acc = SparseAccumulators::new(&my_c);
+    let mut pending = PendingTracker::new(&my_c, t);
+
+    for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
+        let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
+        let j_off = i + k;
+        let mut buf_b = Some(ctx.b.async_get_tile(pe, k, j_off % t));
+        for j_ in 0..t {
+            let j = (j_ + j_off) % t;
+            let b_tile = buf_b.take().unwrap().wait(pe);
+            if j_ + 1 < t {
+                buf_b = Some(ctx.b.async_get_tile(pe, k, (j_ + 1 + j_off) % t));
+            }
+            let part = local_spgemm_charged(pe, &a_tile, &b_tile);
+            let owner = ctx.c.owner(i, j);
+            if owner == pe.rank() {
+                if part.nnz() > 0 {
+                    acc.push(i, j, part);
+                }
+                pending.record(i, j);
+            } else {
+                // Empty partials are still sent: the owner counts t
+                // contributions per tile for termination.
+                ctx.queues.send_sparse_partial(pe, owner, i, j, &part);
+            }
+            drain_spgemm_queue(pe, ctx, &mut acc, &mut pending, false);
+        }
+    }
+
+    wait_for_contributions(pe, |pe| {
+        drain_spgemm_queue(pe, ctx, &mut acc, &mut pending, true);
+        pending.done()
+    });
+    acc.flush(pe, &ctx.c, Kind::Acc);
+    ctx.c.renew_tiles(pe);
+}
+
+/// Bulk-synchronous SUMMA SpGEMM (MPI / PETSc-like baseline). Requires
+/// a perfect-square process count, like the paper's MPI implementation.
+pub fn spgemm_summa(pe: &Pe, ctx: &SpgemmCtx, lib: &LibOverhead) {
+    let t = ctx.a.t();
+    assert!(ctx.a.grid.is_one_to_one(), "SUMMA requires a perfect-square process count");
+    let (i, j) = ctx.c.grid.my_tiles(pe.rank())[0];
+    let row_team = pe.team("summa-row", i as u64, t);
+    let col_team = pe.team("summa-col", j as u64, t);
+    let mut acc = SparseAccumulators::new(&[(i, j)]);
+
+    for k in 0..t {
+        pe.advance(Kind::Queue, lib.per_iter_ns);
+        let a_src = ctx.a.owner(i, k);
+        let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
+        lib.charge_tile(pe, a_src, ctx.a.handle(i, k).bytes() as f64);
+        pe.barrier_on(&row_team);
+        let b_src = ctx.b.owner(k, j);
+        let b_tile = ctx.b.get_tile_as(pe, k, j, Kind::Comm);
+        lib.charge_tile(pe, b_src, ctx.b.handle(k, j).bytes() as f64);
+        pe.barrier_on(&col_team);
+        let part = local_spgemm_charged(pe, &a_tile, &b_tile);
+        if part.nnz() > 0 {
+            acc.push(i, j, part);
+        }
+    }
+    acc.flush(pe, &ctx.c, Kind::Comp);
+    ctx.c.renew_tiles(pe);
+}
+
+/// Stationary-A SpGEMM with random workstealing (the sparse Alg 3).
+pub fn spgemm_random_ws_a(pe: &Pe, ctx: &SpgemmCtx) {
+    let t = ctx.a.t();
+    let res = ctx.res2d.as_ref().expect("random WS needs a 2D reservation grid");
+    let my_c = ctx.c.grid.my_tiles(pe.rank());
+    let mut acc = SparseAccumulators::new(&my_c);
+    let mut pending = PendingTracker::new(&my_c, t);
+
+    let attempt = |pe: &Pe,
+                       i: usize,
+                       k: usize,
+                       own: bool,
+                       acc: &mut SparseAccumulators,
+                       pending: &mut PendingTracker| {
+        let mut a_tile: Option<Csr> = None;
+        loop {
+            let my_j = res.reserve(pe, i, k);
+            if my_j >= t as i64 {
+                break;
+            }
+            let j = (my_j as usize + i + k) % t;
+            let a_ref = a_tile.get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
+            let b_tile = ctx.b.get_tile(pe, k, j);
+            let part = local_spgemm_charged(pe, a_ref, &b_tile);
+            let owner = ctx.c.owner(i, j);
+            if owner == pe.rank() {
+                if part.nnz() > 0 {
+                    acc.push(i, j, part);
+                }
+                pending.record(i, j);
+            } else {
+                ctx.queues.send_sparse_partial(pe, owner, i, j, &part);
+            }
+            {
+                let mut s = pe.stats_mut();
+                if own {
+                    s.n_own_work += 1;
+                } else {
+                    s.n_steals += 1;
+                }
+            }
+            drain_spgemm_queue(pe, ctx, acc, pending, false);
+        }
+    };
+
+    for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
+        attempt(pe, i, k, true, &mut acc, &mut pending);
+    }
+    let cells = t * t;
+    for idx in 0..cells {
+        let cell = (pe.rank() + idx) % cells;
+        let (i, k) = (cell / t, cell % t);
+        if ctx.a.owner(i, k) != pe.rank() {
+            attempt(pe, i, k, false, &mut acc, &mut pending);
+        }
+    }
+
+    wait_for_contributions(pe, |pe| {
+        drain_spgemm_queue(pe, ctx, &mut acc, &mut pending, true);
+        pending.done()
+    });
+    acc.flush(pe, &ctx.c, Kind::Acc);
+    ctx.c.renew_tiles(pe);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{spgemm_fixture, verify_spgemm};
+
+    #[test]
+    fn stationary_c_squares_rmat() {
+        let (fx, want) = spgemm_fixture(4, 10, 0x30);
+        fx.fabric.launch(|pe| spgemm_stationary_c(pe, &fx.ctx));
+        verify_spgemm(&fx, &want);
+    }
+
+    #[test]
+    fn stationary_c_nonsquare_6pe() {
+        let (fx, want) = spgemm_fixture(6, 9, 0x31);
+        fx.fabric.launch(|pe| spgemm_stationary_c(pe, &fx.ctx));
+        verify_spgemm(&fx, &want);
+    }
+
+    #[test]
+    fn stationary_a_squares_rmat() {
+        let (fx, want) = spgemm_fixture(4, 9, 0x32);
+        fx.fabric.launch(|pe| spgemm_stationary_a(pe, &fx.ctx));
+        verify_spgemm(&fx, &want);
+    }
+
+    #[test]
+    fn summa_squares_rmat() {
+        let (fx, want) = spgemm_fixture(9, 9, 0x33);
+        let lib = LibOverhead::mpi();
+        fx.fabric.launch(|pe| spgemm_summa(pe, &fx.ctx, &lib));
+        verify_spgemm(&fx, &want);
+    }
+
+    #[test]
+    fn random_ws_squares_rmat() {
+        let (fx, want) = spgemm_fixture(4, 10, 0x34);
+        let (_, stats) = fx.fabric.launch(|pe| spgemm_random_ws_a(pe, &fx.ctx));
+        verify_spgemm(&fx, &want);
+        let t = fx.ctx.a.t() as u64;
+        let total: u64 = stats.iter().map(|s| s.n_own_work + s.n_steals).sum();
+        assert_eq!(total, t * t * t, "every component multiply claimed exactly once");
+    }
+
+    #[test]
+    fn single_pe_spgemm() {
+        let (fx, want) = spgemm_fixture(1, 8, 0x35);
+        fx.fabric.launch(|pe| spgemm_stationary_c(pe, &fx.ctx));
+        verify_spgemm(&fx, &want);
+    }
+}

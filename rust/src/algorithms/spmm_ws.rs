@@ -1,0 +1,281 @@
+//! Workstealing SpMM algorithms (§3.4).
+//!
+//! * **Random workstealing** (Algorithm 3): a 2D reservation grid over
+//!   the tiles of the stationary matrix A; each grid element is a
+//!   counter over the j loop claimed by remote fetch-and-add. Thieves
+//!   pay for fetching A, B *and* shipping C — "stolen work is usually
+//!   more expensive".
+//! * **Locality-aware workstealing**: a 3D reservation grid, one claim
+//!   flag per component multiply C[i,j] += A[i,k]·B[k,j]. PEs do their
+//!   own work first, then only steal components for which they already
+//!   own one of the operands, bounding the extra communication.
+
+use crate::fabric::{Kind, Pe};
+use crate::matrix::{Csr, Dense};
+
+use super::common::{
+    drain_spmm_queue, local_spmm_charged, wait_for_contributions, DenseAccumulators,
+    PendingTracker, SpmmCtx,
+};
+
+/// Which matrix the owner-compute loop is organized around.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stationary {
+    C,
+    A,
+}
+
+/// Deliver a computed partial C tile: accumulate locally when we own the
+/// target, otherwise publish + enqueue to the owner.
+fn deliver(
+    pe: &Pe,
+    ctx: &SpmmCtx,
+    acc: &mut DenseAccumulators,
+    pending: &mut PendingTracker,
+    i: usize,
+    j: usize,
+    part: &Dense,
+) {
+    let owner = ctx.c.owner(i, j);
+    if owner == pe.rank() {
+        acc.accumulate(pe, i, j, part, Kind::Acc);
+        pending.record(i, j);
+    } else {
+        ctx.queues.send_dense_partial(pe, owner, i, j, part);
+    }
+}
+
+/// Work through the j-loop of stationary-A cell (i, k), claiming each j
+/// via the 2D reservation grid (Alg 3's `attempt_work`).
+#[allow(clippy::too_many_arguments)]
+fn attempt_work_2d(
+    pe: &Pe,
+    ctx: &SpmmCtx,
+    i: usize,
+    k: usize,
+    own: bool,
+    acc: &mut DenseAccumulators,
+    pending: &mut PendingTracker,
+) {
+    let t = ctx.a.t();
+    let res = ctx.res2d.as_ref().expect("random WS needs a 2D reservation grid");
+    let mut a_tile: Option<Csr> = None;
+    loop {
+        let my_j = res.reserve(pe, i, k);
+        if my_j >= t as i64 {
+            break;
+        }
+        // Offset the claimed index like the deterministic loops, so the
+        // first B fetches of different PEs are spread apart.
+        let j = (my_j as usize + i + k) % t;
+        // The A tile is fetched once per (i,k) visit; the owner's fetch
+        // is device-local, a thief pays a remote get — the cost asymmetry
+        // the paper describes.
+        let a_ref =
+            a_tile.get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
+        let b_tile = ctx.b.get_tile(pe, k, j);
+        let (cr, cc) = ctx.c.tile_dims(i, j);
+        let mut part = Dense::zeros(cr, cc);
+        local_spmm_charged(pe, &ctx.backend, a_ref, &b_tile, &mut part);
+        deliver(pe, ctx, acc, pending, i, j, &part);
+        {
+            let mut s = pe.stats_mut();
+            if own {
+                s.n_own_work += 1;
+            } else {
+                s.n_steals += 1;
+            }
+        }
+        drain_spmm_queue(pe, ctx, acc, pending, false);
+    }
+}
+
+/// Stationary-A SpMM with random workstealing — Algorithm 3.
+pub fn spmm_random_ws_a(pe: &Pe, ctx: &SpmmCtx) {
+    let t = ctx.a.t();
+    let my_c = ctx.c.grid.my_tiles(pe.rank());
+    let mut acc = DenseAccumulators::new(&ctx.c, &my_c);
+    let mut pending = PendingTracker::new(&my_c, t);
+
+    // Do work for my tiles.
+    for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
+        attempt_work_2d(pe, ctx, i, k, true, &mut acc, &mut pending);
+    }
+    // Attempt to steal work: sweep every cell starting at a rank-rotated
+    // offset (no locality preference — "random" stealing).
+    let cells = t * t;
+    for idx in 0..cells {
+        let cell = (pe.rank() + idx) % cells;
+        let (i, k) = (cell / t, cell % t);
+        if ctx.a.owner(i, k) != pe.rank() {
+            attempt_work_2d(pe, ctx, i, k, false, &mut acc, &mut pending);
+        }
+    }
+
+    wait_for_contributions(pe, |pe| {
+        drain_spmm_queue(pe, ctx, &mut acc, &mut pending, true);
+        pending.done()
+    });
+    acc.flush(pe, &ctx.c);
+    pe.barrier();
+}
+
+/// Compute one claimed component (i, j, k) and deliver it.
+fn do_component(
+    pe: &Pe,
+    ctx: &SpmmCtx,
+    i: usize,
+    j: usize,
+    k: usize,
+    a_cached: Option<&Csr>,
+    acc: &mut DenseAccumulators,
+    pending: &mut PendingTracker,
+) {
+    let owned_a;
+    let a_ref = match a_cached {
+        Some(a) => a,
+        None => {
+            owned_a = ctx.a.get_tile(pe, i, k);
+            &owned_a
+        }
+    };
+    let b_tile = ctx.b.get_tile(pe, k, j);
+    let (cr, cc) = ctx.c.tile_dims(i, j);
+    let mut part = Dense::zeros(cr, cc);
+    local_spmm_charged(pe, &ctx.backend, a_ref, &b_tile, &mut part);
+    deliver(pe, ctx, acc, pending, i, j, &part);
+}
+
+/// Locality-aware workstealing SpMM over a 3D reservation grid, in the
+/// stationary-C or stationary-A flavor ("LA WS S-C" / "LA WS S-A").
+///
+/// Phase 1 performs the PE's own work (claiming each component first, so
+/// nothing is duplicated if a thief got there earlier); phase 2 steals
+/// only components touching tiles this PE already owns (its A tiles,
+/// then its B tiles).
+pub fn spmm_locality_ws(pe: &Pe, ctx: &SpmmCtx, stationary: Stationary) {
+    let t = ctx.a.t();
+    let res = ctx.res3d.as_ref().expect("locality-aware WS needs a 3D reservation grid");
+    let my_c = ctx.c.grid.my_tiles(pe.rank());
+    let mut acc = DenseAccumulators::new(&ctx.c, &my_c);
+    let mut pending = PendingTracker::new(&my_c, t);
+
+    // Phase 1: own work.
+    match stationary {
+        Stationary::C => {
+            for &(i, j) in &my_c {
+                let k_off = i + j;
+                for k_ in 0..t {
+                    let k = (k_ + k_off) % t;
+                    if res.try_claim(pe, i, j, k) {
+                        do_component(pe, ctx, i, j, k, None, &mut acc, &mut pending);
+                        pe.stats_mut().n_own_work += 1;
+                    }
+                    drain_spmm_queue(pe, ctx, &mut acc, &mut pending, false);
+                }
+            }
+        }
+        Stationary::A => {
+            for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
+                let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
+                let j_off = i + k;
+                for j_ in 0..t {
+                    let j = (j_ + j_off) % t;
+                    if res.try_claim(pe, i, j, k) {
+                        do_component(pe, ctx, i, j, k, Some(&a_tile), &mut acc, &mut pending);
+                        pe.stats_mut().n_own_work += 1;
+                    }
+                    drain_spmm_queue(pe, ctx, &mut acc, &mut pending, false);
+                }
+            }
+        }
+    }
+
+    // Phase 2: steal only work touching tiles we own.
+    // Components using my A tiles…
+    for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
+        let mut a_tile: Option<Csr> = None;
+        for j in 0..t {
+            if res.try_claim(pe, i, j, k) {
+                let a_ref = a_tile
+                    .get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
+                do_component(pe, ctx, i, j, k, Some(a_ref), &mut acc, &mut pending);
+                pe.stats_mut().n_steals += 1;
+            }
+        }
+        drain_spmm_queue(pe, ctx, &mut acc, &mut pending, false);
+    }
+    // …and components using my B tiles.
+    for (k, j) in ctx.b.grid.my_tiles(pe.rank()) {
+        for i in 0..t {
+            if res.try_claim(pe, i, j, k) {
+                do_component(pe, ctx, i, j, k, None, &mut acc, &mut pending);
+                pe.stats_mut().n_steals += 1;
+            }
+        }
+        drain_spmm_queue(pe, ctx, &mut acc, &mut pending, false);
+    }
+
+    wait_for_contributions(pe, |pe| {
+        drain_spmm_queue(pe, ctx, &mut acc, &mut pending, true);
+        pending.done()
+    });
+    acc.flush(pe, &ctx.c);
+    pe.barrier();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::{spmm_fixture, spmm_fixture_imbalanced, verify_spmm};
+
+    #[test]
+    fn random_ws_correct_4pe() {
+        let (fx, want) = spmm_fixture(4, 64, 8, 0x20);
+        fx.fabric.launch(|pe| spmm_random_ws_a(pe, &fx.ctx));
+        verify_spmm(&fx, &want);
+    }
+
+    #[test]
+    fn random_ws_correct_6pe_nonsquare() {
+        let (fx, want) = spmm_fixture(6, 72, 8, 0x21);
+        fx.fabric.launch(|pe| spmm_random_ws_a(pe, &fx.ctx));
+        verify_spmm(&fx, &want);
+    }
+
+    #[test]
+    fn locality_ws_c_correct() {
+        let (fx, want) = spmm_fixture(4, 64, 8, 0x22);
+        fx.fabric.launch(|pe| spmm_locality_ws(pe, &fx.ctx, Stationary::C));
+        verify_spmm(&fx, &want);
+    }
+
+    #[test]
+    fn locality_ws_a_correct() {
+        let (fx, want) = spmm_fixture(9, 81, 8, 0x23);
+        fx.fabric.launch(|pe| spmm_locality_ws(pe, &fx.ctx, Stationary::A));
+        verify_spmm(&fx, &want);
+    }
+
+    #[test]
+    fn every_component_done_exactly_once() {
+        // own + stolen work across PEs must total t^3 components.
+        let (fx, want) = spmm_fixture_imbalanced(4, 64, 8, 0x24);
+        let (_, stats) = fx.fabric.launch(|pe| spmm_locality_ws(pe, &fx.ctx, Stationary::C));
+        verify_spmm(&fx, &want);
+        let t = fx.ctx.a.t() as u64;
+        let total: u64 = stats.iter().map(|s| s.n_own_work + s.n_steals).sum();
+        assert_eq!(total, t * t * t);
+    }
+
+    #[test]
+    fn stealing_happens_on_imbalanced_input() {
+        let (fx, want) = spmm_fixture_imbalanced(4, 128, 8, 0x25);
+        let (_, stats) = fx.fabric.launch(|pe| spmm_random_ws_a(pe, &fx.ctx));
+        verify_spmm(&fx, &want);
+        let steals: u64 = stats.iter().map(|s| s.n_steals).sum();
+        let own: u64 = stats.iter().map(|s| s.n_own_work).sum();
+        let t = fx.ctx.a.t() as u64;
+        assert_eq!(steals + own, t * t * t, "all components covered once");
+    }
+}

@@ -1,0 +1,209 @@
+//! Load-imbalance analysis — the machinery behind Figure 1 and the
+//! "load imb." column of Table 1.
+//!
+//! Imbalance is the paper's max/avg ratio: the maximum amount of work
+//! (nnz or flops) assigned to any process divided by the average. The
+//! key observation reproduced in Figure 1 is that an algorithm that
+//! synchronizes between the K stages of a 2D multiply pays
+//! `Σ_k max_p(work[p,k])` rather than `max_p Σ_k work[p,k]` — per-stage
+//! imbalance is amplified relative to end-to-end imbalance.
+
+use crate::matrix::csr::Csr;
+
+/// nnz per tile when `m` is split on a `pr × pc` grid (row-major tiles).
+pub fn tile_nnz(m: &Csr, pr: usize, pc: usize) -> Vec<u64> {
+    let bs_r = m.nrows.div_ceil(pr);
+    let bs_c = m.ncols.div_ceil(pc);
+    let mut counts = vec![0u64; pr * pc];
+    for r in 0..m.nrows {
+        let ti = r / bs_r;
+        let (cs, _) = m.row(r);
+        for &c in cs {
+            let tj = c as usize / bs_c;
+            counts[ti * pc + tj] += 1;
+        }
+    }
+    counts
+}
+
+/// max/avg nnz imbalance of `m` on a `pr × pc` grid — Table 1's metric.
+pub fn grid_load_imbalance(m: &Csr, pr: usize, pc: usize) -> f64 {
+    let counts = tile_nnz(m, pr, pc);
+    let xs: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+    crate::util::max_avg_ratio(&xs)
+}
+
+/// Flop counts of every component multiply C[i,j] += A[i,k]·A[k,j] for
+/// the 2D stationary-C SpGEMM C = A², on a `p × p` tile grid.
+///
+/// `flops[(i * p + j) * p + k]` is the (multiply-add ×2) flop count of
+/// stage k on process (i,j).
+pub struct SpgemmTileFlops {
+    pub p: usize,
+    pub flops: Vec<f64>,
+}
+
+impl SpgemmTileFlops {
+    #[inline]
+    pub fn at(&self, i: usize, j: usize, k: usize) -> f64 {
+        self.flops[(i * self.p + j) * self.p + k]
+    }
+
+    /// Total flops per process (i,j).
+    pub fn totals(&self) -> Vec<f64> {
+        let p = self.p;
+        (0..p * p)
+            .map(|ij| (0..p).map(|k| self.flops[ij * p + k]).sum())
+            .collect()
+    }
+
+    /// End-to-end max/avg imbalance (Fig 1a): processes never synchronize
+    /// across stages.
+    pub fn end_to_end_imbalance(&self) -> f64 {
+        crate::util::max_avg_ratio(&self.totals())
+    }
+
+    /// Per-stage-synchronized imbalance (Fig 1b): the run time becomes
+    /// Σ_k max(work), so the effective imbalance is
+    /// Σ_k max_p(work[p,k]) / Σ_k avg_p(work[p,k]).
+    pub fn per_stage_imbalance(&self) -> f64 {
+        let p = self.p;
+        let mut sum_max = 0.0;
+        let mut sum_avg = 0.0;
+        for k in 0..p {
+            let stage: Vec<f64> = (0..p * p).map(|ij| self.flops[ij * p + k]).collect();
+            sum_max += stage.iter().cloned().fold(f64::MIN, f64::max);
+            sum_avg += stage.iter().sum::<f64>() / stage.len() as f64;
+        }
+        if sum_avg == 0.0 {
+            1.0
+        } else {
+            sum_max / sum_avg
+        }
+    }
+
+    /// Per-stage max/avg for each stage k (the series plotted in Fig 1b).
+    pub fn stage_imbalances(&self) -> Vec<f64> {
+        let p = self.p;
+        (0..p)
+            .map(|k| {
+                let stage: Vec<f64> = (0..p * p).map(|ij| self.flops[ij * p + k]).collect();
+                crate::util::max_avg_ratio(&stage)
+            })
+            .collect()
+    }
+}
+
+/// Compute the full (i,j,k) flop cube for C = A·A on a `p × p` grid
+/// without materializing any tile products.
+///
+/// flops(i,j,k) = 2 · Σ_{(r,c) ∈ A[i,k]} nnz(row c-local of A[k,j]),
+/// computed in O(nnz · p) by first building per-(k,j) local row counts.
+pub fn spgemm_tile_flops(a: &Csr, p: usize) -> SpgemmTileFlops {
+    assert_eq!(a.nrows, a.ncols, "C = A·A needs square A");
+    let n = a.nrows;
+    let bs = n.div_ceil(p);
+
+    // rnnz[k][j][local_r]: nnz of A[k,j] in local row local_r.
+    // Flattened: rnnz[(k * p + j) * bs + local_r].
+    let mut rnnz = vec![0u32; p * p * bs];
+    for r in 0..n {
+        let (k, local_r) = (r / bs, r % bs);
+        let (cs, _) = a.row(r);
+        for &c in cs {
+            let j = c as usize / bs;
+            rnnz[(k * p + j) * bs + local_r] += 1;
+        }
+    }
+
+    let mut flops = vec![0f64; p * p * p];
+    for r in 0..n {
+        let i = r / bs;
+        let (cs, _) = a.row(r);
+        for &c in cs {
+            let c = c as usize;
+            let (k, local_c) = (c / bs, c % bs);
+            for j in 0..p {
+                let mults = rnnz[(k * p + j) * bs + local_c] as f64;
+                flops[(i * p + j) * p + k] += 2.0 * mults;
+            }
+        }
+    }
+    SpgemmTileFlops { p, flops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::matrix::local_spgemm::spgemm_flops;
+
+    #[test]
+    fn tile_nnz_sums_to_total() {
+        let m = gen::rmat(9, 8, 0.6, 0.4 / 3.0, 0.4 / 3.0, 2);
+        let counts = tile_nnz(&m, 4, 4);
+        assert_eq!(counts.iter().sum::<u64>(), m.nnz() as u64);
+    }
+
+    #[test]
+    fn flop_cube_matches_direct_computation() {
+        let a = gen::rmat(7, 8, 0.55, 0.15, 0.15, 3);
+        let p = 4;
+        let cube = spgemm_tile_flops(&a, p);
+        let bs = a.nrows.div_ceil(p);
+        // Check a few (i,j,k) entries against explicit tile extraction.
+        for (i, j, k) in [(0, 0, 0), (1, 2, 3), (3, 3, 1), (2, 0, 2)] {
+            let aik = a.submatrix(i * bs, ((i + 1) * bs).min(a.nrows), k * bs, ((k + 1) * bs).min(a.ncols));
+            let akj = a.submatrix(k * bs, ((k + 1) * bs).min(a.nrows), j * bs, ((j + 1) * bs).min(a.ncols));
+            let want = spgemm_flops(&aik, &akj);
+            assert_eq!(cube.at(i, j, k), want, "tile ({i},{j},{k})");
+        }
+    }
+
+    #[test]
+    fn per_stage_imbalance_at_least_end_to_end() {
+        let a = gen::rmat(10, 8, 0.6, 0.4 / 3.0, 0.4 / 3.0, 17);
+        let cube = spgemm_tile_flops(&a, 8);
+        let e2e = cube.end_to_end_imbalance();
+        let staged = cube.per_stage_imbalance();
+        assert!(staged >= e2e - 1e-9, "staged {staged} < e2e {e2e}");
+    }
+
+    #[test]
+    fn amplification_when_peaks_rotate() {
+        // Two processes whose heavy stage differs: end-to-end balanced
+        // (imb 1.0) but per-stage synchronized cost is amplified —
+        // exactly Figure 1's phenomenon, in miniature.
+        let p = 2;
+        let mut flops = vec![0.0; p * p * p];
+        // proc (0,0): heavy at k=0; proc (0,1): heavy at k=1;
+        // procs (1,*): balanced.
+        flops[(0 * p + 0) * p + 0] = 10.0;
+        flops[(0 * p + 0) * p + 1] = 2.0;
+        flops[(0 * p + 1) * p + 0] = 2.0;
+        flops[(0 * p + 1) * p + 1] = 10.0;
+        flops[(1 * p + 0) * p + 0] = 6.0;
+        flops[(1 * p + 0) * p + 1] = 6.0;
+        flops[(1 * p + 1) * p + 0] = 6.0;
+        flops[(1 * p + 1) * p + 1] = 6.0;
+        let cube = SpgemmTileFlops { p, flops };
+        assert!((cube.end_to_end_imbalance() - 1.0).abs() < 1e-9);
+        // Each stage: max 10, avg 6 -> staged imbalance 10/6.
+        assert!((cube.per_stage_imbalance() - 10.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_matrix_is_balanced() {
+        let a = gen::erdos_renyi(1 << 10, 16, 5);
+        let cube = spgemm_tile_flops(&a, 4);
+        assert!(cube.end_to_end_imbalance() < 1.1);
+        assert!(cube.per_stage_imbalance() < 1.2);
+    }
+
+    #[test]
+    fn stage_imbalances_len() {
+        let a = gen::erdos_renyi(256, 8, 6);
+        let cube = spgemm_tile_flops(&a, 4);
+        assert_eq!(cube.stage_imbalances().len(), 4);
+    }
+}

@@ -1,0 +1,3 @@
+//! Offline analyses: load-imbalance measurement (Fig 1, Table 1).
+
+pub mod loadimb;

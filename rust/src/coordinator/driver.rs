@@ -1,0 +1,233 @@
+//! The experiment driver: builds a fabric for the requested machine
+//! profile, distributes the operands, launches one thread per PE running
+//! the selected algorithm, verifies the result, and returns a
+//! [`Report`] — the `mpirun + srun` analog for the simulated cluster.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algorithms::{SpgemmAlg, SpgemmCtx, SpmmAlg, SpmmCtx};
+use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
+use crate::fabric::{Fabric, FabricConfig, NetProfile};
+use crate::matrix::{local_spmm, Csr, Dense};
+use crate::runtime::TileBackend;
+use crate::util::Rng;
+
+use super::report::Report;
+
+/// Configuration for one SpMM experiment run.
+#[derive(Clone)]
+pub struct SpmmConfig {
+    pub alg: SpmmAlg,
+    pub nprocs: usize,
+    pub profile: NetProfile,
+    /// Columns of the dense B matrix (the paper sweeps 128–512).
+    pub n_cols: usize,
+    /// Accumulation queue capacity per PE.
+    pub queue_cap: usize,
+    /// Symmetric heap bytes per PE.
+    pub seg_bytes: usize,
+    /// Seed for the dense B matrix.
+    pub seed: u64,
+    /// Check the distributed result against a single-node reference.
+    pub verify: bool,
+    pub backend: TileBackend,
+}
+
+impl SpmmConfig {
+    pub fn new(alg: SpmmAlg, nprocs: usize, profile: NetProfile, n_cols: usize) -> Self {
+        SpmmConfig {
+            alg,
+            nprocs,
+            profile,
+            n_cols,
+            queue_cap: 8192,
+            seg_bytes: 512 << 20,
+            seed: 0x5EED,
+            verify: false,
+            backend: TileBackend::Native,
+        }
+    }
+}
+
+/// Result of a SpMM run.
+pub struct SpmmRun {
+    pub report: Report,
+    /// Gathered output (only when `verify` or explicitly requested).
+    pub c: Option<Dense>,
+}
+
+fn make_grid(nprocs: usize, needs_square: bool) -> Result<ProcGrid> {
+    if needs_square {
+        ProcGrid::square(nprocs)
+            .with_context(|| format!("this algorithm requires a perfect-square process count, got {nprocs}"))
+    } else {
+        Ok(ProcGrid::for_nprocs(nprocs))
+    }
+}
+
+/// Run one distributed SpMM: C = A · B with B = random dense
+/// (`a.ncols × n_cols`, seeded).
+pub fn run_spmm(a: &Csr, cfg: &SpmmConfig) -> Result<SpmmRun> {
+    if a.nrows != a.ncols {
+        bail!("expected a square sparse matrix, got {}x{}", a.nrows, a.ncols);
+    }
+    let grid = make_grid(cfg.nprocs, cfg.alg.needs_square())?;
+    let fabric = Fabric::new(FabricConfig {
+        nprocs: cfg.nprocs,
+        profile: cfg.profile.clone(),
+        seg_capacity: cfg.seg_bytes,
+        pacing: true,
+    });
+
+    let mut rng = Rng::new(cfg.seed);
+    let b = Dense::random(a.ncols, cfg.n_cols, &mut rng);
+
+    let da = DistCsr::scatter(&fabric, a, grid);
+    let db = DistDense::scatter(&fabric, &b, grid);
+    let dc = DistDense::zeros(&fabric, a.nrows, cfg.n_cols, grid);
+    let queues = AccQueues::create(&fabric, cfg.queue_cap);
+    let ctx = SpmmCtx {
+        a: da,
+        b: db,
+        c: dc,
+        queues,
+        res2d: cfg.alg.needs_res2d().then(|| ResGrid2D::create(&fabric, grid)),
+        res3d: cfg.alg.needs_res3d().then(|| ResGrid3D::create(&fabric, grid)),
+        backend: cfg.backend.clone(),
+    };
+
+    let alg = cfg.alg;
+    let t0 = Instant::now();
+    let (_, stats) = fabric.launch(|pe| alg.run(pe, &ctx));
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+
+    let report = Report::new(alg.name(), cfg.profile.name, stats, wall_ns);
+    let c = if cfg.verify {
+        let got = ctx.c.gather(&fabric);
+        let want = local_spmm::spmm(a, &b);
+        let err = got.rel_err(&want);
+        if err > 1e-4 {
+            bail!("verification failed for {}: rel err {err:.3e}", alg.name());
+        }
+        Some(got)
+    } else {
+        None
+    };
+    Ok(SpmmRun { report, c })
+}
+
+/// Configuration for one SpGEMM experiment run (C = A·A, like §6.2).
+#[derive(Clone)]
+pub struct SpgemmConfig {
+    pub alg: SpgemmAlg,
+    pub nprocs: usize,
+    pub profile: NetProfile,
+    pub queue_cap: usize,
+    pub seg_bytes: usize,
+    pub verify: bool,
+}
+
+impl SpgemmConfig {
+    pub fn new(alg: SpgemmAlg, nprocs: usize, profile: NetProfile) -> Self {
+        SpgemmConfig { alg, nprocs, profile, queue_cap: 8192, seg_bytes: 512 << 20, verify: false }
+    }
+}
+
+pub struct SpgemmRun {
+    pub report: Report,
+    pub c: Option<Csr>,
+}
+
+/// Run one distributed SpGEMM: C = A · A.
+pub fn run_spgemm(a: &Csr, cfg: &SpgemmConfig) -> Result<SpgemmRun> {
+    if a.nrows != a.ncols {
+        bail!("C = A·A needs square A, got {}x{}", a.nrows, a.ncols);
+    }
+    let grid = make_grid(cfg.nprocs, cfg.alg.needs_square())?;
+    let fabric = Fabric::new(FabricConfig {
+        nprocs: cfg.nprocs,
+        profile: cfg.profile.clone(),
+        seg_capacity: cfg.seg_bytes,
+        pacing: true,
+    });
+
+    let da = DistCsr::scatter(&fabric, a, grid);
+    let db = da.clone(); // C = A·A shares one distributed operand
+    let dc = DistCsr::zeros(&fabric, a.nrows, a.ncols, grid);
+    let queues = AccQueues::create(&fabric, cfg.queue_cap);
+    let ctx = SpgemmCtx {
+        a: da,
+        b: db,
+        c: dc,
+        queues,
+        res2d: cfg.alg.needs_res2d().then(|| ResGrid2D::create(&fabric, grid)),
+    };
+
+    let alg = cfg.alg;
+    let t0 = Instant::now();
+    let (_, stats) = fabric.launch(|pe| alg.run(pe, &ctx));
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+
+    let report = Report::new(alg.name(), cfg.profile.name, stats, wall_ns);
+    let c = if cfg.verify {
+        let got = ctx.c.gather(&fabric);
+        let want = crate::matrix::local_spgemm::spgemm(a, a).c;
+        let err = got.to_dense().rel_err(&want.to_dense());
+        if err > 1e-4 {
+            bail!("verification failed for {}: rel err {err:.3e}", alg.name());
+        }
+        Some(got)
+    } else {
+        None
+    };
+    Ok(SpgemmRun { report, c })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+
+    #[test]
+    fn driver_runs_all_spmm_algorithms() {
+        let a = gen::erdos_renyi(96, 6, 1);
+        for &alg in SpmmAlg::all() {
+            let mut cfg = SpmmConfig::new(alg, 4, NetProfile::dgx2(), 16);
+            cfg.verify = true;
+            cfg.seg_bytes = 64 << 20;
+            let run = run_spmm(&a, &cfg).unwrap_or_else(|e| panic!("{}: {e}", alg.name()));
+            assert!(run.report.makespan_ns > 0.0);
+            assert!(run.report.flops > 0.0);
+        }
+    }
+
+    #[test]
+    fn driver_runs_all_spgemm_algorithms() {
+        let a = gen::rmat(7, 6, 0.5, 0.17, 0.17, 2);
+        for &alg in SpgemmAlg::all() {
+            let mut cfg = SpgemmConfig::new(alg, 4, NetProfile::dgx2());
+            cfg.verify = true;
+            cfg.seg_bytes = 64 << 20;
+            let run = run_spgemm(&a, &cfg).unwrap_or_else(|e| panic!("{}: {e}", alg.name()));
+            assert!(run.report.makespan_ns > 0.0);
+        }
+    }
+
+    #[test]
+    fn summa_rejects_nonsquare_nprocs() {
+        let a = gen::erdos_renyi(64, 4, 3);
+        let cfg = SpmmConfig::new(SpmmAlg::SummaMpi, 6, NetProfile::summit(), 8);
+        assert!(run_spmm(&a, &cfg).is_err());
+    }
+
+    #[test]
+    fn rdma_handles_nonsquare_nprocs() {
+        let a = gen::erdos_renyi(64, 4, 3);
+        let mut cfg = SpmmConfig::new(SpmmAlg::StationaryC, 6, NetProfile::summit(), 8);
+        cfg.verify = true;
+        cfg.seg_bytes = 32 << 20;
+        run_spmm(&a, &cfg).unwrap();
+    }
+}

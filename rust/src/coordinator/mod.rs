@@ -1,0 +1,10 @@
+//! Coordinator: experiment configuration, the thread-per-PE launcher,
+//! and run reports — the harness every example and bench goes through.
+
+pub mod driver;
+pub mod experiments;
+pub mod report;
+pub mod testutil;
+
+pub use driver::{run_spgemm, run_spmm, SpgemmConfig, SpgemmRun, SpmmConfig, SpmmRun};
+pub use report::Report;

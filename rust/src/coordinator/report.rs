@@ -1,0 +1,121 @@
+//! Run reports: virtual makespan, component breakdown (Table 2), and
+//! throughput summaries.
+
+use crate::fabric::Stats;
+
+/// Aggregated result of one distributed multiply run.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Algorithm legend name.
+    pub alg: &'static str,
+    /// Simulated machine profile name.
+    pub profile: &'static str,
+    pub nprocs: usize,
+    /// Virtual makespan: max final clock across PEs, ns. This is the
+    /// number the figures plot as "runtime".
+    pub makespan_ns: f64,
+    /// Real wall-clock time of the simulation itself, ns (not the
+    /// figure metric; used by the §Perf pass).
+    pub wall_ns: f64,
+    /// Total useful flops across PEs.
+    pub flops: f64,
+    /// Per-rank component stats.
+    pub per_rank: Vec<Stats>,
+}
+
+impl Report {
+    pub fn new(
+        alg: &'static str,
+        profile: &'static str,
+        per_rank: Vec<Stats>,
+        wall_ns: f64,
+    ) -> Report {
+        let makespan_ns =
+            per_rank.iter().map(|s| s.final_clock_ns).fold(0.0, f64::max);
+        let flops = per_rank.iter().map(|s| s.flops).sum();
+        Report { alg, profile, nprocs: per_rank.len(), makespan_ns, wall_ns, flops, per_rank }
+    }
+
+    /// Simulated GFlop/s over the virtual makespan.
+    pub fn gflops(&self) -> f64 {
+        if self.makespan_ns == 0.0 {
+            0.0
+        } else {
+            self.flops / self.makespan_ns
+        }
+    }
+
+    /// Average of a per-rank component, seconds (Table 2 rows).
+    fn avg_s(&self, f: impl Fn(&Stats) -> f64) -> f64 {
+        let sum: f64 = self.per_rank.iter().map(&f).sum();
+        sum / self.per_rank.len() as f64 / 1e9
+    }
+
+    pub fn comp_s(&self) -> f64 {
+        self.avg_s(|s| s.comp_ns)
+    }
+    pub fn comm_s(&self) -> f64 {
+        self.avg_s(|s| s.comm_ns)
+    }
+    pub fn acc_s(&self) -> f64 {
+        self.avg_s(|s| s.acc_ns)
+    }
+    pub fn queue_s(&self) -> f64 {
+        self.avg_s(|s| s.queue_ns)
+    }
+    /// "Load Imb.": average time lost at synchronization points.
+    pub fn load_imb_s(&self) -> f64 {
+        self.avg_s(|s| s.imb_ns)
+    }
+
+    pub fn makespan_s(&self) -> f64 {
+        self.makespan_ns / 1e9
+    }
+
+    /// Total bytes moved by one-sided gets.
+    pub fn bytes_get(&self) -> f64 {
+        self.per_rank.iter().map(|s| s.bytes_get).sum()
+    }
+
+    pub fn steals(&self) -> u64 {
+        self.per_rank.iter().map(|s| s.n_steals).sum()
+    }
+
+    /// One formatted row for the figure harnesses.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<16} p={:<4} makespan={:>10} comp={:.4}s comm={:.4}s acc={:.4}s imb={:.4}s gflops={:.2}",
+            self.alg,
+            self.nprocs,
+            crate::util::fmt_ns(self.makespan_ns),
+            self.comp_s(),
+            self.comm_s(),
+            self.acc_s(),
+            self.load_imb_s(),
+            self.gflops(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_aggregates() {
+        let mut a = Stats::default();
+        a.comp_ns = 2e9;
+        a.final_clock_ns = 3e9;
+        a.flops = 10e9;
+        let mut b = Stats::default();
+        b.comp_ns = 1e9;
+        b.final_clock_ns = 4e9;
+        b.flops = 6e9;
+        let r = Report::new("test", "summit", vec![a, b], 1e6);
+        assert_eq!(r.makespan_ns, 4e9);
+        assert_eq!(r.flops, 16e9);
+        assert!((r.comp_s() - 1.5).abs() < 1e-12);
+        assert!((r.gflops() - 4.0).abs() < 1e-12);
+        assert_eq!(r.nprocs, 2);
+    }
+}

@@ -1,0 +1,110 @@
+//! Shared fixtures for algorithm tests: small distributed problems with
+//! a single-node reference result.
+
+use std::sync::Arc;
+
+use crate::algorithms::{SpgemmCtx, SpmmCtx};
+use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
+use crate::fabric::{Fabric, FabricConfig, NetProfile};
+use crate::matrix::{gen, local_spgemm, local_spmm, Coo, Csr, Dense};
+use crate::runtime::TileBackend;
+use crate::util::Rng;
+
+/// A ready-to-launch SpMM problem.
+pub struct SpmmFixture {
+    pub fabric: Arc<Fabric>,
+    pub ctx: SpmmCtx,
+}
+
+fn build_spmm(nprocs: usize, a: Csr, b: Dense) -> (SpmmFixture, Dense) {
+    let want = local_spmm::spmm(&a, &b);
+    let fabric = Fabric::new(FabricConfig {
+        nprocs,
+        profile: NetProfile::dgx2(),
+        seg_capacity: 64 << 20,
+        pacing: true,
+    });
+    let grid = ProcGrid::for_nprocs(nprocs);
+    let ctx = SpmmCtx {
+        a: DistCsr::scatter(&fabric, &a, grid),
+        b: DistDense::scatter(&fabric, &b, grid),
+        c: DistDense::zeros(&fabric, a.nrows, b.ncols, grid),
+        queues: AccQueues::create(&fabric, 4096),
+        res2d: Some(ResGrid2D::create(&fabric, grid)),
+        res3d: Some(ResGrid3D::create(&fabric, grid)),
+        backend: TileBackend::Native,
+    };
+    (SpmmFixture { fabric, ctx }, want)
+}
+
+/// Random uniform sparse A (`n × n`) times random dense B (`n × n_cols`).
+pub fn spmm_fixture(nprocs: usize, n: usize, n_cols: usize, seed: u64) -> (SpmmFixture, Dense) {
+    let mut rng = Rng::new(seed);
+    let a = gen::erdos_renyi(n, 5, seed);
+    let b = Dense::random(n, n_cols, &mut rng);
+    build_spmm(nprocs, a, b)
+}
+
+/// A deliberately imbalanced A: almost all nonzeros in the first tile
+/// rows — forces workstealing to kick in.
+pub fn spmm_fixture_imbalanced(
+    nprocs: usize,
+    n: usize,
+    n_cols: usize,
+    seed: u64,
+) -> (SpmmFixture, Dense) {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    // Dense stripe in the first rows + sprinkle elsewhere.
+    for r in 0..n / 8 {
+        for _ in 0..24 {
+            coo.push(r, rng.below_usize(n), rng.next_f32() + 0.5);
+        }
+    }
+    for _ in 0..n {
+        coo.push(rng.below_usize(n), rng.below_usize(n), rng.next_f32() + 0.5);
+    }
+    let a = Csr::from_coo(coo);
+    let b = Dense::random(n, n_cols, &mut rng);
+    build_spmm(nprocs, a, b)
+}
+
+pub fn verify_spmm(fx: &SpmmFixture, want: &Dense) {
+    let got = fx.ctx.c.gather(&fx.fabric);
+    let err = got.rel_err(want);
+    assert!(err < 1e-4, "distributed SpMM diverges from reference: rel err {err:.3e}");
+}
+
+/// A ready-to-launch SpGEMM problem (C = A·A on an R-MAT matrix).
+pub struct SpgemmFixture {
+    pub fabric: Arc<Fabric>,
+    pub ctx: SpgemmCtx,
+}
+
+pub fn spgemm_fixture(nprocs: usize, scale: u32, seed: u64) -> (SpgemmFixture, Csr) {
+    let a = gen::rmat(scale.min(10), 4, 0.5, 0.17, 0.17, seed);
+    let want = local_spgemm::spgemm(&a, &a).c;
+    let fabric = Fabric::new(FabricConfig {
+        nprocs,
+        profile: NetProfile::dgx2(),
+        seg_capacity: 128 << 20,
+        pacing: true,
+    });
+    let grid = ProcGrid::for_nprocs(nprocs);
+    let da = DistCsr::scatter(&fabric, &a, grid);
+    let ctx = SpgemmCtx {
+        b: da.clone(),
+        a: da,
+        c: DistCsr::zeros(&fabric, a.nrows, a.ncols, grid),
+        queues: AccQueues::create(&fabric, 4096),
+        res2d: Some(ResGrid2D::create(&fabric, grid)),
+    };
+    (SpgemmFixture { fabric, ctx }, want)
+}
+
+pub fn verify_spgemm(fx: &SpgemmFixture, want: &Csr) {
+    let got = fx.ctx.c.gather(&fx.fabric);
+    assert_eq!(got.nnz(), want.nnz(), "nnz mismatch");
+    let err = got.to_dense().rel_err(&want.to_dense());
+    assert!(err < 1e-4, "distributed SpGEMM diverges from reference: rel err {err:.3e}");
+}

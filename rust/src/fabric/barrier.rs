@@ -1,0 +1,135 @@
+//! Clock-synchronizing barriers.
+//!
+//! A `ClockBarrier` is a reusable rendezvous for a set of PE threads that
+//! also merges their **virtual clocks**: every participant enters with
+//! its own virtual time and leaves with the maximum across the team,
+//! plus a fixed barrier cost. The difference `max - mine` is precisely
+//! the *time lost to load imbalance at a synchronization point* — the
+//! quantity Figure 1 of the paper shows being amplified by per-stage
+//! synchronization, and the "Load Imb." column of Table 2.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct BarState {
+    arrived: usize,
+    generation: u64,
+    /// Max clock gathered during the current generation.
+    gathering_max: f64,
+    /// Max clock released to waiters of the previous generation.
+    released_max: f64,
+}
+
+/// A reusable barrier over `n` participants that releases the max
+/// virtual clock observed in each round.
+///
+/// Carries an abort flag (shared with the whole fabric): if any PE
+/// thread panics, waiters unblock and propagate the abort instead of
+/// deadlocking the run.
+pub struct ClockBarrier {
+    n: usize,
+    state: Mutex<BarState>,
+    cv: Condvar,
+    abort: Arc<AtomicBool>,
+}
+
+impl ClockBarrier {
+    pub fn new(n: usize) -> Self {
+        Self::with_abort(n, Arc::new(AtomicBool::new(false)))
+    }
+
+    pub fn with_abort(n: usize, abort: Arc<AtomicBool>) -> Self {
+        assert!(n > 0);
+        ClockBarrier {
+            n,
+            state: Mutex::new(BarState {
+                arrived: 0,
+                generation: 0,
+                gathering_max: f64::MIN,
+                released_max: 0.0,
+            }),
+            cv: Condvar::new(),
+            abort,
+        }
+    }
+
+    pub fn participants(&self) -> usize {
+        self.n
+    }
+
+    /// Enter the barrier with virtual clock `my_clock`; returns the team
+    /// max once everyone has arrived. Panics if the fabric aborted.
+    pub fn wait(&self, my_clock: f64) -> f64 {
+        let mut s = self.state.lock().unwrap();
+        s.gathering_max = s.gathering_max.max(my_clock);
+        s.arrived += 1;
+        if s.arrived == self.n {
+            s.released_max = s.gathering_max;
+            s.gathering_max = f64::MIN;
+            s.arrived = 0;
+            s.generation += 1;
+            self.cv.notify_all();
+            s.released_max
+        } else {
+            let gen = s.generation;
+            while s.generation == gen {
+                if self.abort.load(Ordering::Acquire) {
+                    panic!("fabric aborted: a peer PE panicked");
+                }
+                let (guard, _) = self.cv.wait_timeout(s, Duration::from_millis(20)).unwrap();
+                s = guard;
+            }
+            s.released_max
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn releases_max_clock() {
+        let b = Arc::new(ClockBarrier::new(4));
+        let mut hs = vec![];
+        for r in 0..4 {
+            let b = b.clone();
+            hs.push(std::thread::spawn(move || b.wait(r as f64 * 10.0)));
+        }
+        for h in hs {
+            assert_eq!(h.join().unwrap(), 30.0);
+        }
+    }
+
+    #[test]
+    fn reusable_across_generations() {
+        let b = Arc::new(ClockBarrier::new(2));
+        let mut hs = vec![];
+        for r in 0..2 {
+            let b = b.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut out = vec![];
+                for round in 0..50 {
+                    let mine = (round * 2 + r) as f64;
+                    out.push(b.wait(mine));
+                }
+                out
+            }));
+        }
+        let res: Vec<Vec<f64>> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+        for round in 0..50 {
+            let expect = (round * 2 + 1) as f64;
+            assert_eq!(res[0][round], expect);
+            assert_eq!(res[1][round], expect);
+        }
+    }
+
+    #[test]
+    fn single_participant_is_identity() {
+        let b = ClockBarrier::new(1);
+        assert_eq!(b.wait(42.0), 42.0);
+        assert_eq!(b.wait(7.0), 7.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Global pointers: typed references to remote memory.
+//!
+//! A `GlobalPtr<T>` is the paper's "global pointer" (§3.1): a
+//! (rank, offset, length) triple naming an array of `T` inside some PE's
+//! symmetric-heap segment. Directories of global pointers are what the
+//! distributed matrix structures hand to every process so it can fetch
+//! any tile with a one-sided get.
+//!
+//! `GlobalPtr` is plain data (`Copy`) and can itself be written into a
+//! segment and shipped through a remote queue — that is exactly how the
+//! stationary-A algorithm sends "here is a partial C tile to accumulate"
+//! messages (Alg 1/3).
+
+use std::marker::PhantomData;
+
+/// Types that can be transported through the fabric byte-for-byte.
+///
+/// Safety contract: the type must be valid for any bit pattern and have
+/// no padding within `size_of::<T>()` (we only implement it for the
+/// primitive numeric types the matrices use).
+pub unsafe trait Pod: Copy + Send + 'static {
+    fn zeroed() -> Self;
+}
+
+macro_rules! impl_pod {
+    ($($t:ty),*) => {
+        $(unsafe impl Pod for $t { fn zeroed() -> Self { 0 as $t } })*
+    };
+}
+impl_pod!(u8, i8, u16, i16, u32, i32, u64, i64, f32, f64, usize);
+
+/// A typed global pointer to `len` elements of `T` on `rank`'s segment
+/// at byte offset `offset`.
+pub struct GlobalPtr<T> {
+    pub rank: u32,
+    pub offset: u64,
+    pub len: u64,
+    _ph: PhantomData<fn() -> T>,
+}
+
+// Manual impls: derive would bound on T: Copy etc. unnecessarily.
+impl<T> Clone for GlobalPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for GlobalPtr<T> {}
+impl<T> std::fmt::Debug for GlobalPtr<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GlobalPtr<{}>(rank={}, off={}, len={})", std::any::type_name::<T>(), self.rank, self.offset, self.len)
+    }
+}
+impl<T> PartialEq for GlobalPtr<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.rank == other.rank && self.offset == other.offset && self.len == other.len
+    }
+}
+impl<T> Eq for GlobalPtr<T> {}
+
+impl<T> GlobalPtr<T> {
+    pub fn new(rank: usize, offset: usize, len: usize) -> Self {
+        GlobalPtr { rank: rank as u32, offset: offset as u64, len: len as u64, _ph: PhantomData }
+    }
+
+    /// A null pointer (len 0, rank u32::MAX) used as a sentinel.
+    pub fn null() -> Self {
+        GlobalPtr { rank: u32::MAX, offset: 0, len: 0, _ph: PhantomData }
+    }
+
+    pub fn is_null(&self) -> bool {
+        self.rank == u32::MAX
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank as usize
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Size of the referenced array in bytes.
+    pub fn bytes(&self) -> usize {
+        self.len as usize * std::mem::size_of::<T>()
+    }
+
+    /// Sub-array view: elements `[start, start+len)`.
+    /// The element size must keep the resulting byte offset 8-aligned for
+    /// word-atomic access; all matrix arrays use 4- or 8-byte elements and
+    /// 8-aligned bases, so slices at even element indices are safe. For
+    /// bulk get/put (non-atomic) any element offset with 8-aligned *base*
+    /// is supported by the byte path as long as `(start * size) % 8 == 0`.
+    pub fn slice(&self, start: usize, len: usize) -> Self {
+        assert!(start + len <= self.len as usize, "slice out of bounds");
+        let byte = start * std::mem::size_of::<T>();
+        assert_eq!((self.offset as usize + byte) % 8, 0, "sliced GlobalPtr must stay 8-aligned");
+        GlobalPtr {
+            rank: self.rank,
+            offset: self.offset + byte as u64,
+            len: len as u64,
+            _ph: PhantomData,
+        }
+    }
+
+    /// Encode into 2 words for transport through a remote queue.
+    /// Layout: word0 = rank (high 32) | len-low-32? No — len can exceed
+    /// 32 bits for big tiles, so we use: word0 = (rank << 40) | (len & 0xFF_FFFF_FFFF),
+    /// word1 = offset. Segments are < 2^40 bytes and len < 2^40 in all
+    /// realistic configurations (asserted).
+    pub fn encode(&self) -> [u64; 2] {
+        // Null pointers map to the all-ones 24-bit rank sentinel.
+        let rank = if self.rank == u32::MAX { (1 << 24) - 1 } else { self.rank as u64 };
+        assert!(self.len < (1 << 40) && rank < (1 << 24), "GlobalPtr out of encodable range");
+        [(rank << 40) | self.len, self.offset]
+    }
+
+    pub fn decode(words: [u64; 2]) -> Self {
+        let rank = (words[0] >> 40) as u32;
+        let len = words[0] & ((1u64 << 40) - 1);
+        GlobalPtr { rank: if rank == (1 << 24) - 1 { u32::MAX } else { rank }, offset: words[1], len, _ph: PhantomData }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p = GlobalPtr::<f32>::new(37, 4096, 12345);
+        let q = GlobalPtr::<f32>::decode(p.encode());
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn slice_arithmetic() {
+        let p = GlobalPtr::<f32>::new(0, 64, 100);
+        let s = p.slice(4, 10);
+        assert_eq!(s.offset, 64 + 16);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.bytes(), 40);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_oob() {
+        let p = GlobalPtr::<f64>::new(0, 0, 10);
+        let _ = p.slice(8, 3);
+    }
+
+    #[test]
+    fn null_sentinel() {
+        let n = GlobalPtr::<i64>::null();
+        assert!(n.is_null());
+        assert!(!GlobalPtr::<i64>::new(0, 0, 0).is_null());
+    }
+}

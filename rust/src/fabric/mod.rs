@@ -1,0 +1,291 @@
+//! The RDMA fabric — simulated one-sided communication substrate.
+//!
+//! This module is our substitution for NVSHMEM + GPUDirect RDMA (see
+//! DESIGN.md §1): a set of per-PE symmetric-heap [`Segment`]s that any
+//! thread can read, write, or atomically update without involving the
+//! owner's thread, plus virtual-time cost accounting per the selected
+//! [`NetProfile`] (Summit, DGX-2, or wall-clock).
+//!
+//! Typical use (`no_run` in doctests only because rustdoc test binaries
+//! don't inherit the xla rpath; the same code runs in unit tests):
+//!
+//! ```no_run
+//! use sparta::fabric::{Fabric, FabricConfig, NetProfile};
+//!
+//! let fabric = Fabric::new(FabricConfig {
+//!     nprocs: 4,
+//!     profile: NetProfile::dgx2(),
+//!     seg_capacity: 64 << 20,
+//!     pacing: true,
+//! });
+//! let gp = fabric.alloc_on::<f32>(2, 128); // 128 f32s on rank 2
+//! let (results, stats) = fabric.launch(|pe| {
+//!     if pe.rank() == 0 {
+//!         pe.put(gp, &vec![1.0f32; 128]);
+//!     }
+//!     pe.barrier();
+//!     pe.get_vec(gp)[0]
+//! });
+//! assert!(results.iter().all(|&x| x == 1.0));
+//! assert_eq!(stats.len(), 4);
+//! ```
+
+pub mod barrier;
+pub mod gptr;
+pub mod pe;
+pub mod queue;
+pub mod segment;
+pub mod stats;
+pub mod topology;
+
+pub use barrier::ClockBarrier;
+pub use gptr::{GlobalPtr, Pod};
+pub use pe::{GetFuture, Pe};
+pub use queue::{QueueHandle, QueueItem};
+pub use segment::Segment;
+pub use stats::{Kind, Stats};
+pub use topology::{ComputeModel, Link, LinkKind, NetProfile};
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Fabric construction parameters.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    /// Number of simulated PEs (GPUs).
+    pub nprocs: usize,
+    /// Cost model / topology.
+    pub profile: NetProfile,
+    /// Per-PE symmetric heap capacity in bytes.
+    pub seg_capacity: usize,
+    /// Pace PE threads so real time tracks virtual time (default true
+    /// for timed profiles). Required for causally-consistent race
+    /// outcomes (workstealing claims, queue arrivals); turn off only for
+    /// unit tests that charge large artificial durations.
+    pub pacing: bool,
+}
+
+impl FabricConfig {
+    pub fn new(nprocs: usize, profile: NetProfile) -> Self {
+        FabricConfig { nprocs, profile, seg_capacity: 256 << 20, pacing: true }
+    }
+}
+
+/// The fabric: all segments + global synchronization state.
+pub struct Fabric {
+    nprocs: usize,
+    profile: NetProfile,
+    segments: Vec<Segment>,
+    global_barrier: ClockBarrier,
+    teams: Mutex<HashMap<(String, u64), Arc<ClockBarrier>>>,
+    /// Set when any PE thread panics; unblocks barriers and spin loops so
+    /// the whole run fails fast instead of deadlocking.
+    aborted: Arc<std::sync::atomic::AtomicBool>,
+    pacing: bool,
+}
+
+impl Fabric {
+    pub fn new(cfg: FabricConfig) -> Arc<Fabric> {
+        assert!(cfg.nprocs > 0);
+        let segments = (0..cfg.nprocs).map(|_| Segment::new(cfg.seg_capacity)).collect();
+        let aborted = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let pacing = cfg.pacing && cfg.profile.timed;
+        Arc::new(Fabric {
+            nprocs: cfg.nprocs,
+            profile: cfg.profile,
+            segments,
+            global_barrier: ClockBarrier::with_abort(cfg.nprocs, Arc::clone(&aborted)),
+            teams: Mutex::new(HashMap::new()),
+            aborted,
+            pacing,
+        })
+    }
+
+    /// Whether PE threads pace real time to virtual time.
+    pub fn pacing(&self) -> bool {
+        self.pacing
+    }
+
+    /// True once any PE has panicked. Long spin loops (queue
+    /// backpressure, termination detection) must poll this.
+    pub fn check_abort(&self) {
+        if self.aborted.load(std::sync::atomic::Ordering::Acquire) {
+            panic!("fabric aborted: a peer PE panicked");
+        }
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.nprocs
+    }
+
+    pub fn profile(&self) -> &NetProfile {
+        &self.profile
+    }
+
+    pub fn segment(&self, rank: usize) -> &Segment {
+        &self.segments[rank]
+    }
+
+    pub(crate) fn global_barrier(&self) -> &ClockBarrier {
+        &self.global_barrier
+    }
+
+    /// Get-or-create a team barrier keyed by `(tag, id)`. All `size`
+    /// members must agree on the key and size.
+    pub fn team(&self, tag: &str, id: u64, size: usize) -> Arc<ClockBarrier> {
+        let mut teams = self.teams.lock().unwrap();
+        let b = teams
+            .entry((tag.to_string(), id))
+            .or_insert_with(|| Arc::new(ClockBarrier::with_abort(size, Arc::clone(&self.aborted))))
+            .clone();
+        assert_eq!(b.participants(), size, "team {tag}:{id} recreated with different size");
+        b
+    }
+
+    // ---------------------------------------------------------------
+    // Setup-phase (untimed) access, used by the coordinator before the
+    // PE threads launch: distributing matrices, building directories.
+    // ---------------------------------------------------------------
+
+    /// Allocate `n` elements of `T` on `rank`'s segment (untimed).
+    pub fn alloc_on<T: Pod>(&self, rank: usize, n: usize) -> GlobalPtr<T> {
+        let off = self.segments[rank].alloc(n * std::mem::size_of::<T>());
+        GlobalPtr::new(rank, off, n)
+    }
+
+    /// Untimed write (setup only).
+    pub fn write<T: Pod>(&self, gp: GlobalPtr<T>, src: &[T]) {
+        assert_eq!(src.len(), gp.len());
+        let bytes = unsafe {
+            std::slice::from_raw_parts(src.as_ptr() as *const u8, std::mem::size_of_val(src))
+        };
+        self.segments[gp.rank()].write_bytes(gp.offset as usize, bytes);
+    }
+
+    /// Untimed read (verification / gathering results).
+    pub fn read<T: Pod>(&self, gp: GlobalPtr<T>) -> Vec<T> {
+        let mut out = vec![T::zeroed(); gp.len()];
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(
+                out.as_mut_ptr() as *mut u8,
+                out.len() * std::mem::size_of::<T>(),
+            )
+        };
+        self.segments[gp.rank()].read_bytes(gp.offset as usize, bytes);
+        out
+    }
+
+    /// Launch one thread per PE running `f`, collect results and stats.
+    ///
+    /// This is the coordinator's process-launch analog (`mpirun`): each
+    /// closure invocation gets a [`Pe`] handle bound to its rank.
+    pub fn launch<R, F>(self: &Arc<Self>, f: F) -> (Vec<R>, Vec<Stats>)
+    where
+        R: Send,
+        F: Fn(&Pe) -> R + Sync,
+    {
+        let n = self.nprocs;
+        let epoch = std::time::Instant::now();
+        let mut results: Vec<Option<(R, Stats)>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (rank, slot) in results.iter_mut().enumerate() {
+                let fabric = Arc::clone(self);
+                let f = &f;
+                handles.push(scope.spawn(move || {
+                    let pe = Pe::new(rank, Arc::clone(&fabric), epoch);
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&pe)));
+                    match r {
+                        Ok(r) => *slot = Some((r, pe.finish())),
+                        Err(payload) => {
+                            // Fail the whole fabric so peers unblock.
+                            fabric.aborted.store(true, std::sync::atomic::Ordering::Release);
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("PE thread panicked");
+            }
+        });
+        let mut rs = Vec::with_capacity(n);
+        let mut stats = Vec::with_capacity(n);
+        for slot in results {
+            let (r, s) = slot.unwrap();
+            rs.push(r);
+            stats.push(s);
+        }
+        (rs, stats)
+    }
+}
+
+// Pe::copy_out / copy_in live here to keep Segment byte-level logic
+// private to the fabric module.
+impl Pe {
+    pub(crate) fn copy_out<T: Pod>(&self, gp: GlobalPtr<T>, dst: &mut [T]) {
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(
+                dst.as_mut_ptr() as *mut u8,
+                std::mem::size_of_val(dst),
+            )
+        };
+        self.fabric().segment(gp.rank()).read_bytes(gp.offset as usize, bytes);
+    }
+
+    pub(crate) fn copy_in<T: Pod>(&self, gp: GlobalPtr<T>, src: &[T]) {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(src.as_ptr() as *const u8, std::mem::size_of_val(src))
+        };
+        self.fabric().segment(gp.rank()).write_bytes(gp.offset as usize, bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_collects_per_rank_results() {
+        let f = Fabric::new(FabricConfig { nprocs: 8, profile: NetProfile::wallclock(), seg_capacity: 1 << 20, pacing: false });
+        let (rs, stats) = f.launch(|pe| pe.rank() * 2);
+        assert_eq!(rs, vec![0, 2, 4, 6, 8, 10, 12, 14]);
+        assert_eq!(stats.len(), 8);
+    }
+
+    #[test]
+    fn setup_write_then_pe_read() {
+        let f = Fabric::new(FabricConfig { nprocs: 2, profile: NetProfile::dgx2(), seg_capacity: 1 << 20, pacing: false });
+        let gp = f.alloc_on::<i32>(1, 4);
+        f.write(gp, &[9, 8, 7, 6]);
+        let (rs, _) = f.launch(|pe| pe.get_vec(gp));
+        assert_eq!(rs[0], vec![9, 8, 7, 6]);
+        assert_eq!(rs[1], vec![9, 8, 7, 6]);
+    }
+
+    #[test]
+    fn teams_are_shared_by_key() {
+        let f = Fabric::new(FabricConfig { nprocs: 4, profile: NetProfile::dgx2(), seg_capacity: 1 << 20, pacing: false });
+        let (_, stats) = f.launch(|pe| {
+            // ranks {0,1} team "row"/0, ranks {2,3} team "row"/1
+            let id = (pe.rank() / 2) as u64;
+            let team = pe.team("row", id, 2);
+            if pe.rank() % 2 == 0 {
+                pe.advance(Kind::Comp, 100.0);
+            }
+            pe.barrier_on(&team);
+            pe.barrier();
+        });
+        // odd ranks waited ~100ns at their team barrier
+        assert!(stats[1].imb_ns >= 100.0);
+        assert!(stats[3].imb_ns >= 100.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different size")]
+    fn team_size_mismatch_panics() {
+        let f = Fabric::new(FabricConfig { nprocs: 1, profile: NetProfile::dgx2(), seg_capacity: 1 << 20, pacing: false });
+        f.team("x", 0, 1);
+        f.team("x", 0, 2);
+    }
+}

@@ -1,0 +1,482 @@
+//! `Pe` — the per-thread handle to the fabric, the analog of an
+//! NVSHMEM PE (processing element).
+//!
+//! All one-sided operations go through a `Pe`: it knows its rank, holds
+//! the virtual clock and stats for its thread, and charges every
+//! operation per the active `NetProfile`. The target PE's *thread* is
+//! never involved in a remote get/put/atomic — only its `Segment`.
+
+use std::cell::{Cell, RefCell};
+use std::sync::Arc;
+
+use super::barrier::ClockBarrier;
+use super::gptr::{GlobalPtr, Pod};
+use super::stats::{Kind, Stats};
+use super::Fabric;
+
+/// CPU-side overhead to issue a non-blocking one-sided operation, ns.
+/// (NVSHMEM ~sub-microsecond issue cost.)
+pub const ISSUE_NS: f64 = 200.0;
+
+/// Real-time slack allowed before a PE thread is throttled to its
+/// virtual clock, ns. Keeps sleep syscalls rare while bounding the
+/// divergence between real and virtual time.
+const PACE_SLACK_NS: f64 = 100_000.0;
+
+/// Per-thread PE handle.
+pub struct Pe {
+    rank: usize,
+    fabric: Arc<Fabric>,
+    clock: Cell<f64>,
+    stats: RefCell<Stats>,
+    /// When this PE's IB injection share is next free (one-sided ops this
+    /// PE initiates serialize on its NIC — the per-GPU bandwidth share of
+    /// the paper's model). NVLink transfers use a separate engine.
+    nic_free_at: Cell<f64>,
+    nvlink_free_at: Cell<f64>,
+    /// Shared launch epoch: PE threads pace themselves so that real
+    /// elapsed time tracks their virtual clock (1 virtual ns ≈ 1 real
+    /// ns). Without pacing, *race outcomes* (workstealing claims, queue
+    /// arrival order) would be decided by real-time races while costs
+    /// are charged in virtual time — a fast thread could steal work its
+    /// simulated GPU would never have reached. Pacing makes the
+    /// simulation causally consistent at the cost of real sleeping.
+    epoch: std::time::Instant,
+}
+
+/// A non-blocking get in flight. Data is materialized eagerly (the
+/// simulated NIC "already copied it"); `ready_at` is when the transfer
+/// completes in virtual time. `wait` advances the caller's clock to the
+/// completion time, so gets issued early overlap with compute — the
+/// paper's prefetch optimization (§3.3) falls out of this naturally.
+pub struct GetFuture<T> {
+    data: Vec<T>,
+    ready_at: f64,
+}
+
+impl<T> GetFuture<T> {
+    /// An already-complete future (used for locally-cached tiles).
+    pub fn ready(data: Vec<T>) -> Self {
+        GetFuture { data, ready_at: 0.0 }
+    }
+
+    /// Block until the transfer completes; charges the wait to `kind`.
+    pub fn wait_as(self, pe: &Pe, kind: Kind) -> Vec<T> {
+        let now = pe.now();
+        if self.ready_at > now {
+            pe.advance(kind, self.ready_at - now);
+        }
+        self.data
+    }
+
+    /// Block until the transfer completes (charged as Comm).
+    pub fn wait(self, pe: &Pe) -> Vec<T> {
+        self.wait_as(pe, Kind::Comm)
+    }
+
+    /// Completion time in virtual ns.
+    pub fn ready_at(&self) -> f64 {
+        self.ready_at
+    }
+}
+
+impl Pe {
+    pub(super) fn new(rank: usize, fabric: Arc<Fabric>, epoch: std::time::Instant) -> Self {
+        Pe {
+            rank,
+            fabric,
+            clock: Cell::new(0.0),
+            stats: RefCell::new(Stats::default()),
+            nic_free_at: Cell::new(0.0),
+            nvlink_free_at: Cell::new(0.0),
+            epoch,
+        }
+    }
+
+    /// Throttle this thread until real elapsed time catches up with the
+    /// virtual clock (see `epoch` field). No-op in wall-clock mode or
+    /// when pacing is disabled on the fabric.
+    fn pace(&self) {
+        if !self.fabric.pacing() {
+            return;
+        }
+        let target = self.clock.get();
+        loop {
+            let real = self.epoch.elapsed().as_nanos() as f64;
+            let gap = target - real;
+            if gap <= PACE_SLACK_NS {
+                break;
+            }
+            if gap > 2_000_000.0 {
+                std::thread::sleep(std::time::Duration::from_nanos((gap - 1_000_000.0) as u64));
+            } else {
+                std::thread::yield_now();
+            }
+            self.fabric.check_abort();
+        }
+    }
+
+    /// Completion time of a transfer of `bytes` to/from `peer` issued
+    /// now: transfers initiated by this PE serialize on the relevant
+    /// transfer engine (IB NIC share or NVLink port), so concurrent
+    /// async gets cannot exceed the per-GPU bandwidth — exactly the
+    /// assumption of the paper's §4 model. Device-local copies don't
+    /// occupy either engine.
+    fn transfer_done_at(&self, peer: usize, bytes: f64) -> f64 {
+        use super::topology::LinkKind;
+        let prof = self.fabric.profile();
+        let link = prof.link(self.rank, peer);
+        let now = self.clock.get();
+        match prof.kind(self.rank, peer) {
+            LinkKind::Local => now + link.xfer_ns(bytes),
+            LinkKind::Intra => {
+                let start = self.nvlink_free_at.get().max(now);
+                let done = start + link.xfer_ns(bytes);
+                self.nvlink_free_at.set(done);
+                done
+            }
+            LinkKind::Inter => {
+                let start = self.nic_free_at.get().max(now);
+                let done = start + link.xfer_ns(bytes);
+                self.nic_free_at.set(done);
+                done
+            }
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.fabric.nprocs()
+    }
+
+    pub fn fabric(&self) -> &Arc<Fabric> {
+        &self.fabric
+    }
+
+    /// Current virtual time, ns.
+    pub fn now(&self) -> f64 {
+        self.clock.get()
+    }
+
+    /// Advance the virtual clock, attributing the time to `kind`.
+    pub fn advance(&self, kind: Kind, ns: f64) {
+        if !self.fabric.profile().timed {
+            return;
+        }
+        self.clock.set(self.clock.get() + ns);
+        self.stats.borrow_mut().charge(kind, ns);
+        self.pace();
+    }
+
+    /// Jump the clock forward to `t` (if in the future), attributing the
+    /// wait to `kind`. Used for causality clamps (queue pops).
+    pub fn advance_to(&self, kind: Kind, t: f64) {
+        let now = self.clock.get();
+        if t > now {
+            self.advance(kind, t - now);
+        }
+    }
+
+    /// Mutable access to this PE's stats counters.
+    pub fn stats_mut(&self) -> std::cell::RefMut<'_, Stats> {
+        self.stats.borrow_mut()
+    }
+
+    /// Take the stats out at the end of a run.
+    pub(super) fn finish(self) -> Stats {
+        let mut s = self.stats.into_inner();
+        s.final_clock_ns = self.clock.get();
+        s
+    }
+
+    // ---------------------------------------------------------------
+    // Allocation
+    // ---------------------------------------------------------------
+
+    /// Allocate `n` elements of `T` on this PE's own segment.
+    pub fn alloc<T: Pod>(&self, n: usize) -> GlobalPtr<T> {
+        let off = self.fabric.segment(self.rank).alloc(n * std::mem::size_of::<T>());
+        GlobalPtr::new(self.rank, off, n)
+    }
+
+    // ---------------------------------------------------------------
+    // One-sided data movement
+    // ---------------------------------------------------------------
+
+    /// Blocking one-sided get of the whole array behind `gp`.
+    pub fn get_vec<T: Pod>(&self, gp: GlobalPtr<T>) -> Vec<T> {
+        self.get_vec_as(gp, Kind::Comm)
+    }
+
+    pub fn get_vec_as<T: Pod>(&self, gp: GlobalPtr<T>, kind: Kind) -> Vec<T> {
+        let mut out = vec![T::zeroed(); gp.len()];
+        self.get_into_as(gp, &mut out, kind);
+        out
+    }
+
+    /// Blocking one-sided get into a caller buffer.
+    pub fn get_into<T: Pod>(&self, gp: GlobalPtr<T>, dst: &mut [T]) {
+        self.get_into_as(gp, dst, Kind::Comm)
+    }
+
+    pub fn get_into_as<T: Pod>(&self, gp: GlobalPtr<T>, dst: &mut [T], kind: Kind) {
+        assert_eq!(dst.len(), gp.len(), "get_into length mismatch");
+        self.copy_out(gp, dst);
+        let done = self.transfer_done_at(gp.rank(), gp.bytes() as f64);
+        self.advance_to(kind, done);
+        let mut s = self.stats.borrow_mut();
+        s.n_gets += 1;
+        s.bytes_get += gp.bytes() as f64;
+    }
+
+    /// Non-blocking one-sided get: returns a future whose completion time
+    /// reflects the transfer cost; only `ISSUE_NS` is charged now.
+    /// Concurrent async transfers queue behind each other on this PE's
+    /// NIC share (see [`Pe::transfer_done_at`]).
+    pub fn async_get<T: Pod>(&self, gp: GlobalPtr<T>) -> GetFuture<T> {
+        let mut data = vec![T::zeroed(); gp.len()];
+        self.copy_out(gp, &mut data);
+        let ready_at = ISSUE_NS + self.transfer_done_at(gp.rank(), gp.bytes() as f64);
+        self.advance(Kind::Comm, ISSUE_NS);
+        let mut s = self.stats.borrow_mut();
+        s.n_gets += 1;
+        s.bytes_get += gp.bytes() as f64;
+        drop(s);
+        GetFuture { data, ready_at }
+    }
+
+    /// Blocking one-sided put.
+    pub fn put<T: Pod>(&self, gp: GlobalPtr<T>, src: &[T]) {
+        self.put_as(gp, src, Kind::Comm)
+    }
+
+    pub fn put_as<T: Pod>(&self, gp: GlobalPtr<T>, src: &[T], kind: Kind) {
+        assert_eq!(src.len(), gp.len(), "put length mismatch");
+        self.copy_in(gp, src);
+        let done = self.transfer_done_at(gp.rank(), gp.bytes() as f64);
+        self.advance_to(kind, done);
+        let mut s = self.stats.borrow_mut();
+        s.n_puts += 1;
+        s.bytes_put += gp.bytes() as f64;
+    }
+
+    /// Allocate on own segment and write in one step; returns the pointer.
+    /// This is how partial result tiles are published for remote pickup.
+    pub fn publish<T: Pod>(&self, src: &[T], kind: Kind) -> GlobalPtr<T> {
+        let gp = self.alloc::<T>(src.len());
+        self.put_as(gp, src, kind);
+        gp
+    }
+
+    // ---------------------------------------------------------------
+    // One-sided atomics (NIC-executed in real RDMA)
+    // ---------------------------------------------------------------
+
+    /// Remote atomic fetch-and-add on element `idx` of an i64 array.
+    /// Cost: one network round trip.
+    pub fn fetch_add(&self, gp: GlobalPtr<i64>, idx: usize, val: i64) -> i64 {
+        assert!(idx < gp.len(), "fetch_add index out of bounds");
+        let off = gp.offset as usize + idx * 8;
+        let prev = self.fabric.segment(gp.rank()).fetch_add_i64(off, val);
+        let link = self.fabric.profile().link(self.rank, gp.rank());
+        self.advance(Kind::Queue, 2.0 * link.lat_ns + ISSUE_NS);
+        self.stats.borrow_mut().n_faa += 1;
+        prev
+    }
+
+    /// Remote atomic load (Acquire) of element `idx` of an i64 array.
+    pub fn atomic_load(&self, gp: GlobalPtr<i64>, idx: usize) -> i64 {
+        assert!(idx < gp.len());
+        let off = gp.offset as usize + idx * 8;
+        let v = self.fabric.segment(gp.rank()).load_i64(off);
+        let link = self.fabric.profile().link(self.rank, gp.rank());
+        self.advance(Kind::Queue, 2.0 * link.lat_ns);
+        v
+    }
+
+    /// Remote atomic store (Release) of element `idx` of an i64 array.
+    pub fn atomic_store(&self, gp: GlobalPtr<i64>, idx: usize, val: i64) {
+        assert!(idx < gp.len());
+        let off = gp.offset as usize + idx * 8;
+        self.fabric.segment(gp.rank()).store_i64(off, val);
+        let link = self.fabric.profile().link(self.rank, gp.rank());
+        self.advance(Kind::Queue, link.lat_ns);
+    }
+
+    // ---------------------------------------------------------------
+    // Compute charging
+    // ---------------------------------------------------------------
+
+    /// Charge a local kernel per the device roofline: `flops` useful
+    /// flops with `bytes` of device-memory traffic.
+    pub fn charge_kernel(&self, flops: f64, bytes: f64) {
+        self.charge_kernel_as(flops, bytes, Kind::Comp)
+    }
+
+    pub fn charge_kernel_as(&self, flops: f64, bytes: f64, kind: Kind) {
+        let c = &self.fabric.profile().compute;
+        if self.fabric.profile().timed {
+            self.advance(kind, c.kernel_time_ns(flops, bytes));
+        }
+        self.stats.borrow_mut().flops += flops;
+    }
+
+    // ---------------------------------------------------------------
+    // Synchronization
+    // ---------------------------------------------------------------
+
+    /// Global barrier across all PEs; merges virtual clocks and charges
+    /// the difference to Imbalance.
+    pub fn barrier(&self) {
+        self.barrier_on(self.fabric.global_barrier());
+    }
+
+    /// Barrier on an explicit team (row/column communicators in SUMMA).
+    pub fn barrier_on(&self, b: &ClockBarrier) {
+        let mine = self.clock.get();
+        let max = b.wait(mine);
+        if self.fabric.profile().timed {
+            let lost = max - mine;
+            if lost > 0.0 {
+                self.stats.borrow_mut().charge(Kind::Imbalance, lost);
+            }
+            // Fixed synchronization cost: a log-depth signaling tree.
+            let sync_cost =
+                self.fabric.profile().inter.lat_ns * (b.participants() as f64).log2().max(1.0);
+            self.clock.set(max + sync_cost);
+            self.stats.borrow_mut().charge(Kind::Queue, sync_cost);
+            self.pace();
+        }
+    }
+
+    /// Get-or-create a named team barrier (collective: all `size`
+    /// participants must use the same `(tag, id, size)`).
+    pub fn team(&self, tag: &str, id: u64, size: usize) -> Arc<ClockBarrier> {
+        self.fabric.team(tag, id, size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::topology::NetProfile;
+    use crate::fabric::FabricConfig;
+
+    fn fab(n: usize, profile: NetProfile) -> Arc<Fabric> {
+        Fabric::new(FabricConfig { nprocs: n, profile, seg_capacity: 16 << 20, pacing: false })
+    }
+
+    #[test]
+    fn put_get_roundtrip_remote() {
+        let f = fab(2, NetProfile::summit());
+        let gp = f.alloc_on::<f32>(1, 64);
+        let (_, _) = f.launch(|pe| {
+            if pe.rank() == 0 {
+                let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+                pe.put(gp, &data);
+            }
+            pe.barrier();
+            let v = pe.get_vec(gp);
+            assert_eq!(v[63], 63.0);
+        });
+    }
+
+    #[test]
+    fn async_get_overlaps() {
+        let f = fab(2, NetProfile::summit());
+        let gp = f.alloc_on::<f64>(1, 1 << 16); // 512 KB
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() == 0 {
+                let fut = pe.async_get(gp);
+                let t_issue = pe.now();
+                // Simulate overlapping compute longer than the transfer.
+                pe.advance(Kind::Comp, 1e9);
+                let _ = fut.wait(pe);
+                // Transfer should be fully hidden: clock advanced only by
+                // issue + compute.
+                assert!((pe.now() - (t_issue + 1e9)).abs() < 1e-6);
+            }
+            pe.barrier();
+        });
+        // Rank 0 did 1e9 ns of compute.
+        assert!(stats[0].comp_ns >= 1e9);
+    }
+
+    #[test]
+    fn blocking_get_charges_link_cost() {
+        let f = fab(7, NetProfile::summit());
+        // rank 6 is on node 1; rank 0 on node 0 -> IB link.
+        let gp = f.alloc_on::<f32>(6, 1000);
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() == 0 {
+                let _ = pe.get_vec(gp);
+            }
+            pe.barrier();
+        });
+        let expect = 3_500.0 + 4000.0 / 3.83;
+        assert!((stats[0].comm_ns - expect).abs() < 1.0, "comm={} expect={}", stats[0].comm_ns, expect);
+        assert_eq!(stats[0].n_gets, 1);
+        assert_eq!(stats[0].bytes_get, 4000.0);
+    }
+
+    #[test]
+    fn fetch_add_is_shared_and_charged() {
+        let f = fab(4, NetProfile::dgx2());
+        let grid = f.alloc_on::<i64>(0, 4);
+        let (_, stats) = f.launch(|pe| {
+            for _ in 0..10 {
+                pe.fetch_add(grid, 2, 1);
+            }
+            pe.barrier();
+            if pe.rank() == 0 {
+                assert_eq!(pe.atomic_load(grid, 2), 40);
+            }
+        });
+        assert_eq!(stats.iter().map(|s| s.n_faa).sum::<u64>(), 40);
+    }
+
+    #[test]
+    fn barrier_charges_imbalance_to_fast_ranks() {
+        let f = fab(2, NetProfile::dgx2());
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() == 1 {
+                pe.advance(Kind::Comp, 1e6);
+            }
+            pe.barrier();
+        });
+        assert!(stats[0].imb_ns >= 1e6 - 1.0, "fast rank absorbs the wait");
+        assert!(stats[1].imb_ns < 1.0);
+    }
+
+    #[test]
+    fn wallclock_mode_charges_nothing() {
+        let f = fab(2, NetProfile::wallclock());
+        let gp = f.alloc_on::<f32>(1, 1024);
+        let (_, stats) = f.launch(|pe| {
+            let _ = pe.get_vec(gp);
+            pe.charge_kernel(1e9, 1e9);
+            pe.barrier();
+        });
+        assert_eq!(stats[0].comm_ns, 0.0);
+        assert_eq!(stats[0].comp_ns, 0.0);
+        // flops still counted (used for GFlop/s reporting in wall mode).
+        assert_eq!(stats[0].flops, 1e9);
+    }
+
+    #[test]
+    fn publish_allocates_on_own_rank() {
+        let f = fab(3, NetProfile::dgx2());
+        let (ptrs, _) = f.launch(|pe| {
+            let data = vec![pe.rank() as f32; 8];
+            pe.publish(&data, Kind::Acc)
+        });
+        for (r, gp) in ptrs.iter().enumerate() {
+            assert_eq!(gp.rank(), r);
+            let v = f.read(*gp);
+            assert_eq!(v, vec![r as f32; 8]);
+        }
+    }
+}

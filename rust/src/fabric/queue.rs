@@ -1,0 +1,324 @@
+//! Remote queues — the accumulation-message channel of §3.1.2 / §5.3.
+//!
+//! Each PE owns a globally-visible multi-producer / single-consumer
+//! queue in its symmetric heap (the analog of BCL's `CheckSumQueue`).
+//! A push is one remote **fetch-and-add** (to claim a slot) plus one
+//! RDMA **put** (payload + sequence word); pops are performed only by
+//! the owning PE. Simultaneous pushes and pops are allowed.
+//!
+//! Items are fixed-size (`QueueItem::WORDS` 8-byte words). The
+//! stationary-A/B algorithms push lightweight *global pointers* to
+//! partial-result tiles (see `dist::accum::AccMsg`), and the owner later
+//! gets the referenced data and accumulates it locally — exactly the
+//! paper's scheme.
+//!
+//! Virtual-time causality: each slot carries the pusher's virtual
+//! timestamp; a pop clamps the consumer's clock to
+//! `push_time + link_latency`, so a consumer cannot observe a message
+//! "before" it was sent.
+
+use std::marker::PhantomData;
+
+use super::gptr::GlobalPtr;
+use super::pe::Pe;
+use super::stats::Kind;
+
+/// Fixed-size serializable queue payload.
+pub trait QueueItem: Sized {
+    /// Number of 8-byte payload words.
+    const WORDS: usize;
+    fn encode(&self, out: &mut [u64]);
+    fn decode(words: &[u64]) -> Self;
+}
+
+/// Blanket impl: a bare `GlobalPtr<T>` is a valid queue item.
+impl<T: 'static> QueueItem for GlobalPtr<T> {
+    const WORDS: usize = 2;
+    fn encode(&self, out: &mut [u64]) {
+        let w = GlobalPtr::encode(self);
+        out[0] = w[0];
+        out[1] = w[1];
+    }
+    fn decode(words: &[u64]) -> Self {
+        GlobalPtr::decode([words[0], words[1]])
+    }
+}
+
+// Queue word layout on the owner's segment:
+//   [0] tail  (FAA'd by pushers)
+//   [1] head  (advanced by the owner; read by pushers for backpressure)
+//   [2..]    capacity slots, each (2 + WORDS) words:
+//            [0] seq   (t+1 once the payload of ticket t is visible)
+//            [1] push timestamp (f64 bits)
+//            [2..] payload
+const TAIL: usize = 0;
+const HEAD: usize = 1;
+const SLOTS: usize = 2;
+
+/// Handle to a remote queue owned by `base.rank()`. `Copy`, so handles
+/// are distributed to every PE in a directory at setup time.
+pub struct QueueHandle<T: QueueItem> {
+    base: GlobalPtr<i64>,
+    cap: u64,
+    _ph: PhantomData<fn() -> T>,
+}
+
+impl<T: QueueItem> Clone for QueueHandle<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: QueueItem> Copy for QueueHandle<T> {}
+
+impl<T: QueueItem> QueueHandle<T> {
+    fn slot_words() -> usize {
+        2 + T::WORDS
+    }
+
+    /// Allocate a queue with `cap` slots on `rank` (setup phase).
+    pub fn create(fabric: &super::Fabric, rank: usize, cap: usize) -> Self {
+        assert!(cap > 0);
+        let words = SLOTS + cap * Self::slot_words();
+        let base = fabric.alloc_on::<i64>(rank, words);
+        // Segments are zero-initialized, so tail=head=0 and all seq=0
+        // (matching "ticket t published" == seq t+1 != 0) hold already.
+        QueueHandle { base, cap: cap as u64, _ph: PhantomData }
+    }
+
+    /// Owner rank.
+    pub fn owner(&self) -> usize {
+        self.base.rank()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap as usize
+    }
+
+    fn slot_base(&self, ticket: i64) -> usize {
+        SLOTS + (ticket as u64 % self.cap) as usize * Self::slot_words()
+    }
+
+    /// Push an item (any PE). Cost: one remote FAA + one put.
+    /// Spins (with backpressure polling) if the queue is full.
+    pub fn push(&self, pe: &Pe, item: &T) {
+        let t = pe.fetch_add(self.base, TAIL, 1);
+        // Backpressure: wait until the slot for our ticket is free.
+        let mut spins = 0u64;
+        while t - pe.atomic_load(self.base, HEAD) >= self.cap as i64 {
+            spins += 1;
+            pe.fabric().check_abort();
+            assert!(
+                spins < 10_000_000,
+                "remote queue on rank {} deadlocked (capacity {})",
+                self.owner(),
+                self.cap
+            );
+            std::hint::spin_loop();
+        }
+        let sb = self.slot_base(t);
+        // Payload + timestamp in one put (words [1..]).
+        let mut buf = vec![0u64; 1 + T::WORDS];
+        buf[0] = pe.now().to_bits();
+        item.encode(&mut buf[1..]);
+        let payload: Vec<i64> = buf.iter().map(|&w| w as i64).collect();
+        pe.put_as(self.base.slice(sb + 1, 1 + T::WORDS), &payload, Kind::Queue);
+        // Publish: seq = ticket + 1 (Release store).
+        pe.atomic_store(self.base, sb, t + 1);
+        pe.stats_mut().n_queue_push += 1;
+    }
+
+    /// Pop an item (owner only). Returns None when the queue is
+    /// currently empty. Non-blocking — algorithms interleave pops with
+    /// their regular work, as in the paper.
+    ///
+    /// Polling one's own (empty) queue is virtually free: it is a local
+    /// device-memory read. Virtual time for the *wait* comes from the
+    /// causality clamp on a successful pop (consumer clock ≥ push time
+    /// + latency) — charging each idle poll would inflate the waiting
+    /// rank's clock unboundedly.
+    pub fn try_pop(&self, pe: &Pe) -> Option<T> {
+        self.pop_impl(pe, false)
+    }
+
+    /// Pop allowing messages that have not yet "arrived" in this PE's
+    /// virtual time: the clock is clamped forward to the arrival time
+    /// (attributed as Imbalance — idle waiting for a producer). Used by
+    /// the end-of-algorithm termination wait.
+    pub fn pop_wait(&self, pe: &Pe) -> Option<T> {
+        self.pop_impl(pe, true)
+    }
+
+    fn pop_impl(&self, pe: &Pe, allow_future: bool) -> Option<T> {
+        assert_eq!(pe.rank(), self.owner(), "only the owner may pop");
+        let seg = pe.fabric().segment(self.owner());
+        let word = |i: usize| seg.load_i64(self.base.offset as usize + i * 8);
+        let h = word(HEAD);
+        let sb = self.slot_base(h);
+        let seq = word(sb);
+        if seq != h + 1 {
+            return None; // empty, or the next payload is still in flight
+        }
+        // Virtual arrival time = pusher's clock + one-way latency. A
+        // non-blocking poll cannot observe a message "from the future":
+        // the real GPU's queue would still be empty at this virtual
+        // instant.
+        let ts = f64::from_bits(word(sb + 1) as u64);
+        let lat = pe.fabric().profile().link(pe.rank(), self.owner()).lat_ns;
+        let arrival = ts + lat;
+        if pe.fabric().profile().timed && arrival > pe.now() {
+            if !allow_future {
+                return None;
+            }
+            pe.advance_to(Kind::Imbalance, arrival);
+        }
+        let raw = pe.get_vec_as(self.base.slice(sb + 1, 1 + T::WORDS), Kind::Queue);
+        let words: Vec<u64> = raw[1..].iter().map(|&w| w as u64).collect();
+        let item = T::decode(&words);
+        // Release the slot, then advance head.
+        pe.atomic_store(self.base, sb, 0);
+        pe.atomic_store(self.base, HEAD, h + 1);
+        pe.stats_mut().n_queue_pop += 1;
+        Some(item)
+    }
+
+    /// Drain everything that has arrived (virtual time).
+    pub fn drain(&self, pe: &Pe) -> Vec<T> {
+        let mut out = Vec::new();
+        while let Some(x) = self.pop_wait(pe) {
+            out.push(x);
+        }
+        out
+    }
+
+    /// Number of pushed-but-not-popped tickets (approximate, for tests).
+    pub fn len_approx(&self, pe: &Pe) -> usize {
+        let t = pe.atomic_load(self.base, TAIL);
+        let h = pe.atomic_load(self.base, HEAD);
+        (t - h).max(0) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Fabric, FabricConfig, NetProfile};
+
+    #[derive(Debug, PartialEq, Clone)]
+    struct Msg {
+        a: u64,
+        b: u64,
+        c: u64,
+    }
+    impl QueueItem for Msg {
+        const WORDS: usize = 3;
+        fn encode(&self, out: &mut [u64]) {
+            out[0] = self.a;
+            out[1] = self.b;
+            out[2] = self.c;
+        }
+        fn decode(w: &[u64]) -> Self {
+            Msg { a: w[0], b: w[1], c: w[2] }
+        }
+    }
+
+    fn fab(n: usize) -> std::sync::Arc<Fabric> {
+        Fabric::new(FabricConfig { nprocs: n, profile: NetProfile::dgx2(), seg_capacity: 8 << 20, pacing: false })
+    }
+
+    #[test]
+    fn spsc_roundtrip() {
+        let f = fab(2);
+        let q = QueueHandle::<Msg>::create(&f, 0, 16);
+        f.launch(|pe| {
+            if pe.rank() == 1 {
+                for i in 0..10 {
+                    q.push(pe, &Msg { a: i, b: i * 2, c: i * 3 });
+                }
+            }
+            pe.barrier();
+            if pe.rank() == 0 {
+                let items = q.drain(pe);
+                assert_eq!(items.len(), 10);
+                for (i, m) in items.iter().enumerate() {
+                    assert_eq!(*m, Msg { a: i as u64, b: i as u64 * 2, c: i as u64 * 3 });
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn mpsc_no_lost_updates() {
+        let f = fab(8);
+        let q = QueueHandle::<Msg>::create(&f, 0, 1024);
+        let (sums, _) = f.launch(|pe| {
+            if pe.rank() != 0 {
+                for i in 0..100u64 {
+                    q.push(pe, &Msg { a: pe.rank() as u64, b: i, c: 0 });
+                }
+                pe.barrier();
+                0u64
+            } else {
+                pe.barrier(); // wait for all pushes to complete
+                let items = q.drain(pe);
+                assert_eq!(items.len(), 700);
+                items.iter().map(|m| m.a * 1000 + m.b).sum()
+            }
+        });
+        // Each of ranks 1..8 contributed sum_{i<100}(r*1000 + i) = 100*1000r + 4950.
+        let expect: u64 = (1..8u64).map(|r| 100_000 * r + 4950).sum();
+        assert_eq!(sums[0], expect);
+    }
+
+    #[test]
+    fn concurrent_push_pop_interleaved() {
+        let f = fab(4);
+        let q = QueueHandle::<Msg>::create(&f, 0, 8); // small: forces wraparound
+        let (counts, _) = f.launch(|pe| {
+            if pe.rank() == 0 {
+                let mut got = 0;
+                while got < 300 {
+                    if q.pop_wait(pe).is_some() {
+                        got += 1;
+                    }
+                }
+                pe.barrier();
+                got
+            } else {
+                for i in 0..100u64 {
+                    q.push(pe, &Msg { a: i, b: 0, c: 0 });
+                }
+                pe.barrier();
+                0
+            }
+        });
+        assert_eq!(counts[0], 300);
+    }
+
+    #[test]
+    fn gptr_as_item() {
+        let f = fab(2);
+        let q = QueueHandle::<GlobalPtr<f32>>::create(&f, 0, 4);
+        f.launch(|pe| {
+            if pe.rank() == 1 {
+                let gp = pe.publish(&[1.5f32, 2.5], Kind::Acc);
+                q.push(pe, &gp);
+            }
+            pe.barrier();
+            if pe.rank() == 0 {
+                let gp = q.pop_wait(pe).expect("one item");
+                assert_eq!(gp.rank(), 1);
+                let data = pe.get_vec(gp);
+                assert_eq!(data, vec![1.5, 2.5]);
+            }
+        });
+    }
+
+    #[test]
+    fn pop_on_empty_is_none() {
+        let f = fab(1);
+        let q = QueueHandle::<Msg>::create(&f, 0, 4);
+        f.launch(|pe| {
+            assert!(q.try_pop(pe).is_none());
+        });
+    }
+}

@@ -1,0 +1,294 @@
+//! Symmetric-heap segments: the simulated "GPU memory exposed for RDMA".
+//!
+//! Each PE owns one `Segment` — the analog of the NVSHMEM symmetric heap
+//! the paper allocates most of each GPU's memory into (§5.3). A segment
+//! is a growable sequence of fixed-size chunks of `AtomicU64` words, so
+//! that:
+//!
+//! * any thread can read/write any segment without holding a lock over
+//!   the data (one-sided semantics: the *owner's thread never
+//!   participates* in a remote put/get — only its memory does);
+//! * remote atomics (`fetch_add`) map directly onto word atomics, like
+//!   NIC-executed RDMA atomics;
+//! * the segment can grow without invalidating outstanding global
+//!   pointers (chunks are never moved).
+//!
+//! All allocations are 8-byte aligned, mirroring RDMA word alignment
+//! requirements. Bulk put/get use relaxed word loads/stores — racy
+//! concurrent access to the same words has the same "last writer wins at
+//! word granularity" semantics real RDMA gives you.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Words per chunk: 1 MiB chunks (2^17 × 8 bytes).
+const CHUNK_WORDS: usize = 1 << 17;
+
+struct Chunk {
+    words: Box<[AtomicU64]>,
+}
+
+impl Chunk {
+    fn new() -> Self {
+        let mut v = Vec::with_capacity(CHUNK_WORDS);
+        v.resize_with(CHUNK_WORDS, || AtomicU64::new(0));
+        Chunk { words: v.into_boxed_slice() }
+    }
+}
+
+/// One PE's registered memory region.
+pub struct Segment {
+    /// Chunks are append-only; a raw pointer snapshot is kept in
+    /// `chunk_ptrs` for lock-free access on the data path.
+    chunks: Mutex<Vec<Box<Chunk>>>,
+    /// Lock-free snapshot: `chunk_ptrs[i]` is the raw pointer to chunk i's
+    /// word array. Entries are published with Release ordering after the
+    /// chunk is created and never change afterwards.
+    chunk_ptrs: Box<[std::sync::atomic::AtomicPtr<AtomicU64>]>,
+    n_chunks: AtomicUsize,
+    /// Bump-allocator top, in bytes.
+    top: AtomicUsize,
+    /// Maximum number of chunks (capacity limit).
+    max_chunks: usize,
+}
+
+// Safety: all interior data is atomics; raw pointers point into boxes kept
+// alive by `chunks` for the Segment's lifetime.
+unsafe impl Send for Segment {}
+unsafe impl Sync for Segment {}
+
+impl Segment {
+    /// Create a segment with the given capacity in bytes (rounded up to a
+    /// whole number of chunks). Memory is committed lazily chunk by chunk.
+    pub fn new(capacity_bytes: usize) -> Self {
+        let max_chunks = capacity_bytes.div_ceil(CHUNK_WORDS * 8).max(1);
+        let mut ptrs = Vec::with_capacity(max_chunks);
+        ptrs.resize_with(max_chunks, || std::sync::atomic::AtomicPtr::new(std::ptr::null_mut()));
+        Segment {
+            chunks: Mutex::new(Vec::new()),
+            chunk_ptrs: ptrs.into_boxed_slice(),
+            n_chunks: AtomicUsize::new(0),
+            top: AtomicUsize::new(0),
+            max_chunks,
+        }
+    }
+
+    /// Capacity in bytes.
+    pub fn capacity(&self) -> usize {
+        self.max_chunks * CHUNK_WORDS * 8
+    }
+
+    /// Bytes currently allocated.
+    pub fn allocated(&self) -> usize {
+        self.top.load(Ordering::Relaxed)
+    }
+
+    /// Bump-allocate `len` bytes, 8-aligned. Returns the byte offset.
+    /// Panics when the segment is exhausted (the paper's allocator
+    /// similarly fails hard when GPU memory runs out).
+    pub fn alloc(&self, len: usize) -> usize {
+        let len = len.div_ceil(8) * 8;
+        let off = self.top.fetch_add(len, Ordering::Relaxed);
+        let end = off + len;
+        assert!(
+            end <= self.capacity(),
+            "symmetric heap exhausted: need {} bytes, capacity {}",
+            end,
+            self.capacity()
+        );
+        // Commit any chunks the allocation touches.
+        let last_chunk = (end.saturating_sub(1)) / (CHUNK_WORDS * 8);
+        while self.n_chunks.load(Ordering::Acquire) <= last_chunk {
+            let mut guard = self.chunks.lock().unwrap();
+            let n = guard.len();
+            if n <= last_chunk {
+                let chunk = Box::new(Chunk::new());
+                let ptr = chunk.words.as_ptr() as *mut AtomicU64;
+                guard.push(chunk);
+                self.chunk_ptrs[n].store(ptr, Ordering::Release);
+                self.n_chunks.store(n + 1, Ordering::Release);
+            }
+        }
+        off
+    }
+
+    /// Word slot at a byte offset (must be committed; 8-aligned).
+    #[inline]
+    fn word(&self, byte_off: usize) -> &AtomicU64 {
+        debug_assert_eq!(byte_off % 8, 0, "unaligned word access at {byte_off}");
+        let widx = byte_off / 8;
+        let (c, w) = (widx / CHUNK_WORDS, widx % CHUNK_WORDS);
+        debug_assert!(c < self.n_chunks.load(Ordering::Acquire), "access beyond committed chunks");
+        let ptr = self.chunk_ptrs[c].load(Ordering::Acquire);
+        debug_assert!(!ptr.is_null());
+        unsafe { &*ptr.add(w) }
+    }
+
+    /// One-sided bulk read: copy `dst.len()` bytes starting at `byte_off`
+    /// into `dst`. `byte_off` must be 8-aligned (all allocations are).
+    pub fn read_bytes(&self, byte_off: usize, dst: &mut [u8]) {
+        let n = dst.len();
+        let mut i = 0;
+        // Whole words.
+        while i + 8 <= n {
+            let w = self.word(byte_off + i).load(Ordering::Relaxed);
+            dst[i..i + 8].copy_from_slice(&w.to_le_bytes());
+            i += 8;
+        }
+        // Tail.
+        if i < n {
+            let w = self.word(byte_off + i).load(Ordering::Relaxed);
+            let b = w.to_le_bytes();
+            dst[i..].copy_from_slice(&b[..n - i]);
+        }
+    }
+
+    /// One-sided bulk write: copy `src` into the segment at `byte_off`
+    /// (8-aligned). A partial tail word is read-modify-written.
+    pub fn write_bytes(&self, byte_off: usize, src: &[u8]) {
+        let n = src.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&src[i..i + 8]);
+            self.word(byte_off + i).store(u64::from_le_bytes(b), Ordering::Relaxed);
+            i += 8;
+        }
+        if i < n {
+            let slot = self.word(byte_off + i);
+            let mut b = slot.load(Ordering::Relaxed).to_le_bytes();
+            b[..n - i].copy_from_slice(&src[i..]);
+            slot.store(u64::from_le_bytes(b), Ordering::Relaxed);
+        }
+    }
+
+    /// Remote atomic fetch-and-add on an aligned i64 word — the primitive
+    /// behind the paper's reservation grids and queue tails.
+    #[inline]
+    pub fn fetch_add_i64(&self, byte_off: usize, val: i64) -> i64 {
+        self.word(byte_off).fetch_add(val as u64, Ordering::AcqRel) as i64
+    }
+
+    /// Atomic load of an i64 word (Acquire).
+    #[inline]
+    pub fn load_i64(&self, byte_off: usize) -> i64 {
+        self.word(byte_off).load(Ordering::Acquire) as i64
+    }
+
+    /// Atomic store of an i64 word (Release).
+    #[inline]
+    pub fn store_i64(&self, byte_off: usize, val: i64) {
+        self.word(byte_off).store(val as u64, Ordering::Release);
+    }
+
+    /// Atomic compare-and-swap on an i64 word; returns the previous value.
+    #[inline]
+    pub fn cas_i64(&self, byte_off: usize, expect: i64, new: i64) -> i64 {
+        match self.word(byte_off).compare_exchange(
+            expect as u64,
+            new as u64,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(v) => v as i64,
+            Err(v) => v as i64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn alloc_is_aligned_and_monotonic() {
+        let s = Segment::new(1 << 20);
+        let a = s.alloc(3);
+        let b = s.alloc(13);
+        let c = s.alloc(8);
+        assert_eq!(a % 8, 0);
+        assert_eq!(b % 8, 0);
+        assert_eq!(c % 8, 0);
+        assert!(a < b && b < c);
+        assert_eq!(b - a, 8); // 3 rounds to 8
+        assert_eq!(c - b, 16); // 13 rounds to 16
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let s = Segment::new(1 << 20);
+        let off = s.alloc(100);
+        let data: Vec<u8> = (0..100).map(|i| i as u8).collect();
+        s.write_bytes(off, &data);
+        let mut out = vec![0u8; 100];
+        s.read_bytes(off, &mut out);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn partial_tail_does_not_clobber_neighbor() {
+        let s = Segment::new(1 << 20);
+        let a = s.alloc(8);
+        let b = s.alloc(8);
+        assert_eq!(b - a, 8);
+        s.write_bytes(b, &[0xFFu8; 8]);
+        // Write only 3 bytes at `a`; the rest of a's word is in-bounds scratch,
+        // but b's word must be untouched.
+        s.write_bytes(a, &[1, 2, 3]);
+        let mut out = vec![0u8; 8];
+        s.read_bytes(b, &mut out);
+        assert_eq!(out, [0xFFu8; 8]);
+    }
+
+    #[test]
+    fn crosses_chunk_boundary() {
+        let s = Segment::new(4 * CHUNK_WORDS * 8);
+        // Allocate to just below the first chunk boundary, then a large span.
+        let pre = CHUNK_WORDS * 8 - 16;
+        s.alloc(pre);
+        let off = s.alloc(64);
+        let data: Vec<u8> = (0..64).map(|i| (255 - i) as u8).collect();
+        s.write_bytes(off, &data);
+        let mut out = vec![0u8; 64];
+        s.read_bytes(off, &mut out);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn fetch_add_concurrent() {
+        let s = Arc::new(Segment::new(1 << 20));
+        let off = s.alloc(8);
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    s.fetch_add_i64(off, 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.load_i64(off), 8000);
+    }
+
+    #[test]
+    #[should_panic(expected = "symmetric heap exhausted")]
+    fn exhaustion_panics() {
+        let s = Segment::new(1 << 20);
+        s.alloc(2 << 20);
+    }
+
+    #[test]
+    fn cas_semantics() {
+        let s = Segment::new(1 << 20);
+        let off = s.alloc(8);
+        s.store_i64(off, 5);
+        assert_eq!(s.cas_i64(off, 5, 9), 5);
+        assert_eq!(s.load_i64(off), 9);
+        assert_eq!(s.cas_i64(off, 5, 11), 9); // fails, returns current
+        assert_eq!(s.load_i64(off), 9);
+    }
+}

@@ -1,0 +1,118 @@
+//! Per-PE virtual clock and component statistics.
+//!
+//! Each PE thread carries a virtual `Clock` (f64 nanoseconds) advanced by
+//! the cost model for every fabric and compute operation, and a `Stats`
+//! record that attributes that time to the components the paper's
+//! Table 2 reports: **Comp.** (local multiplies), **Comm.** (waiting on
+//! remote transfers), **Acc.** (accumulating partial C tiles), queue
+//! overhead, and **Load Imb.** (time lost waiting at synchronization
+//! points).
+
+/// Which component of Table 2 a charge belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Local matrix multiply execution.
+    Comp,
+    /// Remote transfer wait (gets/puts of A and B tiles).
+    Comm,
+    /// Accumulation of partial results (stationary A/B algorithms).
+    Acc,
+    /// Remote queue and reservation overhead (FAA, queue push/pop).
+    Queue,
+    /// Time lost at barriers / team synchronization.
+    Imbalance,
+}
+
+/// Component timing + traffic counters for one PE over one run.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub comp_ns: f64,
+    pub comm_ns: f64,
+    pub acc_ns: f64,
+    pub queue_ns: f64,
+    pub imb_ns: f64,
+    /// Bytes fetched with one-sided gets.
+    pub bytes_get: f64,
+    /// Bytes written with one-sided puts.
+    pub bytes_put: f64,
+    pub n_gets: u64,
+    pub n_puts: u64,
+    pub n_faa: u64,
+    pub n_queue_push: u64,
+    pub n_queue_pop: u64,
+    /// Pieces of work stolen from other PEs (workstealing algorithms).
+    pub n_steals: u64,
+    /// Pieces of this PE's own work completed.
+    pub n_own_work: u64,
+    /// Useful flops performed by local multiplies.
+    pub flops: f64,
+    /// Final virtual clock value at the end of the run.
+    pub final_clock_ns: f64,
+}
+
+impl Stats {
+    pub fn charge(&mut self, kind: Kind, ns: f64) {
+        match kind {
+            Kind::Comp => self.comp_ns += ns,
+            Kind::Comm => self.comm_ns += ns,
+            Kind::Acc => self.acc_ns += ns,
+            Kind::Queue => self.queue_ns += ns,
+            Kind::Imbalance => self.imb_ns += ns,
+        }
+    }
+
+    /// Total attributed time.
+    pub fn total_ns(&self) -> f64 {
+        self.comp_ns + self.comm_ns + self.acc_ns + self.queue_ns + self.imb_ns
+    }
+
+    /// Merge another PE's stats into an aggregate.
+    pub fn merge(&mut self, o: &Stats) {
+        self.comp_ns += o.comp_ns;
+        self.comm_ns += o.comm_ns;
+        self.acc_ns += o.acc_ns;
+        self.queue_ns += o.queue_ns;
+        self.imb_ns += o.imb_ns;
+        self.bytes_get += o.bytes_get;
+        self.bytes_put += o.bytes_put;
+        self.n_gets += o.n_gets;
+        self.n_puts += o.n_puts;
+        self.n_faa += o.n_faa;
+        self.n_queue_push += o.n_queue_push;
+        self.n_queue_pop += o.n_queue_pop;
+        self.n_steals += o.n_steals;
+        self.n_own_work += o.n_own_work;
+        self.flops += o.flops;
+        self.final_clock_ns = self.final_clock_ns.max(o.final_clock_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_routes_to_component() {
+        let mut s = Stats::default();
+        s.charge(Kind::Comp, 10.0);
+        s.charge(Kind::Comm, 20.0);
+        s.charge(Kind::Acc, 5.0);
+        s.charge(Kind::Queue, 1.0);
+        s.charge(Kind::Imbalance, 4.0);
+        assert_eq!(s.comp_ns, 10.0);
+        assert_eq!(s.comm_ns, 20.0);
+        assert_eq!(s.acc_ns, 5.0);
+        assert_eq!(s.queue_ns, 1.0);
+        assert_eq!(s.imb_ns, 4.0);
+        assert_eq!(s.total_ns(), 40.0);
+    }
+
+    #[test]
+    fn merge_takes_max_clock() {
+        let mut a = Stats { final_clock_ns: 10.0, ..Default::default() };
+        let b = Stats { final_clock_ns: 30.0, comp_ns: 1.0, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.final_clock_ns, 30.0);
+        assert_eq!(a.comp_ns, 1.0);
+    }
+}

@@ -1,0 +1,220 @@
+//! Network and compute cost models — the simulated testbeds.
+//!
+//! The paper evaluates on two machines:
+//!
+//! * **Summit** (multi-node): 6 × V100 per node, NVLink within a node,
+//!   dual-rail EDR InfiniBand between nodes. The paper's roofline (§4)
+//!   charges each GPU its *share* of node injection bandwidth:
+//!   3.83 GB/s/GPU (23 GB/s / 6).
+//! * **DGX-2** (single-node): 16 × V100, all-to-all NVLink 3.0 at
+//!   50 GB/s per link.
+//!
+//! Our substitution for real hardware (see DESIGN.md §1) charges every
+//! one-sided operation virtual time `latency + bytes / bandwidth`, with
+//! the (latency, bandwidth) pair chosen by where the two PEs sit in the
+//! topology. This is exactly the fully-connected, non-interfering model
+//! the paper itself uses for its analysis, so the relative behaviour of
+//! the algorithms is preserved.
+
+/// Local-compute cost model: a simple two-parameter roofline for the
+/// device executing local SpMM / SpGEMM calls (a V100 in the paper).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeModel {
+    /// Peak arithmetic rate, flop / ns (1 flop/ns == 1 GFlop/s).
+    pub peak_flops: f64,
+    /// Device memory bandwidth, bytes / ns (1 byte/ns == 1 GB/s).
+    pub mem_bw: f64,
+    /// Fixed kernel-launch overhead per local multiply, ns.
+    pub launch_ns: f64,
+    /// Achievable fraction of the roofline bound for sparse kernels
+    /// (cuSPARSE does not hit the roofline; the paper's Table 2b shows
+    /// local SpGEMM well below it). 1.0 = ideal.
+    pub efficiency: f64,
+}
+
+impl ComputeModel {
+    /// Nvidia Tesla V100: 15.7 TFlop/s fp32 peak (the paper rounds to
+    /// 16), 900 GB/s HBM2.
+    pub fn v100() -> Self {
+        ComputeModel { peak_flops: 15_700.0, mem_bw: 900.0, launch_ns: 5_000.0, efficiency: 1.0 }
+    }
+
+    /// Roofline time estimate for a kernel doing `flops` with `bytes` of
+    /// device-memory traffic.
+    pub fn kernel_time_ns(&self, flops: f64, bytes: f64) -> f64 {
+        let t = (flops / self.peak_flops).max(bytes / self.mem_bw) / self.efficiency;
+        self.launch_ns + t
+    }
+}
+
+/// Link class between two PEs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Same PE: device-local memcpy.
+    Local,
+    /// Same node: NVLink.
+    Intra,
+    /// Different node: InfiniBand (per-GPU injection share).
+    Inter,
+}
+
+/// One link's cost parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    /// One-way latency, ns.
+    pub lat_ns: f64,
+    /// Bandwidth, bytes/ns (== GB/s).
+    pub bw: f64,
+}
+
+impl Link {
+    /// Time for a one-sided transfer of `bytes`.
+    #[inline]
+    pub fn xfer_ns(&self, bytes: f64) -> f64 {
+        self.lat_ns + bytes / self.bw
+    }
+}
+
+/// A simulated machine: topology + per-link costs + local compute model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetProfile {
+    pub name: &'static str,
+    /// GPUs (PEs) per node; ranks `r` and `s` share a node iff
+    /// `r / gpus_per_node == s / gpus_per_node`.
+    pub gpus_per_node: usize,
+    pub local: Link,
+    pub intra: Link,
+    pub inter: Link,
+    pub compute: ComputeModel,
+    /// When false, all cost charging is disabled (wall-clock mode).
+    pub timed: bool,
+}
+
+impl NetProfile {
+    /// Summit: 6 GPUs/node; NVLink 50 GB/s intra-node; each GPU gets a
+    /// 3.83 GB/s share of the node's 23 GB/s EDR injection bandwidth
+    /// (the figure the paper's roofline slope uses).
+    pub fn summit() -> Self {
+        NetProfile {
+            name: "summit",
+            gpus_per_node: 6,
+            local: Link { lat_ns: 500.0, bw: 900.0 },
+            intra: Link { lat_ns: 2_000.0, bw: 50.0 },
+            inter: Link { lat_ns: 3_500.0, bw: 3.83 },
+            compute: ComputeModel::v100(),
+            timed: true,
+        }
+    }
+
+    /// DGX-2: 16 GPUs, all-to-all NVLink 3.0 at 50 GB/s.
+    pub fn dgx2() -> Self {
+        NetProfile {
+            name: "dgx2",
+            gpus_per_node: 16,
+            local: Link { lat_ns: 500.0, bw: 900.0 },
+            intra: Link { lat_ns: 2_000.0, bw: 50.0 },
+            inter: Link { lat_ns: 2_000.0, bw: 50.0 },
+            compute: ComputeModel::v100(),
+            timed: true,
+        }
+    }
+
+    /// Wall-clock mode: no virtual-time charging; used by criterion-style
+    /// micro-benchmarks and the §Perf pass, where we measure the real CPU.
+    pub fn wallclock() -> Self {
+        NetProfile {
+            name: "wallclock",
+            gpus_per_node: usize::MAX,
+            local: Link { lat_ns: 0.0, bw: f64::INFINITY },
+            intra: Link { lat_ns: 0.0, bw: f64::INFINITY },
+            inter: Link { lat_ns: 0.0, bw: f64::INFINITY },
+            compute: ComputeModel { peak_flops: f64::INFINITY, mem_bw: f64::INFINITY, launch_ns: 0.0, efficiency: 1.0 },
+            timed: false,
+        }
+    }
+
+    /// A custom flat network (uniform bandwidth): useful for sweeps.
+    pub fn flat(bw_gbps: f64, lat_ns: f64) -> Self {
+        NetProfile {
+            name: "flat",
+            gpus_per_node: 1,
+            local: Link { lat_ns: 500.0, bw: 900.0 },
+            intra: Link { lat_ns, bw: bw_gbps },
+            inter: Link { lat_ns, bw: bw_gbps },
+            compute: ComputeModel::v100(),
+            timed: true,
+        }
+    }
+
+    /// Link class between two ranks.
+    #[inline]
+    pub fn kind(&self, src: usize, dst: usize) -> LinkKind {
+        if src == dst {
+            LinkKind::Local
+        } else if src / self.gpus_per_node == dst / self.gpus_per_node {
+            LinkKind::Intra
+        } else {
+            LinkKind::Inter
+        }
+    }
+
+    /// Cost parameters for a transfer between two ranks.
+    #[inline]
+    pub fn link(&self, src: usize, dst: usize) -> Link {
+        match self.kind(src, dst) {
+            LinkKind::Local => self.local,
+            LinkKind::Intra => self.intra,
+            LinkKind::Inter => self.inter,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summit_node_boundaries() {
+        let p = NetProfile::summit();
+        assert_eq!(p.kind(0, 0), LinkKind::Local);
+        assert_eq!(p.kind(0, 5), LinkKind::Intra);
+        assert_eq!(p.kind(0, 6), LinkKind::Inter);
+        assert_eq!(p.kind(7, 11), LinkKind::Intra);
+        assert_eq!(p.kind(5, 6), LinkKind::Inter);
+    }
+
+    #[test]
+    fn dgx2_all_intra() {
+        let p = NetProfile::dgx2();
+        assert_eq!(p.kind(0, 15), LinkKind::Intra);
+        assert_eq!(p.kind(3, 12), LinkKind::Intra);
+    }
+
+    #[test]
+    fn transfer_cost_matches_model() {
+        let p = NetProfile::summit();
+        // 1 MB over IB share: 3500ns + 1e6/3.83 ns
+        let t = p.link(0, 6).xfer_ns(1e6);
+        assert!((t - (3_500.0 + 1e6 / 3.83)).abs() < 1e-6);
+        // NVLink is much faster.
+        assert!(p.link(0, 1).xfer_ns(1e6) < t / 5.0);
+    }
+
+    #[test]
+    fn v100_roofline_regimes() {
+        let c = ComputeModel::v100();
+        // Huge flops, no bytes: compute bound.
+        let t1 = c.kernel_time_ns(1e9, 0.0);
+        assert!((t1 - (5_000.0 + 1e9 / 15_700.0)).abs() < 1.0);
+        // Bandwidth bound.
+        let t2 = c.kernel_time_ns(0.0, 1e9);
+        assert!((t2 - (5_000.0 + 1e9 / 900.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn wallclock_is_free() {
+        let p = NetProfile::wallclock();
+        assert!(!p.timed);
+        assert_eq!(p.link(0, 99).xfer_ns(1e12), 0.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! # sparta — RDMA-based sparse matrix multiplication, reproduced
+//!
+//! A Rust + JAX + Pallas reproduction of *"RDMA-Based Algorithms for
+//! Sparse Matrix Multiplication on GPUs"* (Brock, Buluç & Yelick, 2023).
+//!
+//! The paper's system — asynchronous, one-sided SpMM/SpGEMM with
+//! workstealing over NVSHMEM on multi-GPU clusters — is rebuilt here as
+//! a three-layer stack:
+//!
+//! * **L3 (this crate)**: the coordination contribution — distributed
+//!   matrix data structures over an RDMA-style fabric ([`fabric`],
+//!   [`dist`]), the asynchronous stationary-C/A/B and workstealing
+//!   algorithms plus bulk-synchronous SUMMA baselines ([`algorithms`]),
+//!   the inter-node roofline model ([`roofline`]), and the experiment
+//!   harness ([`coordinator`]).
+//! * **L2/L1 (python, build-time only)**: the local compute hot-spot as
+//!   JAX + Pallas kernels, AOT-lowered to HLO text and executed from
+//!   Rust via PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the full system inventory and the substitutions
+//! made for GPU/NVSHMEM hardware, and `EXPERIMENTS.md` for
+//! paper-vs-measured results for every figure and table.
+
+pub mod algorithms;
+pub mod analysis;
+pub mod coordinator;
+pub mod dist;
+pub mod fabric;
+pub mod matrix;
+pub mod roofline;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+pub use fabric::{Fabric, FabricConfig, GlobalPtr, NetProfile, Pe};

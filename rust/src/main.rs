@@ -1,0 +1,239 @@
+//! `sparta` — CLI for the RDMA sparse-matrix-multiplication reproduction.
+//!
+//! Subcommands:
+//!
+//! * `sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all>`
+//!   — regenerate a figure/table of the paper (see DESIGN.md §4).
+//! * `sparta run spmm|spgemm [options]` — one experiment run.
+//! * `sparta list` — available matrices, algorithms, profiles.
+//!
+//! Common options: `--scale-shift <i>` (workload downscaling, default 0),
+//! `--verify`, and for `run`: `--alg`, `--nprocs`, `--matrix`,
+//! `--ncols`, `--profile summit|dgx2|flat:<GBps>`, `--pjrt`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use sparta::algorithms::{SpgemmAlg, SpmmAlg};
+use sparta::coordinator::experiments::{self, ExpOpts};
+use sparta::coordinator::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
+use sparta::fabric::NetProfile;
+use sparta::matrix::{mm_io, suite, Csr};
+use sparta::runtime::TileBackend;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: positional args + `--key value` + `--flag`.
+struct Opts {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Opts {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let boolean = matches!(key, "verify" | "pjrt" | "quiet");
+                if boolean {
+                    flags.insert(key.to_string(), "true".to_string());
+                } else {
+                    i += 1;
+                    flags.insert(
+                        key.to_string(),
+                        args.get(i).cloned().unwrap_or_default(),
+                    );
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Opts { positional, flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{key}: {v:?}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn parse_profile(s: &str) -> Result<NetProfile> {
+    match s {
+        "summit" => Ok(NetProfile::summit()),
+        "dgx2" => Ok(NetProfile::dgx2()),
+        "wallclock" => Ok(NetProfile::wallclock()),
+        other => {
+            if let Some(bw) = other.strip_prefix("flat:") {
+                Ok(NetProfile::flat(bw.parse().context("flat:<GB/s>")?, 2000.0))
+            } else {
+                bail!("unknown profile {other:?} (summit|dgx2|wallclock|flat:<GBps>)")
+            }
+        }
+    }
+}
+
+fn load_matrix(name: &str, scale_shift: i32) -> Result<Csr> {
+    if name.ends_with(".mtx") {
+        return mm_io::read_matrix_market(std::path::Path::new(name))
+            .map_err(|e| anyhow::anyhow!(e));
+    }
+    Ok(suite::analog_scaled(name, scale_shift))
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let opts = Opts::parse(&args[1..]);
+    match cmd.as_str() {
+        "repro" => repro(&opts),
+        "run" => run(&opts),
+        "list" => {
+            println!("matrices (suite analogs):");
+            for e in suite::table1() {
+                println!("  {:<16} {:<11} paper imb. {:.2}", e.name, e.kind, e.paper_imbalance);
+            }
+            println!("\nspmm algorithms: sc sa rws lws-c lws-a summa comblas");
+            println!("spgemm algorithms: sc sa rws summa petsc");
+            println!("profiles: summit dgx2 wallclock flat:<GBps>");
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `sparta help`"),
+    }
+}
+
+fn repro(opts: &Opts) -> Result<()> {
+    let what = opts.positional.first().map(String::as_str).unwrap_or("all");
+    let eopts = ExpOpts {
+        scale_shift: opts.get("scale-shift", 0)?,
+        verify: opts.has("verify"),
+        print: !opts.has("quiet"),
+    };
+    let run_one = |w: &str| -> Result<()> {
+        match w {
+            "fig1" => {
+                experiments::fig1(&eopts);
+            }
+            "fig2" => {
+                experiments::fig2(&eopts)?;
+            }
+            "fig3" => {
+                experiments::fig3(&eopts)?;
+            }
+            "fig4" => {
+                experiments::fig4(&eopts)?;
+            }
+            "fig5" => {
+                experiments::fig5(&eopts)?;
+            }
+            "table1" => {
+                experiments::table1(&eopts);
+            }
+            "table2a" => {
+                experiments::table2a(&eopts)?;
+            }
+            "table2b" => {
+                experiments::table2b(&eopts)?;
+            }
+            other => bail!("unknown experiment {other:?}"),
+        }
+        Ok(())
+    };
+    if what == "all" {
+        for w in ["fig1", "fig2", "fig3", "fig4", "fig5", "table1", "table2a", "table2b"] {
+            run_one(w)?;
+            println!();
+        }
+        Ok(())
+    } else {
+        run_one(what)
+    }
+}
+
+fn run(opts: &Opts) -> Result<()> {
+    let kind = opts.positional.first().map(String::as_str).unwrap_or("spmm");
+    let scale_shift: i32 = opts.get("scale-shift", 0)?;
+    let nprocs: usize = opts.get("nprocs", 16)?;
+    let profile = parse_profile(&opts.str("profile", "summit"))?;
+    let matrix = opts.str("matrix", "amazon");
+    let a = load_matrix(&matrix, scale_shift)?;
+    println!("matrix {matrix}: {}x{}, nnz {}", a.nrows, a.ncols, a.nnz());
+
+    match kind {
+        "spmm" => {
+            let alg = SpmmAlg::from_name(&opts.str("alg", "sc"))
+                .context("bad --alg (sc|sa|rws|lws-c|lws-a|summa|comblas)")?;
+            let mut cfg = SpmmConfig::new(alg, nprocs, profile, opts.get("ncols", 128)?);
+            cfg.verify = opts.has("verify");
+            if opts.has("pjrt") {
+                cfg.backend = TileBackend::pjrt(std::path::Path::new("artifacts"))?;
+            }
+            let run = run_spmm(&a, &cfg)?;
+            println!("{}", run.report.row());
+            if let TileBackend::Pjrt(exe) = &cfg.backend {
+                println!(
+                    "pjrt: {} kernel executions, {} native fallbacks",
+                    exe.executions(),
+                    exe.fallbacks()
+                );
+            }
+            if cfg.verify {
+                println!("verification OK");
+            }
+        }
+        "spgemm" => {
+            let alg = SpgemmAlg::from_name(&opts.str("alg", "sc"))
+                .context("bad --alg (sc|sa|rws|summa|petsc)")?;
+            let mut cfg = SpgemmConfig::new(alg, nprocs, profile);
+            cfg.verify = opts.has("verify");
+            let run = run_spgemm(&a, &cfg)?;
+            println!("{}", run.report.row());
+            if cfg.verify {
+                println!("verification OK");
+            }
+        }
+        other => bail!("unknown run kind {other:?} (spmm|spgemm)"),
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "sparta — RDMA-based sparse matrix multiplication (Brock, Buluç & Yelick 2023), reproduced
+
+USAGE:
+  sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all> [--scale-shift N] [--verify]
+  sparta run spmm   --alg sc --nprocs 24 --matrix amazon --ncols 128 --profile summit [--pjrt] [--verify]
+  sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify]
+  sparta list
+"
+    );
+}

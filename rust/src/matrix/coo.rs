@@ -1,0 +1,97 @@
+//! Coordinate-format (triplet) sparse matrices — the construction and
+//! interchange format. Generators and MatrixMarket IO produce `Coo`,
+//! which is then compressed to [`super::csr::Csr`].
+
+/// A sparse matrix as an unordered list of (row, col, val) triplets.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    #[inline]
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.nrows && c < self.ncols, "entry ({r},{c}) out of bounds");
+        self.rows.push(r as u32);
+        self.cols.push(c as u32);
+        self.vals.push(v);
+    }
+
+    /// Sort by (row, col) and sum duplicate entries in place.
+    pub fn sum_duplicates(&mut self) {
+        if self.nnz() == 0 {
+            return;
+        }
+        let mut idx: Vec<u32> = (0..self.nnz() as u32).collect();
+        idx.sort_unstable_by_key(|&i| {
+            (self.rows[i as usize], self.cols[i as usize])
+        });
+        let mut rows = Vec::with_capacity(self.nnz());
+        let mut cols = Vec::with_capacity(self.nnz());
+        let mut vals = Vec::with_capacity(self.nnz());
+        for &i in &idx {
+            let i = i as usize;
+            let (r, c, v) = (self.rows[i], self.cols[i], self.vals[i]);
+            if let (Some(&lr), Some(&lc)) = (rows.last(), cols.last()) {
+                if lr == r && lc == c {
+                    *vals.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            rows.push(r);
+            cols.push(c);
+            vals.push(v);
+        }
+        self.rows = rows;
+        self.cols = cols;
+        self.vals = vals;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_duplicates_merges_and_sorts() {
+        let mut c = Coo::new(3, 3);
+        c.push(2, 1, 1.0);
+        c.push(0, 0, 1.0);
+        c.push(2, 1, 2.5);
+        c.push(0, 2, 4.0);
+        c.sum_duplicates();
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.rows, vec![0, 0, 2]);
+        assert_eq!(c.cols, vec![0, 2, 1]);
+        assert_eq!(c.vals, vec![1.0, 4.0, 3.5]);
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        let mut c = Coo::new(5, 5);
+        c.sum_duplicates();
+        assert_eq!(c.nnz(), 0);
+    }
+}

@@ -1,0 +1,339 @@
+//! Compressed Sparse Row matrices — the paper's tile storage format
+//! (§3.1: values, row pointer, column indices arrays; 32-bit values,
+//! 32-bit column indices, 64-bit row pointers so huge matrices work).
+
+use super::coo::Coo;
+use super::dense::Dense;
+
+/// CSR sparse matrix, f32 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// len nrows+1; rowptr[i]..rowptr[i+1] index into colind/vals.
+    pub rowptr: Vec<i64>,
+    pub colind: Vec<i32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// An empty (all-zero) matrix.
+    pub fn zero(nrows: usize, ncols: usize) -> Self {
+        Csr { nrows, ncols, rowptr: vec![0; nrows + 1], colind: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Csr {
+            nrows: n,
+            ncols: n,
+            rowptr: (0..=n as i64).collect(),
+            colind: (0..n as i32).collect(),
+            vals: vec![1.0; n],
+        }
+    }
+
+    /// Build from triplets (duplicates are summed).
+    pub fn from_coo(mut coo: Coo) -> Self {
+        coo.sum_duplicates();
+        let mut rowptr = vec![0i64; coo.nrows + 1];
+        for &r in &coo.rows {
+            rowptr[r as usize + 1] += 1;
+        }
+        for i in 0..coo.nrows {
+            rowptr[i + 1] += rowptr[i];
+        }
+        Csr {
+            nrows: coo.nrows,
+            ncols: coo.ncols,
+            rowptr,
+            colind: coo.cols.iter().map(|&c| c as i32).collect(),
+            vals: coo.vals,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Density d = nnz / (nrows * ncols).
+    pub fn density(&self) -> f64 {
+        if self.nrows == 0 || self.ncols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+        }
+    }
+
+    /// Bytes of the three CSR arrays — the communication volume of
+    /// shipping this matrix (vals f32 + colind i32 + rowptr i64).
+    pub fn bytes(&self) -> usize {
+        self.vals.len() * 4 + self.colind.len() * 4 + self.rowptr.len() * 8
+    }
+
+    /// (colind, vals) of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[i32], &[f32]) {
+        let (s, e) = (self.rowptr[i] as usize, self.rowptr[i + 1] as usize);
+        (&self.colind[s..e], &self.vals[s..e])
+    }
+
+    /// Structural validity: monotone rowptr, in-range column indices.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowptr.len() != self.nrows + 1 {
+            return Err(format!("rowptr len {} != nrows+1 {}", self.rowptr.len(), self.nrows + 1));
+        }
+        if self.rowptr[0] != 0 {
+            return Err("rowptr[0] != 0".into());
+        }
+        for i in 0..self.nrows {
+            if self.rowptr[i] > self.rowptr[i + 1] {
+                return Err(format!("rowptr not monotone at {i}"));
+            }
+        }
+        if self.rowptr[self.nrows] as usize != self.nnz() {
+            return Err("rowptr[last] != nnz".into());
+        }
+        if self.colind.len() != self.vals.len() {
+            return Err("colind/vals length mismatch".into());
+        }
+        for &c in &self.colind {
+            if c < 0 || c as usize >= self.ncols {
+                return Err(format!("column index {c} out of range (ncols {})", self.ncols));
+            }
+        }
+        Ok(())
+    }
+
+    /// Transpose (CSR -> CSR of the transpose), used to build A^T and for
+    /// symmetric MatrixMarket expansion checks.
+    pub fn transpose(&self) -> Csr {
+        let mut rowptr = vec![0i64; self.ncols + 1];
+        for &c in &self.colind {
+            rowptr[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            rowptr[i + 1] += rowptr[i];
+        }
+        let mut colind = vec![0i32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        let mut next = rowptr.clone();
+        for r in 0..self.nrows {
+            let (cs, vs) = self.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                let dst = next[c as usize] as usize;
+                colind[dst] = r as i32;
+                vals[dst] = v;
+                next[c as usize] += 1;
+            }
+        }
+        Csr { nrows: self.ncols, ncols: self.nrows, rowptr, colind, vals }
+    }
+
+    /// Extract the submatrix rows [r0,r1) × cols [c0,c1) with re-based
+    /// indices — tile extraction for the distributed structures.
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Csr {
+        assert!(r0 <= r1 && r1 <= self.nrows && c0 <= c1 && c1 <= self.ncols);
+        let mut rowptr = Vec::with_capacity(r1 - r0 + 1);
+        rowptr.push(0i64);
+        let mut colind = Vec::new();
+        let mut vals = Vec::new();
+        for r in r0..r1 {
+            let (cs, vs) = self.row(r);
+            // Columns within a CSR row are sorted (from_coo sorts), so we
+            // could binary search; tiles are extracted once at setup, a
+            // linear scan with the partition_point fast path is plenty.
+            let lo = cs.partition_point(|&c| (c as usize) < c0);
+            let hi = cs.partition_point(|&c| (c as usize) < c1);
+            for k in lo..hi {
+                colind.push(cs[k] - c0 as i32);
+                vals.push(vs[k]);
+            }
+            rowptr.push(colind.len() as i64);
+        }
+        Csr { nrows: r1 - r0, ncols: c1 - c0, rowptr, colind, vals }
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.nrows, self.ncols);
+        for r in 0..self.nrows {
+            let (cs, vs) = self.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                d[(r, c as usize)] += v;
+            }
+        }
+        d
+    }
+
+    /// Sparse sum C = A + B (same shape).
+    pub fn add(&self, other: &Csr) -> Csr {
+        assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz() + other.nnz());
+        for m in [self, other] {
+            for r in 0..m.nrows {
+                let (cs, vs) = m.row(r);
+                for (&c, &v) in cs.iter().zip(vs) {
+                    coo.push(r, c as usize, v);
+                }
+            }
+        }
+        Csr::from_coo(coo)
+    }
+
+    /// Drop explicit zeros and entries with |v| < threshold (used by the
+    /// Markov-clustering example's pruning step).
+    pub fn prune(&self, threshold: f32) -> Csr {
+        let mut rowptr = Vec::with_capacity(self.nrows + 1);
+        rowptr.push(0i64);
+        let mut colind = Vec::new();
+        let mut vals = Vec::new();
+        for r in 0..self.nrows {
+            let (cs, vs) = self.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                if v.abs() >= threshold {
+                    colind.push(c);
+                    vals.push(v);
+                }
+            }
+            rowptr.push(colind.len() as i64);
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, rowptr, colind, vals }
+    }
+
+    /// Max |a - b| over the union of the two patterns.
+    pub fn max_abs_diff(&self, other: &Csr) -> f32 {
+        let a = self.to_dense();
+        let b = other.to_dense();
+        a.max_abs_diff(&b)
+    }
+
+    /// Per-row nnz counts.
+    pub fn row_nnz(&self) -> Vec<usize> {
+        (0..self.nrows).map(|i| (self.rowptr[i + 1] - self.rowptr[i]) as usize).collect()
+    }
+
+    /// Symmetric permutation: entry (i, j) moves to (perm[i], perm[j]).
+    /// This is the "random permutation" load-balancing transform the
+    /// paper discusses in §1 (with its locality-loss caveats).
+    pub fn permute_symmetric(&self, perm: &[usize]) -> Csr {
+        assert_eq!(self.nrows, self.ncols, "symmetric permutation needs a square matrix");
+        assert_eq!(perm.len(), self.nrows);
+        let mut coo = super::coo::Coo::with_capacity(self.nrows, self.ncols, self.nnz());
+        for r in 0..self.nrows {
+            let (cs, vs) = self.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                coo.push(perm[r], perm[c as usize], v);
+            }
+        }
+        Csr::from_coo(coo)
+    }
+
+    /// Random symmetric permutation with the given seed.
+    pub fn random_permutation(&self, seed: u64) -> Csr {
+        let mut perm: Vec<usize> = (0..self.nrows).collect();
+        let mut rng = crate::util::Rng::new(seed);
+        rng.shuffle(&mut perm);
+        self.permute_symmetric(&perm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 2, 2.0);
+        coo.push(2, 0, 3.0);
+        coo.push(2, 1, 4.0);
+        Csr::from_coo(coo)
+    }
+
+    #[test]
+    fn from_coo_layout() {
+        let m = small();
+        assert_eq!(m.rowptr, vec![0, 2, 2, 4]);
+        assert_eq!(m.colind, vec![0, 2, 0, 1]);
+        assert_eq!(m.vals, vec![1.0, 2.0, 3.0, 4.0]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = small();
+        let t = m.transpose();
+        t.validate().unwrap();
+        assert_eq!(t.to_dense()[(0, 2)], 3.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn submatrix_rebases() {
+        let m = small();
+        let s = m.submatrix(0, 2, 1, 3);
+        // [[0, 2], [0, 0]]
+        assert_eq!(s.nrows, 2);
+        assert_eq!(s.ncols, 2);
+        assert_eq!(s.nnz(), 1);
+        assert_eq!(s.to_dense()[(0, 1)], 2.0);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn add_and_prune() {
+        let m = small();
+        let sum = m.add(&m);
+        assert_eq!(sum.to_dense()[(2, 1)], 8.0);
+        let p = sum.prune(5.0);
+        assert_eq!(p.nnz(), 2); // 6.0 at (2,0) and 8.0 at (2,1)
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn eye_and_density() {
+        let i = Csr::eye(4);
+        i.validate().unwrap();
+        assert_eq!(i.nnz(), 4);
+        assert!((i.density() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bytes_matches_csr_arrays() {
+        let m = small();
+        assert_eq!(m.bytes(), 4 * 4 + 4 * 4 + 4 * 8);
+    }
+
+    #[test]
+    fn permutation_preserves_values_and_nnz() {
+        let m = small();
+        let p = m.permute_symmetric(&[2, 0, 1]);
+        p.validate().unwrap();
+        assert_eq!(p.nnz(), m.nnz());
+        // (0,0)=1 -> (2,2); (2,1)=4 -> (1,0)
+        assert_eq!(p.to_dense()[(2, 2)], 1.0);
+        assert_eq!(p.to_dense()[(1, 0)], 4.0);
+        // Identity permutation is a no-op.
+        assert_eq!(m.permute_symmetric(&[0, 1, 2]), m);
+    }
+
+    #[test]
+    fn random_permutation_is_seeded() {
+        let m = crate::matrix::gen::erdos_renyi(64, 4, 1);
+        assert_eq!(m.random_permutation(9), m.random_permutation(9));
+        assert_eq!(m.random_permutation(9).nnz(), m.nnz());
+    }
+
+    #[test]
+    fn empty_submatrix() {
+        let m = small();
+        let s = m.submatrix(1, 1, 0, 3);
+        assert_eq!(s.nrows, 0);
+        assert_eq!(s.nnz(), 0);
+        s.validate().unwrap();
+    }
+}

@@ -1,0 +1,173 @@
+//! Dense (row-major, f32) matrices — the tall-skinny B and output C of
+//! SpMM, and the dense tiles moved over the fabric.
+
+use std::ops::{Index, IndexMut};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Dense {
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Dense { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    pub fn from_vec(nrows: usize, ncols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), nrows * ncols);
+        Dense { nrows, ncols, data }
+    }
+
+    /// Filled with a deterministic pseudo-random pattern (for workloads).
+    pub fn random(nrows: usize, ncols: usize, rng: &mut crate::util::Rng) -> Self {
+        let data = (0..nrows * ncols).map(|_| rng.next_f32() - 0.5).collect();
+        Dense { nrows, ncols, data }
+    }
+
+    pub fn ones(nrows: usize, ncols: usize) -> Self {
+        Dense { nrows, ncols, data: vec![1.0; nrows * ncols] }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.ncols..(r + 1) * self.ncols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.ncols..(r + 1) * self.ncols]
+    }
+
+    /// Extract the sub-block rows [r0,r1) × cols [c0,c1).
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Dense {
+        assert!(r0 <= r1 && r1 <= self.nrows && c0 <= c1 && c1 <= self.ncols);
+        let mut out = Dense::zeros(r1 - r0, c1 - c0);
+        for r in r0..r1 {
+            out.row_mut(r - r0).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// In-place accumulate: self += other.
+    pub fn add_assign(&mut self, other: &Dense) {
+        assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Write `block` into position (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, block: &Dense) {
+        assert!(r0 + block.nrows <= self.nrows && c0 + block.ncols <= self.ncols);
+        for r in 0..block.nrows {
+            self.row_mut(r0 + r)[c0..c0 + block.ncols].copy_from_slice(block.row(r));
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Dense) -> f32 {
+        assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative Frobenius-norm difference, robust near zero.
+    pub fn rel_err(&self, other: &Dense) -> f64 {
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        (num / den.max(1e-30)).sqrt()
+    }
+
+    /// Dense GEMM (reference only; local SpMM is the hot path).
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.ncols, other.nrows);
+        let mut out = Dense::zeros(self.nrows, other.ncols);
+        for i in 0..self.nrows {
+            for k in 0..self.ncols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = out.row_mut(i);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Index<(usize, usize)> for Dense {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.ncols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Dense {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.ncols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let mut d = Dense::zeros(2, 3);
+        d[(1, 2)] = 5.0;
+        assert_eq!(d.data[5], 5.0);
+        assert_eq!(d.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn submatrix_and_set_block_roundtrip() {
+        let mut rng = crate::util::Rng::new(1);
+        let d = Dense::random(6, 4, &mut rng);
+        let b = d.submatrix(2, 5, 1, 3);
+        let mut e = Dense::zeros(6, 4);
+        e.set_block(2, 1, &b);
+        assert_eq!(e[(3, 2)], d[(3, 2)]);
+        assert_eq!(e[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Dense::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut a = Dense::ones(2, 2);
+        a.add_assign(&Dense::ones(2, 2));
+        assert_eq!(a.data, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn rel_err_zero_for_equal() {
+        let a = Dense::ones(3, 3);
+        assert_eq!(a.rel_err(&a), 0.0);
+    }
+}

@@ -1,0 +1,267 @@
+//! Synthetic matrix generators — stand-ins for the paper's SuiteSparse
+//! suite (Table 1), at laptop scale but with matching *kind* and
+//! load-imbalance character. See DESIGN.md §1 for the substitution
+//! rationale and [`super::suite`] for the named analogs.
+
+use super::coo::Coo;
+use super::csr::Csr;
+use crate::util::Rng;
+
+/// R-MAT recursive generator (Chakrabarti et al.) — the model the paper
+/// itself uses for Figure 1 (a=0.6, b=c=d=0.4/3, edgefactor 8, scale 17).
+///
+/// Produces a square `2^scale` matrix with `edgefactor * 2^scale`
+/// sampled edges (duplicates summed, so nnz is slightly lower).
+pub fn rmat(scale: u32, edgefactor: usize, a: f64, b: f64, c: f64, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let d = 1.0 - a - b - c;
+    assert!(d >= -1e-9, "R-MAT probabilities exceed 1");
+    let m = n * edgefactor;
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::with_capacity(n, n, m);
+    for _ in 0..m {
+        let (mut r, mut cidx) = (0usize, 0usize);
+        let mut half = n >> 1;
+        while half > 0 {
+            let p = rng.next_f64();
+            // Per-level probability noise (Graph500 reference generator:
+            // each level multiplies the quadrant weights by 0.95 + 0.1u
+            // and renormalizes) — this is what gives R-MAT its heavy
+            // degree tail rather than an exactly self-similar structure.
+            let na = a * (0.95 + 0.1 * rng.next_f64());
+            let nb = b * (0.95 + 0.1 * rng.next_f64());
+            let nc = c * (0.95 + 0.1 * rng.next_f64());
+            let nd = d.max(0.0) * (0.95 + 0.1 * rng.next_f64());
+            let norm = na + nb + nc + nd;
+            let (pa, pb, pc) = (na / norm, nb / norm, nc / norm);
+            if p < pa {
+                // top-left
+            } else if p < pa + pb {
+                cidx += half;
+            } else if p < pa + pb + pc {
+                r += half;
+            } else {
+                r += half;
+                cidx += half;
+            }
+            half >>= 1;
+        }
+        coo.push(r, cidx, rng.next_f32() + 0.5);
+    }
+    Csr::from_coo(coo)
+}
+
+/// Uniform Erdős–Rényi-style sparsity: each of `nnz` entries sampled
+/// uniformly. Near-perfect 2D load balance (biology analogs: Nm7/Nm8,
+/// Metaclust — Table 1 lists load imb. 1.00).
+pub fn erdos_renyi(n: usize, avg_deg: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let m = n * avg_deg;
+    let mut coo = Coo::with_capacity(n, n, m);
+    for _ in 0..m {
+        coo.push(rng.below_usize(n), rng.below_usize(n), rng.next_f32() + 0.5);
+    }
+    Csr::from_coo(coo)
+}
+
+/// Banded matrix with `band` sub/super-diagonals and fill probability
+/// `fill` — finite-element structural analog (ldoor). On a 2D process
+/// grid only the near-diagonal tiles have nonzeros, giving the high
+/// imbalance Table 1 reports (8.23).
+pub fn banded(n: usize, band: usize, fill: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        let lo = i.saturating_sub(band);
+        let hi = (i + band + 1).min(n);
+        for j in lo..hi {
+            if i == j || rng.next_f64() < fill {
+                coo.push(i, j, rng.next_f32() + 0.5);
+            }
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+/// KKT-like structure: banded core plus a block of dense border rows and
+/// columns (optimization / NLP analog: nlpkkt160, load imb. 9.46). The
+/// dense border concentrates nonzeros in one tile row/column of the
+/// process grid — the worst case for per-stage balance.
+pub fn kkt_like(n: usize, band: usize, border: usize, fill: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        let lo = i.saturating_sub(band);
+        let hi = (i + band + 1).min(n);
+        for j in lo..hi {
+            if i == j || rng.next_f64() < fill {
+                coo.push(i, j, rng.next_f32() + 0.5);
+            }
+        }
+    }
+    // Dense border rows/cols (constraint coupling).
+    for b in 0..border {
+        for j in 0..n {
+            if rng.next_f64() < 0.5 {
+                coo.push(b, j, rng.next_f32() + 0.5);
+                coo.push(j, b, rng.next_f32() + 0.5);
+            }
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+/// Power-law row degrees (Zipf-ish with exponent `alpha`), columns
+/// uniform, hub rows shuffled across the index space — gene-network
+/// analog with moderate imbalance (mouse_gene 2.13).
+pub fn power_law(n: usize, avg_deg: usize, alpha: f64, seed: u64) -> Csr {
+    power_law_opts(n, avg_deg, alpha, 0.0, true, seed)
+}
+
+/// General skewed generator:
+/// * row degrees ∝ (i+1)^-alpha (Zipf), normalized to `avg_deg` average;
+/// * `shuffle` controls whether hub rows are scattered (true: natural
+///   graph orderings) or clustered at low indices (false: degree-sorted
+///   matrices, e.g. NMF term matrices — concentrates nonzeros in the
+///   first tile rows of a 2D grid, producing Table 1's high imbalance);
+/// * `col_skew` > 0 biases columns toward low indices
+///   (col = n * u^(1+col_skew)), modelling hub-to-hub coupling.
+pub fn power_law_opts(
+    n: usize,
+    avg_deg: usize,
+    alpha: f64,
+    col_skew: f64,
+    shuffle: bool,
+    seed: u64,
+) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut weights: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-alpha)).collect();
+    if shuffle {
+        rng.shuffle(&mut weights);
+    }
+    let wsum: f64 = weights.iter().sum();
+    let total = (n * avg_deg) as f64;
+    let mut coo = Coo::with_capacity(n, n, n * avg_deg);
+    for (i, w) in weights.iter().enumerate() {
+        let deg = ((w / wsum) * total).round() as usize;
+        for _ in 0..deg.max(1) {
+            let c = if col_skew > 0.0 {
+                ((rng.next_f64().powf(1.0 + col_skew)) * n as f64) as usize
+            } else {
+                rng.below_usize(n)
+            };
+            coo.push(i, c.min(n - 1), rng.next_f32() + 0.5);
+        }
+    }
+    Csr::from_coo(coo)
+}
+
+/// Block-diagonal with dense-ish blocks plus sparse coupling — genomics
+/// "isolates" analog (many connected components, load imb. ~6.4 because
+/// component sizes vary).
+pub fn block_components(n: usize, n_blocks: usize, in_fill: f64, coupling: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    // Geometric-ish block sizes: component sizes vary widely.
+    let mut bounds = vec![0usize];
+    let mut remaining = n;
+    for b in 0..n_blocks {
+        let take = if b + 1 == n_blocks {
+            remaining
+        } else {
+            (remaining / 3).max(1).min(remaining)
+        };
+        bounds.push(bounds.last().unwrap() + take);
+        remaining -= take;
+        if remaining == 0 {
+            break;
+        }
+    }
+    if *bounds.last().unwrap() < n {
+        bounds.push(n);
+    }
+    for w in bounds.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        let size = hi - lo;
+        let edges = ((size * size) as f64 * in_fill) as usize;
+        for _ in 0..edges.max(size) {
+            coo.push(lo + rng.below_usize(size), lo + rng.below_usize(size), rng.next_f32() + 0.5);
+        }
+    }
+    for _ in 0..coupling {
+        coo.push(rng.below_usize(n), rng.below_usize(n), rng.next_f32() + 0.5);
+    }
+    Csr::from_coo(coo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::loadimb::grid_load_imbalance;
+
+    #[test]
+    fn rmat_shape_and_determinism() {
+        let a = rmat(8, 8, 0.6, 0.4 / 3.0, 0.4 / 3.0, 42);
+        let b = rmat(8, 8, 0.6, 0.4 / 3.0, 0.4 / 3.0, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.nrows, 256);
+        a.validate().unwrap();
+        // Duplicates are merged, so nnz <= sampled edges.
+        assert!(a.nnz() <= 256 * 8);
+        assert!(a.nnz() > 256 * 4, "too many duplicates: {}", a.nnz());
+    }
+
+    #[test]
+    fn rmat_is_skewed_er_is_not() {
+        let skewed = rmat(10, 8, 0.6, 0.4 / 3.0, 0.4 / 3.0, 1);
+        let uniform = erdos_renyi(1024, 8, 1);
+        let imb_skewed = grid_load_imbalance(&skewed, 4, 4);
+        let imb_uniform = grid_load_imbalance(&uniform, 4, 4);
+        assert!(
+            imb_skewed > imb_uniform + 0.05,
+            "rmat {imb_skewed} should exceed er {imb_uniform}"
+        );
+        assert!(imb_uniform < 1.1);
+    }
+
+    #[test]
+    fn banded_stays_in_band() {
+        let m = banded(100, 3, 0.8, 7);
+        m.validate().unwrap();
+        for i in 0..m.nrows {
+            let (cs, _) = m.row(i);
+            for &c in cs {
+                assert!((c as i64 - i as i64).abs() <= 3);
+            }
+        }
+        // Diagonal always present.
+        assert!(m.nnz() >= 100);
+    }
+
+    #[test]
+    fn kkt_has_dense_border() {
+        let m = kkt_like(200, 2, 4, 0.5, 3);
+        m.validate().unwrap();
+        let rn = m.row_nnz();
+        let border_avg: f64 = rn[..4].iter().map(|&x| x as f64).sum::<f64>() / 4.0;
+        let core_avg: f64 = rn[50..].iter().map(|&x| x as f64).sum::<f64>() / 150.0;
+        assert!(border_avg > core_avg * 5.0);
+    }
+
+    #[test]
+    fn power_law_has_heavy_rows() {
+        let m = power_law(512, 8, 1.2, 9);
+        m.validate().unwrap();
+        let rn = m.row_nnz();
+        let max = *rn.iter().max().unwrap() as f64;
+        let avg = rn.iter().sum::<usize>() as f64 / rn.len() as f64;
+        assert!(max / avg > 5.0, "max {max} avg {avg}");
+    }
+
+    #[test]
+    fn block_components_valid() {
+        let m = block_components(300, 5, 0.05, 50, 4);
+        m.validate().unwrap();
+        assert!(m.nnz() > 300);
+    }
+}

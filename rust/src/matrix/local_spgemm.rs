@@ -1,0 +1,176 @@
+//! Local SpGEMM: C = A × B, both sparse — Gustavson's row-by-row
+//! algorithm with a sparse accumulator (SPA). This is the local kernel
+//! behind the distributed SpGEMM algorithms, and also where we measure
+//! the quantities the paper's SpGEMM roofline needs: `FLOPS(A, B)` and
+//! the compression factor `cf` (flops per nonzero output, Gu et al.).
+
+use super::csr::Csr;
+
+/// Result of a local SpGEMM with its measured work statistics.
+#[derive(Clone, Debug)]
+pub struct SpgemmOut {
+    pub c: Csr,
+    /// Multiply-add flops performed (2 × scalar multiplies).
+    pub flops: f64,
+    /// Compression factor: flops / (2 × nnz(C)) — "flops per nonzero
+    /// output" in the Gu et al. local-roofline bound.
+    pub cf: f64,
+}
+
+/// Gustavson SpGEMM with a dense-index SPA per output row.
+///
+/// The SPA (`next`-linked marker array) gives O(flops) time independent
+/// of B's column count, which is what makes this representative of
+/// modern hash-based GPU SpGEMM kernels.
+pub fn spgemm(a: &Csr, b: &Csr) -> SpgemmOut {
+    assert_eq!(a.ncols, b.nrows, "spgemm inner dimension mismatch");
+    let n = b.ncols;
+    let mut rowptr = Vec::with_capacity(a.nrows + 1);
+    rowptr.push(0i64);
+    let mut colind: Vec<i32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+
+    // SPA: accumulator values + occupancy markers (generation tagged to
+    // avoid clearing between rows).
+    let mut acc = vec![0f32; n];
+    let mut marker = vec![u32::MAX; n];
+    let mut row_cols: Vec<i32> = Vec::new();
+    let mut mults: u64 = 0;
+
+    for i in 0..a.nrows {
+        row_cols.clear();
+        let gen = i as u32;
+        let (acs, avs) = a.row(i);
+        for (&k, &av) in acs.iter().zip(avs) {
+            let (bcs, bvs) = b.row(k as usize);
+            mults += bcs.len() as u64;
+            // Hot loop (≈70% of distributed SpGEMM time): unchecked SPA
+            // access — `j < n` is guaranteed by the B tile's own
+            // validated column indices (see §Perf in EXPERIMENTS.md).
+            for (&j, &bv) in bcs.iter().zip(bvs) {
+                let j = j as usize;
+                debug_assert!(j < n);
+                unsafe {
+                    if *marker.get_unchecked(j) != gen {
+                        *marker.get_unchecked_mut(j) = gen;
+                        *acc.get_unchecked_mut(j) = av * bv;
+                        row_cols.push(j as i32);
+                    } else {
+                        *acc.get_unchecked_mut(j) += av * bv;
+                    }
+                }
+            }
+        }
+        // Deterministic output: emit the row's columns in sorted order
+        // (downstream `Csr::submatrix` relies on sorted rows). For dense
+        // rows a linear scan over the SPA beats sorting; for sparse rows
+        // the comparison sort wins (adaptive cutoff measured in §Perf).
+        if row_cols.len() * 8 > n {
+            for j in 0..n {
+                if marker[j] == gen {
+                    colind.push(j as i32);
+                    vals.push(acc[j]);
+                }
+            }
+        } else {
+            row_cols.sort_unstable();
+            colind.extend_from_slice(&row_cols);
+            vals.extend(row_cols.iter().map(|&j| acc[j as usize]));
+        }
+        rowptr.push(colind.len() as i64);
+    }
+
+    let c = Csr { nrows: a.nrows, ncols: n, rowptr, colind, vals };
+    let flops = 2.0 * mults as f64;
+    let cf = if c.nnz() == 0 { 0.0 } else { flops / (2.0 * c.nnz() as f64) };
+    SpgemmOut { c, flops, cf }
+}
+
+/// Flops of C = A×B without materializing C (row-expansion count).
+/// Used by load-imbalance analysis (Fig 1) where only work counts matter.
+pub fn spgemm_flops(a: &Csr, b: &Csr) -> f64 {
+    assert_eq!(a.ncols, b.nrows);
+    let brow_nnz: Vec<i64> =
+        (0..b.nrows).map(|r| b.rowptr[r + 1] - b.rowptr[r]).collect();
+    let mut mults: i64 = 0;
+    for &k in &a.colind {
+        mults += brow_nnz[k as usize];
+    }
+    2.0 * mults as f64
+}
+
+/// Device-traffic estimate for the local SpGEMM roofline: read A and B,
+/// write C, with per-nonzero bookkeeping bytes `b_bytes` (Gu et al. use
+/// b = bytes per nonzero; 8 = 4-byte value + 4-byte index).
+pub fn spgemm_bytes(a: &Csr, b: &Csr, c_nnz: usize) -> f64 {
+    (a.bytes() + b.bytes()) as f64 + (c_nnz * 8) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::coo::Coo;
+    use crate::util::Rng;
+
+    fn random_csr(m: usize, n: usize, nnz: usize, rng: &mut Rng) -> Csr {
+        let mut coo = Coo::new(m, n);
+        for _ in 0..nnz {
+            coo.push(rng.below_usize(m), rng.below_usize(n), rng.next_f32() + 0.1);
+        }
+        Csr::from_coo(coo)
+    }
+
+    #[test]
+    fn matches_dense_reference() {
+        let mut rng = Rng::new(5);
+        for trial in 0..10 {
+            let a = random_csr(20, 30, 80 + trial, &mut rng);
+            let b = random_csr(30, 25, 90, &mut rng);
+            let got = spgemm(&a, &b);
+            got.c.validate().unwrap();
+            let want = a.to_dense().matmul(&b.to_dense());
+            assert!(got.c.to_dense().max_abs_diff(&want) < 1e-4, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(6);
+        let a = random_csr(15, 15, 40, &mut rng);
+        let out = spgemm(&a, &Csr::eye(15));
+        assert_eq!(out.c, a);
+        // One multiply per nnz(A), cf = 1.
+        assert_eq!(out.flops, 2.0 * a.nnz() as f64);
+        assert!((out.cf - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flops_counting_consistent() {
+        let mut rng = Rng::new(7);
+        let a = random_csr(25, 25, 100, &mut rng);
+        let b = random_csr(25, 25, 100, &mut rng);
+        let out = spgemm(&a, &b);
+        assert_eq!(out.flops, spgemm_flops(&a, &b));
+        assert!(out.cf >= 1.0 || out.c.nnz() == 0);
+    }
+
+    #[test]
+    fn output_columns_sorted() {
+        let mut rng = Rng::new(8);
+        let a = random_csr(10, 10, 50, &mut rng);
+        let out = spgemm(&a, &a);
+        for i in 0..out.c.nrows {
+            let (cs, _) = out.c.row(i);
+            assert!(cs.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let a = Csr::zero(4, 5);
+        let b = Csr::zero(5, 6);
+        let out = spgemm(&a, &b);
+        assert_eq!(out.c.nnz(), 0);
+        assert_eq!(out.flops, 0.0);
+    }
+}

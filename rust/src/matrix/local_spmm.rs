@@ -1,0 +1,113 @@
+//! Local SpMM: C += A_sparse × B_dense — the per-tile compute kernel
+//! (cuSPARSE's role in the paper). This CPU implementation is the
+//! *native* backend; the AOT-compiled Pallas kernel (see `runtime`) is
+//! the alternative backend exercising the full three-layer stack.
+
+use super::csr::Csr;
+use super::dense::Dense;
+
+/// C += A * B. Shapes: A (m×k), B (k×n), C (m×n).
+pub fn spmm_acc(a: &Csr, b: &Dense, c: &mut Dense) {
+    assert_eq!(a.ncols, b.nrows, "spmm inner dimension mismatch");
+    assert_eq!(a.nrows, c.nrows, "spmm output rows mismatch");
+    assert_eq!(b.ncols, c.ncols, "spmm output cols mismatch");
+    let n = b.ncols;
+    for i in 0..a.nrows {
+        let lo = a.rowptr[i] as usize;
+        let hi = a.rowptr[i + 1] as usize;
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        let mut p = lo;
+        // Two nonzeros per pass: halves the C-row read/write traffic,
+        // the bandwidth bottleneck of row-major SpMM (§Perf).
+        while p + 1 < hi {
+            let c0 = a.colind[p] as usize;
+            let c1 = a.colind[p + 1] as usize;
+            let (v0, v1) = (a.vals[p], a.vals[p + 1]);
+            let b0 = &b.data[c0 * n..c0 * n + n];
+            let b1 = &b.data[c1 * n..c1 * n + n];
+            for ((cv, &x0), &x1) in crow.iter_mut().zip(b0).zip(b1) {
+                *cv += v0 * x0 + v1 * x1;
+            }
+            p += 2;
+        }
+        if p < hi {
+            let col = a.colind[p] as usize;
+            let av = a.vals[p];
+            let brow = &b.data[col * n..col * n + n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C = A * B (fresh output).
+pub fn spmm(a: &Csr, b: &Dense) -> Dense {
+    let mut c = Dense::zeros(a.nrows, b.ncols);
+    spmm_acc(a, b, &mut c);
+    c
+}
+
+/// Useful flops of C += A*B: 2 per (nonzero × dense column).
+pub fn spmm_flops(a: &Csr, n_cols: usize) -> f64 {
+    2.0 * a.nnz() as f64 * n_cols as f64
+}
+
+/// Device-memory traffic estimate in bytes, the paper's local-roofline
+/// denominator (§4): read A (CSR arrays), read B, read+write C. Assumes
+/// perfect cache reuse of B and C (upper bound on AI).
+pub fn spmm_bytes(a: &Csr, b_ncols: usize) -> f64 {
+    let a_bytes = a.bytes() as f64;
+    let b_bytes = (a.ncols * b_ncols * 4) as f64;
+    let c_bytes = (a.nrows * b_ncols * 4) as f64;
+    a_bytes + b_bytes + 2.0 * c_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::coo::Coo;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_dense_reference() {
+        let mut rng = Rng::new(11);
+        for trial in 0..10 {
+            let (m, k, n) = (17 + trial, 23, 9);
+            let mut coo = Coo::new(m, k);
+            for _ in 0..m * 3 {
+                coo.push(rng.below_usize(m), rng.below_usize(k), rng.next_f32());
+            }
+            let a = Csr::from_coo(coo);
+            let b = Dense::random(k, n, &mut rng);
+            let got = spmm(&a, &b);
+            let want = a.to_dense().matmul(&b);
+            assert!(got.max_abs_diff(&want) < 1e-4, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn accumulates_into_existing_c() {
+        let a = Csr::eye(3);
+        let b = Dense::ones(3, 2);
+        let mut c = Dense::ones(3, 2);
+        spmm_acc(&a, &b, &mut c);
+        assert_eq!(c.data, vec![2.0; 6]);
+    }
+
+    #[test]
+    fn empty_matrix_is_noop() {
+        let a = Csr::zero(4, 4);
+        let b = Dense::ones(4, 3);
+        let c = spmm(&a, &b);
+        assert_eq!(c.data, vec![0.0; 12]);
+    }
+
+    #[test]
+    fn flops_and_bytes_formulas() {
+        let a = Csr::eye(10);
+        assert_eq!(spmm_flops(&a, 8), 2.0 * 10.0 * 8.0);
+        // bytes: A (10*4 + 10*4 + 11*8) + B (10*8*4) + 2*C (10*8*4)
+        assert_eq!(spmm_bytes(&a, 8), (40 + 40 + 88 + 320 + 640) as f64);
+    }
+}

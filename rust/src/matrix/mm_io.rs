@@ -1,0 +1,168 @@
+//! Matrix Market IO — so the paper's actual SuiteSparse matrices can be
+//! dropped in when available. Supports `matrix coordinate
+//! real|integer|pattern general|symmetric`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::coo::Coo;
+use super::csr::Csr;
+
+/// Parse a MatrixMarket file into CSR.
+pub fn read_matrix_market(path: &Path) -> Result<Csr, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+    read_matrix_market_from(BufReader::new(f))
+}
+
+/// Parse MatrixMarket from any reader (used by tests with in-memory data).
+pub fn read_matrix_market_from<R: BufRead>(mut r: R) -> Result<Csr, String> {
+    let mut header = String::new();
+    r.read_line(&mut header).map_err(|e| e.to_string())?;
+    let h: Vec<String> =
+        header.trim().to_ascii_lowercase().split_whitespace().map(String::from).collect();
+    if h.len() < 5 || h[0] != "%%matrixmarket" || h[1] != "matrix" {
+        return Err(format!("not a MatrixMarket header: {header:?}"));
+    }
+    if h[2] != "coordinate" {
+        return Err(format!("only coordinate format supported, got {}", h[2]));
+    }
+    let field = h[3].as_str(); // real | integer | pattern
+    if !matches!(field, "real" | "integer" | "pattern") {
+        return Err(format!("unsupported field {field}"));
+    }
+    let sym = match h[4].as_str() {
+        "general" => false,
+        "symmetric" => true,
+        s => return Err(format!("unsupported symmetry {s}")),
+    };
+
+    // Skip comments, read the size line.
+    let mut size_line = String::new();
+    loop {
+        size_line.clear();
+        let n = r.read_line(&mut size_line).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err("unexpected EOF before size line".into());
+        }
+        let t = size_line.trim();
+        if !t.is_empty() && !t.starts_with('%') {
+            break;
+        }
+    }
+    let dims: Vec<usize> = size_line
+        .trim()
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|e| format!("bad size entry {t}: {e}")))
+        .collect::<Result<_, _>>()?;
+    if dims.len() != 3 {
+        return Err(format!("size line must have 3 entries, got {}", dims.len()));
+    }
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = Coo::with_capacity(nrows, ncols, if sym { nnz * 2 } else { nnz });
+    let mut line = String::new();
+    let mut seen = 0usize;
+    while seen < nnz {
+        line.clear();
+        let n = r.read_line(&mut line).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err(format!("unexpected EOF after {seen}/{nnz} entries"));
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().ok_or("missing row")?.parse().map_err(|e| format!("{e}"))?;
+        let j: usize = it.next().ok_or("missing col")?.parse().map_err(|e| format!("{e}"))?;
+        let v: f32 = if field == "pattern" {
+            1.0
+        } else {
+            it.next().ok_or("missing value")?.parse().map_err(|e| format!("{e}"))?
+        };
+        if i == 0 || j == 0 || i > nrows || j > ncols {
+            return Err(format!("entry ({i},{j}) out of 1-based bounds {nrows}x{ncols}"));
+        }
+        coo.push(i - 1, j - 1, v);
+        if sym && i != j {
+            coo.push(j - 1, i - 1, v);
+        }
+        seen += 1;
+    }
+    Ok(Csr::from_coo(coo))
+}
+
+/// Write CSR as `matrix coordinate real general`.
+pub fn write_matrix_market(m: &Csr, path: &Path) -> Result<(), String> {
+    let f = std::fs::File::create(path).map_err(|e| format!("create {path:?}: {e}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    write!(w, "%%MatrixMarket matrix coordinate real general\n{} {} {}\n", m.nrows, m.ncols, m.nnz())
+        .map_err(|e| e.to_string())?;
+    for i in 0..m.nrows {
+        let (cs, vs) = m.row(i);
+        for (&c, &v) in cs.iter().zip(vs) {
+            writeln!(w, "{} {} {}", i + 1, c + 1, v).map_err(|e| e.to_string())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_general_real() {
+        let txt = "%%MatrixMarket matrix coordinate real general\n\
+                   % a comment\n\
+                   3 3 2\n\
+                   1 1 2.5\n\
+                   3 2 -1.0\n";
+        let m = read_matrix_market_from(Cursor::new(txt)).unwrap();
+        assert_eq!(m.nrows, 3);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.to_dense()[(0, 0)], 2.5);
+        assert_eq!(m.to_dense()[(2, 1)], -1.0);
+    }
+
+    #[test]
+    fn expands_symmetric() {
+        let txt = "%%MatrixMarket matrix coordinate real symmetric\n\
+                   3 3 2\n\
+                   2 1 4.0\n\
+                   3 3 1.0\n";
+        let m = read_matrix_market_from(Cursor::new(txt)).unwrap();
+        assert_eq!(m.nnz(), 3); // (1,0), (0,1), (2,2)
+        assert_eq!(m.to_dense()[(0, 1)], 4.0);
+        assert_eq!(m.to_dense()[(1, 0)], 4.0);
+    }
+
+    #[test]
+    fn pattern_gets_unit_values() {
+        let txt = "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n2 2\n";
+        let m = read_matrix_market_from(Cursor::new(txt)).unwrap();
+        assert_eq!(m.to_dense()[(1, 1)], 1.0);
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let m = crate::matrix::gen::erdos_renyi(40, 4, 3);
+        let dir = std::env::temp_dir().join("sparta_mmio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("roundtrip.mtx");
+        write_matrix_market(&m, &p).unwrap();
+        let back = read_matrix_market(&p).unwrap();
+        assert_eq!(back.nrows, m.nrows);
+        assert_eq!(back.nnz(), m.nnz());
+        assert!(back.max_abs_diff(&m) < 1e-5);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_matrix_market_from(Cursor::new("hello\n")).is_err());
+        assert!(read_matrix_market_from(Cursor::new("%%MatrixMarket matrix array real general\n")).is_err());
+        let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(read_matrix_market_from(Cursor::new(oob)).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Matrix substrate: local storage formats, generators, IO, and the
+//! local multiply kernels the distributed algorithms call per tile.
+
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod gen;
+pub mod local_spgemm;
+pub mod local_spmm;
+pub mod mm_io;
+pub mod suite;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use local_spgemm::{spgemm, spgemm_flops, SpgemmOut};
+pub use local_spmm::{spmm, spmm_acc, spmm_flops};

@@ -1,0 +1,127 @@
+//! The matrix suite — laptop-scale analogs of the paper's Table 1.
+//!
+//! Each analog matches its original's *kind* and qualitative 2D
+//! load-imbalance character (measured on a 10×10 grid, like Table 1),
+//! at roughly 1/1000 the nnz so every experiment runs in seconds on a
+//! CPU. `repro table1` prints the measured imbalance of these analogs
+//! side by side with the paper's values.
+
+use super::csr::Csr;
+use super::gen;
+
+/// One row of the (reproduced) Table 1.
+#[derive(Clone, Debug)]
+pub struct SuiteEntry {
+    /// Analog name (paper's matrix it stands in for).
+    pub name: &'static str,
+    /// Application kind, from Table 1.
+    pub kind: &'static str,
+    /// Paper's reported load imbalance on a 10×10 grid.
+    pub paper_imbalance: f64,
+    /// Paper's m = k (matrix dimension).
+    pub paper_m: &'static str,
+    /// Paper's nnz.
+    pub paper_nnz: &'static str,
+}
+
+/// All Table 1 analogs, in the paper's order.
+pub fn table1() -> Vec<SuiteEntry> {
+    vec![
+        SuiteEntry { name: "mouse_gene", kind: "Biology", paper_imbalance: 2.13, paper_m: "45.1K", paper_nnz: "29.0M" },
+        SuiteEntry { name: "ldoor", kind: "Structural", paper_imbalance: 8.23, paper_m: "952K", paper_nnz: "46.5M" },
+        SuiteEntry { name: "amazon", kind: "GNN", paper_imbalance: 1.08, paper_m: "233K", paper_nnz: "115M" },
+        SuiteEntry { name: "nlpkkt160", kind: "NLP", paper_imbalance: 9.46, paper_m: "8.3M", paper_nnz: "230M" },
+        SuiteEntry { name: "com-orkut", kind: "GNN", paper_imbalance: 3.78, paper_m: "14.3M", paper_nnz: "230M" },
+        SuiteEntry { name: "nm7", kind: "NMF", paper_imbalance: 8.15, paper_m: "3.1M", paper_nnz: "234M" },
+        SuiteEntry { name: "isolates_sub4", kind: "Eigen", paper_imbalance: 6.38, paper_m: "5.0M", paper_nnz: "648M" },
+        SuiteEntry { name: "isolates_sub2", kind: "Eigen", paper_imbalance: 6.48, paper_m: "7.6M", paper_nnz: "592M" },
+        SuiteEntry { name: "metaclust_small", kind: "Biology", paper_imbalance: 1.00, paper_m: "4.4M", paper_nnz: "327M" },
+        SuiteEntry { name: "metaclust", kind: "Biology", paper_imbalance: 1.00, paper_m: "17.5M", paper_nnz: "5.2B" },
+        SuiteEntry { name: "friendster", kind: "Graph", paper_imbalance: 7.68, paper_m: "62.5M", paper_nnz: "3.4B" },
+    ]
+}
+
+/// Generate the named analog matrix. `scale_shift` reduces (negative) or
+/// increases (positive) the default size by powers of two — benches use
+/// smaller variants for fast criterion-style loops.
+pub fn analog_scaled(name: &str, scale_shift: i32) -> Csr {
+    let sh = |base: usize| -> usize {
+        if scale_shift >= 0 {
+            base << scale_shift
+        } else {
+            (base >> (-scale_shift)).max(64)
+        }
+    };
+    match name {
+        // Gene network: moderately skewed degree distribution, fairly
+        // dense rows; imbalance ≈ 2.
+        "mouse_gene" => gen::power_law(sh(4096), 24, 0.55, 0xB10),
+        // FEM structural: banded, diagonal-tile concentration; imb ≈ 8.
+        "ldoor" => gen::banded(sh(8192), 24, 0.55, 0x51),
+        // Product co-purchase graph: near-uniform; imb ≈ 1.1.
+        "amazon" => gen::erdos_renyi(sh(8192), 16, 0xA2),
+        // KKT system: banded + dense borders; imb ≈ 9.5.
+        "nlpkkt160" => gen::kkt_like(sh(8192), 6, 10, 0.6, 0x17),
+        // Social network: R-MAT skew; imb ≈ 3.8.
+        "com-orkut" => gen::rmat((13 + scale_shift.max(-3)) as u32, 16, 0.52, 0.19, 0.19, 0x0C),
+        // NMF term matrix: degree-sorted strong power-law with hub-hub
+        // coupling; imb ≈ 8.
+        "nm7" => gen::power_law_opts(sh(4096), 32, 0.9, 1.0, false, 0x07),
+        "nm8" => gen::power_law_opts(sh(2048), 32, 0.9, 1.0, false, 0x08),
+        // Genome assembly isolates: variable-size components; imb ≈ 6.4.
+        "isolates_sub4" => gen::block_components(sh(8192), 8, 0.012, 2000, 0x44),
+        "isolates_sub2" => gen::block_components(sh(12288), 9, 0.010, 3000, 0x42),
+        // Protein clustering: uniform; imb = 1.00.
+        "metaclust_small" => gen::erdos_renyi(sh(8192), 24, 0x3C),
+        "metaclust" => gen::erdos_renyi(sh(16384), 24, 0x3D),
+        // Friendster: heavy R-MAT skew at scale; imb ≈ 7.7.
+        "friendster" => gen::rmat((14 + scale_shift.max(-4)) as u32, 12, 0.57, 0.19, 0.19, 0xF5),
+        other => panic!("unknown suite matrix {other:?}"),
+    }
+}
+
+/// Default-size analog.
+pub fn analog(name: &str) -> Csr {
+    analog_scaled(name, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::loadimb::grid_load_imbalance;
+
+    #[test]
+    fn all_analogs_generate_and_validate() {
+        for e in table1() {
+            let m = analog_scaled(e.name, -2);
+            m.validate().unwrap_or_else(|err| panic!("{}: {err}", e.name));
+            assert!(m.nnz() > 0, "{} is empty", e.name);
+            assert_eq!(m.nrows, m.ncols, "{} must be square", e.name);
+        }
+    }
+
+    #[test]
+    fn imbalance_character_matches_table1() {
+        // Balanced analogs stay balanced; skewed analogs stay skewed.
+        // (10×10 grid, like Table 1.)
+        let balanced = ["amazon", "metaclust_small"];
+        let skewed = ["ldoor", "nlpkkt160", "nm7"];
+        for name in balanced {
+            let imb = grid_load_imbalance(&analog_scaled(name, -1), 10, 10);
+            assert!(imb < 1.6, "{name}: imbalance {imb} should be low");
+        }
+        for name in skewed {
+            let imb = grid_load_imbalance(&analog_scaled(name, -1), 10, 10);
+            assert!(imb > 2.5, "{name}: imbalance {imb} should be high");
+        }
+    }
+
+    #[test]
+    fn ordering_of_imbalance_follows_paper() {
+        // nlpkkt-like > amazon-like, mouse_gene in between.
+        let nlp = grid_load_imbalance(&analog_scaled("nlpkkt160", -1), 10, 10);
+        let amzn = grid_load_imbalance(&analog_scaled("amazon", -1), 10, 10);
+        let gene = grid_load_imbalance(&analog_scaled("mouse_gene", -1), 10, 10);
+        assert!(nlp > gene && gene > amzn, "nlp={nlp} gene={gene} amazon={amzn}");
+    }
+}

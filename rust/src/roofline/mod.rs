@@ -1,0 +1,197 @@
+//! The paper's §4 performance model: local and *inter-node* rooflines.
+//!
+//! The inter-node roofline treats the network as the "memory" of a
+//! distributed kernel: arithmetic intensity is flops per byte moved
+//! over the network per iteration, the bandwidth slope is each GPU's
+//! injection-bandwidth share, and the flat roof is the *local roofline
+//! peak* of the per-tile kernel (not the arithmetic peak).
+//!
+//! All formulas follow §4 exactly; units: flops, bytes, ns (so rates
+//! are GFlop/s and GB/s).
+
+/// Problem + machine parameters for the SpMM roofline.
+#[derive(Clone, Copy, Debug)]
+pub struct SpmmModel {
+    /// Global dimensions: A is m×k (sparse, density d), B is k×n.
+    pub m: f64,
+    pub k: f64,
+    pub n: f64,
+    pub d: f64,
+    /// Processor count (√p × √p grid).
+    pub p: f64,
+    /// Bytes per word (f32 = 4).
+    pub w: f64,
+}
+
+impl SpmmModel {
+    pub fn new(m: usize, k: usize, n: usize, nnz: usize, p: usize) -> Self {
+        SpmmModel {
+            m: m as f64,
+            k: k as f64,
+            n: n as f64,
+            d: nnz as f64 / (m as f64 * k as f64),
+            p: p as f64,
+            w: 4.0,
+        }
+    }
+
+    /// Flops of one iteration's local multiply:
+    /// 2 · (dmk/p) · (n/√p).
+    pub fn iter_flops(&self) -> f64 {
+        2.0 * (self.d * self.m * self.k / self.p) * (self.n / self.p.sqrt())
+    }
+
+    /// Elements communicated per iteration (§4):
+    /// kn/p + 2dmk/p + m/√p + 1.
+    pub fn iter_comm_elems(&self) -> f64 {
+        self.k * self.n / self.p
+            + 2.0 * self.d * self.m * self.k / self.p
+            + self.m / self.p.sqrt()
+            + 1.0
+    }
+
+    /// Local SpMM arithmetic intensity (flops/byte), §4's upper bound
+    /// assuming perfect cache reuse of B and C.
+    pub fn local_ai(&self) -> f64 {
+        let bytes = self.w
+            * (2.0 * self.d * self.m * self.k / self.p
+                + self.m / self.p.sqrt()
+                + 1.0
+                + self.m * self.n / self.p
+                + self.k * self.n / self.p);
+        self.iter_flops() / bytes
+    }
+
+    /// Inter-node arithmetic intensity (flops per network byte):
+    /// same flops over the bytes of the fetched A and B tiles.
+    pub fn internode_ai(&self) -> f64 {
+        let bytes = self.w
+            * (2.0 * self.d * self.m * self.k / self.p
+                + self.m / self.p.sqrt()
+                + 1.0
+                + self.k * self.n / self.p);
+        self.iter_flops() / bytes
+    }
+}
+
+/// Local SpGEMM arithmetic intensity per Gu et al. (§4):
+/// AI = cf / ((3 + 2·cf) · b), with `cf` = flops per nonzero output and
+/// `b` bytes per nonzero.
+pub fn spgemm_local_ai(cf: f64, b: f64) -> f64 {
+    cf / ((3.0 + 2.0 * cf) * b)
+}
+
+/// Inter-node SpGEMM arithmetic intensity (§4): measured FLOPS(A,B) over
+/// the bytes of the fetched sparse A and B tiles.
+#[derive(Clone, Copy, Debug)]
+pub struct SpgemmModel {
+    pub m: f64,
+    pub k: f64,
+    pub n: f64,
+    pub d: f64,
+    pub p: f64,
+    pub w: f64,
+    /// Measured flops of one iteration's local multiply (FLOPS(A,B)).
+    pub flops: f64,
+}
+
+impl SpgemmModel {
+    pub fn internode_ai(&self) -> f64 {
+        let bytes = self.w
+            * (2.0 * self.d * self.m * self.k / self.p
+                + self.m / self.p.sqrt()
+                + 1.0
+                + 2.0 * self.d * self.k * self.n / self.p
+                + self.k / self.p.sqrt()
+                + 1.0);
+        self.flops / bytes
+    }
+}
+
+/// Classic roofline: attainable rate given AI, bandwidth, and a peak.
+/// Rates in flop/ns (= GFlop/s), bandwidth bytes/ns (= GB/s).
+pub fn roofline(ai: f64, bw: f64, peak: f64) -> f64 {
+    (ai * bw).min(peak)
+}
+
+/// Local roofline peak of a kernel: min(local AI × memory bandwidth,
+/// arithmetic peak) — this becomes the flat roof of the inter-node model.
+pub fn local_peak(local_ai: f64, mem_bw: f64, arith_peak: f64) -> f64 {
+    roofline(local_ai, mem_bw, arith_peak)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> SpmmModel {
+        // isolates-like: m = k = 7.6e6, nnz = 592e6, n = 256, p = 24.
+        SpmmModel { m: 7.6e6, k: 7.6e6, n: 256.0, d: 592e6 / (7.6e6 * 7.6e6), p: 24.0, w: 4.0 }
+    }
+
+    #[test]
+    fn internode_ai_exceeds_local_ai_denominator_logic() {
+        // The inter-node denominator drops the mn/p C-tile term, so
+        // inter-node AI must be >= local AI.
+        let m = model();
+        assert!(m.internode_ai() >= m.local_ai());
+    }
+
+    #[test]
+    fn wider_b_is_more_intense() {
+        let narrow = SpmmModel { n: 128.0, ..model() };
+        let wide = SpmmModel { n: 512.0, ..model() };
+        assert!(wide.internode_ai() > narrow.internode_ai());
+    }
+
+    #[test]
+    fn roofline_bandwidth_vs_compute_regimes() {
+        assert_eq!(roofline(1.0, 3.83, 1000.0), 3.83); // bandwidth bound
+        assert_eq!(roofline(1e6, 3.83, 1000.0), 1000.0); // compute bound
+    }
+
+    #[test]
+    fn summit_spmm_is_network_bound() {
+        // Fig 2's qualitative claim: SpMM problems sit well inside the
+        // bandwidth-bound region on Summit (3.83 GB/s per-GPU share).
+        let m = model();
+        let local = local_peak(m.local_ai(), 900.0, 15_700.0);
+        let inter = roofline(m.internode_ai(), 3.83, local);
+        assert!(
+            inter < local * 0.5,
+            "expected network bound: inter {inter} local {local}"
+        );
+    }
+
+    #[test]
+    fn spgemm_local_ai_monotone_in_cf() {
+        assert!(spgemm_local_ai(4.0, 8.0) > spgemm_local_ai(1.0, 8.0));
+        // Saturates at 1/(2b).
+        assert!(spgemm_local_ai(1e9, 8.0) < 1.0 / 16.0 + 1e-9);
+    }
+
+    #[test]
+    fn spgemm_internode_ai_closer_to_local_than_spmm() {
+        // Fig 2's second claim: SpGEMM inter-node peaks sit much closer
+        // to their local peaks than SpMM's do.
+        let spmm = model();
+        let spmm_ratio = roofline(spmm.internode_ai(), 3.83, f64::MAX)
+            / local_peak(spmm.local_ai(), 900.0, 15_700.0);
+        let spg = SpgemmModel {
+            m: 5.0e6,
+            k: 5.0e6,
+            n: 5.0e6,
+            d: 648e6 / (5.0e6 * 5.0e6),
+            p: 24.0,
+            w: 4.0,
+            flops: 4.0 * 648e6 / 24.0, // cf ~ 2 flops per input nnz share
+        };
+        let cf = 3.0;
+        let spg_local = local_peak(spgemm_local_ai(cf, 8.0), 900.0, 15_700.0);
+        let spg_ratio = roofline(spg.internode_ai(), 3.83, f64::MAX) / spg_local;
+        assert!(
+            spg_ratio > spmm_ratio,
+            "spgemm ratio {spg_ratio} should exceed spmm ratio {spmm_ratio}"
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! Runtime: local tile-multiply backends.
+//!
+//! The distributed algorithms call local multiplies through a
+//! [`TileBackend`]: either the native Rust kernel, or the AOT-compiled
+//! Pallas kernel loaded from `artifacts/*.hlo.txt` and executed via the
+//! PJRT CPU client (see [`pjrt`]) — the full three-layer path.
+
+pub mod pjrt;
+
+use std::sync::Arc;
+
+use crate::matrix::{local_spmm, Csr, Dense};
+
+/// Which implementation executes local SpMM tile multiplies.
+#[derive(Clone, Default)]
+pub enum TileBackend {
+    /// Pure-Rust CSR kernel.
+    #[default]
+    Native,
+    /// AOT-compiled Pallas kernel via PJRT.
+    Pjrt(Arc<pjrt::TileExecutor>),
+}
+
+impl TileBackend {
+    /// Load the PJRT backend from the artifacts directory.
+    pub fn pjrt(artifacts_dir: &std::path::Path) -> anyhow::Result<TileBackend> {
+        Ok(TileBackend::Pjrt(Arc::new(pjrt::TileExecutor::load(artifacts_dir)?)))
+    }
+
+    /// C += A·B through the selected backend.
+    pub fn spmm_acc(&self, a: &Csr, b: &Dense, c: &mut Dense) {
+        match self {
+            TileBackend::Native => local_spmm::spmm_acc(a, b, c),
+            TileBackend::Pjrt(exe) => exe.spmm_acc(a, b, c),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TileBackend::Native => "native",
+            TileBackend::Pjrt(_) => "pjrt",
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Minimal in-crate property-testing harness (the offline build has no
+//! proptest): run a property over `cases` seeded random inputs, report
+//! the failing seed so the case can be replayed deterministically.
+
+use crate::util::Rng;
+
+/// Run `prop` on `cases` inputs drawn by `gen` from seeded RNG streams.
+/// Panics with the failing seed on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    base_seed: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 10, 1, |r| r.below(100), |_| Ok(()));
+        n += 1;
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\"")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 5, 2, |r| r.below(10), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,142 @@
+//! End-to-end integration tests across the whole L3 stack: all
+//! algorithms on suite analogs, both machine profiles, cross-algorithm
+//! result agreement, determinism, and the paper's qualitative claims in
+//! miniature.
+
+use sparta::algorithms::{SpgemmAlg, SpmmAlg};
+use sparta::coordinator::experiments::{fig1, table1, ExpOpts};
+use sparta::coordinator::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
+use sparta::fabric::NetProfile;
+use sparta::matrix::{gen, suite};
+
+fn quiet(scale_shift: i32) -> ExpOpts {
+    ExpOpts { scale_shift, verify: false, print: false }
+}
+
+#[test]
+fn all_spmm_algorithms_agree_with_each_other() {
+    let a = gen::rmat(8, 6, 0.55, 0.15, 0.15, 3);
+    let mut reference: Option<Vec<f32>> = None;
+    for &alg in SpmmAlg::all() {
+        let np = if alg.needs_square() { 4 } else { 6 };
+        let mut cfg = SpmmConfig::new(alg, np, NetProfile::dgx2(), 16);
+        cfg.verify = true;
+        cfg.seg_bytes = 64 << 20;
+        let run = run_spmm(&a, &cfg).unwrap_or_else(|e| panic!("{}: {e}", alg.name()));
+        let c = run.c.expect("verify gathers C");
+        match &reference {
+            None => reference = Some(c.data),
+            Some(want) => {
+                let err: f32 = c
+                    .data
+                    .iter()
+                    .zip(want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f32::max);
+                assert!(err < 1e-3, "{} diverges from first algorithm by {err}", alg.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn spgemm_output_structure_identical_across_algorithms() {
+    let a = gen::rmat(8, 4, 0.5, 0.17, 0.17, 9);
+    let mut nnz: Option<usize> = None;
+    for &alg in SpgemmAlg::all() {
+        let np = if alg.needs_square() { 4 } else { 6 };
+        let mut cfg = SpgemmConfig::new(alg, np, NetProfile::dgx2());
+        cfg.verify = true;
+        cfg.seg_bytes = 64 << 20;
+        let run = run_spgemm(&a, &cfg).unwrap_or_else(|e| panic!("{}: {e}", alg.name()));
+        let c = run.c.unwrap();
+        match nnz {
+            None => nnz = Some(c.nnz()),
+            Some(w) => assert_eq!(c.nnz(), w, "{} produced different structure", alg.name()),
+        }
+    }
+}
+
+#[test]
+fn simulated_timing_is_deterministic_for_deterministic_algorithms() {
+    // Stationary-C has no cross-PE races: two runs must give identical
+    // virtual makespans (workstealing runs may differ by claim order).
+    let a = gen::erdos_renyi(128, 5, 4);
+    let cfg = SpmmConfig::new(SpmmAlg::StationaryC, 9, NetProfile::summit(), 32);
+    let m1 = run_spmm(&a, &cfg).unwrap().report.makespan_ns;
+    let m2 = run_spmm(&a, &cfg).unwrap().report.makespan_ns;
+    assert_eq!(m1, m2, "stationary-C virtual time must be deterministic");
+}
+
+#[test]
+fn rdma_beats_bulk_synchronous_on_communication_bound_problem() {
+    // The paper's headline: asynchronous RDMA >= bulk-synchronous SUMMA
+    // on communication-bound (small N, imbalanced) multi-node problems.
+    let a = suite::analog_scaled("nlpkkt160", -2);
+    let sc = {
+        let cfg = SpmmConfig::new(SpmmAlg::StationaryC, 16, NetProfile::summit(), 128);
+        run_spmm(&a, &cfg).unwrap().report.makespan_ns
+    };
+    let summa = {
+        let cfg = SpmmConfig::new(SpmmAlg::SummaCombBlas, 16, NetProfile::summit(), 128);
+        run_spmm(&a, &cfg).unwrap().report.makespan_ns
+    };
+    assert!(
+        sc < summa,
+        "S-C RDMA ({:.0} us) should beat CombBLAS-like SUMMA ({:.0} us)",
+        sc / 1e3,
+        summa / 1e3
+    );
+}
+
+#[test]
+fn fig1_amplification_direction() {
+    let out = fig1(&quiet(-4));
+    assert!(out.per_stage >= out.end_to_end - 1e-9);
+    assert!(out.end_to_end < 2.5, "permuted R-MAT should be roughly balanced end-to-end");
+}
+
+#[test]
+fn table1_balanced_vs_skewed_ordering() {
+    let rows = table1(&quiet(-2));
+    let get = |name: &str| rows.iter().find(|r| r.name == name).unwrap().imbalance;
+    assert!(get("amazon") < 1.6);
+    assert!(get("metaclust_small") < 1.6);
+    assert!(get("nlpkkt160") > 2.5);
+    assert!(get("ldoor") > 2.5);
+    assert!(get("nlpkkt160") > get("mouse_gene"));
+}
+
+#[test]
+fn profiles_change_timing_not_numerics() {
+    let a = gen::erdos_renyi(100, 5, 6);
+    let mut out = Vec::new();
+    for profile in [NetProfile::dgx2(), NetProfile::summit(), NetProfile::flat(10.0, 1000.0)] {
+        let mut cfg = SpmmConfig::new(SpmmAlg::StationaryA, 6, profile, 16);
+        cfg.verify = true;
+        cfg.seg_bytes = 32 << 20;
+        let run = run_spmm(&a, &cfg).unwrap();
+        out.push((run.report.makespan_ns, run.c.unwrap().data));
+    }
+    // Numerics agree across profiles (bit-exactness is not guaranteed:
+    // queue arrival order, and hence f32 accumulation order, is
+    // timing-dependent for stationary-A).
+    let max_err = |a: &Vec<f32>, b: &Vec<f32>| {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+    };
+    assert!(max_err(&out[0].1, &out[1].1) < 1e-3);
+    assert!(max_err(&out[0].1, &out[2].1) < 1e-3);
+    // Summit (3.83 GB/s inter-node) must be slower than DGX-2 (50 GB/s).
+    assert!(out[1].0 > out[0].0, "summit {:.0} <= dgx2 {:.0}", out[1].0, out[0].0);
+}
+
+#[test]
+fn large_pe_count_smoke() {
+    // 64 simulated GPUs end to end.
+    let a = gen::erdos_renyi(512, 6, 8);
+    let mut cfg = SpmmConfig::new(SpmmAlg::StationaryC, 64, NetProfile::summit(), 32);
+    cfg.verify = true;
+    cfg.seg_bytes = 32 << 20;
+    let run = run_spmm(&a, &cfg).unwrap();
+    assert_eq!(run.report.nprocs, 64);
+}

@@ -1,0 +1,81 @@
+//! Integration: the full three-layer stack.
+//!
+//! Requires `make artifacts` to have run (the Makefile `test` target
+//! guarantees it). If artifacts are missing the tests print a skip
+//! notice rather than failing, so `cargo test` alone stays usable.
+
+use std::path::PathBuf;
+
+use sparta::coordinator::{run_spmm, SpmmConfig};
+use sparta::fabric::NetProfile;
+use sparta::matrix::{gen, local_spmm, Dense};
+use sparta::runtime::{pjrt::TileExecutor, TileBackend};
+use sparta::util::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_executor() -> Option<TileExecutor> {
+    match TileExecutor::load(&artifacts_dir()) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP (run `make artifacts`): {err}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_kernel_matches_native() {
+    let Some(exe) = load_executor() else { return };
+    let mut rng = Rng::new(42);
+    for (n, deg, ncols) in [(64, 4, 32), (128, 6, 64), (256, 8, 128), (200, 5, 100)] {
+        let a = gen::erdos_renyi(n, deg, n as u64);
+        let b = Dense::random(n, ncols, &mut rng);
+        let mut got = Dense::random(n, ncols, &mut rng); // non-zero C: tests accumulate
+        let mut want = got.clone();
+        exe.spmm_acc(&a, &b, &mut got);
+        local_spmm::spmm_acc(&a, &b, &mut want);
+        let err = got.rel_err(&want);
+        assert!(err < 1e-4, "n={n} ncols={ncols}: rel err {err:.3e}");
+    }
+    assert!(exe.executions() > 0, "expected PJRT executions, got only fallbacks");
+}
+
+#[test]
+fn pjrt_falls_back_when_too_big() {
+    let Some(exe) = load_executor() else { return };
+    // 512 rows exceeds every compiled config -> native fallback.
+    let a = gen::erdos_renyi(512, 4, 9);
+    let mut rng = Rng::new(7);
+    let b = Dense::random(512, 16, &mut rng);
+    let mut got = Dense::zeros(512, 16);
+    exe.spmm_acc(&a, &b, &mut got);
+    assert_eq!(exe.fallbacks(), 1);
+    let want = local_spmm::spmm(&a, &b);
+    assert!(got.rel_err(&want) < 1e-5);
+}
+
+#[test]
+fn distributed_spmm_through_pjrt_backend() {
+    let Some(_) = load_executor() else { return };
+    // End-to-end: 4 simulated GPUs, stationary-C, local multiplies through
+    // the AOT Pallas kernel.
+    let backend = TileBackend::pjrt(&artifacts_dir()).unwrap();
+    let a = gen::erdos_renyi(256, 5, 11);
+    let mut cfg = SpmmConfig::new(
+        sparta::algorithms::SpmmAlg::StationaryC,
+        4,
+        NetProfile::dgx2(),
+        64,
+    );
+    cfg.backend = backend.clone();
+    cfg.verify = true; // compares against the native single-node reference
+    cfg.seg_bytes = 64 << 20;
+    let run = run_spmm(&a, &cfg).expect("distributed run");
+    assert!(run.report.flops > 0.0);
+    if let TileBackend::Pjrt(exe) = &backend {
+        assert!(exe.executions() > 0, "PJRT path unused");
+    }
+}

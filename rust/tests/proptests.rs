@@ -1,0 +1,291 @@
+//! Property-based tests over the coordinator invariants: routing
+//! (tile ownership), batching/merging, reservation-grid partitioning,
+//! queue delivery, and distributed-vs-reference numerics for randomized
+//! problem shapes. Uses the in-crate `testing::check` harness (seeded,
+//! replayable).
+
+use sparta::algorithms::{SpgemmAlg, SpmmAlg};
+use sparta::coordinator::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
+use sparta::dist::ProcGrid;
+use sparta::fabric::{Fabric, FabricConfig, NetProfile};
+use sparta::matrix::{gen, local_spmm, Coo, Csr, Dense};
+use sparta::testing::check;
+use sparta::util::Rng;
+
+fn random_csr(rng: &mut Rng, max_n: usize) -> Csr {
+    let n = 16 + rng.below_usize(max_n - 16);
+    let nnz = n * (1 + rng.below_usize(6));
+    let mut coo = Coo::new(n, n);
+    for _ in 0..nnz {
+        coo.push(rng.below_usize(n), rng.below_usize(n), rng.next_f32() - 0.5);
+    }
+    Csr::from_coo(coo)
+}
+
+#[test]
+fn prop_csr_transpose_involution() {
+    check(
+        "transpose(transpose(A)) == A",
+        25,
+        0x71,
+        |rng| random_csr(rng, 200),
+        |a| {
+            let t = a.transpose();
+            t.validate()?;
+            if &t.transpose() != a {
+                return Err("transpose not an involution".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_submatrix_partition_preserves_nnz() {
+    check(
+        "2x2 tile partition preserves nnz and values",
+        20,
+        0x51,
+        |rng| random_csr(rng, 150),
+        |a| {
+            let (rm, cm) = (a.nrows / 2, a.ncols / 2);
+            let tiles = [
+                a.submatrix(0, rm, 0, cm),
+                a.submatrix(0, rm, cm, a.ncols),
+                a.submatrix(rm, a.nrows, 0, cm),
+                a.submatrix(rm, a.nrows, cm, a.ncols),
+            ];
+            let total: usize = tiles.iter().map(|t| t.nnz()).sum();
+            if total != a.nnz() {
+                return Err(format!("tiles lost nonzeros: {total} != {}", a.nnz()));
+            }
+            for t in &tiles {
+                t.validate()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_grid_ownership_is_total_and_consistent() {
+    check(
+        "every tile has exactly one owner; my_tiles inverts owner",
+        30,
+        0x0117,
+        |rng| 1 + rng.below_usize(40),
+        |&nprocs| {
+            let g = ProcGrid::for_nprocs(nprocs);
+            let mut count = 0usize;
+            for r in 0..nprocs {
+                for (i, j) in g.my_tiles(r) {
+                    if g.owner(i, j) != r {
+                        return Err(format!("owner({i},{j}) != {r}"));
+                    }
+                    count += 1;
+                }
+            }
+            if count != g.t * g.t {
+                return Err(format!("ownership not a partition: {count} vs {}", g.t * g.t));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_spmm_all_algorithms_match_reference() {
+    // Randomized (alg, nprocs, size, ncols): the distributed result must
+    // match the single-node kernel within f32 tolerance.
+    check(
+        "distributed SpMM == reference",
+        10,
+        0xA16,
+        |rng| {
+            let algs = [
+                SpmmAlg::StationaryC,
+                SpmmAlg::StationaryA,
+                SpmmAlg::RandomWsA,
+                SpmmAlg::LocalityWsC,
+                SpmmAlg::LocalityWsA,
+            ];
+            let alg = algs[rng.below_usize(algs.len())];
+            let nprocs = [1, 2, 4, 6, 9][rng.below_usize(5)];
+            let n = 32 + rng.below_usize(100);
+            let ncols = 4 + rng.below_usize(28);
+            let seed = rng.next_u64();
+            (alg, nprocs, n, ncols, seed)
+        },
+        |&(alg, nprocs, n, ncols, seed)| {
+            let a = gen::erdos_renyi(n, 4, seed);
+            let mut cfg = SpmmConfig::new(alg, nprocs, NetProfile::dgx2(), ncols);
+            cfg.verify = true; // run_spmm fails on mismatch
+            cfg.seg_bytes = 32 << 20;
+            run_spmm(&a, &cfg).map(|_| ()).map_err(|e| e.to_string())
+        },
+    );
+}
+
+#[test]
+fn prop_spgemm_algorithms_match_reference() {
+    check(
+        "distributed SpGEMM == reference",
+        8,
+        0xB17,
+        |rng| {
+            let algs = [SpgemmAlg::StationaryC, SpgemmAlg::StationaryA, SpgemmAlg::RandomWsA];
+            let alg = algs[rng.below_usize(algs.len())];
+            let nprocs = [1, 4, 6][rng.below_usize(3)];
+            let scale = 5 + rng.below(3) as u32;
+            let seed = rng.next_u64();
+            (alg, nprocs, scale, seed)
+        },
+        |&(alg, nprocs, scale, seed)| {
+            let a = gen::rmat(scale, 4, 0.5, 0.17, 0.17, seed);
+            let mut cfg = SpgemmConfig::new(alg, nprocs, NetProfile::dgx2());
+            cfg.verify = true;
+            cfg.seg_bytes = 64 << 20;
+            run_spgemm(&a, &cfg).map(|_| ()).map_err(|e| e.to_string())
+        },
+    );
+}
+
+#[test]
+fn prop_stats_attribution_covers_final_clock() {
+    // Every rank's final virtual clock must equal the sum of its
+    // attributed components (nothing charged to thin air, nothing lost).
+    check(
+        "sum(components) == final clock",
+        6,
+        0xC10,
+        |rng| (1 + rng.below_usize(8), rng.next_u64()),
+        |&(nprocs, seed)| {
+            let a = gen::erdos_renyi(64, 4, seed);
+            let cfg = SpmmConfig::new(SpmmAlg::StationaryC, nprocs, NetProfile::summit(), 16);
+            let run = run_spmm(&a, &cfg).map_err(|e| e.to_string())?;
+            for (r, s) in run.report.per_rank.iter().enumerate() {
+                let sum = s.total_ns();
+                if (sum - s.final_clock_ns).abs() > 1.0 {
+                    return Err(format!(
+                        "rank {r}: attributed {sum} != clock {}",
+                        s.final_clock_ns
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ell_pack_preserves_product() {
+    check(
+        "ELL-packed product == CSR product",
+        15,
+        0xE11,
+        |rng| (random_csr(rng, 100), rng.next_u64()),
+        |(a, seed)| {
+            let lmax = a.row_nnz().into_iter().max().unwrap_or(0).max(1);
+            let (vals, cols) =
+                sparta::runtime::pjrt::ell_pack(a, a.nrows, lmax).ok_or("pack failed")?;
+            let mut rng = Rng::new(*seed);
+            let b = Dense::random(a.ncols, 8, &mut rng);
+            let mut got = Dense::zeros(a.nrows, 8);
+            for r in 0..a.nrows {
+                for l in 0..lmax {
+                    let v = vals[r * lmax + l];
+                    let c = cols[r * lmax + l] as usize;
+                    for j in 0..8 {
+                        got[(r, j)] += v * b[(c, j)];
+                    }
+                }
+            }
+            let want = local_spmm::spmm(a, &b);
+            if got.rel_err(&want) > 1e-4 {
+                return Err(format!("rel err {}", got.rel_err(&want)));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_queue_delivers_everything_once() {
+    check(
+        "MPSC queue: no loss, no duplication",
+        8,
+        0x901,
+        |rng| (2 + rng.below_usize(6), 1 + rng.below_usize(50), rng.next_u64()),
+        |&(nprocs, per_rank, _seed)| {
+            use sparta::fabric::{QueueHandle, QueueItem};
+            struct M(u64);
+            impl QueueItem for M {
+                const WORDS: usize = 1;
+                fn encode(&self, out: &mut [u64]) {
+                    out[0] = self.0;
+                }
+                fn decode(w: &[u64]) -> Self {
+                    M(w[0])
+                }
+            }
+            let f = Fabric::new(FabricConfig {
+                nprocs,
+                profile: NetProfile::dgx2(),
+                seg_capacity: 8 << 20,
+                pacing: false,
+            });
+            let q = QueueHandle::<M>::create(&f, 0, 64);
+            let expect: u64 = (1..nprocs as u64)
+                .map(|r| (0..per_rank as u64).map(|i| r * 1000 + i).sum::<u64>())
+                .sum();
+            let (sums, _) = f.launch(|pe| {
+                if pe.rank() == 0 {
+                    let total = (nprocs - 1) * per_rank;
+                    let mut got = 0;
+                    let mut sum = 0u64;
+                    while got < total {
+                        if let Some(m) = q.pop_wait(pe) {
+                            sum += m.0;
+                            got += 1;
+                        }
+                        pe.fabric().check_abort();
+                    }
+                    sum
+                } else {
+                    for i in 0..per_rank as u64 {
+                        q.push(pe, &M(pe.rank() as u64 * 1000 + i));
+                    }
+                    0
+                }
+            });
+            if sums[0] != expect {
+                return Err(format!("sum {} != {}", sums[0], expect));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_makespan_monotone_with_library_overhead() {
+    // PETSc-like overheads must never make SUMMA faster.
+    check(
+        "overhead model is monotone",
+        5,
+        0xD0,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let a = gen::rmat(8, 6, 0.5, 0.17, 0.17, seed);
+            let mk = |alg| {
+                let cfg = SpgemmConfig::new(alg, 4, NetProfile::summit());
+                run_spgemm(&a, &cfg).map(|r| r.report.makespan_ns)
+            };
+            let mpi = mk(SpgemmAlg::SummaMpi).map_err(|e| e.to_string())?;
+            let petsc = mk(SpgemmAlg::SummaPetsc).map_err(|e| e.to_string())?;
+            if petsc < mpi {
+                return Err(format!("petsc {petsc} faster than mpi {mpi}"));
+            }
+            Ok(())
+        },
+    );
+}
