@@ -1,0 +1,289 @@
+//! Remote accumulation of partial result tiles — §3.1.2's hybrid
+//! push/pull channel.
+//!
+//! A producer that finishes a partial C tile it does not own *publishes*
+//! the tile's arrays in its own symmetric heap and pushes a compact
+//! [`AccMsg`] descriptor (tile coordinates + global pointers) onto the
+//! owner's [`QueueHandle`]. The owner drains its queue between its own
+//! multiplies, *pulls* each referenced payload with a one-sided get, and
+//! accumulates — so neither side ever blocks on the other (the
+//! `drain_spmm_queue` / `drain_spgemm_queue` loops in
+//! `algorithms::common`).
+
+use std::sync::Arc;
+
+use crate::fabric::{Fabric, GlobalPtr, Kind, Pe, QueueHandle, QueueItem};
+use crate::matrix::{Csr, Dense};
+
+/// Descriptor of one partial-result tile awaiting accumulation.
+///
+/// Dense partials carry one payload pointer (`data`); sparse partials
+/// carry the three CSR arrays (`rowptr`, `colind`, and `data` doubling
+/// as the values array).
+#[derive(Clone, Copy, Debug)]
+pub struct AccMsg {
+    /// Target C tile row.
+    pub ti: u32,
+    /// Target C tile column.
+    pub tj: u32,
+    nrows: u32,
+    ncols: u32,
+    sparse: bool,
+    /// Dense payload, or the sparse values array.
+    data: GlobalPtr<f32>,
+    rowptr: GlobalPtr<i64>,
+    colind: GlobalPtr<i32>,
+}
+
+impl AccMsg {
+    /// Pull a dense partial tile (charged as Acc — accumulation traffic).
+    pub fn fetch_dense(&self, pe: &Pe) -> Dense {
+        assert!(!self.sparse, "fetch_dense on a sparse partial");
+        let data = pe.get_vec_as(self.data, Kind::Acc);
+        Dense::from_vec(self.nrows as usize, self.ncols as usize, data)
+    }
+
+    /// Pull a sparse partial tile (charged as Acc).
+    pub fn fetch_sparse(&self, pe: &Pe) -> Csr {
+        assert!(self.sparse, "fetch_sparse on a dense partial");
+        Csr {
+            nrows: self.nrows as usize,
+            ncols: self.ncols as usize,
+            rowptr: pe.get_vec_as(self.rowptr, Kind::Acc),
+            colind: pe.get_vec_as(self.colind, Kind::Acc),
+            vals: pe.get_vec_as(self.data, Kind::Acc),
+        }
+    }
+
+    /// Bytes the owner will pull for this partial.
+    pub fn payload_bytes(&self) -> usize {
+        self.data.bytes() + self.rowptr.bytes() + self.colind.bytes()
+    }
+}
+
+// Queue wire format, 8 words:
+//   [0] sparse flag (bit 63) | ti (bits 32..62) | tj (bits 0..31)
+//   [1] nrows (high 32) | ncols (low 32)
+//   [2..4] data ptr, [4..6] rowptr ptr, [6..8] colind ptr
+impl QueueItem for AccMsg {
+    const WORDS: usize = 8;
+
+    fn encode(&self, out: &mut [u64]) {
+        assert!(self.ti < (1 << 31), "tile row {} exceeds encodable range", self.ti);
+        out[0] = ((self.sparse as u64) << 63) | ((self.ti as u64) << 32) | self.tj as u64;
+        out[1] = ((self.nrows as u64) << 32) | self.ncols as u64;
+        let d = self.data.encode();
+        let r = self.rowptr.encode();
+        let c = self.colind.encode();
+        out[2] = d[0];
+        out[3] = d[1];
+        out[4] = r[0];
+        out[5] = r[1];
+        out[6] = c[0];
+        out[7] = c[1];
+    }
+
+    fn decode(w: &[u64]) -> Self {
+        AccMsg {
+            sparse: w[0] >> 63 != 0,
+            ti: ((w[0] >> 32) & 0x7FFF_FFFF) as u32,
+            tj: w[0] as u32,
+            nrows: (w[1] >> 32) as u32,
+            ncols: w[1] as u32,
+            data: GlobalPtr::decode([w[2], w[3]]),
+            rowptr: GlobalPtr::decode([w[4], w[5]]),
+            colind: GlobalPtr::decode([w[6], w[7]]),
+        }
+    }
+}
+
+/// One accumulation queue per PE, created collectively at setup.
+#[derive(Clone)]
+pub struct AccQueues {
+    queues: Arc<Vec<QueueHandle<AccMsg>>>,
+}
+
+impl AccQueues {
+    /// Allocate a `cap`-slot queue on every PE (setup phase).
+    pub fn create(fabric: &Fabric, cap: usize) -> AccQueues {
+        let queues = (0..fabric.nprocs())
+            .map(|rank| QueueHandle::create(fabric, rank, cap))
+            .collect();
+        AccQueues { queues: Arc::new(queues) }
+    }
+
+    /// Per-PE queue capacity.
+    pub fn capacity(&self) -> usize {
+        self.queues[0].capacity()
+    }
+
+    /// Publish a dense partial for C tile (i, j) and enqueue its
+    /// descriptor on `owner`'s queue. Cost: one local put (publish) +
+    /// one remote FAA + one remote put (the queue push).
+    pub fn send_dense_partial(&self, pe: &Pe, owner: usize, i: usize, j: usize, part: &Dense) {
+        let data = pe.publish(&part.data, Kind::Acc);
+        let msg = AccMsg {
+            ti: i as u32,
+            tj: j as u32,
+            nrows: part.nrows as u32,
+            ncols: part.ncols as u32,
+            sparse: false,
+            data,
+            rowptr: GlobalPtr::null(),
+            colind: GlobalPtr::null(),
+        };
+        self.queues[owner].push(pe, &msg);
+    }
+
+    /// Publish a sparse partial for C tile (i, j) and enqueue its
+    /// descriptor on `owner`'s queue. Empty partials are sent too — the
+    /// owner counts contributions for termination.
+    pub fn send_sparse_partial(&self, pe: &Pe, owner: usize, i: usize, j: usize, part: &Csr) {
+        let rowptr = pe.publish(&part.rowptr, Kind::Acc);
+        let colind = pe.publish(&part.colind, Kind::Acc);
+        let vals = pe.publish(&part.vals, Kind::Acc);
+        let msg = AccMsg {
+            ti: i as u32,
+            tj: j as u32,
+            nrows: part.nrows as u32,
+            ncols: part.ncols as u32,
+            sparse: true,
+            data: vals,
+            rowptr,
+            colind,
+        };
+        self.queues[owner].push(pe, &msg);
+    }
+
+    /// Pop from this PE's own queue; `None` if nothing has arrived in
+    /// virtual time (non-blocking interleave).
+    pub fn try_pop(&self, pe: &Pe) -> Option<AccMsg> {
+        self.queues[pe.rank()].try_pop(pe)
+    }
+
+    /// Pop from this PE's own queue, clamping the clock forward to the
+    /// message's arrival time (termination wait).
+    pub fn pop_wait(&self, pe: &Pe) -> Option<AccMsg> {
+        self.queues[pe.rank()].pop_wait(pe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{FabricConfig, NetProfile};
+    use crate::matrix::gen;
+
+    fn fab(n: usize) -> Arc<Fabric> {
+        Fabric::new(FabricConfig {
+            nprocs: n,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 16 << 20,
+            pacing: false,
+        })
+    }
+
+    #[test]
+    fn msg_wire_roundtrip() {
+        let dense = AccMsg {
+            ti: 3,
+            tj: 7,
+            nrows: 16,
+            ncols: 9,
+            sparse: false,
+            data: GlobalPtr::new(2, 64, 144),
+            rowptr: GlobalPtr::null(),
+            colind: GlobalPtr::null(),
+        };
+        let mut w = [0u64; AccMsg::WORDS];
+        dense.encode(&mut w);
+        let back = AccMsg::decode(&w);
+        assert_eq!((back.ti, back.tj, back.nrows, back.ncols), (3, 7, 16, 9));
+        assert!(!back.sparse);
+        assert_eq!(back.data, dense.data);
+        assert!(back.rowptr.is_null() && back.colind.is_null());
+
+        let sparse = AccMsg { sparse: true, rowptr: GlobalPtr::new(0, 8, 17), ..dense };
+        sparse.encode(&mut w);
+        let back = AccMsg::decode(&w);
+        assert!(back.sparse);
+        assert_eq!(back.rowptr, sparse.rowptr);
+    }
+
+    #[test]
+    fn dense_partial_delivery() {
+        let f = fab(2);
+        let q = AccQueues::create(&f, 16);
+        f.launch(|pe| {
+            if pe.rank() == 1 {
+                let part = Dense::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+                q.send_dense_partial(pe, 0, 1, 2, &part);
+            }
+            pe.barrier();
+            if pe.rank() == 0 {
+                let msg = q.pop_wait(pe).expect("one partial");
+                assert_eq!((msg.ti, msg.tj), (1, 2));
+                let part = msg.fetch_dense(pe);
+                assert_eq!(part.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+                assert!(q.try_pop(pe).is_none());
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_partials_survive_concurrent_senders() {
+        let f = fab(4);
+        let q = AccQueues::create(&f, 256);
+        let part = gen::erdos_renyi(12, 3, 5);
+        let want_nnz = part.nnz();
+        let (counts, stats) = f.launch(|pe| {
+            if pe.rank() != 0 {
+                for s in 0..10 {
+                    q.send_sparse_partial(pe, 0, s % 3, pe.rank(), &part);
+                }
+                pe.barrier();
+                0usize
+            } else {
+                // Drain concurrently with the pushes; the barrier bounds
+                // the wait.
+                let mut got = 0;
+                let mut nnz = 0;
+                while got < 30 {
+                    if let Some(msg) = q.pop_wait(pe) {
+                        assert!((1..=3).contains(&(msg.tj as usize)), "tj stamps the sender");
+                        let tile = msg.fetch_sparse(pe);
+                        tile.validate().unwrap();
+                        nnz += tile.nnz();
+                        got += 1;
+                    }
+                    pe.fabric().check_abort();
+                }
+                pe.barrier();
+                assert_eq!(nnz, 30 * want_nnz);
+                got
+            }
+        });
+        assert_eq!(counts[0], 30);
+        assert_eq!(stats.iter().map(|s| s.n_queue_push).sum::<u64>(), 30);
+        assert_eq!(stats[0].n_queue_pop, 30);
+    }
+
+    #[test]
+    fn empty_sparse_partial_is_deliverable() {
+        let f = fab(2);
+        let q = AccQueues::create(&f, 4);
+        f.launch(|pe| {
+            if pe.rank() == 1 {
+                q.send_sparse_partial(pe, 0, 0, 0, &Csr::zero(5, 5));
+            }
+            pe.barrier();
+            if pe.rank() == 0 {
+                let msg = q.pop_wait(pe).expect("empty partial still counts");
+                let tile = msg.fetch_sparse(pe);
+                assert_eq!(tile.nnz(), 0);
+                assert_eq!(tile.nrows, 5);
+                tile.validate().unwrap();
+            }
+        });
+    }
+}

@@ -1,0 +1,245 @@
+//! Tile-partitioned dense matrices in symmetric-heap memory — the B and
+//! C operands of distributed SpMM.
+//!
+//! Each tile is one contiguous row-major f32 array in its owner's
+//! segment; the directory of [`GlobalPtr`]s is immutable after setup
+//! (dense tiles are updated *in place* with one-sided puts), so it can
+//! be shared read-only by every PE thread.
+
+use std::sync::Arc;
+
+use crate::fabric::{Fabric, GetFuture, GlobalPtr, Kind, Pe};
+use crate::matrix::Dense;
+
+use super::ProcGrid;
+
+/// A dense matrix distributed tile-by-tile over a [`ProcGrid`].
+#[derive(Clone)]
+pub struct DistDense {
+    pub grid: ProcGrid,
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Directory: tile (i, j) lives behind `tiles[i * t + j]`.
+    tiles: Arc<Vec<GlobalPtr<f32>>>,
+}
+
+/// An in-flight one-sided tile get; [`DenseTileFuture::wait`] yields the
+/// tile once the (virtual-time) transfer completes.
+pub struct DenseTileFuture {
+    fut: GetFuture<f32>,
+    nrows: usize,
+    ncols: usize,
+}
+
+impl DenseTileFuture {
+    /// Block until the transfer completes, charging the wait to `kind`.
+    pub fn wait_as(self, pe: &Pe, kind: Kind) -> Dense {
+        Dense::from_vec(self.nrows, self.ncols, self.fut.wait_as(pe, kind))
+    }
+
+    /// Block until the transfer completes (charged as Comm).
+    pub fn wait(self, pe: &Pe) -> Dense {
+        self.wait_as(pe, Kind::Comm)
+    }
+
+    /// Completion time in virtual ns.
+    pub fn ready_at(&self) -> f64 {
+        self.fut.ready_at()
+    }
+}
+
+impl DistDense {
+    /// Allocate an all-zero distributed matrix (setup phase, untimed).
+    /// Segments are zero-initialized, so no writes are needed.
+    pub fn zeros(fabric: &Fabric, nrows: usize, ncols: usize, grid: ProcGrid) -> DistDense {
+        assert!(
+            grid.nprocs == fabric.nprocs(),
+            "grid is for {} PEs but the fabric has {}",
+            grid.nprocs,
+            fabric.nprocs()
+        );
+        let t = grid.t;
+        let mut tiles = Vec::with_capacity(grid.n_tiles());
+        for i in 0..t {
+            for j in 0..t {
+                let (r0, r1) = grid.block(nrows, i);
+                let (c0, c1) = grid.block(ncols, j);
+                tiles.push(fabric.alloc_on::<f32>(grid.owner(i, j), (r1 - r0) * (c1 - c0)));
+            }
+        }
+        DistDense { grid, nrows, ncols, tiles: Arc::new(tiles) }
+    }
+
+    /// Distribute `m` over the grid: allocate every tile on its owner
+    /// and write the corresponding block (setup phase, untimed).
+    pub fn scatter(fabric: &Fabric, m: &Dense, grid: ProcGrid) -> DistDense {
+        let d = DistDense::zeros(fabric, m.nrows, m.ncols, grid);
+        for i in 0..grid.t {
+            for j in 0..grid.t {
+                let (r0, r1) = grid.block(m.nrows, i);
+                let (c0, c1) = grid.block(m.ncols, j);
+                let block = m.submatrix(r0, r1, c0, c1);
+                fabric.write(d.tile_ptr(i, j), &block.data);
+            }
+        }
+        d
+    }
+
+    /// Tile-grid dimension.
+    pub fn t(&self) -> usize {
+        self.grid.t
+    }
+
+    /// Owner rank of tile (i, j).
+    pub fn owner(&self, i: usize, j: usize) -> usize {
+        self.grid.owner(i, j)
+    }
+
+    /// (rows, cols) of tile (i, j). Trailing tiles may be smaller (or
+    /// empty) when the matrix dimension does not divide evenly.
+    pub fn tile_dims(&self, i: usize, j: usize) -> (usize, usize) {
+        let (r0, r1) = self.grid.block(self.nrows, i);
+        let (c0, c1) = self.grid.block(self.ncols, j);
+        (r1 - r0, c1 - c0)
+    }
+
+    /// Global pointer to tile (i, j)'s storage.
+    pub fn tile_ptr(&self, i: usize, j: usize) -> GlobalPtr<f32> {
+        self.tiles[i * self.grid.t + j]
+    }
+
+    /// Blocking one-sided fetch of tile (i, j), charged to `kind`.
+    pub fn get_tile_as(&self, pe: &Pe, i: usize, j: usize, kind: Kind) -> Dense {
+        let (r, c) = self.tile_dims(i, j);
+        Dense::from_vec(r, c, pe.get_vec_as(self.tile_ptr(i, j), kind))
+    }
+
+    /// Blocking one-sided fetch of tile (i, j) (charged as Comm).
+    pub fn get_tile(&self, pe: &Pe, i: usize, j: usize) -> Dense {
+        self.get_tile_as(pe, i, j, Kind::Comm)
+    }
+
+    /// Non-blocking fetch: issue the get now, pay the transfer time at
+    /// [`DenseTileFuture::wait`] — the prefetch primitive of §3.3.
+    pub fn async_get_tile(&self, pe: &Pe, i: usize, j: usize) -> DenseTileFuture {
+        let (r, c) = self.tile_dims(i, j);
+        DenseTileFuture { fut: pe.async_get(self.tile_ptr(i, j)), nrows: r, ncols: c }
+    }
+
+    /// One-sided put of a full tile into place, charged to `kind`.
+    pub fn put_tile_as(&self, pe: &Pe, i: usize, j: usize, tile: &Dense, kind: Kind) {
+        assert_eq!(
+            (tile.nrows, tile.ncols),
+            self.tile_dims(i, j),
+            "tile ({i},{j}) shape mismatch"
+        );
+        pe.put_as(self.tile_ptr(i, j), &tile.data, kind);
+    }
+
+    /// Read the whole matrix back to a single-node `Dense` (untimed
+    /// verification path).
+    pub fn gather(&self, fabric: &Fabric) -> Dense {
+        let mut out = Dense::zeros(self.nrows, self.ncols);
+        for i in 0..self.grid.t {
+            for j in 0..self.grid.t {
+                let (r0, _) = self.grid.block(self.nrows, i);
+                let (c0, _) = self.grid.block(self.ncols, j);
+                let (r, c) = self.tile_dims(i, j);
+                let block = Dense::from_vec(r, c, fabric.read(self.tile_ptr(i, j)));
+                out.set_block(r0, c0, &block);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{FabricConfig, NetProfile};
+    use crate::util::Rng;
+
+    fn fab(n: usize) -> Arc<Fabric> {
+        Fabric::new(FabricConfig {
+            nprocs: n,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 8 << 20,
+            pacing: false,
+        })
+    }
+
+    #[test]
+    fn scatter_gather_identity() {
+        let f = fab(4);
+        let mut rng = Rng::new(3);
+        let m = Dense::random(37, 11, &mut rng); // uneven tiles on t = 2
+        let d = DistDense::scatter(&f, &m, ProcGrid::for_nprocs(4));
+        assert_eq!(d.gather(&f).data, m.data);
+    }
+
+    #[test]
+    fn remote_get_tile_matches_submatrix() {
+        let f = fab(6); // t = 3
+        let mut rng = Rng::new(5);
+        let m = Dense::random(30, 9, &mut rng);
+        let grid = ProcGrid::for_nprocs(6);
+        let d = DistDense::scatter(&f, &m, grid);
+        let m2 = m.clone();
+        f.launch(|pe| {
+            for i in 0..grid.t {
+                for j in 0..grid.t {
+                    let got = d.get_tile(pe, i, j);
+                    let (r0, r1) = grid.block(m2.nrows, i);
+                    let (c0, c1) = grid.block(m2.ncols, j);
+                    assert_eq!(got.data, m2.submatrix(r0, r1, c0, c1).data);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn async_get_matches_blocking_get() {
+        let f = fab(2);
+        let mut rng = Rng::new(7);
+        let m = Dense::random(16, 8, &mut rng);
+        let d = DistDense::scatter(&f, &m, ProcGrid::for_nprocs(2));
+        f.launch(|pe| {
+            let fut = d.async_get_tile(pe, 1, 0);
+            let sync = d.get_tile(pe, 1, 0);
+            assert_eq!(fut.wait(pe).data, sync.data);
+        });
+    }
+
+    #[test]
+    fn put_tile_lands_in_gather() {
+        let f = fab(4);
+        let grid = ProcGrid::for_nprocs(4);
+        let d = DistDense::zeros(&f, 8, 8, grid);
+        f.launch(|pe| {
+            for (i, j) in grid.my_tiles(pe.rank()) {
+                let (r, c) = d.tile_dims(i, j);
+                let tile =
+                    Dense::from_vec(r, c, vec![pe.rank() as f32 + 1.0; r * c]);
+                d.put_tile_as(pe, i, j, &tile, Kind::Comm);
+            }
+            pe.barrier();
+        });
+        let out = d.gather(&f);
+        assert_eq!(out[(0, 0)], 1.0); // tile (0,0) owned by rank 0
+        assert_eq!(out[(0, 4)], 2.0); // tile (0,1) owned by rank 1
+        assert_eq!(out[(4, 0)], 3.0);
+        assert_eq!(out[(4, 4)], 4.0);
+    }
+
+    #[test]
+    // The original "shape mismatch" panic aborts the fabric; launch
+    // re-raises it as a thread-join failure.
+    #[should_panic(expected = "PE thread panicked")]
+    fn put_rejects_wrong_shape() {
+        let f = fab(1);
+        let d = DistDense::zeros(&f, 8, 8, ProcGrid::for_nprocs(1));
+        f.launch(|pe| {
+            d.put_tile_as(pe, 0, 0, &Dense::zeros(3, 3), Kind::Comm);
+        });
+    }
+}

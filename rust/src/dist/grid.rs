@@ -1,0 +1,156 @@
+//! Process grids: who owns tile (i, j)?
+//!
+//! The paper lays operands out on a √p × √p process grid when p is a
+//! perfect square (§3.1). For arbitrary process counts we keep a square
+//! *tile* grid of dimension `t = ⌈√p⌉` and assign tiles to processes
+//! cyclically, so every process owns ⌈t²/p⌉ or ⌊t²/p⌋ tiles and the
+//! one-to-one case degenerates to the paper's exact 2D layout.
+
+/// Tile-ownership map for a `t × t` tile grid shared by `nprocs` PEs.
+///
+/// Plain data (`Copy`): grids are captured by every distributed
+/// structure and shipped into PE closures freely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProcGrid {
+    /// Tile-grid dimension: operands are split into `t × t` tiles.
+    pub t: usize,
+    /// Number of PEs sharing the grid.
+    pub nprocs: usize,
+}
+
+impl ProcGrid {
+    /// Grid for an arbitrary process count: `t = ⌈√nprocs⌉`, cyclic
+    /// ownership. Every rank owns at least one tile (t² ≥ nprocs).
+    pub fn for_nprocs(nprocs: usize) -> ProcGrid {
+        assert!(nprocs > 0, "a process grid needs at least one PE");
+        let mut t = (nprocs as f64).sqrt().ceil() as usize;
+        // Guard against floating-point rounding on huge counts.
+        while t * t < nprocs {
+            t += 1;
+        }
+        while t > 1 && (t - 1) * (t - 1) >= nprocs {
+            t -= 1;
+        }
+        ProcGrid { t, nprocs }
+    }
+
+    /// Exact one-to-one √p × √p grid, `None` unless `nprocs` is a
+    /// perfect square (the SUMMA baselines require this, like the
+    /// paper's MPI implementation).
+    pub fn square(nprocs: usize) -> Option<ProcGrid> {
+        if nprocs == 0 {
+            return None;
+        }
+        let r = (nprocs as f64).sqrt().round() as usize;
+        (r * r == nprocs).then_some(ProcGrid { t: r, nprocs })
+    }
+
+    /// Total number of tiles.
+    pub fn n_tiles(&self) -> usize {
+        self.t * self.t
+    }
+
+    /// Owner rank of tile (i, j): row-major cyclic.
+    #[inline]
+    pub fn owner(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.t && j < self.t, "tile ({i},{j}) outside {0}x{0} grid", self.t);
+        (i * self.t + j) % self.nprocs
+    }
+
+    /// The tiles `rank` owns, in row-major order. Exactly inverts
+    /// [`ProcGrid::owner`]: the union over ranks partitions the grid.
+    pub fn my_tiles(&self, rank: usize) -> Vec<(usize, usize)> {
+        assert!(rank < self.nprocs, "rank {rank} out of range for {} PEs", self.nprocs);
+        let mut out = Vec::with_capacity(self.n_tiles() / self.nprocs + 1);
+        let mut cell = rank;
+        while cell < self.n_tiles() {
+            out.push((cell / self.t, cell % self.t));
+            cell += self.nprocs;
+        }
+        out
+    }
+
+    /// True when every rank owns exactly one tile (perfect-square p).
+    pub fn is_one_to_one(&self) -> bool {
+        self.n_tiles() == self.nprocs
+    }
+
+    /// Index range `[lo, hi)` covered by block `i` when an extent of `n`
+    /// rows (or columns) is split into `t` contiguous blocks of size
+    /// ⌈n/t⌉. Trailing blocks may be short or empty.
+    pub fn block(&self, n: usize, i: usize) -> (usize, usize) {
+        debug_assert!(i < self.t);
+        let bs = n.div_ceil(self.t);
+        ((i * bs).min(n), ((i + 1) * bs).min(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_detects_perfect_squares() {
+        assert_eq!(ProcGrid::square(9).unwrap().t, 3);
+        assert_eq!(ProcGrid::square(1).unwrap().t, 1);
+        assert_eq!(ProcGrid::square(64).unwrap().t, 8);
+        assert!(ProcGrid::square(8).is_none());
+        assert!(ProcGrid::square(0).is_none());
+    }
+
+    #[test]
+    fn ownership_partitions_the_grid() {
+        for nprocs in 1..=40 {
+            let g = ProcGrid::for_nprocs(nprocs);
+            assert!(g.t * g.t >= nprocs, "t too small for {nprocs}");
+            assert!(g.t == 1 || (g.t - 1) * (g.t - 1) < nprocs, "t too big for {nprocs}");
+            let mut seen = vec![false; g.n_tiles()];
+            for r in 0..nprocs {
+                let mine = g.my_tiles(r);
+                assert!(!mine.is_empty(), "rank {r} owns nothing at p={nprocs}");
+                for (i, j) in mine {
+                    assert_eq!(g.owner(i, j), r);
+                    assert!(!seen[i * g.t + j], "tile ({i},{j}) owned twice");
+                    seen[i * g.t + j] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "uncovered tiles at p={nprocs}");
+        }
+    }
+
+    #[test]
+    fn one_to_one_only_for_perfect_squares() {
+        assert!(ProcGrid::for_nprocs(16).is_one_to_one());
+        assert!(!ProcGrid::for_nprocs(6).is_one_to_one());
+        assert!(ProcGrid::for_nprocs(1).is_one_to_one());
+    }
+
+    #[test]
+    fn blocks_tile_the_extent() {
+        let g = ProcGrid::for_nprocs(9); // t = 3
+        for n in [1usize, 2, 3, 7, 9, 10, 100] {
+            let mut covered = 0;
+            for i in 0..g.t {
+                let (lo, hi) = g.block(n, i);
+                assert_eq!(lo, covered);
+                covered = hi;
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn summa_teams_are_well_formed_on_square_grids() {
+        // Each tile row (and column) of a one-to-one grid must touch t
+        // distinct ranks — the SUMMA row/col communicators rely on it.
+        let g = ProcGrid::square(16).unwrap();
+        for i in 0..g.t {
+            let rows: std::collections::HashSet<usize> =
+                (0..g.t).map(|j| g.owner(i, j)).collect();
+            let cols: std::collections::HashSet<usize> =
+                (0..g.t).map(|j| g.owner(j, i)).collect();
+            assert_eq!(rows.len(), g.t);
+            assert_eq!(cols.len(), g.t);
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Distributed matrix structures over the RDMA fabric — the data-plane
+//! layer of the paper's §3.1.
+//!
+//! Everything here follows the paper's owner-compute recipe: operands
+//! are split into a `t × t` grid of tiles ([`ProcGrid`]), every tile is
+//! allocated in its owner's symmetric-heap segment, and a *directory of
+//! global pointers* is distributed to all PEs at setup time so that any
+//! PE can fetch any tile with a one-sided get — the owner's thread never
+//! participates.
+//!
+//! * [`ProcGrid`] — tile-to-process ownership maps (1D-cyclic over a 2D
+//!   tile grid; exact 2D when the process count is a perfect square).
+//! * [`DistCsr`] / [`DistDense`] — tile-partitioned sparse / dense
+//!   matrices with blocking ([`DistCsr::get_tile`]) and prefetching
+//!   ([`DistCsr::async_get_tile`]) one-sided reads, owner-only writes
+//!   ([`DistDense::put_tile_as`], [`DistCsr::replace_tile`]), and
+//!   untimed [`DistCsr::gather`] for verification.
+//! * [`AccQueues`] — the remote accumulation channel of §3.1.2: partial
+//!   result tiles are *published* in the producer's segment and a
+//!   lightweight [`AccMsg`] descriptor is pushed onto the consumer's
+//!   queue; the owner later fetches and accumulates (hybrid push/pull).
+//! * [`ResGrid2D`] / [`ResGrid3D`] — the workstealing reservation grids
+//!   of §3.4, built on NIC-style remote fetch-and-add.
+
+pub mod accum;
+pub mod dense;
+pub mod grid;
+pub mod resgrid;
+pub mod sparse;
+
+pub use accum::{AccMsg, AccQueues};
+pub use dense::{DenseTileFuture, DistDense};
+pub use grid::ProcGrid;
+pub use resgrid::{ResGrid2D, ResGrid3D};
+pub use sparse::{CsrHandle, CsrTileFuture, DistCsr};

@@ -1,0 +1,184 @@
+//! Reservation grids — the workstealing claim structures of §3.4.
+//!
+//! Both grids are arrays of word counters in symmetric-heap memory,
+//! claimed with NIC-style remote **fetch-and-add** (the paper's
+//! `shmem_atomic_fetch_inc`), so a claim costs one network round trip
+//! and never involves the victim's thread:
+//!
+//! * [`ResGrid2D`] — one counter per stationary-matrix tile (i, k); each
+//!   fetch-and-add claims the next index of that tile's inner loop
+//!   (Algorithm 3's `reserve`). Counters are collocated with the A tile
+//!   owner, so own-work claims are device-local.
+//! * [`ResGrid3D`] — one flag per component multiply (i, j, k); the
+//!   first fetch-and-add wins the component (locality-aware
+//!   workstealing). Flags are collocated with the C tile owner, so
+//!   phase-1 own-work claims are device-local.
+
+use std::sync::Arc;
+
+use crate::fabric::{Fabric, GlobalPtr, Pe};
+
+use super::ProcGrid;
+
+/// t × t grid of loop counters for random workstealing (Alg 3).
+#[derive(Clone)]
+pub struct ResGrid2D {
+    t: usize,
+    cells: Arc<Vec<GlobalPtr<i64>>>,
+}
+
+impl ResGrid2D {
+    /// Allocate one counter per tile of the stationary matrix, each on
+    /// that tile's owner (setup phase; segments are zero-initialized).
+    pub fn create(fabric: &Fabric, grid: ProcGrid) -> ResGrid2D {
+        let t = grid.t;
+        let cells = (0..t * t)
+            .map(|cell| fabric.alloc_on::<i64>(grid.owner(cell / t, cell % t), 1))
+            .collect();
+        ResGrid2D { t, cells: Arc::new(cells) }
+    }
+
+    /// Tile-grid dimension.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Claim the next inner-loop index of cell (i, k): one remote
+    /// fetch-and-add. Values `>= t` mean the cell is exhausted; exactly
+    /// `t` claims per cell ever return a usable index, so every
+    /// component multiply is performed exactly once globally.
+    pub fn reserve(&self, pe: &Pe, i: usize, k: usize) -> i64 {
+        pe.fetch_add(self.cells[i * self.t + k], 0, 1)
+    }
+}
+
+/// t × t × t grid of per-component claim flags for locality-aware
+/// workstealing.
+#[derive(Clone)]
+pub struct ResGrid3D {
+    t: usize,
+    cells: Arc<Vec<GlobalPtr<i64>>>,
+}
+
+impl ResGrid3D {
+    /// Allocate one flag per component (i, j, k), on the owner of the
+    /// output tile C[i, j] (setup phase).
+    pub fn create(fabric: &Fabric, grid: ProcGrid) -> ResGrid3D {
+        let t = grid.t;
+        let mut cells = Vec::with_capacity(t * t * t);
+        for i in 0..t {
+            for j in 0..t {
+                let owner = grid.owner(i, j);
+                for _k in 0..t {
+                    cells.push(fabric.alloc_on::<i64>(owner, 1));
+                }
+            }
+        }
+        ResGrid3D { t, cells: Arc::new(cells) }
+    }
+
+    /// Tile-grid dimension.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Try to claim component (i, j, k); true for exactly one caller
+    /// globally. One remote fetch-and-add.
+    pub fn try_claim(&self, pe: &Pe, i: usize, j: usize, k: usize) -> bool {
+        pe.fetch_add(self.cells[(i * self.t + j) * self.t + k], 0, 1) == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{FabricConfig, NetProfile};
+
+    fn fab(n: usize) -> Arc<Fabric> {
+        Fabric::new(FabricConfig {
+            nprocs: n,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 4 << 20,
+            pacing: false,
+        })
+    }
+
+    #[test]
+    fn reserve_hands_out_each_index_once() {
+        let f = fab(4);
+        let grid = ProcGrid::for_nprocs(4);
+        let t = grid.t;
+        let res = ResGrid2D::create(&f, grid);
+        // Every PE sweeps every cell until exhaustion; globally each cell
+        // must hand out exactly 0..t-1.
+        let (claims, _) = f.launch(|pe| {
+            let mut mine = Vec::new();
+            for i in 0..t {
+                for k in 0..t {
+                    loop {
+                        let j = res.reserve(pe, i, k);
+                        if j >= t as i64 {
+                            break;
+                        }
+                        mine.push((i, k, j));
+                    }
+                }
+            }
+            mine
+        });
+        let mut per_cell = vec![Vec::new(); t * t];
+        for rank_claims in claims {
+            for (i, k, j) in rank_claims {
+                per_cell[i * t + k].push(j);
+            }
+        }
+        for cell in per_cell.iter_mut() {
+            cell.sort_unstable();
+            assert_eq!(*cell, (0..t as i64).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn try_claim_wins_exactly_once() {
+        let f = fab(4);
+        let grid = ProcGrid::for_nprocs(4);
+        let t = grid.t;
+        let res = ResGrid3D::create(&f, grid);
+        let (wins, _) = f.launch(|pe| {
+            let mut won = 0u64;
+            for i in 0..t {
+                for j in 0..t {
+                    for k in 0..t {
+                        if res.try_claim(pe, i, j, k) {
+                            won += 1;
+                        }
+                    }
+                }
+            }
+            pe.barrier();
+            // Re-sweep: nothing is claimable twice.
+            for i in 0..t {
+                for j in 0..t {
+                    for k in 0..t {
+                        assert!(!res.try_claim(pe, i, j, k));
+                    }
+                }
+            }
+            won
+        });
+        assert_eq!(wins.iter().sum::<u64>(), (t * t * t) as u64);
+    }
+
+    #[test]
+    fn claims_are_charged_as_queue_overhead() {
+        let f = fab(2);
+        let grid = ProcGrid::for_nprocs(2);
+        let res = ResGrid2D::create(&f, grid);
+        let (_, stats) = f.launch(|pe| {
+            res.reserve(pe, 0, 0);
+            pe.barrier();
+        });
+        assert_eq!(stats.iter().map(|s| s.n_faa).sum::<u64>(), 2);
+        assert!(stats[0].queue_ns > 0.0);
+    }
+}

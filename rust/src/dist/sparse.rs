@@ -1,0 +1,368 @@
+//! Tile-partitioned CSR matrices in symmetric-heap memory — the A
+//! operand of SpMM and all three operands of SpGEMM.
+//!
+//! Each tile is three arrays (rowptr i64, colind i32, vals f32) in its
+//! owner's segment, named by a [`CsrHandle`] of global pointers. Unlike
+//! dense tiles, sparse output tiles change *size* when written (the nnz
+//! of a product tile is data-dependent), so the directory is mutable:
+//! the owner installs freshly allocated arrays with
+//! [`DistCsr::replace_tile`] and the grid republishes handles in the
+//! collective [`DistCsr::renew_tiles`] — the paper's directory update
+//! after SpGEMM assembly.
+
+use std::sync::{Arc, RwLock};
+
+use crate::fabric::{Fabric, GetFuture, GlobalPtr, Kind, Pe};
+use crate::matrix::Csr;
+
+use super::ProcGrid;
+
+/// Global pointers naming one CSR tile's storage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CsrHandle {
+    pub rowptr: GlobalPtr<i64>,
+    pub colind: GlobalPtr<i32>,
+    pub vals: GlobalPtr<f32>,
+    pub nrows: usize,
+    pub ncols: usize,
+}
+
+impl CsrHandle {
+    /// Nonzeros stored behind this handle.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Bytes of the three CSR arrays — the communication volume of one
+    /// tile fetch.
+    pub fn bytes(&self) -> usize {
+        self.rowptr.bytes() + self.colind.bytes() + self.vals.bytes()
+    }
+}
+
+/// A CSR matrix distributed tile-by-tile over a [`ProcGrid`].
+#[derive(Clone)]
+pub struct DistCsr {
+    pub grid: ProcGrid,
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Mutable directory: tile (i, j)'s handle at `tiles[i * t + j]`.
+    /// Owners update entries via `replace_tile`; everyone else reads.
+    tiles: Arc<Vec<RwLock<CsrHandle>>>,
+}
+
+/// Three in-flight one-sided gets (rowptr, colind, vals) of one tile.
+pub struct CsrTileFuture {
+    rowptr: GetFuture<i64>,
+    colind: GetFuture<i32>,
+    vals: GetFuture<f32>,
+    nrows: usize,
+    ncols: usize,
+}
+
+impl CsrTileFuture {
+    /// Block until all three transfers complete, charging waits to `kind`.
+    pub fn wait_as(self, pe: &Pe, kind: Kind) -> Csr {
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            rowptr: self.rowptr.wait_as(pe, kind),
+            colind: self.colind.wait_as(pe, kind),
+            vals: self.vals.wait_as(pe, kind),
+        }
+    }
+
+    /// Block until the tile has arrived (charged as Comm).
+    pub fn wait(self, pe: &Pe) -> Csr {
+        self.wait_as(pe, Kind::Comm)
+    }
+}
+
+/// Allocate `tile`'s arrays on `owner`'s segment and write them
+/// (setup phase, untimed).
+fn store_tile(fabric: &Fabric, owner: usize, tile: &Csr) -> CsrHandle {
+    let rowptr = fabric.alloc_on::<i64>(owner, tile.rowptr.len());
+    fabric.write(rowptr, &tile.rowptr);
+    let colind = fabric.alloc_on::<i32>(owner, tile.colind.len());
+    fabric.write(colind, &tile.colind);
+    let vals = fabric.alloc_on::<f32>(owner, tile.vals.len());
+    fabric.write(vals, &tile.vals);
+    CsrHandle { rowptr, colind, vals, nrows: tile.nrows, ncols: tile.ncols }
+}
+
+impl DistCsr {
+    /// Distribute `m` over the grid: extract each tile and store it on
+    /// its owner (setup phase, untimed).
+    pub fn scatter(fabric: &Fabric, m: &Csr, grid: ProcGrid) -> DistCsr {
+        assert!(
+            grid.nprocs == fabric.nprocs(),
+            "grid is for {} PEs but the fabric has {}",
+            grid.nprocs,
+            fabric.nprocs()
+        );
+        let t = grid.t;
+        let mut tiles = Vec::with_capacity(grid.n_tiles());
+        for i in 0..t {
+            for j in 0..t {
+                let (r0, r1) = grid.block(m.nrows, i);
+                let (c0, c1) = grid.block(m.ncols, j);
+                let tile = m.submatrix(r0, r1, c0, c1);
+                tiles.push(RwLock::new(store_tile(fabric, grid.owner(i, j), &tile)));
+            }
+        }
+        DistCsr { grid, nrows: m.nrows, ncols: m.ncols, tiles: Arc::new(tiles) }
+    }
+
+    /// All-zero distributed matrix (the C operand before assembly).
+    pub fn zeros(fabric: &Fabric, nrows: usize, ncols: usize, grid: ProcGrid) -> DistCsr {
+        let m = Csr::zero(nrows, ncols);
+        DistCsr::scatter(fabric, &m, grid)
+    }
+
+    /// Tile-grid dimension.
+    pub fn t(&self) -> usize {
+        self.grid.t
+    }
+
+    /// Owner rank of tile (i, j).
+    pub fn owner(&self, i: usize, j: usize) -> usize {
+        self.grid.owner(i, j)
+    }
+
+    /// (rows, cols) of tile (i, j).
+    pub fn tile_dims(&self, i: usize, j: usize) -> (usize, usize) {
+        let (r0, r1) = self.grid.block(self.nrows, i);
+        let (c0, c1) = self.grid.block(self.ncols, j);
+        (r1 - r0, c1 - c0)
+    }
+
+    /// Current directory entry for tile (i, j).
+    pub fn handle(&self, i: usize, j: usize) -> CsrHandle {
+        *self.tiles[i * self.grid.t + j].read().unwrap()
+    }
+
+    /// Global nonzero count (sum over tile handles).
+    pub fn nnz(&self) -> usize {
+        self.tiles.iter().map(|h| h.read().unwrap().nnz()).sum()
+    }
+
+    /// Nonzeros stored on `rank`.
+    pub fn local_nnz(&self, rank: usize) -> usize {
+        self.grid.my_tiles(rank).into_iter().map(|(i, j)| self.handle(i, j).nnz()).sum()
+    }
+
+    /// Arithmetic intensity (flops/byte) of the local SpMM over `rank`'s
+    /// tiles against a dense operand with `n_cols` columns — the local
+    /// roofline input of §4 evaluated on the actual distribution.
+    pub fn local_ai(&self, rank: usize, n_cols: usize) -> f64 {
+        let mut flops = 0.0;
+        let mut bytes = 0.0;
+        for (i, j) in self.grid.my_tiles(rank) {
+            let h = self.handle(i, j);
+            flops += 2.0 * h.nnz() as f64 * n_cols as f64;
+            // Read the CSR arrays and the B tile, read+write the C tile.
+            bytes += h.bytes() as f64 + ((h.ncols + 2 * h.nrows) * n_cols * 4) as f64;
+        }
+        if bytes == 0.0 {
+            0.0
+        } else {
+            flops / bytes
+        }
+    }
+
+    /// Blocking one-sided fetch of tile (i, j), charged to `kind`.
+    pub fn get_tile_as(&self, pe: &Pe, i: usize, j: usize, kind: Kind) -> Csr {
+        let h = self.handle(i, j);
+        Csr {
+            nrows: h.nrows,
+            ncols: h.ncols,
+            rowptr: pe.get_vec_as(h.rowptr, kind),
+            colind: pe.get_vec_as(h.colind, kind),
+            vals: pe.get_vec_as(h.vals, kind),
+        }
+    }
+
+    /// Blocking one-sided fetch of tile (i, j) (charged as Comm).
+    pub fn get_tile(&self, pe: &Pe, i: usize, j: usize) -> Csr {
+        self.get_tile_as(pe, i, j, Kind::Comm)
+    }
+
+    /// Non-blocking fetch of all three tile arrays (prefetch, §3.3).
+    pub fn async_get_tile(&self, pe: &Pe, i: usize, j: usize) -> CsrTileFuture {
+        let h = self.handle(i, j);
+        CsrTileFuture {
+            rowptr: pe.async_get(h.rowptr),
+            colind: pe.async_get(h.colind),
+            vals: pe.async_get(h.vals),
+            nrows: h.nrows,
+            ncols: h.ncols,
+        }
+    }
+
+    /// Install a freshly assembled tile (owner-only): allocate new
+    /// arrays on this PE's segment, write them, and update the
+    /// directory entry. Peers observe the new handle after the next
+    /// [`DistCsr::renew_tiles`].
+    pub fn replace_tile(&self, pe: &Pe, i: usize, j: usize, tile: &Csr) {
+        assert_eq!(
+            self.owner(i, j),
+            pe.rank(),
+            "replace_tile of ({i},{j}) is owner-only"
+        );
+        assert_eq!(
+            (tile.nrows, tile.ncols),
+            self.tile_dims(i, j),
+            "tile ({i},{j}) shape mismatch"
+        );
+        let rowptr = pe.alloc::<i64>(tile.rowptr.len());
+        pe.put_as(rowptr, &tile.rowptr, Kind::Comm);
+        let colind = pe.alloc::<i32>(tile.colind.len());
+        pe.put_as(colind, &tile.colind, Kind::Comm);
+        let vals = pe.alloc::<f32>(tile.vals.len());
+        pe.put_as(vals, &tile.vals, Kind::Comm);
+        *self.tiles[i * self.grid.t + j].write().unwrap() =
+            CsrHandle { rowptr, colind, vals, nrows: tile.nrows, ncols: tile.ncols };
+    }
+
+    /// Collective directory refresh after `replace_tile`s: every PE
+    /// re-fetches the t² updated handles (modeled as one allgather-style
+    /// exchange) and synchronizes. Must be called by all PEs.
+    pub fn renew_tiles(&self, pe: &Pe) {
+        let t = self.grid.t;
+        let bytes = (t * t * std::mem::size_of::<CsrHandle>()) as f64;
+        let link = pe.fabric().profile().inter;
+        pe.advance(Kind::Comm, link.xfer_ns(bytes));
+        pe.barrier();
+    }
+
+    /// Read the whole matrix back to a single-node `Csr` (untimed
+    /// verification path). Preserves the exact stored entries — no
+    /// merging or zero-dropping — so structural comparisons are exact.
+    pub fn gather(&self, fabric: &Fabric) -> Csr {
+        let t = self.grid.t;
+        let tiles: Vec<Csr> = (0..t * t)
+            .map(|cell| {
+                let h = self.handle(cell / t, cell % t);
+                Csr {
+                    nrows: h.nrows,
+                    ncols: h.ncols,
+                    rowptr: fabric.read(h.rowptr),
+                    colind: fabric.read(h.colind),
+                    vals: fabric.read(h.vals),
+                }
+            })
+            .collect();
+        let mut rowptr = Vec::with_capacity(self.nrows + 1);
+        rowptr.push(0i64);
+        let mut colind = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..t {
+            let (r0, r1) = self.grid.block(self.nrows, i);
+            for lr in 0..(r1 - r0) {
+                for j in 0..t {
+                    let (c0, _) = self.grid.block(self.ncols, j);
+                    let (cs, vs) = tiles[i * t + j].row(lr);
+                    for (&c, &v) in cs.iter().zip(vs) {
+                        colind.push(c + c0 as i32);
+                        vals.push(v);
+                    }
+                }
+                rowptr.push(colind.len() as i64);
+            }
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, rowptr, colind, vals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{FabricConfig, NetProfile};
+    use crate::matrix::gen;
+
+    fn fab(n: usize) -> Arc<Fabric> {
+        Fabric::new(FabricConfig {
+            nprocs: n,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 16 << 20,
+            pacing: false,
+        })
+    }
+
+    #[test]
+    fn scatter_gather_identity() {
+        let f = fab(4);
+        let m = gen::erdos_renyi(50, 5, 9); // uneven 25-row blocks on t = 2
+        let d = DistCsr::scatter(&f, &m, ProcGrid::for_nprocs(4));
+        let back = d.gather(&f);
+        back.validate().unwrap();
+        assert_eq!(back.nnz(), m.nnz());
+        assert_eq!(d.nnz(), m.nnz());
+        assert!(back.max_abs_diff(&m) < 1e-6);
+    }
+
+    #[test]
+    fn local_nnz_partitions_global_nnz() {
+        let f = fab(6);
+        let m = gen::erdos_renyi(60, 4, 2);
+        let d = DistCsr::scatter(&f, &m, ProcGrid::for_nprocs(6));
+        let total: usize = (0..6).map(|r| d.local_nnz(r)).sum();
+        assert_eq!(total, m.nnz());
+        assert!(d.local_ai(0, 16) > 0.0);
+    }
+
+    #[test]
+    fn remote_get_tile_matches_submatrix() {
+        let f = fab(4);
+        let m = gen::erdos_renyi(40, 5, 11);
+        let grid = ProcGrid::for_nprocs(4);
+        let d = DistCsr::scatter(&f, &m, grid);
+        let m2 = m.clone();
+        f.launch(|pe| {
+            for i in 0..grid.t {
+                for j in 0..grid.t {
+                    let got = d.get_tile(pe, i, j);
+                    got.validate().unwrap();
+                    let (r0, r1) = grid.block(m2.nrows, i);
+                    let (c0, c1) = grid.block(m2.ncols, j);
+                    let want = m2.submatrix(r0, r1, c0, c1);
+                    assert_eq!(got, want, "tile ({i},{j})");
+                    let fut = d.async_get_tile(pe, i, j);
+                    assert_eq!(fut.wait(pe), want);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn replace_and_renew_updates_peers() {
+        let f = fab(4);
+        let grid = ProcGrid::for_nprocs(4);
+        let d = DistCsr::zeros(&f, 8, 8, grid);
+        f.launch(|pe| {
+            for (i, j) in grid.my_tiles(pe.rank()) {
+                let (r, c) = d.tile_dims(i, j);
+                let tile = if i == j { Csr::eye(r) } else { Csr::zero(r, c) };
+                d.replace_tile(pe, i, j, &tile);
+            }
+            d.renew_tiles(pe);
+            // After renewal every PE sees the installed tiles.
+            let diag = d.get_tile(pe, 1, 1);
+            assert_eq!(diag.nnz(), 4);
+        });
+        let back = d.gather(&f);
+        assert_eq!(back.nnz(), 8);
+        assert!(back.max_abs_diff(&Csr::eye(8)) < 1e-6);
+    }
+
+    #[test]
+    fn empty_and_uneven_tiles_are_sound() {
+        let f = fab(9); // t = 3 over a 4-row matrix: block sizes 2, 2, 0
+        let m = gen::erdos_renyi(4, 2, 5);
+        let d = DistCsr::scatter(&f, &m, ProcGrid::for_nprocs(9));
+        assert_eq!(d.tile_dims(2, 2), (0, 0));
+        let back = d.gather(&f);
+        back.validate().unwrap();
+        assert_eq!(back.nnz(), m.nnz());
+    }
+}

@@ -10,38 +10,15 @@
 //! each CSR tile into zero-padded ELL arrays, picks the smallest config
 //! that fits, and un-pads the result. Tiles that fit no config fall back
 //! to the native kernel (counted in [`TileExecutor::fallbacks`]).
+//!
+//! The PJRT backend needs the external `xla` bindings, which the offline
+//! build does not vendor; it is therefore gated behind the `pjrt` cargo
+//! feature. Without the feature, [`TileExecutor::load`] returns an error
+//! (so callers and the integration tests skip gracefully) and
+//! [`TileExecutor::spmm_acc`] falls back to the native kernel. ELL
+//! packing is shared and always available.
 
-use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-
-use anyhow::{bail, Context, Result};
-
-use crate::matrix::{Csr, Dense};
-
-/// One compiled SpMM artifact.
-struct SpmmArtifact {
-    r: usize,
-    l: usize,
-    k: usize,
-    n: usize,
-    /// PJRT executables hold raw pointers; all executions are serialized
-    /// through this mutex (PJRT CPU is happy with that, and local
-    /// multiplies from many simulated PEs interleave fine).
-    exe: Mutex<xla::PjRtLoadedExecutable>,
-}
-
-/// Executes local SpMM through AOT-compiled Pallas artifacts.
-pub struct TileExecutor {
-    spmm: Vec<SpmmArtifact>,
-    executions: AtomicU64,
-    fallbacks: AtomicU64,
-}
-
-// Safety: the raw PJRT pointers are only dereferenced under the per-
-// artifact mutex; the client outlives the executables inside the struct.
-unsafe impl Send for TileExecutor {}
-unsafe impl Sync for TileExecutor {}
+use crate::matrix::Csr;
 
 /// Pack a CSR tile into zero-padded ELL arrays of shape (r_pad, l_pad).
 /// Padded slots carry value 0 at column 0 (harmless in the kernel).
@@ -62,131 +39,232 @@ pub fn ell_pack(a: &Csr, r_pad: usize, l_pad: usize) -> Option<(Vec<f32>, Vec<i3
     Some((vals, cols))
 }
 
-impl TileExecutor {
-    /// Load every `spmm_ell` entry from `artifacts/manifest.txt` and
-    /// compile it on the PJRT CPU client.
-    pub fn load(artifacts_dir: &Path) -> Result<TileExecutor> {
-        let manifest_path = artifacts_dir.join("manifest.txt");
-        let manifest = std::fs::read_to_string(&manifest_path).with_context(|| {
-            format!("reading {manifest_path:?} — run `make artifacts` first")
-        })?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
-        let mut spmm = Vec::new();
-        for line in manifest.lines() {
-            let f: Vec<&str> = line.split_whitespace().collect();
-            if f.is_empty() || f[0] != "spmm_ell" {
-                continue;
+#[cfg(feature = "pjrt")]
+mod xla_backend {
+    use std::path::Path;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    use anyhow::{bail, Context, Result};
+
+    use crate::matrix::{Csr, Dense};
+
+    use super::ell_pack;
+
+    /// One compiled SpMM artifact.
+    struct SpmmArtifact {
+        r: usize,
+        l: usize,
+        k: usize,
+        n: usize,
+        /// PJRT executables hold raw pointers; all executions are serialized
+        /// through this mutex (PJRT CPU is happy with that, and local
+        /// multiplies from many simulated PEs interleave fine).
+        exe: Mutex<xla::PjRtLoadedExecutable>,
+    }
+
+    /// Executes local SpMM through AOT-compiled Pallas artifacts.
+    pub struct TileExecutor {
+        spmm: Vec<SpmmArtifact>,
+        executions: AtomicU64,
+        fallbacks: AtomicU64,
+    }
+
+    // Safety: the raw PJRT pointers are only dereferenced under the per-
+    // artifact mutex; the client outlives the executables inside the struct.
+    unsafe impl Send for TileExecutor {}
+    unsafe impl Sync for TileExecutor {}
+
+    impl TileExecutor {
+        /// Load every `spmm_ell` entry from `artifacts/manifest.txt` and
+        /// compile it on the PJRT CPU client.
+        pub fn load(artifacts_dir: &Path) -> Result<TileExecutor> {
+            let manifest_path = artifacts_dir.join("manifest.txt");
+            let manifest = std::fs::read_to_string(&manifest_path).with_context(|| {
+                format!("reading {manifest_path:?} — run `make artifacts` first")
+            })?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+            let mut spmm = Vec::new();
+            for line in manifest.lines() {
+                let f: Vec<&str> = line.split_whitespace().collect();
+                if f.is_empty() || f[0] != "spmm_ell" {
+                    continue;
+                }
+                if f.len() != 6 {
+                    bail!("malformed manifest line: {line:?}");
+                }
+                let (r, l, k, n): (usize, usize, usize, usize) =
+                    (f[1].parse()?, f[2].parse()?, f[3].parse()?, f[4].parse()?);
+                let path = artifacts_dir.join(f[5]);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compile {path:?}: {e}"))?;
+                spmm.push(SpmmArtifact { r, l, k, n, exe: Mutex::new(exe) });
             }
-            if f.len() != 6 {
-                bail!("malformed manifest line: {line:?}");
+            if spmm.is_empty() {
+                bail!("no spmm_ell artifacts in {manifest_path:?}");
             }
-            let (r, l, k, n): (usize, usize, usize, usize) =
-                (f[1].parse()?, f[2].parse()?, f[3].parse()?, f[4].parse()?);
-            let path = artifacts_dir.join(f[5]);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe =
-                client.compile(&comp).map_err(|e| anyhow::anyhow!("compile {path:?}: {e}"))?;
-            spmm.push(SpmmArtifact { r, l, k, n, exe: Mutex::new(exe) });
+            // Smallest-first so `pick` finds the tightest fit.
+            spmm.sort_by_key(|a| a.r * a.l + a.k * a.n);
+            Ok(TileExecutor {
+                spmm,
+                executions: AtomicU64::new(0),
+                fallbacks: AtomicU64::new(0),
+            })
         }
-        if spmm.is_empty() {
-            bail!("no spmm_ell artifacts in {manifest_path:?}");
+
+        /// Number of artifact configurations loaded.
+        pub fn n_configs(&self) -> usize {
+            self.spmm.len()
         }
-        // Smallest-first so `pick` finds the tightest fit.
-        spmm.sort_by_key(|a| a.r * a.l + a.k * a.n);
-        Ok(TileExecutor { spmm, executions: AtomicU64::new(0), fallbacks: AtomicU64::new(0) })
-    }
 
-    /// Number of artifact configurations loaded.
-    pub fn n_configs(&self) -> usize {
-        self.spmm.len()
-    }
+        pub fn executions(&self) -> u64 {
+            self.executions.load(Ordering::Relaxed)
+        }
 
-    pub fn executions(&self) -> u64 {
-        self.executions.load(Ordering::Relaxed)
-    }
+        pub fn fallbacks(&self) -> u64 {
+            self.fallbacks.load(Ordering::Relaxed)
+        }
 
-    pub fn fallbacks(&self) -> u64 {
-        self.fallbacks.load(Ordering::Relaxed)
-    }
+        fn pick(&self, r: usize, l: usize, k: usize, n: usize) -> Option<&SpmmArtifact> {
+            self.spmm.iter().find(|a| a.r >= r && a.l >= l && a.k >= k && a.n >= n)
+        }
 
-    fn pick(&self, r: usize, l: usize, k: usize, n: usize) -> Option<&SpmmArtifact> {
-        self.spmm.iter().find(|a| a.r >= r && a.l >= l && a.k >= k && a.n >= n)
-    }
-
-    /// C += A·B through the compiled Pallas kernel (native fallback when
-    /// no artifact fits).
-    pub fn spmm_acc(&self, a: &Csr, b: &Dense, c: &mut Dense) {
-        let max_row_nnz =
-            (0..a.nrows).map(|i| (a.rowptr[i + 1] - a.rowptr[i]) as usize).max().unwrap_or(0);
-        let art = match self.pick(a.nrows, max_row_nnz, a.ncols, b.ncols) {
-            Some(art) => art,
-            None => {
-                self.fallbacks.fetch_add(1, Ordering::Relaxed);
-                crate::matrix::local_spmm::spmm_acc(a, b, c);
-                return;
-            }
-        };
-        match self.run_artifact(art, a, b, c) {
-            Ok(()) => {
-                self.executions.fetch_add(1, Ordering::Relaxed);
-            }
-            Err(e) => {
-                // PJRT failure is loud but non-fatal: numerics fall back.
-                eprintln!("warning: PJRT execution failed ({e}); using native kernel");
-                self.fallbacks.fetch_add(1, Ordering::Relaxed);
-                crate::matrix::local_spmm::spmm_acc(a, b, c);
+        /// C += A·B through the compiled Pallas kernel (native fallback when
+        /// no artifact fits).
+        pub fn spmm_acc(&self, a: &Csr, b: &Dense, c: &mut Dense) {
+            let max_row_nnz = (0..a.nrows)
+                .map(|i| (a.rowptr[i + 1] - a.rowptr[i]) as usize)
+                .max()
+                .unwrap_or(0);
+            let art = match self.pick(a.nrows, max_row_nnz, a.ncols, b.ncols) {
+                Some(art) => art,
+                None => {
+                    self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                    crate::matrix::local_spmm::spmm_acc(a, b, c);
+                    return;
+                }
+            };
+            match self.run_artifact(art, a, b, c) {
+                Ok(()) => {
+                    self.executions.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    // PJRT failure is loud but non-fatal: numerics fall back.
+                    eprintln!("warning: PJRT execution failed ({e}); using native kernel");
+                    self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                    crate::matrix::local_spmm::spmm_acc(a, b, c);
+                }
             }
         }
-    }
 
-    fn run_artifact(&self, art: &SpmmArtifact, a: &Csr, b: &Dense, c: &mut Dense) -> Result<()> {
-        let (vals, cols) = ell_pack(a, art.r, art.l).context("ELL capacity")?;
-        // Pad B to (K, N) and C to (R, N).
-        let mut bp = vec![0f32; art.k * art.n];
-        for i in 0..b.nrows {
-            bp[i * art.n..i * art.n + b.ncols].copy_from_slice(b.row(i));
-        }
-        let mut cp = vec![0f32; art.r * art.n];
-        for i in 0..c.nrows {
-            cp[i * art.n..i * art.n + c.ncols].copy_from_slice(c.row(i));
-        }
+        fn run_artifact(
+            &self,
+            art: &SpmmArtifact,
+            a: &Csr,
+            b: &Dense,
+            c: &mut Dense,
+        ) -> Result<()> {
+            let (vals, cols) = ell_pack(a, art.r, art.l).context("ELL capacity")?;
+            // Pad B to (K, N) and C to (R, N).
+            let mut bp = vec![0f32; art.k * art.n];
+            for i in 0..b.nrows {
+                bp[i * art.n..i * art.n + b.ncols].copy_from_slice(b.row(i));
+            }
+            let mut cp = vec![0f32; art.r * art.n];
+            for i in 0..c.nrows {
+                cp[i * art.n..i * art.n + c.ncols].copy_from_slice(c.row(i));
+            }
 
-        let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
-            xla::Literal::vec1(data)
-                .reshape(dims)
-                .map_err(|e| anyhow::anyhow!("literal reshape: {e}"))
-        };
-        let vals_l = lit(&vals, &[art.r as i64, art.l as i64])?;
-        let cols_l = xla::Literal::vec1(&cols)
-            .reshape(&[art.r as i64, art.l as i64])
-            .map_err(|e| anyhow::anyhow!("cols reshape: {e}"))?;
-        let b_l = lit(&bp, &[art.k as i64, art.n as i64])?;
-        let c_l = lit(&cp, &[art.r as i64, art.n as i64])?;
+            let lit = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow::anyhow!("literal reshape: {e}"))
+            };
+            let vals_l = lit(&vals, &[art.r as i64, art.l as i64])?;
+            let cols_l = xla::Literal::vec1(&cols)
+                .reshape(&[art.r as i64, art.l as i64])
+                .map_err(|e| anyhow::anyhow!("cols reshape: {e}"))?;
+            let b_l = lit(&bp, &[art.k as i64, art.n as i64])?;
+            let c_l = lit(&cp, &[art.r as i64, art.n as i64])?;
 
-        let exe = art.exe.lock().unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&[vals_l, cols_l, b_l, c_l])
-            .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
-        drop(exe);
-        // aot.py lowers with return_tuple=True.
-        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
-        let data = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
-        let (nrows, ncols) = (c.nrows, c.ncols);
-        for i in 0..nrows {
-            c.row_mut(i).copy_from_slice(&data[i * art.n..i * art.n + ncols]);
+            let exe = art.exe.lock().unwrap();
+            let result = exe
+                .execute::<xla::Literal>(&[vals_l, cols_l, b_l, c_l])
+                .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+            drop(exe);
+            // aot.py lowers with return_tuple=True.
+            let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+            let data = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+            let (nrows, ncols) = (c.nrows, c.ncols);
+            for i in 0..nrows {
+                c.row_mut(i).copy_from_slice(&data[i * art.n..i * art.n + ncols]);
+            }
+            Ok(())
         }
-        Ok(())
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use xla_backend::TileExecutor;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use crate::matrix::{Csr, Dense};
+
+    /// Stub compiled when the `pjrt` feature is off. [`TileExecutor::load`]
+    /// — the only constructor — always fails, so no instance ever exists
+    /// and callers stay on [`crate::runtime::TileBackend::Native`]; the
+    /// remaining methods exist purely so feature-independent callers
+    /// typecheck, and route to the native kernel if ever reached.
+    pub struct TileExecutor(());
+
+    impl TileExecutor {
+        pub fn load(artifacts_dir: &Path) -> Result<TileExecutor> {
+            bail!(
+                "sparta was built without the `pjrt` feature; cannot load PJRT \
+                 artifacts from {artifacts_dir:?}. Enabling the feature requires \
+                 adding the unvendored `xla` bindings to rust/Cargo.toml first \
+                 (see DESIGN.md §2), then building with --features pjrt"
+            )
+        }
+
+        pub fn n_configs(&self) -> usize {
+            0
+        }
+
+        pub fn executions(&self) -> u64 {
+            0
+        }
+
+        pub fn fallbacks(&self) -> u64 {
+            0
+        }
+
+        /// C += A·B via the native kernel.
+        pub fn spmm_acc(&self, a: &Csr, b: &Dense, c: &mut Dense) {
+            crate::matrix::local_spmm::spmm_acc(a, b, c);
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::TileExecutor;
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::{gen, local_spmm};
+    use crate::matrix::{gen, local_spmm, Dense};
     use crate::util::Rng;
 
     #[test]
@@ -222,5 +300,12 @@ mod tests {
         let (vals, cols) = ell_pack(&a, 8, 4).unwrap();
         assert!(vals.iter().all(|&v| v == 0.0));
         assert!(cols.iter().all(|&c| c == 0));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let err = TileExecutor::load(std::path::Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }
