@@ -1,4 +1,5 @@
-//! Ablation benches for the design choices DESIGN.md calls out:
+//! Ablation benches for the design choices DESIGN.md calls out, with
+//! results emitted as `bench-out/BENCH_ablations.json`:
 //!
 //! 1. §3.3 optimizations (prefetch + iteration offset) on/off.
 //! 2. Random-permutation load balancing (§1's alternative to
@@ -6,13 +7,16 @@
 //!    relabeled version, including the permutation's own cost.
 //! 3. Stationary B vs A vs C for square matrices (§6.1's argument that
 //!    stationary B buys nothing over C).
+use std::path::Path;
+
 use sparta::algorithms::SpmmAlg;
-use sparta::coordinator::{run_spmm, SpmmConfig};
+use sparta::coordinator::{run_spmm, BenchDoc, SpmmConfig};
 use sparta::fabric::NetProfile;
 use sparta::matrix::suite;
 
 fn main() {
     let t0 = std::time::Instant::now();
+    let mut doc = BenchDoc::new("ablations", -1);
     println!("── ablation 1: §3.3 optimizations (prefetch + iteration offset) ──");
     let a = suite::analog_scaled("com-orkut", -1);
     for (alg, label) in [
@@ -21,7 +25,12 @@ fn main() {
     ] {
         let cfg = SpmmConfig::new(alg, 24, NetProfile::summit(), 128);
         let r = run_spmm(&a, &cfg).unwrap().report;
-        println!("  {label:<26} makespan {:>10.3} ms  comm {:>8.3} ms", r.makespan_s() * 1e3, r.comm_s() * 1e3);
+        println!(
+            "  {label:<26} makespan {:>10.3} ms  comm {:>8.3} ms",
+            r.makespan_s() * 1e3,
+            r.comm_s() * 1e3
+        );
+        doc.push_run(&format!("ablation1 {label}"), "com-orkut", 128, &r);
     }
 
     println!("── ablation 2: random permutation vs workstealing (§1) ──");
@@ -35,6 +44,7 @@ fn main() {
             r.makespan_s() * 1e3,
             r.load_imb_s() * 1e3
         );
+        doc.push_run(&format!("ablation2 {label}"), "nlpkkt160", 128, &r);
     }
 
     println!("── ablation 3: stationary C vs A vs B (square matrices) ──");
@@ -48,6 +58,8 @@ fn main() {
             r.makespan_s() * 1e3,
             r.acc_s() * 1e3
         );
+        doc.push_run(&format!("ablation3 {}", r.alg), "amazon", 128, &r);
     }
-    println!("[ablations in {:.1?}]", t0.elapsed());
+    let path = doc.write(Path::new("bench-out")).expect("BENCH_ablations.json");
+    println!("[ablations in {:.1?} -> {}]", t0.elapsed(), path.display());
 }

@@ -1,9 +1,15 @@
-//! Wall-clock micro-benchmarks of the fabric primitives (§Perf): bulk
-//! put/get word-copy throughput, remote FAA, queue push/pop. Uses the
-//! wallclock profile (no virtual-time charging, no pacing).
+//! Wall-clock micro-benchmarks of the fabric primitives (§Perf): the
+//! chunk-resolved bulk copy path vs the word-wise path, one-sided
+//! put/get throughput, remote FAA, and queue push/pop. Uses the
+//! wallclock profile (no virtual-time charging, no pacing), and emits
+//! the measurements as `bench-out/BENCH_fabric_ops.json`.
+use std::path::Path;
 use std::time::Instant;
 
-use sparta::fabric::{Fabric, FabricConfig, NetProfile, QueueHandle, QueueItem};
+use sparta::coordinator::BenchDoc;
+use sparta::fabric::{
+    CHUNK_BYTES, Fabric, FabricConfig, NetProfile, QueueHandle, QueueItem, Segment,
+};
 use sparta::util::fmt_bytes;
 
 struct Msg([u64; 4]);
@@ -18,7 +24,49 @@ impl QueueItem for Msg {
 }
 
 fn main() {
+    let mut doc = BenchDoc::new("fabric_ops", 0);
     println!("── fabric micro-benchmarks (wall clock) ──");
+
+    // A/B: word-wise segment copy vs the chunk-resolved bulk path, on a
+    // span that straddles chunk boundaries. Same semantics, same
+    // virtual-time charge — only the simulator's cost per byte differs.
+    let seg = Segment::new(64 << 20);
+    let size = 2 * CHUNK_BYTES; // 2 MiB crossing two chunk boundaries
+    let off = seg.alloc(size + CHUNK_BYTES) + CHUNK_BYTES / 2;
+    let src = vec![0x5Au8; size];
+    let mut dst = vec![0u8; size];
+    let iters = 32usize;
+    let time_bw = |f: &mut dyn FnMut()| {
+        f(); // warmup (commits chunks)
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        (iters * size) as f64 / t0.elapsed().as_nanos() as f64
+    };
+    let ww_write = time_bw(&mut || seg.write_bytes(off, &src));
+    let bulk_write = time_bw(&mut || seg.write_bytes_bulk(off, &src));
+    let ww_read = time_bw(&mut || seg.read_bytes(off, &mut dst));
+    let bulk_read = time_bw(&mut || seg.read_bytes_bulk(off, &mut dst));
+    let label = fmt_bytes(size as f64);
+    println!("segment write {label:<9} word {ww_write:>7.2} GB/s  bulk {bulk_write:>7.2} GB/s");
+    println!("segment read  {label:<9} word {ww_read:>7.2} GB/s  bulk {bulk_read:>7.2} GB/s");
+    println!(
+        "              bulk speedup: write x{:.2}, read x{:.2}",
+        bulk_write / ww_write,
+        bulk_read / ww_read
+    );
+    doc.push_metrics(
+        "segment copy: word-wise vs bulk",
+        &[
+            ("bytes", size as f64),
+            ("wordwise_write_gbps", ww_write),
+            ("bulk_write_gbps", bulk_write),
+            ("wordwise_read_gbps", ww_read),
+            ("bulk_read_gbps", bulk_read),
+        ],
+    );
+
     let f = Fabric::new(FabricConfig {
         nprocs: 2,
         profile: NetProfile::wallclock(),
@@ -30,7 +78,7 @@ fn main() {
         let gp = f.alloc_on::<f32>(1, size / 4);
         let (rates, _) = f.launch(|pe| {
             if pe.rank() != 0 {
-                return 0.0;
+                return (0.0, 0.0);
             }
             let data = vec![1.0f32; size / 4];
             let iters = (64 << 20) / size;
@@ -50,9 +98,13 @@ fn main() {
                 put_bw,
                 get_bw
             );
-            put_bw
+            (put_bw, get_bw)
         });
-        assert!(rates[0] > 0.0);
+        assert!(rates[0].0 > 0.0);
+        doc.push_metrics(
+            &format!("one-sided put/get {}", fmt_bytes(size as f64)),
+            &[("bytes", size as f64), ("put_gbps", rates[0].0), ("get_gbps", rates[0].1)],
+        );
     }
 
     // Remote FAA rate under contention.
@@ -64,8 +116,9 @@ fn main() {
             pe.fetch_add(grid, 0, 1);
         }
     });
-    let ns = t0.elapsed().as_nanos() as f64 / (2.0 * n_ops as f64);
-    println!("contended remote fetch-and-add          {ns:>10.0} ns/op");
+    let faa_ns = t0.elapsed().as_nanos() as f64 / (2.0 * n_ops as f64);
+    println!("contended remote fetch-and-add          {faa_ns:>10.0} ns/op");
+    doc.push_metrics("contended remote fetch-and-add", &[("ns_per_op", faa_ns)]);
 
     // Queue throughput (1 producer, 1 consumer).
     let q = QueueHandle::<Msg>::create(&f, 0, 4096);
@@ -85,6 +138,10 @@ fn main() {
             }
         }
     });
-    let ns = t0.elapsed().as_nanos() as f64 / n_msgs as f64;
-    println!("remote queue push+pop                   {ns:>10.0} ns/msg");
+    let q_ns = t0.elapsed().as_nanos() as f64 / n_msgs as f64;
+    println!("remote queue push+pop                   {q_ns:>10.0} ns/msg");
+    doc.push_metrics("remote queue push+pop", &[("ns_per_msg", q_ns)]);
+
+    let path = doc.write(Path::new("bench-out")).expect("BENCH_fabric_ops.json");
+    println!("[fabric_ops -> {}]", path.display());
 }

@@ -1,10 +1,13 @@
-//! Bench: regenerate Figure 1 (end-to-end vs per-stage load imbalance).
-use sparta::coordinator::experiments::{fig1, ExpOpts};
+//! Bench: regenerate Figure 1 (end-to-end vs per-stage load imbalance)
+//! and emit `bench-out/BENCH_fig1.json` via the shared harness.
+use std::path::Path;
+
+use sparta::coordinator::experiments::ExpOpts;
 
 fn main() {
     let t0 = std::time::Instant::now();
     let opts = ExpOpts { scale_shift: 0, verify: false, print: true };
-    let out = fig1(&opts);
-    assert!(out.per_stage >= out.end_to_end - 1e-9, "staged must be >= end-to-end");
-    println!("[fig1 regenerated in {:.1?}]", t0.elapsed());
+    let path =
+        sparta::coordinator::bench_artifact("fig1", &opts, Path::new("bench-out")).expect("fig1");
+    println!("[fig1 regenerated in {:.1?} -> {}]", t0.elapsed(), path.display());
 }

@@ -1,10 +1,13 @@
-//! Bench: regenerate Figure 2 (inter-node rooflines + achieved points).
-use sparta::coordinator::experiments::{fig2, ExpOpts};
+//! Bench: regenerate Figure 2 (inter-node rooflines + achieved points)
+//! and emit `bench-out/BENCH_fig2.json` via the shared harness.
+use std::path::Path;
+
+use sparta::coordinator::experiments::ExpOpts;
 
 fn main() {
     let t0 = std::time::Instant::now();
     let opts = ExpOpts { scale_shift: -1, verify: false, print: true };
-    let pts = fig2(&opts).expect("fig2");
-    assert!(!pts.is_empty());
-    println!("[fig2 regenerated in {:.1?}]", t0.elapsed());
+    let path =
+        sparta::coordinator::bench_artifact("fig2", &opts, Path::new("bench-out")).expect("fig2");
+    println!("[fig2 regenerated in {:.1?} -> {}]", t0.elapsed(), path.display());
 }

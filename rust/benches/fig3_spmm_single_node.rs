@@ -1,10 +1,13 @@
-//! Bench: regenerate Figure 3 (single-node SpMM runtimes, DGX-2).
-use sparta::coordinator::experiments::{fig3, ExpOpts};
+//! Bench: regenerate Figure 3 (single-node SpMM runtimes, DGX-2) and
+//! emit `bench-out/BENCH_fig3.json` via the shared harness.
+use std::path::Path;
+
+use sparta::coordinator::experiments::ExpOpts;
 
 fn main() {
     let t0 = std::time::Instant::now();
     let opts = ExpOpts { scale_shift: -1, verify: false, print: true };
-    let rows = fig3(&opts).expect("fig3");
-    assert!(!rows.is_empty());
-    println!("[fig3 regenerated in {:.1?} ({} rows)]", t0.elapsed(), rows.len());
+    let path =
+        sparta::coordinator::bench_artifact("fig3", &opts, Path::new("bench-out")).expect("fig3");
+    println!("[fig3 regenerated in {:.1?} -> {}]", t0.elapsed(), path.display());
 }

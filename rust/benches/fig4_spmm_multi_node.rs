@@ -1,10 +1,13 @@
-//! Bench: regenerate Figure 4 (multi-node SpMM runtimes, Summit).
-use sparta::coordinator::experiments::{fig4, ExpOpts};
+//! Bench: regenerate Figure 4 (multi-node SpMM runtimes, Summit) and
+//! emit `bench-out/BENCH_fig4.json` via the shared harness.
+use std::path::Path;
+
+use sparta::coordinator::experiments::ExpOpts;
 
 fn main() {
     let t0 = std::time::Instant::now();
     let opts = ExpOpts { scale_shift: -1, verify: false, print: true };
-    let rows = fig4(&opts).expect("fig4");
-    assert!(!rows.is_empty());
-    println!("[fig4 regenerated in {:.1?} ({} rows)]", t0.elapsed(), rows.len());
+    let path =
+        sparta::coordinator::bench_artifact("fig4", &opts, Path::new("bench-out")).expect("fig4");
+    println!("[fig4 regenerated in {:.1?} -> {}]", t0.elapsed(), path.display());
 }

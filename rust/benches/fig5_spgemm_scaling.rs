@@ -1,10 +1,13 @@
-//! Bench: regenerate Figure 5 (SpGEMM strong scaling).
-use sparta::coordinator::experiments::{fig5, ExpOpts};
+//! Bench: regenerate Figure 5 (SpGEMM strong scaling) and emit
+//! `bench-out/BENCH_fig5.json` via the shared harness.
+use std::path::Path;
+
+use sparta::coordinator::experiments::ExpOpts;
 
 fn main() {
     let t0 = std::time::Instant::now();
     let opts = ExpOpts { scale_shift: -1, verify: false, print: true };
-    let rows = fig5(&opts).expect("fig5");
-    assert!(!rows.is_empty());
-    println!("[fig5 regenerated in {:.1?} ({} rows)]", t0.elapsed(), rows.len());
+    let path =
+        sparta::coordinator::bench_artifact("fig5", &opts, Path::new("bench-out")).expect("fig5");
+    println!("[fig5 regenerated in {:.1?} -> {}]", t0.elapsed(), path.display());
 }

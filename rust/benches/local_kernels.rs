@@ -1,11 +1,14 @@
 //! Wall-clock micro-benchmarks of the local kernels (the §Perf L3 hot
 //! paths): CSR SpMM, Gustavson SpGEMM, CSR↔ELL packing, and the PJRT
-//! Pallas kernel when artifacts exist.
+//! Pallas kernel when artifacts exist. Emits the measurements as
+//! `bench-out/BENCH_local_kernels.json`.
 //!
 //! Self-contained timing harness (the offline build has no criterion):
 //! warmup + N timed iterations, reporting ns/op and effective rates.
+use std::path::Path;
 use std::time::Instant;
 
+use sparta::coordinator::BenchDoc;
 use sparta::matrix::{gen, local_spgemm, local_spmm, Dense};
 use sparta::util::{fmt_flops, Rng};
 
@@ -18,12 +21,13 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
         f();
     }
     let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
-    println!("{name:<44} {:>12.0} ns/op", ns);
+    println!("{name:<44} {ns:>12.0} ns/op");
     ns
 }
 
 fn main() {
     println!("── local kernel micro-benchmarks (wall clock) ──");
+    let mut doc = BenchDoc::new("local_kernels", 0);
     let mut rng = Rng::new(1);
 
     for (n, deg, ncols) in [(4096, 16, 128), (4096, 16, 512), (16384, 16, 128)] {
@@ -31,43 +35,55 @@ fn main() {
         let b = Dense::random(n, ncols, &mut rng);
         let mut c = Dense::zeros(n, ncols);
         let flops = local_spmm::spmm_flops(&a, ncols);
-        let ns = bench(&format!("spmm n={n} deg={deg} N={ncols}"), 10, || {
+        let name = format!("spmm n={n} deg={deg} N={ncols}");
+        let ns = bench(&name, 10, || {
             c.data.fill(0.0);
             local_spmm::spmm_acc(&a, &b, &mut c);
         });
         println!("{:<44} {:>12}", "  effective", fmt_flops(flops / ns * 1e9));
+        doc.push_metrics(&name, &[("ns_per_op", ns), ("flops_per_s", flops / ns * 1e9)]);
     }
 
     for (scale, ef) in [(12u32, 8), (13, 16)] {
         let a = gen::rmat(scale, ef, 0.55, 0.15, 0.15, 3);
         let out = local_spgemm::spgemm(&a, &a);
         let flops = out.flops;
-        let ns = bench(&format!("spgemm rmat scale={scale} ef={ef} (cf={:.2})", out.cf), 10, || {
+        let name = format!("spgemm rmat scale={scale} ef={ef} (cf={:.2})", out.cf);
+        let ns = bench(&name, 10, || {
             let _ = local_spgemm::spgemm(&a, &a);
         });
         println!("{:<44} {:>12}", "  effective", fmt_flops(flops / ns * 1e9));
+        doc.push_metrics(&name, &[("ns_per_op", ns), ("flops_per_s", flops / ns * 1e9)]);
     }
 
     // ELL packing (runtime path prep cost).
     let a = gen::erdos_renyi(256, 8, 5);
-    bench("ell_pack 256x256 deg=8 (L=64)", 1000, || {
+    let ns = bench("ell_pack 256x256 deg=8 (L=64)", 1000, || {
         let _ = sparta::runtime::pjrt::ell_pack(&a, 256, 64);
     });
+    doc.push_metrics("ell_pack 256x256 deg=8 (L=64)", &[("ns_per_op", ns)]);
 
     // PJRT kernel vs native, when artifacts are available.
     if let Ok(exe) = sparta::runtime::pjrt::TileExecutor::load(std::path::Path::new("artifacts")) {
         let a = gen::erdos_renyi(256, 8, 5);
         let b = Dense::random(256, 128, &mut rng);
         let mut c = Dense::zeros(256, 128);
-        bench("pjrt pallas spmm tile 256x256 N=128", 50, || {
+        let pjrt_ns = bench("pjrt pallas spmm tile 256x256 N=128", 50, || {
             exe.spmm_acc(&a, &b, &mut c);
         });
         let mut c2 = Dense::zeros(256, 128);
-        bench("native spmm tile 256x256 N=128", 50, || {
+        let native_ns = bench("native spmm tile 256x256 N=128", 50, || {
             local_spmm::spmm_acc(&a, &b, &mut c2);
         });
         println!("(pjrt executions={} fallbacks={})", exe.executions(), exe.fallbacks());
+        doc.push_metrics(
+            "pjrt vs native spmm tile 256x256 N=128",
+            &[("pjrt_ns_per_op", pjrt_ns), ("native_ns_per_op", native_ns)],
+        );
     } else {
         println!("(pjrt benches skipped: run `make artifacts`)");
     }
+
+    let path = doc.write(Path::new("bench-out")).expect("BENCH_local_kernels.json");
+    println!("[local_kernels -> {}]", path.display());
 }

@@ -1,13 +1,17 @@
-//! Bench: regenerate Table 2 (component breakdowns for SpMM + SpGEMM).
-use sparta::coordinator::experiments::{table1, table2a, table2b, ExpOpts};
+//! Bench: regenerate Tables 1, 2a, 2b (suite + component breakdowns)
+//! and emit `bench-out/BENCH_table{1,2a,2b}.json` via the shared
+//! harness.
+use std::path::Path;
+
+use sparta::coordinator::experiments::ExpOpts;
 
 fn main() {
     let t0 = std::time::Instant::now();
     let opts = ExpOpts { scale_shift: -1, verify: false, print: true };
-    let t1 = table1(&opts);
-    assert_eq!(t1.len(), 11, "Table 1 has 11 matrices");
-    let a = table2a(&opts).expect("table2a");
-    let b = table2b(&opts).expect("table2b");
-    assert!(!a.is_empty() && !b.is_empty());
+    for artifact in ["table1", "table2a", "table2b"] {
+        let path = sparta::coordinator::bench_artifact(artifact, &opts, Path::new("bench-out"))
+            .unwrap_or_else(|e| panic!("{artifact}: {e:#}"));
+        println!("[{artifact} -> {}]", path.display());
+    }
     println!("[table1/2a/2b regenerated in {:.1?}]", t0.elapsed());
 }

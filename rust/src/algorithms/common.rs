@@ -94,8 +94,7 @@ pub struct PendingTracker {
 impl PendingTracker {
     /// Each of `tiles` expects `per_tile` contributions.
     pub fn new(tiles: &[(usize, usize)], per_tile: usize) -> Self {
-        let pending =
-            tiles.iter().map(|&(i, j)| ((i as u32, j as u32), per_tile)).collect();
+        let pending = tiles.iter().map(|&(i, j)| ((i as u32, j as u32), per_tile)).collect();
         PendingTracker { pending }
     }
 

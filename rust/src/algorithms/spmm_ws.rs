@@ -71,8 +71,7 @@ fn attempt_work_2d(
         // The A tile is fetched once per (i,k) visit; the owner's fetch
         // is device-local, a thief pays a remote get — the cost asymmetry
         // the paper describes.
-        let a_ref =
-            a_tile.get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
+        let a_ref = a_tile.get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
         let b_tile = ctx.b.get_tile(pe, k, j);
         let (cr, cc) = ctx.c.tile_dims(i, j);
         let mut part = Dense::zeros(cr, cc);

@@ -153,8 +153,18 @@ mod tests {
         let bs = a.nrows.div_ceil(p);
         // Check a few (i,j,k) entries against explicit tile extraction.
         for (i, j, k) in [(0, 0, 0), (1, 2, 3), (3, 3, 1), (2, 0, 2)] {
-            let aik = a.submatrix(i * bs, ((i + 1) * bs).min(a.nrows), k * bs, ((k + 1) * bs).min(a.ncols));
-            let akj = a.submatrix(k * bs, ((k + 1) * bs).min(a.nrows), j * bs, ((j + 1) * bs).min(a.ncols));
+            let aik = a.submatrix(
+                i * bs,
+                ((i + 1) * bs).min(a.nrows),
+                k * bs,
+                ((k + 1) * bs).min(a.ncols),
+            );
+            let akj = a.submatrix(
+                k * bs,
+                ((k + 1) * bs).min(a.nrows),
+                j * bs,
+                ((j + 1) * bs).min(a.ncols),
+            );
             let want = spgemm_flops(&aik, &akj);
             assert_eq!(cube.at(i, j, k), want, "tile ({i},{j},{k})");
         }

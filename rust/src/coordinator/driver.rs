@@ -60,8 +60,9 @@ pub struct SpmmRun {
 
 fn make_grid(nprocs: usize, needs_square: bool) -> Result<ProcGrid> {
     if needs_square {
-        ProcGrid::square(nprocs)
-            .with_context(|| format!("this algorithm requires a perfect-square process count, got {nprocs}"))
+        ProcGrid::square(nprocs).with_context(|| {
+            format!("this algorithm requires a perfect-square process count, got {nprocs}")
+        })
     } else {
         Ok(ProcGrid::for_nprocs(nprocs))
     }

@@ -4,6 +4,8 @@
 //! the structured data so benches and tests can assert on the *shape*
 //! of the results.
 
+use std::path::{Path, PathBuf};
+
 use anyhow::Result;
 
 use crate::algorithms::{SpgemmAlg, SpmmAlg};
@@ -14,7 +16,7 @@ use crate::roofline;
 use crate::util::fmt_ns;
 
 use super::driver::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
-use super::report::Report;
+use super::report::{BenchDoc, Report};
 
 /// Workload downscaling knob: 0 = default analog sizes, negative =
 /// smaller (benches use -2 for speed).
@@ -68,10 +70,11 @@ pub fn fig1(opts: &ExpOpts) -> Fig1 {
     p(opts, format!("(b) per-stage-synchronized imbalance  : {staged:.2}   (paper: ≈2.3)"));
     p(opts, format!("    amplification ×{:.2}", staged / e2e));
     let series = cube.stage_imbalances();
-    p(opts, format!(
+    let row = format!(
         "    per-stage max/avg by stage: {}",
         series.iter().map(|x| format!("{x:.1}")).collect::<Vec<_>>().join(" ")
-    ));
+    );
+    p(opts, row);
     Fig1 { end_to_end: e2e, per_stage: staged, stage_series: series }
 }
 
@@ -110,10 +113,15 @@ pub fn fig2(opts: &ExpOpts) -> Result<Vec<RooflinePoint>> {
         cfg.verify = opts.verify;
         let run = run_spmm(&a, &cfg)?;
         let achieved = run.report.gflops();
-        p(opts, format!(
+        let row = format!(
             "    N={n:<4} inter-node AI={:.3} flops/B  local peak={:.0} GF/s  model bound={:.1} GF/s  achieved={:.1} GF/s ({:.0}% of bound)",
-            model.internode_ai(), lpeak, bound, achieved, 100.0 * achieved / bound
-        ));
+            model.internode_ai(),
+            lpeak,
+            bound,
+            achieved,
+            100.0 * achieved / bound
+        );
+        p(opts, row);
         points.push(RooflinePoint {
             label: format!("spmm N={n}"),
             internode_ai: model.internode_ai(),
@@ -151,10 +159,15 @@ pub fn fig2(opts: &ExpOpts) -> Result<Vec<RooflinePoint>> {
         cfg.verify = opts.verify;
         let run = run_spgemm(&a4, &cfg)?;
         let achieved = run.report.gflops();
-        p(opts, format!(
+        let row = format!(
             "    P={np:<4} cf={cf:.2}  inter-node AI={:.3}  local peak={:.0} GF/s  model bound={:.1} GF/s  achieved={:.1} GF/s ({:.0}% of bound)",
-            model.internode_ai(), lpeak, bound, achieved, 100.0 * achieved / bound
-        ));
+            model.internode_ai(),
+            lpeak,
+            bound,
+            achieved,
+            100.0 * achieved / bound
+        );
+        p(opts, row);
         points.push(RooflinePoint {
             label: format!("spgemm P={np}"),
             internode_ai: model.internode_ai(),
@@ -189,25 +202,34 @@ fn spmm_sweep(
     for &mname in matrices {
         let a = suite::analog_scaled(mname, opts.scale_shift);
         for &n in n_cols {
-            p(opts, format!(
+            let row = format!(
                 "  {mname} (m={} nnz={}) × dense N={n} on {}",
-                a.nrows, a.nnz(), profile.name
-            ));
+                a.nrows,
+                a.nnz(),
+                profile.name
+            );
+            p(opts, row);
             for &alg in algs {
                 for &np in gpu_counts {
-                    if alg.needs_square()
-                        && crate::dist::ProcGrid::square(np).is_none()
-                    {
+                    if alg.needs_square() && crate::dist::ProcGrid::square(np).is_none() {
                         continue;
                     }
                     let mut cfg = SpmmConfig::new(alg, np, profile.clone(), n);
                     cfg.verify = opts.verify;
                     let run = run_spmm(&a, &cfg)?;
-                    p(opts, format!(
+                    let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
-                        alg.name(), np, fmt_ns(run.report.makespan_ns)
-                    ));
-                    rows.push(ScalingRow { matrix: mname, n_cols: n, nprocs: np, report: run.report });
+                        alg.name(),
+                        np,
+                        fmt_ns(run.report.makespan_ns)
+                    );
+                    p(opts, row);
+                    rows.push(ScalingRow {
+                        matrix: mname,
+                        n_cols: n,
+                        nprocs: np,
+                        report: run.report,
+                    });
                 }
             }
         }
@@ -249,8 +271,18 @@ pub fn fig5(opts: &ExpOpts) -> Result<Vec<ScalingRow>> {
     let mut rows = Vec::new();
     p(opts, "── Figure 5: SpGEMM strong scaling (C = A·A) ──".into());
     let cases: &[(&str, &[&'static str], NetProfile, &[usize])] = &[
-        ("single-node (DGX-2)", &["mouse_gene", "nlpkkt160", "ldoor"], NetProfile::dgx2(), &[1, 2, 4, 8, 16]),
-        ("multi-node (Summit)", &["mouse_gene", "nlpkkt160", "isolates_sub4"], NetProfile::summit(), &[6, 12, 24, 48, 96, 16, 64]),
+        (
+            "single-node (DGX-2)",
+            &["mouse_gene", "nlpkkt160", "ldoor"],
+            NetProfile::dgx2(),
+            &[1, 2, 4, 8, 16],
+        ),
+        (
+            "multi-node (Summit)",
+            &["mouse_gene", "nlpkkt160", "isolates_sub4"],
+            NetProfile::summit(),
+            &[6, 12, 24, 48, 96, 16, 64],
+        ),
     ];
     for (env, matrices, profile, gpus) in cases {
         p(opts, format!("  [{env}]"));
@@ -265,11 +297,19 @@ pub fn fig5(opts: &ExpOpts) -> Result<Vec<ScalingRow>> {
                     let mut cfg = SpgemmConfig::new(alg, np, profile.clone());
                     cfg.verify = opts.verify;
                     let run = run_spgemm(&a, &cfg)?;
-                    p(opts, format!(
+                    let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
-                        alg.name(), np, fmt_ns(run.report.makespan_ns)
-                    ));
-                    rows.push(ScalingRow { matrix: mname, n_cols: 0, nprocs: np, report: run.report });
+                        alg.name(),
+                        np,
+                        fmt_ns(run.report.makespan_ns)
+                    );
+                    p(opts, row);
+                    rows.push(ScalingRow {
+                        matrix: mname,
+                        n_cols: 0,
+                        nprocs: np,
+                        report: run.report,
+                    });
                 }
             }
         }
@@ -292,18 +332,30 @@ pub struct Table1Row {
 
 pub fn table1(opts: &ExpOpts) -> Vec<Table1Row> {
     p(opts, "── Table 1: matrix suite (analogs), load imbalance on a 10×10 grid ──".into());
-    p(opts, format!(
+    let row = format!(
         "{:<16} {:<11} {:>9} {:>12} {:>10} {:>10}",
-        "analog", "kind", "m=k", "nnz", "load imb.", "paper"
-    ));
+        "analog",
+        "kind",
+        "m=k",
+        "nnz",
+        "load imb.",
+        "paper"
+    );
+    p(opts, row);
     let mut rows = Vec::new();
     for e in suite::table1() {
         let m = suite::analog_scaled(e.name, opts.scale_shift);
         let imb = grid_load_imbalance(&m, 10, 10);
-        p(opts, format!(
+        let row = format!(
             "{:<16} {:<11} {:>9} {:>12} {:>10.2} {:>10.2}",
-            e.name, e.kind, m.nrows, m.nnz(), imb, e.paper_imbalance
-        ));
+            e.name,
+            e.kind,
+            m.nrows,
+            m.nnz(),
+            imb,
+            e.paper_imbalance
+        );
+        p(opts, row);
         rows.push(Table1Row {
             name: e.name,
             kind: e.kind,
@@ -325,21 +377,39 @@ pub struct Table2Row {
     pub matrix: &'static str,
     pub alg: &'static str,
     pub nprocs: usize,
+    /// Dense operand width for SpMM rows; 0 for SpGEMM rows.
+    pub n_cols: usize,
     pub comp_s: f64,
     pub comm_s: f64,
     pub acc_s: f64,
     pub imb_s: f64,
+    /// Full run report (per-PE stats), for BENCH JSON emission.
+    pub report: Report,
 }
 
 fn print_t2_header(opts: &ExpOpts) {
-    p(opts, format!(
+    let row = format!(
         "{:<8} {:<12} {:<16} {:>5} {:>9} {:>9} {:>9} {:>11}",
-        "Env.", "Matrix", "Alg.", "#GPUs", "Comp.(ms)", "Comm.(ms)", "Acc.(ms)", "LoadImb(ms)"
-    ));
+        "Env.",
+        "Matrix",
+        "Alg.",
+        "#GPUs",
+        "Comp.(ms)",
+        "Comm.(ms)",
+        "Acc.(ms)",
+        "LoadImb(ms)"
+    );
+    p(opts, row);
 }
 
-fn t2_row(opts: &ExpOpts, env: &'static str, matrix: &'static str, r: &Report) -> Table2Row {
-    p(opts, format!(
+fn t2_row(
+    opts: &ExpOpts,
+    env: &'static str,
+    matrix: &'static str,
+    n_cols: usize,
+    r: &Report,
+) -> Table2Row {
+    let row = format!(
         "{:<8} {:<12} {:<16} {:>5} {:>9.3} {:>9.3} {:>9.3} {:>11.3}",
         env,
         matrix,
@@ -349,16 +419,19 @@ fn t2_row(opts: &ExpOpts, env: &'static str, matrix: &'static str, r: &Report) -
         r.comm_s() * 1e3,
         r.acc_s() * 1e3,
         r.load_imb_s() * 1e3
-    ));
+    );
+    p(opts, row);
     Table2Row {
         env,
         matrix,
         alg: r.alg,
         nprocs: r.nprocs,
+        n_cols,
         comp_s: r.comp_s(),
         comm_s: r.comm_s(),
         acc_s: r.acc_s(),
         imb_s: r.load_imb_s(),
+        report: r.clone(),
     }
 }
 
@@ -378,7 +451,7 @@ pub fn table2a(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
         for &np in counts {
             let cfg = SpmmConfig::new(alg, np, NetProfile::summit(), 256);
             let run = run_spmm(&amazon, &cfg)?;
-            rows.push(t2_row(opts, "Summit", "amazon", &run.report));
+            rows.push(t2_row(opts, "Summit", "amazon", cfg.n_cols, &run.report));
         }
     }
     // DGX-2 / Nm7 analog.
@@ -391,7 +464,7 @@ pub fn table2a(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
         for &np in counts {
             let cfg = SpmmConfig::new(alg, np, NetProfile::dgx2(), 256);
             let run = run_spmm(&nm7, &cfg)?;
-            rows.push(t2_row(opts, "DGX-2", "Nm-7", &run.report));
+            rows.push(t2_row(opts, "DGX-2", "Nm-7", cfg.n_cols, &run.report));
         }
     }
     Ok(rows)
@@ -414,8 +487,97 @@ pub fn table2b(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
         for &np in counts {
             let cfg = SpgemmConfig::new(alg, np, profile.clone());
             let run = run_spgemm(&gene, &cfg)?;
-            rows.push(t2_row(opts, env, "Mouse Gene", &run.report));
+            rows.push(t2_row(opts, env, "Mouse Gene", 0, &run.report));
         }
     }
     Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// Measured-perf pipeline: run a harness, emit BENCH_<artifact>.json
+// ---------------------------------------------------------------------
+
+/// Every figure/table harness with a BENCH emitter, in `repro all` order.
+pub const BENCH_ARTIFACTS: &[&str] =
+    &["fig1", "fig2", "fig3", "fig4", "fig5", "table1", "table2a", "table2b"];
+
+fn scaling_rows_into(doc: &mut BenchDoc, rows: &[ScalingRow]) {
+    for row in rows {
+        let label = if row.n_cols > 0 {
+            format!("{} {} N={} p={}", row.report.alg, row.matrix, row.n_cols, row.nprocs)
+        } else {
+            format!("{} {} p={}", row.report.alg, row.matrix, row.nprocs)
+        };
+        doc.push_run(&label, row.matrix, row.n_cols, &row.report);
+    }
+}
+
+/// Run one figure/table harness and write its schema-versioned
+/// `BENCH_<artifact>.json` under `out_dir`. This is the single entry
+/// point behind `sparta bench` and every figure bench target: the same
+/// sanity assertions run everywhere, and a panic, an empty harness, or
+/// schema-invalid output all surface as an error (CI fails on them).
+pub fn bench_artifact(artifact: &str, opts: &ExpOpts, out_dir: &Path) -> Result<PathBuf> {
+    let mut doc = BenchDoc::new(artifact, opts.scale_shift);
+    match artifact {
+        "fig1" => {
+            let f = fig1(opts);
+            anyhow::ensure!(
+                f.per_stage >= f.end_to_end - 1e-9,
+                "staged imbalance must be >= end-to-end"
+            );
+            let mut metrics = vec![
+                ("end_to_end".to_string(), f.end_to_end),
+                ("per_stage".to_string(), f.per_stage),
+            ];
+            for (i, x) in f.stage_series.iter().enumerate() {
+                metrics.push((format!("stage_{i}"), *x));
+            }
+            let named: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+            doc.push_metrics("load imbalance amplification", &named);
+        }
+        "fig2" => {
+            for pt in fig2(opts)? {
+                doc.push_metrics(
+                    &pt.label,
+                    &[
+                        ("internode_ai", pt.internode_ai),
+                        ("model_gflops", pt.model_gflops),
+                        ("local_peak_gflops", pt.local_peak_gflops),
+                        ("achieved_gflops", pt.achieved_gflops),
+                    ],
+                );
+            }
+        }
+        "fig3" => scaling_rows_into(&mut doc, &fig3(opts)?),
+        "fig4" => scaling_rows_into(&mut doc, &fig4(opts)?),
+        "fig5" => scaling_rows_into(&mut doc, &fig5(opts)?),
+        "table1" => {
+            let rows = table1(opts);
+            anyhow::ensure!(rows.len() == 11, "Table 1 has 11 matrices, got {}", rows.len());
+            for row in rows {
+                doc.push_metrics(
+                    row.name,
+                    &[
+                        ("m", row.m as f64),
+                        ("nnz", row.nnz as f64),
+                        ("imbalance", row.imbalance),
+                        ("paper_imbalance", row.paper_imbalance),
+                    ],
+                );
+            }
+        }
+        "table2a" | "table2b" => {
+            let rows = if artifact == "table2a" { table2a(opts)? } else { table2b(opts)? };
+            for row in &rows {
+                let label = format!("{} {} {} p={}", row.env, row.matrix, row.alg, row.nprocs);
+                doc.push_run(&label, row.matrix, row.n_cols, &row.report);
+            }
+        }
+        other => {
+            anyhow::bail!("unknown bench artifact {other:?} (expected one of {BENCH_ARTIFACTS:?})")
+        }
+    }
+    anyhow::ensure!(!doc.is_empty(), "harness {artifact} produced no rows");
+    doc.write(out_dir)
 }

@@ -7,4 +7,5 @@ pub mod report;
 pub mod testutil;
 
 pub use driver::{run_spgemm, run_spmm, SpgemmConfig, SpgemmRun, SpmmConfig, SpmmRun};
-pub use report::Report;
+pub use experiments::{bench_artifact, BENCH_ARTIFACTS};
+pub use report::{parse_json, validate_bench, BenchDoc, Jv, Report, BENCH_SCHEMA_VERSION};

@@ -1,5 +1,12 @@
-//! Run reports: virtual makespan, component breakdown (Table 2), and
-//! throughput summaries.
+//! Run reports: virtual makespan, component breakdown (Table 2),
+//! throughput summaries — and the machine-readable perf pipeline:
+//! schema-versioned `BENCH_<artifact>.json` emission ([`BenchDoc`]),
+//! with a dependency-free JSON value type ([`Jv`]), parser, and schema
+//! validator so CI can fail on malformed output.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::fabric::Stats;
 
@@ -30,8 +37,7 @@ impl Report {
         per_rank: Vec<Stats>,
         wall_ns: f64,
     ) -> Report {
-        let makespan_ns =
-            per_rank.iter().map(|s| s.final_clock_ns).fold(0.0, f64::max);
+        let makespan_ns = per_rank.iter().map(|s| s.final_clock_ns).fold(0.0, f64::max);
         let flops = per_rank.iter().map(|s| s.flops).sum();
         Report { alg, profile, nprocs: per_rank.len(), makespan_ns, wall_ns, flops, per_rank }
     }
@@ -77,6 +83,15 @@ impl Report {
         self.per_rank.iter().map(|s| s.bytes_get).sum()
     }
 
+    /// Sum of all per-rank stats (`final_clock_ns` = max, like merge).
+    pub fn totals(&self) -> Stats {
+        let mut t = Stats::default();
+        for s in &self.per_rank {
+            t.merge(s);
+        }
+        t
+    }
+
     pub fn steals(&self) -> u64 {
         self.per_rank.iter().map(|s| s.n_steals).sum()
     }
@@ -97,25 +112,670 @@ impl Report {
     }
 }
 
+// ---------------------------------------------------------------------
+// BENCH_*.json — the measured-perf pipeline
+// ---------------------------------------------------------------------
+
+/// Version of the BENCH JSON schema (bumped on incompatible change).
+pub const BENCH_SCHEMA_VERSION: i64 = 1;
+
+/// A JSON value. The build is fully offline (no serde), so emission,
+/// parsing, and validation are hand-rolled here; the grammar subset is
+/// full JSON minus exponent re-emission (numbers render in plain
+/// decimal, non-finite floats render as `null`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Jv {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Jv>),
+    Obj(Vec<(String, Jv)>),
+}
+
+fn escape_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+impl Jv {
+    pub fn obj(fields: Vec<(&str, Jv)>) -> Jv {
+        Jv::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn str(s: &str) -> Jv {
+        Jv::Str(s.to_string())
+    }
+
+    pub fn nums(xs: impl IntoIterator<Item = f64>) -> Jv {
+        Jv::Arr(xs.into_iter().map(Jv::Num).collect())
+    }
+
+    /// Field lookup on an object.
+    pub fn get(&self, key: &str) -> Option<&Jv> {
+        match self {
+            Jv::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Jv::Num(x) => Some(*x),
+            Jv::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Jv::Int(x) => Some(*x),
+            Jv::Num(x) if x.fract() == 0.0 && x.abs() < 9e15 => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Jv::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Jv]> {
+        match self {
+            Jv::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    fn write_into(&self, out: &mut String) {
+        match self {
+            Jv::Null => out.push_str("null"),
+            Jv::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Jv::Int(x) => out.push_str(&x.to_string()),
+            Jv::Num(x) => {
+                if x.is_finite() {
+                    // f64 Display is shortest-roundtrip plain decimal —
+                    // always valid JSON.
+                    out.push_str(&x.to_string());
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Jv::Str(s) => {
+                out.push('"');
+                escape_into(s, out);
+                out.push('"');
+            }
+            Jv::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write_into(out);
+                }
+                out.push(']');
+            }
+            Jv::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    escape_into(k, out);
+                    out.push_str("\":");
+                    v.write_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Render to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out);
+        out
+    }
+}
+
+/// Parse a JSON document (full grammar; numbers with `.`/exponent or
+/// outside i64 range become [`Jv::Num`], the rest [`Jv::Int`]).
+pub fn parse_json(text: &str) -> Result<Jv> {
+    let mut p = JsonParser { b: text.as_bytes(), i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    ensure!(p.i == p.b.len(), "trailing data at byte {}", p.i);
+    Ok(v)
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl JsonParser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().context("unexpected end of JSON")
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        ensure!(self.peek()? == c, "expected {:?} at byte {}", c as char, self.i);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, word: &str, v: Jv) -> Result<Jv> {
+        ensure!(
+            self.b[self.i..].starts_with(word.as_bytes()),
+            "bad literal at byte {}",
+            self.i
+        );
+        self.i += word.len();
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Jv> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Jv::Str(self.string()?)),
+            b't' => self.lit("true", Jv::Bool(true)),
+            b'f' => self.lit("false", Jv::Bool(false)),
+            b'n' => self.lit("null", Jv::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected {:?} at byte {}", c as char, self.i),
+        }
+    }
+
+    fn object(&mut self) -> Result<Jv> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Jv::Obj(fields));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let v = self.value()?;
+            fields.push((k, v));
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Jv::Obj(fields));
+                }
+                c => bail!("expected ',' or '}}', got {:?} at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Jv> {
+        self.eat(b'[')?;
+        let mut xs = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Jv::Arr(xs));
+        }
+        loop {
+            self.ws();
+            xs.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Jv::Arr(xs));
+                }
+                c => bail!("expected ',' or ']', got {:?} at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        ensure!(self.i + 4 <= self.b.len(), "truncated \\u escape");
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4]).context("bad \\u escape")?;
+        let v = u32::from_str_radix(s, 16).context("bad \\u escape")?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // Surrogate pair: expect \uXXXX low half.
+                                self.eat(b'\\')?;
+                                self.eat(b'u')?;
+                                let lo = self.hex4()?;
+                                ensure!(
+                                    (0xDC00..0xE000).contains(&lo),
+                                    "unpaired surrogate in string"
+                                );
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            out.push(char::from_u32(cp).context("invalid codepoint")?);
+                        }
+                        e => bail!("bad escape \\{:?}", e as char),
+                    }
+                }
+                c if c < 0x20 => bail!("raw control character in string"),
+                c if c < 0x80 => out.push(c as char),
+                _ => {
+                    // Multi-byte UTF-8: find the full char in the source.
+                    let start = self.i - 1;
+                    let s = std::str::from_utf8(&self.b[start..]).context("invalid UTF-8")?;
+                    let ch = s.chars().next().context("empty char")?;
+                    out.push(ch);
+                    self.i = start + ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Jv> {
+        let start = self.i;
+        let mut float = false;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'0'..=b'9' | b'-' | b'+' => self.i += 1,
+                b'.' | b'e' | b'E' => {
+                    float = true;
+                    self.i += 1;
+                }
+                _ => break,
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("ascii");
+        if !float {
+            if let Ok(x) = s.parse::<i64>() {
+                return Ok(Jv::Int(x));
+            }
+        }
+        Ok(Jv::Num(s.parse::<f64>().with_context(|| format!("bad number {s:?}"))?))
+    }
+}
+
+/// Builder for one `BENCH_<artifact>.json` document: a schema-versioned
+/// record of a harness run — makespans, per-PE virtual-time breakdowns,
+/// bytes moved, op counts, and harness wall-clock — written one file
+/// per figure/table so the perf trajectory of the repo is itself a CI
+/// artifact.
+pub struct BenchDoc {
+    artifact: String,
+    scale_shift: i32,
+    t0: std::time::Instant,
+    rows: Vec<Jv>,
+}
+
+impl BenchDoc {
+    pub fn new(artifact: &str, scale_shift: i32) -> BenchDoc {
+        BenchDoc {
+            artifact: artifact.to_string(),
+            scale_shift,
+            t0: std::time::Instant::now(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one experiment run (a full [`Report`]). `matrix` and
+    /// `n_cols` are workload identifiers (`n_cols` 0 for SpGEMM).
+    pub fn push_run(&mut self, label: &str, matrix: &str, n_cols: usize, r: &Report) {
+        let t = r.totals();
+        let row = Jv::obj(vec![
+            ("kind", Jv::str("run")),
+            ("label", Jv::str(label)),
+            ("alg", Jv::str(r.alg)),
+            ("profile", Jv::str(r.profile)),
+            ("matrix", Jv::str(matrix)),
+            ("n_cols", Jv::Int(n_cols as i64)),
+            ("nprocs", Jv::Int(r.nprocs as i64)),
+            ("makespan_ns", Jv::Num(r.makespan_ns)),
+            ("wall_ns", Jv::Num(r.wall_ns)),
+            ("gflops", Jv::Num(r.gflops())),
+            ("flops", Jv::Num(r.flops)),
+            (
+                "breakdown_ns",
+                Jv::obj(vec![
+                    ("comp", Jv::Num(t.comp_ns)),
+                    ("comm", Jv::Num(t.comm_ns)),
+                    ("acc", Jv::Num(t.acc_ns)),
+                    ("queue", Jv::Num(t.queue_ns)),
+                    ("imbalance", Jv::Num(t.imb_ns)),
+                ]),
+            ),
+            (
+                "bytes",
+                Jv::obj(vec![
+                    ("get", Jv::Num(t.bytes_get)),
+                    ("put", Jv::Num(t.bytes_put)),
+                    ("bulk", Jv::Num(t.bytes_bulk)),
+                ]),
+            ),
+            (
+                "ops",
+                Jv::obj(vec![
+                    ("gets", Jv::Int(t.n_gets as i64)),
+                    ("puts", Jv::Int(t.n_puts as i64)),
+                    ("faa", Jv::Int(t.n_faa as i64)),
+                    ("queue_push", Jv::Int(t.n_queue_push as i64)),
+                    ("queue_pop", Jv::Int(t.n_queue_pop as i64)),
+                    ("steals", Jv::Int(t.n_steals as i64)),
+                    ("bulk_xfers", Jv::Int(t.n_bulk_xfers as i64)),
+                    ("word_ops", Jv::Int(t.n_word_ops as i64)),
+                ]),
+            ),
+            (
+                "per_rank",
+                Jv::obj(vec![
+                    ("clock_ns", Jv::nums(r.per_rank.iter().map(|s| s.final_clock_ns))),
+                    ("comp_ns", Jv::nums(r.per_rank.iter().map(|s| s.comp_ns))),
+                    ("comm_ns", Jv::nums(r.per_rank.iter().map(|s| s.comm_ns))),
+                    ("acc_ns", Jv::nums(r.per_rank.iter().map(|s| s.acc_ns))),
+                    ("queue_ns", Jv::nums(r.per_rank.iter().map(|s| s.queue_ns))),
+                    ("imb_ns", Jv::nums(r.per_rank.iter().map(|s| s.imb_ns))),
+                ]),
+            ),
+        ]);
+        self.rows.push(row);
+    }
+
+    /// Append one scalar-metrics row (analysis harnesses — Fig 1,
+    /// Table 1 — and model points with no fabric run behind them).
+    pub fn push_metrics(&mut self, label: &str, metrics: &[(&str, f64)]) {
+        let row = Jv::obj(vec![
+            ("kind", Jv::str("metrics")),
+            ("label", Jv::str(label)),
+            (
+                "metrics",
+                Jv::Obj(metrics.iter().map(|(k, v)| (k.to_string(), Jv::Num(*v))).collect()),
+            ),
+        ]);
+        self.rows.push(row);
+    }
+
+    /// Rows appended so far.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Assemble the document (stamps the harness wall-clock).
+    pub fn to_json(&self) -> Jv {
+        Jv::obj(vec![
+            ("schema_version", Jv::Int(BENCH_SCHEMA_VERSION)),
+            ("artifact", Jv::str(&self.artifact)),
+            ("scale_shift", Jv::Int(self.scale_shift as i64)),
+            ("wall_ns", Jv::Num(self.t0.elapsed().as_nanos() as f64)),
+            ("rows", Jv::Arr(self.rows.clone())),
+        ])
+    }
+
+    /// Validate, render, round-trip re-parse + re-validate, and write
+    /// `BENCH_<artifact>.json` under `dir`. Returns the file path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let doc = self.to_json();
+        validate_bench(&doc).with_context(|| format!("BENCH_{} failed validation", self.artifact))?;
+        let text = doc.render();
+        let reparsed = parse_json(&text).context("emitted JSON does not re-parse")?;
+        validate_bench(&reparsed).context("emitted JSON invalid after round-trip")?;
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating bench output dir {}", dir.display()))?;
+        let path = dir.join(format!("BENCH_{}.json", self.artifact));
+        std::fs::write(&path, text)
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+fn req<'a>(v: &'a Jv, key: &str) -> Result<&'a Jv> {
+    v.get(key).with_context(|| format!("missing field {key:?}"))
+}
+
+fn req_finite(v: &Jv, key: &str) -> Result<f64> {
+    let x = req(v, key)?.as_f64().with_context(|| format!("field {key:?} is not a number"))?;
+    ensure!(x.is_finite(), "field {key:?} is not finite");
+    Ok(x)
+}
+
+fn req_finite_all(v: &Jv, keys: &[&str]) -> Result<()> {
+    for k in keys {
+        req_finite(v, k)?;
+    }
+    Ok(())
+}
+
+/// Schema check for a BENCH document. CI's bench-smoke job fails when
+/// this rejects what a harness emitted.
+pub fn validate_bench(doc: &Jv) -> Result<()> {
+    let sv = req(doc, "schema_version")?.as_i64().context("schema_version not an int")?;
+    ensure!(sv == BENCH_SCHEMA_VERSION, "schema_version {sv} != {BENCH_SCHEMA_VERSION}");
+    let artifact = req(doc, "artifact")?.as_str().context("artifact not a string")?;
+    ensure!(!artifact.is_empty(), "artifact is empty");
+    req(doc, "scale_shift")?.as_i64().context("scale_shift not an int")?;
+    ensure!(req_finite(doc, "wall_ns")? >= 0.0, "wall_ns negative");
+    let rows = req(doc, "rows")?.as_arr().context("rows not an array")?;
+    ensure!(!rows.is_empty(), "rows is empty");
+    for (i, row) in rows.iter().enumerate() {
+        validate_row(row).with_context(|| format!("row {i} of BENCH_{artifact}"))?;
+    }
+    Ok(())
+}
+
+fn validate_row(row: &Jv) -> Result<()> {
+    let label = req(row, "label")?.as_str().context("label not a string")?;
+    ensure!(!label.is_empty(), "label is empty");
+    match req(row, "kind")?.as_str() {
+        Some("run") => {
+            ensure!(req_finite(row, "makespan_ns")? >= 0.0, "makespan_ns negative");
+            req_finite(row, "wall_ns")?;
+            req_finite(row, "gflops")?;
+            let nprocs = req(row, "nprocs")?.as_i64().context("nprocs not an int")?;
+            ensure!(nprocs >= 1, "nprocs {nprocs} < 1");
+            req(row, "alg")?.as_str().context("alg not a string")?;
+            req(row, "profile")?.as_str().context("profile not a string")?;
+            let breakdown = req(row, "breakdown_ns")?;
+            req_finite_all(breakdown, &["comp", "comm", "acc", "queue", "imbalance"])?;
+            let bytes = req(row, "bytes")?;
+            req_finite_all(bytes, &["get", "put", "bulk"])?;
+            let ops = req(row, "ops")?;
+            let op_keys = [
+                "gets", "puts", "faa", "queue_push", "queue_pop", "steals", "bulk_xfers",
+                "word_ops",
+            ];
+            req_finite_all(ops, &op_keys)?;
+            let per_rank = req(row, "per_rank")?;
+            for k in ["clock_ns", "comp_ns", "comm_ns", "acc_ns", "queue_ns", "imb_ns"] {
+                let xs = req(per_rank, k)?
+                    .as_arr()
+                    .with_context(|| format!("per_rank.{k} not an array"))?;
+                ensure!(
+                    xs.len() == nprocs as usize,
+                    "per_rank.{k} has {} entries, want {nprocs}",
+                    xs.len()
+                );
+                for x in xs {
+                    let x = x.as_f64().with_context(|| format!("per_rank.{k} has a non-number"))?;
+                    ensure!(x.is_finite(), "per_rank.{k} has a non-finite entry");
+                }
+            }
+        }
+        Some("metrics") => {
+            let metrics = req(row, "metrics")?;
+            match metrics {
+                Jv::Obj(fields) => {
+                    ensure!(!fields.is_empty(), "metrics is empty");
+                    for (k, v) in fields {
+                        let x = v.as_f64().with_context(|| format!("metric {k:?} not a number"))?;
+                        ensure!(x.is_finite(), "metric {k:?} is not finite");
+                    }
+                }
+                _ => bail!("metrics is not an object"),
+            }
+        }
+        Some(other) => bail!("unknown row kind {other:?}"),
+        None => bail!("kind not a string"),
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn sample_report() -> Report {
+        let a = Stats { comp_ns: 2e9, final_clock_ns: 3e9, flops: 10e9, ..Default::default() };
+        let b = Stats { comp_ns: 1e9, final_clock_ns: 4e9, flops: 6e9, ..Default::default() };
+        Report::new("test", "summit", vec![a, b], 1e6)
+    }
+
     #[test]
     fn report_aggregates() {
-        let mut a = Stats::default();
-        a.comp_ns = 2e9;
-        a.final_clock_ns = 3e9;
-        a.flops = 10e9;
-        let mut b = Stats::default();
-        b.comp_ns = 1e9;
-        b.final_clock_ns = 4e9;
-        b.flops = 6e9;
-        let r = Report::new("test", "summit", vec![a, b], 1e6);
+        let r = sample_report();
         assert_eq!(r.makespan_ns, 4e9);
         assert_eq!(r.flops, 16e9);
         assert!((r.comp_s() - 1.5).abs() < 1e-12);
         assert!((r.gflops() - 4.0).abs() < 1e-12);
         assert_eq!(r.nprocs, 2);
+        let t = r.totals();
+        assert_eq!(t.comp_ns, 3e9);
+        assert_eq!(t.final_clock_ns, 4e9);
+    }
+
+    #[test]
+    fn json_render_parse_roundtrip() {
+        let v = Jv::obj(vec![
+            ("a", Jv::Int(-3)),
+            ("b", Jv::Num(1.5)),
+            ("s", Jv::str("he said \"hi\"\n\\t\u{1F600}")),
+            ("arr", Jv::Arr(vec![Jv::Null, Jv::Bool(true), Jv::Bool(false)])),
+            ("empty_obj", Jv::Obj(vec![])),
+            ("empty_arr", Jv::Arr(vec![])),
+        ]);
+        let text = v.render();
+        let back = parse_json(&text).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn json_parser_accepts_whitespace_and_escapes() {
+        let v = parse_json(" { \"k\" : [ 1 , 2.5 , \"\\u0041\\ud83d\\ude00\" ] } ").unwrap();
+        let arr = v.get("k").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_i64(), Some(1));
+        assert_eq!(arr[1].as_f64(), Some(2.5));
+        assert_eq!(arr[2].as_str(), Some("A\u{1F600}"));
+    }
+
+    #[test]
+    fn json_parser_rejects_garbage() {
+        assert!(parse_json("{").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("{\"a\":1}trailing").is_err());
+        assert!(parse_json("\"\\q\"").is_err());
+    }
+
+    #[test]
+    fn nonfinite_numbers_render_as_null() {
+        assert_eq!(Jv::Num(f64::NAN).render(), "null");
+        assert_eq!(Jv::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn bench_doc_run_rows_validate() {
+        let mut doc = BenchDoc::new("unit", -2);
+        doc.push_run("test p=2", "amazon", 128, &sample_report());
+        doc.push_metrics("imbalance", &[("end_to_end", 1.2), ("per_stage", 2.3)]);
+        assert_eq!(doc.len(), 2);
+        let j = doc.to_json();
+        validate_bench(&j).unwrap();
+        // And it survives the round trip through text.
+        let back = parse_json(&j.render()).unwrap();
+        validate_bench(&back).unwrap();
+        let rows = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("nprocs").unwrap().as_i64(), Some(2));
+        let clocks = rows[0].get("per_rank").unwrap().get("clock_ns").unwrap().as_arr().unwrap();
+        assert_eq!(clocks.len(), 2);
+    }
+
+    #[test]
+    fn validate_rejects_schema_violations() {
+        // Empty rows.
+        let doc = BenchDoc::new("unit", 0);
+        assert!(validate_bench(&doc.to_json()).is_err());
+        // Wrong schema version.
+        let mut ok = BenchDoc::new("unit", 0);
+        ok.push_metrics("m", &[("x", 1.0)]);
+        let j = ok.to_json();
+        validate_bench(&j).unwrap();
+        let Jv::Obj(mut fields) = j else { panic!("not an object") };
+        fields[0].1 = Jv::Int(BENCH_SCHEMA_VERSION + 1);
+        assert!(validate_bench(&Jv::Obj(fields)).is_err());
+        // Non-finite metric.
+        let mut bad = BenchDoc::new("unit", 0);
+        bad.push_metrics("m", &[("x", f64::NAN)]);
+        assert!(validate_bench(&bad.to_json()).is_err());
+    }
+
+    #[test]
+    fn bench_doc_write_creates_file() {
+        let dir = std::env::temp_dir().join(format!("sparta_bench_test_{}", std::process::id()));
+        let mut doc = BenchDoc::new("unitwrite", 0);
+        doc.push_run("r", "m", 0, &sample_report());
+        let path = doc.write(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unitwrite.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        validate_bench(&parse_json(&text).unwrap()).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

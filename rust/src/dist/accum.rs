@@ -8,7 +8,9 @@
 //! multiplies, *pulls* each referenced payload with a one-sided get, and
 //! accumulates — so neither side ever blocks on the other (the
 //! `drain_spmm_queue` / `drain_spgemm_queue` loops in
-//! `algorithms::common`).
+//! `algorithms::common`). Payload pulls (`fetch_dense` /
+//! `fetch_sparse`) are bulk chunk-copy transfers; only the queue's
+//! slot-claim FAA and publish store are per-word round trips.
 
 use std::sync::Arc;
 
@@ -266,6 +268,29 @@ mod tests {
         assert_eq!(counts[0], 30);
         assert_eq!(stats.iter().map(|s| s.n_queue_push).sum::<u64>(), 30);
         assert_eq!(stats[0].n_queue_pop, 30);
+    }
+
+    #[test]
+    fn payload_pull_is_a_bulk_transfer() {
+        let f = fab(2);
+        let q = AccQueues::create(&f, 4);
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() == 1 {
+                let part = Dense::from_vec(4, 4, vec![2.0; 16]);
+                q.send_dense_partial(pe, 0, 0, 0, &part);
+            }
+            pe.barrier();
+            if pe.rank() == 0 {
+                let msg = q.pop_wait(pe).expect("one partial");
+                let _ = msg.fetch_dense(pe);
+            }
+            pe.barrier();
+        });
+        // Owner: one queue-slot get + one 64-byte payload pull, both bulk.
+        assert_eq!(stats[0].n_bulk_xfers, 2);
+        assert!(stats[0].bytes_bulk >= 64.0);
+        // Sender: FAA (slot claim) + seq publish are word ops.
+        assert!(stats[1].n_word_ops >= 2);
     }
 
     #[test]

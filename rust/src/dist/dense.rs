@@ -4,7 +4,10 @@
 //! Each tile is one contiguous row-major f32 array in its owner's
 //! segment; the directory of [`GlobalPtr`]s is immutable after setup
 //! (dense tiles are updated *in place* with one-sided puts), so it can
-//! be shared read-only by every PE thread.
+//! be shared read-only by every PE thread. Tile fetches and puts ride
+//! the fabric's bulk chunk-copy fast path (`Segment::read_bytes_bulk`),
+//! so a tile moves as whole chunks rather than per-word round trips —
+//! the simulator analog of the paper's GPUDirect bulk transfers.
 
 use std::sync::Arc;
 
@@ -211,6 +214,26 @@ mod tests {
     }
 
     #[test]
+    fn tile_fetches_ride_the_bulk_path() {
+        let f = fab(4);
+        let mut rng = Rng::new(11);
+        let m = Dense::random(32, 32, &mut rng);
+        let grid = ProcGrid::for_nprocs(4);
+        let d = DistDense::scatter(&f, &m, grid);
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() == 0 {
+                let tile = d.get_tile(pe, 1, 1);
+                d.put_tile_as(pe, 1, 1, &tile, Kind::Comm);
+            }
+            pe.barrier();
+        });
+        let (r, c) = d.tile_dims(1, 1);
+        let tile_bytes = (r * c * 4) as f64;
+        assert_eq!(stats[0].n_bulk_xfers, 2, "one tile get + one tile put");
+        assert_eq!(stats[0].bytes_bulk, 2.0 * tile_bytes);
+    }
+
+    #[test]
     fn put_tile_lands_in_gather() {
         let f = fab(4);
         let grid = ProcGrid::for_nprocs(4);
@@ -218,8 +241,7 @@ mod tests {
         f.launch(|pe| {
             for (i, j) in grid.my_tiles(pe.rank()) {
                 let (r, c) = d.tile_dims(i, j);
-                let tile =
-                    Dense::from_vec(r, c, vec![pe.rank() as f32 + 1.0; r * c]);
+                let tile = Dense::from_vec(r, c, vec![pe.rank() as f32 + 1.0; r * c]);
                 d.put_tile_as(pe, i, j, &tile, Kind::Comm);
             }
             pe.barrier();

@@ -8,7 +8,9 @@
 //! the owner installs freshly allocated arrays with
 //! [`DistCsr::replace_tile`] and the grid republishes handles in the
 //! collective [`DistCsr::renew_tiles`] — the paper's directory update
-//! after SpGEMM assembly.
+//! after SpGEMM assembly. All three arrays of a tile fetch move over
+//! the fabric's bulk chunk-copy fast path (one bulk transfer per
+//! array), not per-word round trips.
 
 use std::sync::{Arc, RwLock};
 
@@ -332,6 +334,26 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn csr_tile_fetch_is_three_bulk_transfers() {
+        let f = fab(4);
+        let m = gen::erdos_renyi(40, 5, 13);
+        let grid = ProcGrid::for_nprocs(4);
+        let d = DistCsr::scatter(&f, &m, grid);
+        let h = d.handle(1, 1);
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() == 0 {
+                let _ = d.get_tile(pe, 1, 1);
+            }
+            pe.barrier();
+        });
+        let arrays = [h.rowptr.bulk_bytes(), h.colind.bulk_bytes(), h.vals.bulk_bytes()];
+        let expect_xfers = arrays.iter().filter(|&&b| b > 0).count() as u64;
+        assert_eq!(stats[0].n_bulk_xfers, expect_xfers, "one bulk transfer per whole-word array");
+        let whole: usize = arrays.iter().sum();
+        assert_eq!(stats[0].bytes_bulk, whole as f64, "whole-word bytes of all three arrays");
     }
 
     #[test]

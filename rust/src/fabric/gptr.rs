@@ -47,7 +47,14 @@ impl<T> Clone for GlobalPtr<T> {
 impl<T> Copy for GlobalPtr<T> {}
 impl<T> std::fmt::Debug for GlobalPtr<T> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "GlobalPtr<{}>(rank={}, off={}, len={})", std::any::type_name::<T>(), self.rank, self.offset, self.len)
+        write!(
+            f,
+            "GlobalPtr<{}>(rank={}, off={}, len={})",
+            std::any::type_name::<T>(),
+            self.rank,
+            self.offset,
+            self.len
+        )
     }
 }
 impl<T> PartialEq for GlobalPtr<T> {
@@ -88,6 +95,20 @@ impl<T> GlobalPtr<T> {
         self.len as usize * std::mem::size_of::<T>()
     }
 
+    /// Byte offset into the owner's segment (the address the bulk
+    /// get/put fast path starts copying at; always 8-aligned for
+    /// pointers produced by the allocator or [`GlobalPtr::slice`]).
+    pub fn byte_offset(&self) -> usize {
+        self.offset as usize
+    }
+
+    /// Bytes of this array that move through the bulk whole-word copy
+    /// path; the remainder (`bytes() % 8`) is a word-level
+    /// read-modify-write tail.
+    pub fn bulk_bytes(&self) -> usize {
+        self.bytes() & !7
+    }
+
     /// Sub-array view: elements `[start, start+len)`.
     /// The element size must keep the resulting byte offset 8-aligned for
     /// word-atomic access; all matrix arrays use 4- or 8-byte elements and
@@ -121,7 +142,12 @@ impl<T> GlobalPtr<T> {
     pub fn decode(words: [u64; 2]) -> Self {
         let rank = (words[0] >> 40) as u32;
         let len = words[0] & ((1u64 << 40) - 1);
-        GlobalPtr { rank: if rank == (1 << 24) - 1 { u32::MAX } else { rank }, offset: words[1], len, _ph: PhantomData }
+        GlobalPtr {
+            rank: if rank == (1 << 24) - 1 { u32::MAX } else { rank },
+            offset: words[1],
+            len,
+            _ph: PhantomData,
+        }
     }
 }
 

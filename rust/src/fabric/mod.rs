@@ -42,7 +42,7 @@ pub use barrier::ClockBarrier;
 pub use gptr::{GlobalPtr, Pod};
 pub use pe::{GetFuture, Pe};
 pub use queue::{QueueHandle, QueueItem};
-pub use segment::Segment;
+pub use segment::{CHUNK_BYTES, Segment};
 pub use stats::{Kind, Stats};
 pub use topology::{ComputeModel, Link, LinkKind, NetProfile};
 
@@ -153,16 +153,17 @@ impl Fabric {
         GlobalPtr::new(rank, off, n)
     }
 
-    /// Untimed write (setup only).
+    /// Untimed write (setup only). Uses the bulk chunk-copy path.
     pub fn write<T: Pod>(&self, gp: GlobalPtr<T>, src: &[T]) {
         assert_eq!(src.len(), gp.len());
         let bytes = unsafe {
             std::slice::from_raw_parts(src.as_ptr() as *const u8, std::mem::size_of_val(src))
         };
-        self.segments[gp.rank()].write_bytes(gp.offset as usize, bytes);
+        self.segments[gp.rank()].write_bytes_bulk(gp.byte_offset(), bytes);
     }
 
-    /// Untimed read (verification / gathering results).
+    /// Untimed read (verification / gathering results). Uses the bulk
+    /// chunk-copy path.
     pub fn read<T: Pod>(&self, gp: GlobalPtr<T>) -> Vec<T> {
         let mut out = vec![T::zeroed(); gp.len()];
         let bytes = unsafe {
@@ -171,7 +172,7 @@ impl Fabric {
                 out.len() * std::mem::size_of::<T>(),
             )
         };
-        self.segments[gp.rank()].read_bytes(gp.offset as usize, bytes);
+        self.segments[gp.rank()].read_bytes_bulk(gp.byte_offset(), bytes);
         out
     }
 
@@ -221,7 +222,11 @@ impl Fabric {
 }
 
 // Pe::copy_out / copy_in live here to keep Segment byte-level logic
-// private to the fabric module.
+// private to the fabric module. Both take the bulk chunk-copy fast
+// path — every one-sided get/put (tile fetches, queue slots,
+// accumulation payload pulls) moves whole chunks with relaxed word
+// loads instead of per-word round trips. Virtual-time charging is
+// unaffected; see `Segment::read_bytes_bulk`.
 impl Pe {
     pub(crate) fn copy_out<T: Pod>(&self, gp: GlobalPtr<T>, dst: &mut [T]) {
         let bytes = unsafe {
@@ -230,14 +235,14 @@ impl Pe {
                 std::mem::size_of_val(dst),
             )
         };
-        self.fabric().segment(gp.rank()).read_bytes(gp.offset as usize, bytes);
+        self.fabric().segment(gp.rank()).read_bytes_bulk(gp.byte_offset(), bytes);
     }
 
     pub(crate) fn copy_in<T: Pod>(&self, gp: GlobalPtr<T>, src: &[T]) {
         let bytes = unsafe {
             std::slice::from_raw_parts(src.as_ptr() as *const u8, std::mem::size_of_val(src))
         };
-        self.fabric().segment(gp.rank()).write_bytes(gp.offset as usize, bytes);
+        self.fabric().segment(gp.rank()).write_bytes_bulk(gp.byte_offset(), bytes);
     }
 }
 
@@ -247,7 +252,12 @@ mod tests {
 
     #[test]
     fn launch_collects_per_rank_results() {
-        let f = Fabric::new(FabricConfig { nprocs: 8, profile: NetProfile::wallclock(), seg_capacity: 1 << 20, pacing: false });
+        let f = Fabric::new(FabricConfig {
+            nprocs: 8,
+            profile: NetProfile::wallclock(),
+            seg_capacity: 1 << 20,
+            pacing: false,
+        });
         let (rs, stats) = f.launch(|pe| pe.rank() * 2);
         assert_eq!(rs, vec![0, 2, 4, 6, 8, 10, 12, 14]);
         assert_eq!(stats.len(), 8);
@@ -255,7 +265,12 @@ mod tests {
 
     #[test]
     fn setup_write_then_pe_read() {
-        let f = Fabric::new(FabricConfig { nprocs: 2, profile: NetProfile::dgx2(), seg_capacity: 1 << 20, pacing: false });
+        let f = Fabric::new(FabricConfig {
+            nprocs: 2,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 1 << 20,
+            pacing: false,
+        });
         let gp = f.alloc_on::<i32>(1, 4);
         f.write(gp, &[9, 8, 7, 6]);
         let (rs, _) = f.launch(|pe| pe.get_vec(gp));
@@ -265,7 +280,12 @@ mod tests {
 
     #[test]
     fn teams_are_shared_by_key() {
-        let f = Fabric::new(FabricConfig { nprocs: 4, profile: NetProfile::dgx2(), seg_capacity: 1 << 20, pacing: false });
+        let f = Fabric::new(FabricConfig {
+            nprocs: 4,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 1 << 20,
+            pacing: false,
+        });
         let (_, stats) = f.launch(|pe| {
             // ranks {0,1} team "row"/0, ranks {2,3} team "row"/1
             let id = (pe.rank() / 2) as u64;
@@ -284,7 +304,12 @@ mod tests {
     #[test]
     #[should_panic(expected = "different size")]
     fn team_size_mismatch_panics() {
-        let f = Fabric::new(FabricConfig { nprocs: 1, profile: NetProfile::dgx2(), seg_capacity: 1 << 20, pacing: false });
+        let f = Fabric::new(FabricConfig {
+            nprocs: 1,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 1 << 20,
+            pacing: false,
+        });
         f.team("x", 0, 1);
         f.team("x", 0, 2);
     }

@@ -230,6 +230,7 @@ impl Pe {
         let mut s = self.stats.borrow_mut();
         s.n_gets += 1;
         s.bytes_get += gp.bytes() as f64;
+        s.charge_xfer_path(gp.bulk_bytes(), gp.bytes());
     }
 
     /// Non-blocking one-sided get: returns a future whose completion time
@@ -244,6 +245,7 @@ impl Pe {
         let mut s = self.stats.borrow_mut();
         s.n_gets += 1;
         s.bytes_get += gp.bytes() as f64;
+        s.charge_xfer_path(gp.bulk_bytes(), gp.bytes());
         drop(s);
         GetFuture { data, ready_at }
     }
@@ -261,6 +263,7 @@ impl Pe {
         let mut s = self.stats.borrow_mut();
         s.n_puts += 1;
         s.bytes_put += gp.bytes() as f64;
+        s.charge_xfer_path(gp.bulk_bytes(), gp.bytes());
     }
 
     /// Allocate on own segment and write in one step; returns the pointer.
@@ -279,31 +282,35 @@ impl Pe {
     /// Cost: one network round trip.
     pub fn fetch_add(&self, gp: GlobalPtr<i64>, idx: usize, val: i64) -> i64 {
         assert!(idx < gp.len(), "fetch_add index out of bounds");
-        let off = gp.offset as usize + idx * 8;
+        let off = gp.byte_offset() + idx * 8;
         let prev = self.fabric.segment(gp.rank()).fetch_add_i64(off, val);
         let link = self.fabric.profile().link(self.rank, gp.rank());
         self.advance(Kind::Queue, 2.0 * link.lat_ns + ISSUE_NS);
-        self.stats.borrow_mut().n_faa += 1;
+        let mut s = self.stats.borrow_mut();
+        s.n_faa += 1;
+        s.n_word_ops += 1;
         prev
     }
 
     /// Remote atomic load (Acquire) of element `idx` of an i64 array.
     pub fn atomic_load(&self, gp: GlobalPtr<i64>, idx: usize) -> i64 {
         assert!(idx < gp.len());
-        let off = gp.offset as usize + idx * 8;
+        let off = gp.byte_offset() + idx * 8;
         let v = self.fabric.segment(gp.rank()).load_i64(off);
         let link = self.fabric.profile().link(self.rank, gp.rank());
         self.advance(Kind::Queue, 2.0 * link.lat_ns);
+        self.stats.borrow_mut().n_word_ops += 1;
         v
     }
 
     /// Remote atomic store (Release) of element `idx` of an i64 array.
     pub fn atomic_store(&self, gp: GlobalPtr<i64>, idx: usize, val: i64) {
         assert!(idx < gp.len());
-        let off = gp.offset as usize + idx * 8;
+        let off = gp.byte_offset() + idx * 8;
         self.fabric.segment(gp.rank()).store_i64(off, val);
         let link = self.fabric.profile().link(self.rank, gp.rank());
         self.advance(Kind::Queue, link.lat_ns);
+        self.stats.borrow_mut().n_word_ops += 1;
     }
 
     // ---------------------------------------------------------------
@@ -417,9 +424,34 @@ mod tests {
             pe.barrier();
         });
         let expect = 3_500.0 + 4000.0 / 3.83;
-        assert!((stats[0].comm_ns - expect).abs() < 1.0, "comm={} expect={}", stats[0].comm_ns, expect);
+        assert!(
+            (stats[0].comm_ns - expect).abs() < 1.0,
+            "comm={} expect={}",
+            stats[0].comm_ns,
+            expect
+        );
         assert_eq!(stats[0].n_gets, 1);
         assert_eq!(stats[0].bytes_get, 4000.0);
+    }
+
+    #[test]
+    fn bulk_and_word_ops_are_counted() {
+        let f = fab(2, NetProfile::dgx2());
+        let gp = f.alloc_on::<f32>(1, 100);
+        let ctr = f.alloc_on::<i64>(1, 1);
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() == 0 {
+                pe.put(gp, &[1.0f32; 100]);
+                let _ = pe.get_vec(gp);
+                pe.fetch_add(ctr, 0, 1);
+                let _ = pe.atomic_load(ctr, 0);
+            }
+            pe.barrier();
+        });
+        assert_eq!(stats[0].n_bulk_xfers, 2, "one put + one get");
+        assert_eq!(stats[0].bytes_bulk, 800.0);
+        assert_eq!(stats[0].n_word_ops, 2, "one FAA + one atomic load");
+        assert_eq!(stats[1].n_bulk_xfers, 0, "owner's thread never participates");
     }
 
     #[test]

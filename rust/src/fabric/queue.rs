@@ -151,7 +151,7 @@ impl<T: QueueItem> QueueHandle<T> {
     fn pop_impl(&self, pe: &Pe, allow_future: bool) -> Option<T> {
         assert_eq!(pe.rank(), self.owner(), "only the owner may pop");
         let seg = pe.fabric().segment(self.owner());
-        let word = |i: usize| seg.load_i64(self.base.offset as usize + i * 8);
+        let word = |i: usize| seg.load_i64(self.base.byte_offset() + i * 8);
         let h = word(HEAD);
         let sb = self.slot_base(h);
         let seq = word(sb);
@@ -222,7 +222,12 @@ mod tests {
     }
 
     fn fab(n: usize) -> std::sync::Arc<Fabric> {
-        Fabric::new(FabricConfig { nprocs: n, profile: NetProfile::dgx2(), seg_capacity: 8 << 20, pacing: false })
+        Fabric::new(FabricConfig {
+            nprocs: n,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 8 << 20,
+            pacing: false,
+        })
     }
 
     #[test]

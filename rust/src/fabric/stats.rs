@@ -37,6 +37,17 @@ pub struct Stats {
     pub bytes_put: f64,
     pub n_gets: u64,
     pub n_puts: u64,
+    /// One-sided transfers that moved at least one whole word through
+    /// the chunk-resolved bulk copy path (sub-word transfers don't).
+    pub n_bulk_xfers: u64,
+    /// Whole-word bytes moved by the bulk path. Differs from
+    /// `bytes_get + bytes_put` by the ragged sub-word tails, which are
+    /// word-level read-modify-writes counted in `n_word_ops`.
+    pub bytes_bulk: f64,
+    /// Single-word remote operations: FAA, atomic load/store, and the
+    /// partial-word tail of any unaligned-length transfer — the
+    /// per-word round trips the bulk path exists to avoid on data.
+    pub n_word_ops: u64,
     pub n_faa: u64,
     pub n_queue_push: u64,
     pub n_queue_pop: u64,
@@ -51,6 +62,19 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Attribute one one-sided transfer to the bulk / word paths:
+    /// `bulk_bytes` whole-word bytes through the bulk copy, plus one
+    /// word-level RMW when a ragged tail remains.
+    pub fn charge_xfer_path(&mut self, bulk_bytes: usize, total_bytes: usize) {
+        if bulk_bytes > 0 {
+            self.n_bulk_xfers += 1;
+            self.bytes_bulk += bulk_bytes as f64;
+        }
+        if total_bytes != bulk_bytes {
+            self.n_word_ops += 1;
+        }
+    }
+
     pub fn charge(&mut self, kind: Kind, ns: f64) {
         match kind {
             Kind::Comp => self.comp_ns += ns,
@@ -77,6 +101,9 @@ impl Stats {
         self.bytes_put += o.bytes_put;
         self.n_gets += o.n_gets;
         self.n_puts += o.n_puts;
+        self.n_bulk_xfers += o.n_bulk_xfers;
+        self.bytes_bulk += o.bytes_bulk;
+        self.n_word_ops += o.n_word_ops;
         self.n_faa += o.n_faa;
         self.n_queue_push += o.n_queue_push;
         self.n_queue_pop += o.n_queue_pop;
@@ -114,5 +141,32 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.final_clock_ns, 30.0);
         assert_eq!(a.comp_ns, 1.0);
+    }
+
+    #[test]
+    fn xfer_path_attribution_splits_bulk_and_tail() {
+        let mut s = Stats::default();
+        s.charge_xfer_path(96, 100); // 96 whole-word bytes + 4-byte tail
+        assert_eq!(s.n_bulk_xfers, 1);
+        assert_eq!(s.bytes_bulk, 96.0);
+        assert_eq!(s.n_word_ops, 1);
+        s.charge_xfer_path(0, 4); // sub-word transfer: pure word RMW
+        assert_eq!(s.n_bulk_xfers, 1);
+        assert_eq!(s.n_word_ops, 2);
+        s.charge_xfer_path(64, 64); // aligned transfer: no tail
+        assert_eq!(s.n_bulk_xfers, 2);
+        assert_eq!(s.bytes_bulk, 160.0);
+        assert_eq!(s.n_word_ops, 2);
+    }
+
+    #[test]
+    fn merge_sums_bulk_and_word_counters() {
+        let mut a =
+            Stats { n_bulk_xfers: 2, bytes_bulk: 64.0, n_word_ops: 3, ..Default::default() };
+        let b = Stats { n_bulk_xfers: 5, bytes_bulk: 36.0, n_word_ops: 4, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.n_bulk_xfers, 7);
+        assert_eq!(a.bytes_bulk, 100.0);
+        assert_eq!(a.n_word_ops, 7);
     }
 }

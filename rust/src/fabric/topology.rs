@@ -128,7 +128,12 @@ impl NetProfile {
             local: Link { lat_ns: 0.0, bw: f64::INFINITY },
             intra: Link { lat_ns: 0.0, bw: f64::INFINITY },
             inter: Link { lat_ns: 0.0, bw: f64::INFINITY },
-            compute: ComputeModel { peak_flops: f64::INFINITY, mem_bw: f64::INFINITY, launch_ns: 0.0, efficiency: 1.0 },
+            compute: ComputeModel {
+                peak_flops: f64::INFINITY,
+                mem_bw: f64::INFINITY,
+                launch_ns: 0.0,
+                efficiency: 1.0,
+            },
             timed: false,
         }
     }

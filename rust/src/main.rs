@@ -4,6 +4,10 @@
 //!
 //! * `sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all>`
 //!   — regenerate a figure/table of the paper (see DESIGN.md §4).
+//! * `sparta bench [artifact|all] [--smoke] [--out DIR]` — run the
+//!   figure/table harnesses and write one schema-versioned
+//!   `BENCH_<artifact>.json` each (the measured-perf pipeline; CI's
+//!   bench-smoke job runs `sparta bench --smoke`).
 //! * `sparta run spmm|spgemm [options]` — one experiment run.
 //! * `sparta list` — available matrices, algorithms, profiles.
 //!
@@ -44,7 +48,7 @@ impl Opts {
         while i < args.len() {
             let a = &args[i];
             if let Some(key) = a.strip_prefix("--") {
-                let boolean = matches!(key, "verify" | "pjrt" | "quiet");
+                let boolean = matches!(key, "verify" | "pjrt" | "quiet" | "smoke");
                 if boolean {
                     flags.insert(key.to_string(), "true".to_string());
                 } else {
@@ -111,6 +115,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let opts = Opts::parse(&args[1..]);
     match cmd.as_str() {
         "repro" => repro(&opts),
+        "bench" => bench(&opts),
         "run" => run(&opts),
         "list" => {
             println!("matrices (suite analogs):");
@@ -178,6 +183,35 @@ fn repro(opts: &Opts) -> Result<()> {
     }
 }
 
+/// The measured-perf pipeline: run every figure/table harness (or one)
+/// and write a schema-versioned `BENCH_<artifact>.json` per harness.
+/// `--smoke` is the CI preset: a small `--scale-shift` so the whole
+/// sweep finishes in minutes while still exercising every harness and
+/// emitting validated JSON.
+fn bench(opts: &Opts) -> Result<()> {
+    let what = opts.positional.first().map(String::as_str).unwrap_or("all");
+    let smoke = opts.has("smoke");
+    let default_shift = if smoke { -3 } else { -1 };
+    let eopts = ExpOpts {
+        scale_shift: opts.get("scale-shift", default_shift)?,
+        verify: opts.has("verify"),
+        print: !opts.has("quiet"),
+    };
+    let out_dir = std::path::PathBuf::from(opts.str("out", "bench-out"));
+    let artifacts: Vec<&str> = if what == "all" {
+        sparta::coordinator::BENCH_ARTIFACTS.to_vec()
+    } else {
+        vec![what]
+    };
+    for artifact in artifacts {
+        let t0 = std::time::Instant::now();
+        let path = sparta::coordinator::bench_artifact(artifact, &eopts, &out_dir)
+            .with_context(|| format!("bench harness {artifact} failed"))?;
+        println!("[bench {artifact}: wrote {} in {:.1?}]", path.display(), t0.elapsed());
+    }
+    Ok(())
+}
+
 fn run(opts: &Opts) -> Result<()> {
     let kind = opts.positional.first().map(String::as_str).unwrap_or("spmm");
     let scale_shift: i32 = opts.get("scale-shift", 0)?;
@@ -231,9 +265,14 @@ fn print_help() {
 
 USAGE:
   sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all> [--scale-shift N] [--verify]
+  sparta bench [fig1|...|table2b|all] [--smoke] [--scale-shift N] [--out DIR] [--quiet]
   sparta run spmm   --alg sc --nprocs 24 --matrix amazon --ncols 128 --profile summit [--pjrt] [--verify]
   sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify]
   sparta list
+
+`sparta bench` writes one schema-versioned BENCH_<artifact>.json per
+harness (makespan, per-PE time breakdown, bytes moved, op counts, wall
+clock) under --out (default bench-out/). --smoke is the quick CI preset.
 "
     );
 }

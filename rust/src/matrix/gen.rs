@@ -159,7 +159,13 @@ pub fn power_law_opts(
 /// Block-diagonal with dense-ish blocks plus sparse coupling — genomics
 /// "isolates" analog (many connected components, load imb. ~6.4 because
 /// component sizes vary).
-pub fn block_components(n: usize, n_blocks: usize, in_fill: f64, coupling: usize, seed: u64) -> Csr {
+pub fn block_components(
+    n: usize,
+    n_blocks: usize,
+    in_fill: f64,
+    coupling: usize,
+    seed: u64,
+) -> Csr {
     let mut rng = Rng::new(seed);
     let mut coo = Coo::new(n, n);
     // Geometric-ish block sizes: component sizes vary widely.

@@ -96,8 +96,14 @@ pub fn read_matrix_market_from<R: BufRead>(mut r: R) -> Result<Csr, String> {
 pub fn write_matrix_market(m: &Csr, path: &Path) -> Result<(), String> {
     let f = std::fs::File::create(path).map_err(|e| format!("create {path:?}: {e}"))?;
     let mut w = std::io::BufWriter::new(f);
-    write!(w, "%%MatrixMarket matrix coordinate real general\n{} {} {}\n", m.nrows, m.ncols, m.nnz())
-        .map_err(|e| e.to_string())?;
+    write!(
+        w,
+        "%%MatrixMarket matrix coordinate real general\n{} {} {}\n",
+        m.nrows,
+        m.ncols,
+        m.nnz()
+    )
+    .map_err(|e| e.to_string())?;
     for i in 0..m.nrows {
         let (cs, vs) = m.row(i);
         for (&c, &v) in cs.iter().zip(vs) {
@@ -161,7 +167,8 @@ mod tests {
     #[test]
     fn rejects_garbage() {
         assert!(read_matrix_market_from(Cursor::new("hello\n")).is_err());
-        assert!(read_matrix_market_from(Cursor::new("%%MatrixMarket matrix array real general\n")).is_err());
+        let arr = "%%MatrixMarket matrix array real general\n";
+        assert!(read_matrix_market_from(Cursor::new(arr)).is_err());
         let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
         assert!(read_matrix_market_from(Cursor::new(oob)).is_err());
     }

@@ -27,17 +27,83 @@ pub struct SuiteEntry {
 /// All Table 1 analogs, in the paper's order.
 pub fn table1() -> Vec<SuiteEntry> {
     vec![
-        SuiteEntry { name: "mouse_gene", kind: "Biology", paper_imbalance: 2.13, paper_m: "45.1K", paper_nnz: "29.0M" },
-        SuiteEntry { name: "ldoor", kind: "Structural", paper_imbalance: 8.23, paper_m: "952K", paper_nnz: "46.5M" },
-        SuiteEntry { name: "amazon", kind: "GNN", paper_imbalance: 1.08, paper_m: "233K", paper_nnz: "115M" },
-        SuiteEntry { name: "nlpkkt160", kind: "NLP", paper_imbalance: 9.46, paper_m: "8.3M", paper_nnz: "230M" },
-        SuiteEntry { name: "com-orkut", kind: "GNN", paper_imbalance: 3.78, paper_m: "14.3M", paper_nnz: "230M" },
-        SuiteEntry { name: "nm7", kind: "NMF", paper_imbalance: 8.15, paper_m: "3.1M", paper_nnz: "234M" },
-        SuiteEntry { name: "isolates_sub4", kind: "Eigen", paper_imbalance: 6.38, paper_m: "5.0M", paper_nnz: "648M" },
-        SuiteEntry { name: "isolates_sub2", kind: "Eigen", paper_imbalance: 6.48, paper_m: "7.6M", paper_nnz: "592M" },
-        SuiteEntry { name: "metaclust_small", kind: "Biology", paper_imbalance: 1.00, paper_m: "4.4M", paper_nnz: "327M" },
-        SuiteEntry { name: "metaclust", kind: "Biology", paper_imbalance: 1.00, paper_m: "17.5M", paper_nnz: "5.2B" },
-        SuiteEntry { name: "friendster", kind: "Graph", paper_imbalance: 7.68, paper_m: "62.5M", paper_nnz: "3.4B" },
+        SuiteEntry {
+            name: "mouse_gene",
+            kind: "Biology",
+            paper_imbalance: 2.13,
+            paper_m: "45.1K",
+            paper_nnz: "29.0M",
+        },
+        SuiteEntry {
+            name: "ldoor",
+            kind: "Structural",
+            paper_imbalance: 8.23,
+            paper_m: "952K",
+            paper_nnz: "46.5M",
+        },
+        SuiteEntry {
+            name: "amazon",
+            kind: "GNN",
+            paper_imbalance: 1.08,
+            paper_m: "233K",
+            paper_nnz: "115M",
+        },
+        SuiteEntry {
+            name: "nlpkkt160",
+            kind: "NLP",
+            paper_imbalance: 9.46,
+            paper_m: "8.3M",
+            paper_nnz: "230M",
+        },
+        SuiteEntry {
+            name: "com-orkut",
+            kind: "GNN",
+            paper_imbalance: 3.78,
+            paper_m: "14.3M",
+            paper_nnz: "230M",
+        },
+        SuiteEntry {
+            name: "nm7",
+            kind: "NMF",
+            paper_imbalance: 8.15,
+            paper_m: "3.1M",
+            paper_nnz: "234M",
+        },
+        SuiteEntry {
+            name: "isolates_sub4",
+            kind: "Eigen",
+            paper_imbalance: 6.38,
+            paper_m: "5.0M",
+            paper_nnz: "648M",
+        },
+        SuiteEntry {
+            name: "isolates_sub2",
+            kind: "Eigen",
+            paper_imbalance: 6.48,
+            paper_m: "7.6M",
+            paper_nnz: "592M",
+        },
+        SuiteEntry {
+            name: "metaclust_small",
+            kind: "Biology",
+            paper_imbalance: 1.00,
+            paper_m: "4.4M",
+            paper_nnz: "327M",
+        },
+        SuiteEntry {
+            name: "metaclust",
+            kind: "Biology",
+            paper_imbalance: 1.00,
+            paper_m: "17.5M",
+            paper_nnz: "5.2B",
+        },
+        SuiteEntry {
+            name: "friendster",
+            kind: "Graph",
+            paper_imbalance: 7.68,
+            paper_m: "62.5M",
+            paper_nnz: "3.4B",
+        },
     ]
 }
 

@@ -140,3 +140,23 @@ fn large_pe_count_smoke() {
     let run = run_spmm(&a, &cfg).unwrap();
     assert_eq!(run.report.nprocs, 64);
 }
+
+#[test]
+fn bench_artifact_emits_valid_schema_versioned_json() {
+    // The measured-perf pipeline end to end on the cheapest harness:
+    // run, emit, re-read from disk, re-validate.
+    let dir = std::env::temp_dir().join(format!("sparta_bench_e2e_{}", std::process::id()));
+    let path = sparta::coordinator::bench_artifact("table1", &quiet(-3), &dir).unwrap();
+    assert!(path.ends_with("BENCH_table1.json"));
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = sparta::coordinator::parse_json(&text).unwrap();
+    sparta::coordinator::validate_bench(&doc).unwrap();
+    assert_eq!(
+        doc.get("schema_version").unwrap().as_i64(),
+        Some(sparta::coordinator::BENCH_SCHEMA_VERSION)
+    );
+    assert_eq!(doc.get("artifact").unwrap().as_str(), Some("table1"));
+    let rows = doc.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), suite::table1().len(), "one metrics row per suite matrix");
+    std::fs::remove_dir_all(&dir).ok();
+}

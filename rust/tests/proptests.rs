@@ -7,7 +7,7 @@
 use sparta::algorithms::{SpgemmAlg, SpmmAlg};
 use sparta::coordinator::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
 use sparta::dist::ProcGrid;
-use sparta::fabric::{Fabric, FabricConfig, NetProfile};
+use sparta::fabric::{CHUNK_BYTES, Fabric, FabricConfig, NetProfile, Segment};
 use sparta::matrix::{gen, local_spmm, Coo, Csr, Dense};
 use sparta::testing::check;
 use sparta::util::Rng;
@@ -260,6 +260,124 @@ fn prop_queue_delivers_everything_once() {
             });
             if sums[0] != expect {
                 return Err(format!("sum {} != {}", sums[0], expect));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bulk_and_wordwise_segment_paths_agree() {
+    // The chunk-resolved bulk copy must be byte-for-byte equivalent to
+    // the word-wise path for arbitrary 8-aligned offsets and arbitrary
+    // (including partial-word) lengths, with spans biased to straddle
+    // the chunk boundary.
+    check(
+        "bulk read/write == word-wise read/write",
+        30,
+        0xB111,
+        |rng| {
+            let near_boundary = rng.below(2) == 0;
+            let off = if near_boundary {
+                CHUNK_BYTES - 8 * (1 + rng.below_usize(64))
+            } else {
+                8 * rng.below_usize(1024)
+            };
+            let len = 1 + rng.below_usize(24 * 1024);
+            (off, len, rng.next_u64())
+        },
+        |&(off, len, seed)| {
+            let s = Segment::new(2 * CHUNK_BYTES);
+            s.alloc(2 * CHUNK_BYTES); // commit both chunks
+            let mut rng = Rng::new(seed);
+            let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            // Word-wise write, bulk read.
+            s.write_bytes(off, &data);
+            let mut out = vec![0u8; len];
+            s.read_bytes_bulk(off, &mut out);
+            if out != data {
+                return Err(format!("bulk read mismatch at off {off} len {len}"));
+            }
+            // Bulk write, word-wise read.
+            let data2: Vec<u8> = data.iter().map(|b| b ^ 0x3C).collect();
+            s.write_bytes_bulk(off, &data2);
+            let mut out2 = vec![0u8; len];
+            s.read_bytes(off, &mut out2);
+            if out2 != data2 {
+                return Err(format!("bulk write mismatch at off {off} len {len}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_transfer_virtual_charge_matches_cost_model() {
+    // The bulk wall-clock fast path must not change the *virtual-time*
+    // cost model: a blocking get/put of n bytes to `peer` charges
+    // exactly link(0, peer).xfer_ns(n), and both transfers are counted
+    // as bulk ops with the right byte totals.
+    check(
+        "get/put charge == lat + bytes/bw",
+        12,
+        0xC0DE,
+        |rng| {
+            let nprocs = 2 + rng.below_usize(10); // summit: spans intra + inter node
+            let peer = rng.below_usize(nprocs);
+            let elems = 1 + rng.below_usize(20_000);
+            (nprocs, peer, elems)
+        },
+        |&(nprocs, peer, elems)| {
+            let profile = NetProfile::summit();
+            let f = Fabric::new(FabricConfig {
+                nprocs,
+                profile: profile.clone(),
+                seg_capacity: 8 << 20,
+                pacing: false,
+            });
+            let gp = f.alloc_on::<f32>(peer, elems);
+            let bytes = (elems * 4) as f64;
+            let want = profile.link(0, peer).xfer_ns(bytes);
+            let (times, stats) = f.launch(|pe| {
+                if pe.rank() != 0 {
+                    pe.barrier();
+                    return (0.0, 0.0);
+                }
+                let t0 = pe.now();
+                let _ = pe.get_vec(gp);
+                let t1 = pe.now();
+                pe.put(gp, &vec![0.0f32; elems]);
+                let t2 = pe.now();
+                pe.barrier();
+                (t1 - t0, t2 - t1)
+            });
+            let tol = 1e-6 * want.max(1.0);
+            let (got_get, got_put) = times[0];
+            if (got_get - want).abs() > tol {
+                return Err(format!("get charged {got_get} ns, model says {want}"));
+            }
+            if (got_put - want).abs() > tol {
+                return Err(format!("put charged {got_put} ns, model says {want}"));
+            }
+            // Whole words ride the bulk path; a ragged 4-byte tail (odd
+            // elems) is one word-level RMW per transfer instead.
+            let whole = (elems * 4) & !7;
+            let expect_xfers = if whole > 0 { 2 } else { 0 };
+            if stats[0].n_bulk_xfers != expect_xfers {
+                return Err(format!(
+                    "expected {expect_xfers} bulk transfers, got {}",
+                    stats[0].n_bulk_xfers
+                ));
+            }
+            if stats[0].bytes_bulk != 2.0 * whole as f64 {
+                return Err(format!("bulk bytes {} != {}", stats[0].bytes_bulk, 2.0 * whole as f64));
+            }
+            let expect_tail_ops = if elems % 2 == 1 { 2 } else { 0 };
+            if stats[0].n_word_ops != expect_tail_ops {
+                return Err(format!(
+                    "expected {expect_tail_ops} word ops (tails), got {}",
+                    stats[0].n_word_ops
+                ));
             }
             Ok(())
         },
