@@ -2,11 +2,14 @@
 //! SpGEMM application the paper cites (van Dongen; HipMCL). Each MCL
 //! iteration is: expansion (C = A·A, our distributed SpGEMM), inflation
 //! (entrywise square + column normalize), and pruning — run here with
-//! the expansion on 16 simulated GPUs.
+//! every expansion on ONE session: the fabric and accumulation queues
+//! are set up once and reused across all four iterations (the walk
+//! matrix itself changes between iterations, so it re-enters the
+//! session after the host-side inflation step).
 //!
-//!     cargo run --release --example markov_clustering
-use sparta::algorithms::SpgemmAlg;
-use sparta::coordinator::{run_spgemm, SpgemmConfig};
+//!     cargo run --release --example markov_clustering [-- --smoke]
+use sparta::algorithms::Alg;
+use sparta::coordinator::{Gathered, Session, SessionConfig};
 use sparta::fabric::NetProfile;
 use sparta::matrix::{gen, Csr};
 
@@ -26,18 +29,27 @@ fn inflate(m: &Csr) -> Csr {
 }
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n, coupling) = if smoke { (512, 75) } else { (2048, 300) };
+
     // Block-community graph: MCL should keep mass within blocks.
-    let mut a = gen::block_components(2048, 6, 0.02, 300, 11);
+    let mut a = gen::block_components(n, 6, 0.02, coupling, 11);
     // Add self-loops (standard MCL preprocessing).
-    a = a.add(&Csr::eye(2048));
+    a = a.add(&Csr::eye(n));
     println!("graph: {} vertices, {} edges", a.nrows, a.nnz());
 
+    // One session for all iterations: persistent fabric + queues.
+    let mut sess = Session::new(SessionConfig::new(16, NetProfile::dgx2()));
     for iter in 0..4 {
-        // Expansion on the simulated cluster (verify also gathers C).
-        let mut cfg = SpgemmConfig::new(SpgemmAlg::StationaryC, 16, NetProfile::dgx2());
-        cfg.verify = true;
-        let run = run_spgemm(&a, &cfg)?;
-        let c = run.c.expect("verify=true gathers C");
+        // Expansion on the simulated cluster, verified in-session.
+        let da = sess.load_csr(&a);
+        let run = sess
+            .plan(da, da)
+            .alg(Alg::StationaryC)
+            .verify(true)
+            .label(&format!("expansion {iter}"))
+            .execute()?;
+        let c = run.gathered.and_then(Gathered::into_csr).expect("verify gathers C");
         // Inflation + pruning keep the walk matrix sparse.
         let next = inflate(&c).prune(1e-4);
         println!(
@@ -48,6 +60,10 @@ fn main() -> anyhow::Result<()> {
         );
         a = next;
     }
+    println!(
+        "4 expansions on one fabric ({} launch epochs, queues allocated once)",
+        sess.fabric().epochs()
+    );
     // Count "attractors" (rows whose max entry is the diagonal) as a
     // cluster-structure proxy.
     let mut attractors = 0;

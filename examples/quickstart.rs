@@ -1,24 +1,31 @@
-//! Quickstart: distribute a sparse matrix over 16 simulated GPUs and
-//! run one asynchronous RDMA SpMM, verifying against a single-node
-//! reference.
+//! Quickstart: open a session on 16 simulated GPUs, make a sparse
+//! matrix resident, and run asynchronous RDMA SpMMs against it —
+//! chaining one multiply's output into the next with no gather in
+//! between, and verifying against a single-node reference.
 //!
-//!     cargo run --release --example quickstart
-use sparta::algorithms::SpmmAlg;
-use sparta::coordinator::{run_spmm, SpmmConfig};
+//!     cargo run --release --example quickstart [-- --smoke]
+use sparta::algorithms::Alg;
+use sparta::coordinator::{Session, SessionConfig};
 use sparta::fabric::NetProfile;
 use sparta::matrix::gen;
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let scale = if smoke { 9 } else { 12 };
+
     // A scale-12 R-MAT graph (the kind of matrix GNN workloads see).
-    let a = gen::rmat(12, 8, 0.57, 0.19, 0.19, 42);
+    let a = gen::rmat(scale, 8, 0.57, 0.19, 0.19, 42);
     println!("A: {}x{} with {} nonzeros", a.nrows, a.ncols, a.nnz());
 
-    // Multiply by a 128-column dense feature matrix on a simulated
-    // DGX-2 (16 GPUs, all-to-all NVLink), stationary-C RDMA algorithm.
-    let mut cfg = SpmmConfig::new(SpmmAlg::StationaryC, 16, NetProfile::dgx2(), 128);
-    cfg.verify = true; // compare against single-node reference
-    let run = run_spmm(&a, &cfg)?;
+    // One session = one persistent fabric (simulated DGX-2: 16 GPUs,
+    // all-to-all NVLink) holding resident operands. A is scattered once.
+    let mut sess = Session::new(SessionConfig::new(16, NetProfile::dgx2()));
+    let da = sess.load_csr(&a);
+    let h0 = sess.random_dense(a.ncols, 128, 7);
 
+    // Multiply by a 128-column dense feature matrix, stationary-C RDMA
+    // algorithm, verified against the single-node reference.
+    let run = sess.plan(da, h0).alg(Alg::StationaryC).verify(true).execute()?;
     println!("{}", run.report.row());
     println!(
         "simulated makespan {:.3} ms, {:.1} GFlop/s aggregate, verified OK",
@@ -26,11 +33,15 @@ fn main() -> anyhow::Result<()> {
         run.report.gflops()
     );
 
-    // Try the other algorithms with one line each:
-    for alg in [SpmmAlg::StationaryA, SpmmAlg::LocalityWsC] {
-        let mut cfg = SpmmConfig::new(alg, 16, NetProfile::dgx2(), 128);
-        cfg.verify = true;
-        println!("{}", run_spmm(&a, &cfg)?.report.row());
+    // Chain: the output is already resident, so it feeds the next
+    // multiply directly — no gather / re-scatter round trip.
+    let run2 = sess.plan(da, run.c).alg(Alg::StationaryC).verify(true).execute()?;
+    println!("chained A·(A·H): {}", run2.report.row());
+
+    // Other algorithms are one plan each, against the same resident A.
+    for alg in [Alg::StationaryA, Alg::LocalityWsC] {
+        println!("{}", sess.plan(da, h0).alg(alg).verify(true).execute()?.report.row());
     }
+    println!("{} multiplies on one fabric, zero re-scatters", sess.fabric().epochs());
     Ok(())
 }

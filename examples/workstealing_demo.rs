@@ -1,27 +1,36 @@
 //! Workstealing under pathological imbalance.
 //!
 //! Builds a matrix whose nonzeros concentrate in one tile row (think
-//! nlpkkt160's dense border), then compares the plain stationary-A
-//! algorithm against random and locality-aware workstealing on a
-//! simulated Summit allocation — printing who stole how much and what
-//! it bought.
+//! nlpkkt160's dense border), makes it resident on one session over a
+//! simulated Summit allocation, then compares the plain stationary-A
+//! algorithm against random and locality-aware workstealing — three
+//! plans against the same resident operands, printing who stole how
+//! much and what it bought.
 //!
-//!     cargo run --release --example workstealing_demo
-use sparta::algorithms::SpmmAlg;
-use sparta::coordinator::{run_spmm, SpmmConfig};
+//!     cargo run --release --example workstealing_demo [-- --smoke]
+use sparta::algorithms::Alg;
+use sparta::coordinator::{Session, SessionConfig};
 use sparta::fabric::NetProfile;
 use sparta::matrix::gen;
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n = if smoke { 2048 } else { 8192 };
+
     // KKT-like: banded core + dense coupling border = one hot tile row.
-    let a = gen::kkt_like(8192, 6, 12, 0.6, 7);
+    let a = gen::kkt_like(n, 6, 12, 0.6, 7);
     let imb = sparta::analysis::loadimb::grid_load_imbalance(&a, 10, 10);
     println!("matrix: {}x{}, nnz {}, 10x10 load imbalance {:.2}", a.nrows, a.ncols, a.nnz(), imb);
 
-    for alg in [SpmmAlg::StationaryA, SpmmAlg::RandomWsA, SpmmAlg::LocalityWsC] {
-        let mut cfg = SpmmConfig::new(alg, 24, NetProfile::summit(), 256);
-        cfg.verify = true;
-        let run = run_spmm(&a, &cfg)?;
+    // One session, 24 PEs: A and B scattered once; the reservation
+    // grids the workstealing algorithms need are allocated on first use
+    // and reset between plans.
+    let mut sess = Session::new(SessionConfig::new(24, NetProfile::summit()));
+    let da = sess.load_csr(&a);
+    let db = sess.random_dense(a.ncols, 256, 0x5EED);
+
+    for alg in [Alg::StationaryA, Alg::RandomWs, Alg::LocalityWsC] {
+        let run = sess.plan(da, db).alg(alg).verify(true).execute()?;
         let steals = run.report.steals();
         let own: u64 = run.report.per_rank.iter().map(|s| s.n_own_work).sum();
         println!(

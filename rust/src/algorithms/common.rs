@@ -4,7 +4,7 @@
 
 use std::collections::HashMap;
 
-use crate::dist::{AccQueues, DistCsr, DistDense, ResGrid2D, ResGrid3D};
+use crate::dist::{AccMsg, AccQueues, DistCsr, DistDense, ResGrid2D, ResGrid3D};
 use crate::fabric::{Kind, Pe};
 use crate::matrix::{local_spmm, Coo, Csr, Dense};
 use crate::runtime::TileBackend;
@@ -31,6 +31,11 @@ pub struct SpgemmCtx {
     pub c: DistCsr,
     pub queues: AccQueues,
     pub res2d: Option<ResGrid2D>,
+    /// Local multiply backend. The sparse merge path is native-only
+    /// today, so this is carried for config parity with [`SpmmCtx`] (one
+    /// field set behind the unified plan API) and for future AOT sparse
+    /// kernels.
+    pub backend: TileBackend,
 }
 
 /// Overheads of a bulk-synchronous library baseline, applied on top of
@@ -200,11 +205,51 @@ pub fn local_spmm_charged(pe: &Pe, backend: &TileBackend, a: &Csr, b: &Dense, c:
     pe.charge_kernel(local_spmm::spmm_flops(a, b.ncols), local_spmm::spmm_bytes(a, b.ncols));
 }
 
-/// Drain this PE's accumulation queue (SpMM flavor): fetch each dense
-/// partial, accumulate, record. Returns how many were applied.
-/// `wait=false` only consumes messages that have arrived in virtual
-/// time (non-blocking interleave); `wait=true` also consumes future
-/// messages, clamping the clock (termination wait).
+/// How a drained [`AccMsg`] is applied to this rank's local
+/// accumulators — implemented by the dense (SpMM) and sparse (SpGEMM)
+/// accumulator flavors so the queue-drain loop is written once.
+pub trait AccSink {
+    fn apply(&mut self, pe: &Pe, msg: &AccMsg);
+}
+
+impl AccSink for DenseAccumulators {
+    fn apply(&mut self, pe: &Pe, msg: &AccMsg) {
+        let part = msg.fetch_dense(pe);
+        self.accumulate(pe, msg.ti as usize, msg.tj as usize, &part, Kind::Acc);
+    }
+}
+
+impl AccSink for SparseAccumulators {
+    fn apply(&mut self, pe: &Pe, msg: &AccMsg) {
+        let part = msg.fetch_sparse(pe);
+        self.push(msg.ti as usize, msg.tj as usize, part);
+    }
+}
+
+/// Drain this PE's accumulation queue: fetch each partial, apply it to
+/// the local accumulators, record the contribution. Returns how many
+/// were applied. `wait=false` only consumes messages that have arrived
+/// in virtual time (non-blocking interleave); `wait=true` also consumes
+/// future messages, clamping the clock (termination wait).
+pub fn drain_queue(
+    pe: &Pe,
+    queues: &AccQueues,
+    sink: &mut impl AccSink,
+    pending: &mut PendingTracker,
+    wait: bool,
+) -> usize {
+    let mut n = 0;
+    loop {
+        let msg = if wait { queues.pop_wait(pe) } else { queues.try_pop(pe) };
+        let Some(msg) = msg else { break };
+        sink.apply(pe, &msg);
+        pending.record(msg.ti as usize, msg.tj as usize);
+        n += 1;
+    }
+    n
+}
+
+/// Drain this PE's accumulation queue (SpMM flavor).
 pub fn drain_spmm_queue(
     pe: &Pe,
     ctx: &SpmmCtx,
@@ -212,16 +257,7 @@ pub fn drain_spmm_queue(
     pending: &mut PendingTracker,
     wait: bool,
 ) -> usize {
-    let mut n = 0;
-    loop {
-        let msg = if wait { ctx.queues.pop_wait(pe) } else { ctx.queues.try_pop(pe) };
-        let Some(msg) = msg else { break };
-        let part = msg.fetch_dense(pe);
-        acc.accumulate(pe, msg.ti as usize, msg.tj as usize, &part, Kind::Acc);
-        pending.record(msg.ti as usize, msg.tj as usize);
-        n += 1;
-    }
-    n
+    drain_queue(pe, &ctx.queues, acc, pending, wait)
 }
 
 /// Drain this PE's accumulation queue (SpGEMM flavor).
@@ -232,16 +268,7 @@ pub fn drain_spgemm_queue(
     pending: &mut PendingTracker,
     wait: bool,
 ) -> usize {
-    let mut n = 0;
-    loop {
-        let msg = if wait { ctx.queues.pop_wait(pe) } else { ctx.queues.try_pop(pe) };
-        let Some(msg) = msg else { break };
-        let part = msg.fetch_sparse(pe);
-        acc.push(msg.ti as usize, msg.tj as usize, part);
-        pending.record(msg.ti as usize, msg.tj as usize);
-        n += 1;
-    }
-    n
+    drain_queue(pe, &ctx.queues, acc, pending, wait)
 }
 
 /// Spin until `step` reports completion. `step` should drain the

@@ -11,10 +11,154 @@ pub mod spgemm;
 pub mod spmm;
 pub mod spmm_ws;
 
-pub use common::{LibOverhead, SpgemmCtx, SpmmCtx};
+pub use common::{AccSink, LibOverhead, SpgemmCtx, SpmmCtx};
 pub use spmm_ws::Stationary;
 
 use crate::fabric::Pe;
+
+/// The two multiply shapes behind the unified plan API: a session
+/// derives the op from its operand kinds (sparse×dense → SpMM,
+/// sparse×sparse → SpGEMM).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Sparse × dense (C dense).
+    Spmm,
+    /// Sparse × sparse (C sparse).
+    Spgemm,
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Spmm => "spmm",
+            Op::Spgemm => "spgemm",
+        }
+    }
+}
+
+/// Unified algorithm selector over both multiply shapes — the single
+/// `Alg` surface of the session plan API. Each variant resolves to the
+/// per-op [`SpmmAlg`] / [`SpgemmAlg`] implementation when one exists;
+/// [`Alg::spmm`] / [`Alg::spgemm`] return `None` where the paper has no
+/// such variant (e.g. stationary-B SpGEMM, PETSc-like SpMM).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Alg {
+    StationaryC,
+    StationaryA,
+    StationaryB,
+    /// Stationary C with the §3.3 optimizations removed (ablation).
+    StationaryCUnopt,
+    /// Random workstealing over a stationary-A distribution.
+    RandomWs,
+    LocalityWsC,
+    LocalityWsA,
+    SummaMpi,
+    SummaCombBlas,
+    SummaPetsc,
+}
+
+impl Alg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Alg::StationaryC => "S-C RDMA",
+            Alg::StationaryA => "S-A RDMA",
+            Alg::StationaryB => "S-B RDMA",
+            Alg::StationaryCUnopt => "S-C RDMA (unopt)",
+            Alg::RandomWs => "R WS S-A RDMA",
+            Alg::LocalityWsC => "LA WS S-C RDMA",
+            Alg::LocalityWsA => "LA WS S-A RDMA",
+            Alg::SummaMpi => "BS SUMMA MPI",
+            Alg::SummaCombBlas => "CombBLAS GPU",
+            Alg::SummaPetsc => "PETSc GPU",
+        }
+    }
+
+    /// CLI spelling (union of the per-op spellings).
+    pub fn from_name(s: &str) -> Option<Alg> {
+        Some(match s {
+            "sc" | "stationary-c" => Alg::StationaryC,
+            "sa" | "stationary-a" => Alg::StationaryA,
+            "sb" | "stationary-b" => Alg::StationaryB,
+            "sc-unopt" => Alg::StationaryCUnopt,
+            "rws" | "random-ws" => Alg::RandomWs,
+            "lws-c" | "locality-ws-c" => Alg::LocalityWsC,
+            "lws-a" | "locality-ws-a" => Alg::LocalityWsA,
+            "summa" | "mpi" => Alg::SummaMpi,
+            "comblas" => Alg::SummaCombBlas,
+            "petsc" => Alg::SummaPetsc,
+            _ => return None,
+        })
+    }
+
+    /// The SpMM implementation of this algorithm, if the paper has one.
+    pub fn spmm(&self) -> Option<SpmmAlg> {
+        Some(match self {
+            Alg::StationaryC => SpmmAlg::StationaryC,
+            Alg::StationaryA => SpmmAlg::StationaryA,
+            Alg::StationaryB => SpmmAlg::StationaryB,
+            Alg::StationaryCUnopt => SpmmAlg::StationaryCUnopt,
+            Alg::RandomWs => SpmmAlg::RandomWsA,
+            Alg::LocalityWsC => SpmmAlg::LocalityWsC,
+            Alg::LocalityWsA => SpmmAlg::LocalityWsA,
+            Alg::SummaMpi => SpmmAlg::SummaMpi,
+            Alg::SummaCombBlas => SpmmAlg::SummaCombBlas,
+            Alg::SummaPetsc => return None,
+        })
+    }
+
+    /// The SpGEMM implementation of this algorithm, if the paper has one.
+    pub fn spgemm(&self) -> Option<SpgemmAlg> {
+        Some(match self {
+            Alg::StationaryC => SpgemmAlg::StationaryC,
+            Alg::StationaryA => SpgemmAlg::StationaryA,
+            Alg::RandomWs => SpgemmAlg::RandomWsA,
+            Alg::SummaMpi => SpgemmAlg::SummaMpi,
+            Alg::SummaPetsc => SpgemmAlg::SummaPetsc,
+            _ => return None,
+        })
+    }
+
+    /// Is there an implementation for this multiply shape?
+    pub fn supports(&self, op: Op) -> bool {
+        match op {
+            Op::Spmm => self.spmm().is_some(),
+            Op::Spgemm => self.spgemm().is_some(),
+        }
+    }
+
+    /// Does this algorithm need a perfect-square process count?
+    pub fn needs_square(&self) -> bool {
+        matches!(self, Alg::SummaMpi | Alg::SummaCombBlas | Alg::SummaPetsc)
+    }
+}
+
+impl From<SpmmAlg> for Alg {
+    fn from(a: SpmmAlg) -> Alg {
+        match a {
+            SpmmAlg::StationaryC => Alg::StationaryC,
+            SpmmAlg::StationaryA => Alg::StationaryA,
+            SpmmAlg::StationaryB => Alg::StationaryB,
+            SpmmAlg::StationaryCUnopt => Alg::StationaryCUnopt,
+            SpmmAlg::RandomWsA => Alg::RandomWs,
+            SpmmAlg::LocalityWsC => Alg::LocalityWsC,
+            SpmmAlg::LocalityWsA => Alg::LocalityWsA,
+            SpmmAlg::SummaMpi => Alg::SummaMpi,
+            SpmmAlg::SummaCombBlas => Alg::SummaCombBlas,
+        }
+    }
+}
+
+impl From<SpgemmAlg> for Alg {
+    fn from(a: SpgemmAlg) -> Alg {
+        match a {
+            SpgemmAlg::StationaryC => Alg::StationaryC,
+            SpgemmAlg::StationaryA => Alg::StationaryA,
+            SpgemmAlg::RandomWsA => Alg::RandomWs,
+            SpgemmAlg::SummaMpi => Alg::SummaMpi,
+            SpgemmAlg::SummaPetsc => Alg::SummaPetsc,
+        }
+    }
+}
 
 /// SpMM algorithm selector — the legend entries of Figures 3 and 4.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -191,5 +335,36 @@ mod tests {
         assert!(SpmmAlg::SummaMpi.needs_square());
         assert!(!SpmmAlg::StationaryC.needs_square());
         assert!(SpgemmAlg::SummaPetsc.needs_square());
+    }
+
+    #[test]
+    fn unified_alg_resolves_per_op() {
+        assert_eq!(Alg::StationaryC.spmm(), Some(SpmmAlg::StationaryC));
+        assert_eq!(Alg::StationaryC.spgemm(), Some(SpgemmAlg::StationaryC));
+        assert_eq!(Alg::RandomWs.spmm(), Some(SpmmAlg::RandomWsA));
+        assert_eq!(Alg::RandomWs.spgemm(), Some(SpgemmAlg::RandomWsA));
+        assert_eq!(Alg::SummaPetsc.spmm(), None);
+        assert_eq!(Alg::LocalityWsC.spgemm(), None);
+        assert!(Alg::SummaCombBlas.supports(Op::Spmm));
+        assert!(!Alg::SummaCombBlas.supports(Op::Spgemm));
+    }
+
+    #[test]
+    fn unified_alg_roundtrips_with_per_op_selectors() {
+        // Every per-op variant maps into the unified surface and back.
+        for &a in SpmmAlg::all() {
+            let u: Alg = a.into();
+            assert_eq!(u.spmm(), Some(a));
+            assert_eq!(u.name(), a.name());
+            assert_eq!(u.needs_square(), a.needs_square());
+        }
+        for &a in SpgemmAlg::all() {
+            let u: Alg = a.into();
+            assert_eq!(u.spgemm(), Some(a));
+            assert_eq!(u.name(), a.name());
+            assert_eq!(u.needs_square(), a.needs_square());
+        }
+        assert_eq!(Alg::from_name("petsc"), Some(Alg::SummaPetsc));
+        assert_eq!(Alg::from_name("nope"), None);
     }
 }

@@ -1,20 +1,41 @@
-//! The experiment driver: builds a fabric for the requested machine
-//! profile, distributes the operands, launches one thread per PE running
-//! the selected algorithm, verifies the result, and returns a
-//! [`Report`] — the `mpirun + srun` analog for the simulated cluster.
+//! One-shot experiment drivers — thin back-compat wrappers over the
+//! session engine (`coordinator::session`).
+//!
+//! `run_spmm` / `run_spgemm` keep the original "mpirun one experiment"
+//! shape: build a throwaway [`Session`], load the operands, execute one
+//! plan, and return its [`Report`]. Workloads that multiply against the
+//! same operands repeatedly (GNN layers, Markov clustering) should hold
+//! a [`Session`] directly and chain plans instead — these wrappers pay
+//! a full fabric + scatter per call, by design.
 
-use std::time::Instant;
+use anyhow::{bail, Result};
 
-use anyhow::{bail, Context, Result};
-
-use crate::algorithms::{SpgemmAlg, SpgemmCtx, SpmmAlg, SpmmCtx};
-use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
-use crate::fabric::{Fabric, FabricConfig, NetProfile};
-use crate::matrix::{local_spmm, Csr, Dense};
+use crate::algorithms::{SpgemmAlg, SpmmAlg};
+use crate::fabric::NetProfile;
+use crate::matrix::{Csr, Dense};
 use crate::runtime::TileBackend;
-use crate::util::Rng;
 
 use super::report::Report;
+use super::session::{Gathered, Session, SessionConfig};
+
+/// The one shared config translation: both driver configs describe the
+/// same session surface minus the per-op extras.
+fn session_config(
+    nprocs: usize,
+    profile: &NetProfile,
+    queue_cap: usize,
+    seg_bytes: usize,
+    backend: &TileBackend,
+) -> SessionConfig {
+    SessionConfig {
+        nprocs,
+        profile: profile.clone(),
+        queue_cap,
+        seg_bytes,
+        backend: backend.clone(),
+        pacing: true,
+    }
+}
 
 /// Configuration for one SpMM experiment run.
 #[derive(Clone)]
@@ -49,6 +70,10 @@ impl SpmmConfig {
             backend: TileBackend::Native,
         }
     }
+
+    fn session(&self) -> SessionConfig {
+        session_config(self.nprocs, &self.profile, self.queue_cap, self.seg_bytes, &self.backend)
+    }
 }
 
 /// Result of a SpMM run.
@@ -58,68 +83,25 @@ pub struct SpmmRun {
     pub c: Option<Dense>,
 }
 
-fn make_grid(nprocs: usize, needs_square: bool) -> Result<ProcGrid> {
-    if needs_square {
-        ProcGrid::square(nprocs).with_context(|| {
-            format!("this algorithm requires a perfect-square process count, got {nprocs}")
-        })
-    } else {
-        Ok(ProcGrid::for_nprocs(nprocs))
-    }
-}
-
 /// Run one distributed SpMM: C = A · B with B = random dense
 /// (`a.ncols × n_cols`, seeded).
 pub fn run_spmm(a: &Csr, cfg: &SpmmConfig) -> Result<SpmmRun> {
     if a.nrows != a.ncols {
         bail!("expected a square sparse matrix, got {}x{}", a.nrows, a.ncols);
     }
-    let grid = make_grid(cfg.nprocs, cfg.alg.needs_square())?;
-    let fabric = Fabric::new(FabricConfig {
-        nprocs: cfg.nprocs,
-        profile: cfg.profile.clone(),
-        seg_capacity: cfg.seg_bytes,
-        pacing: true,
-    });
-
-    let mut rng = Rng::new(cfg.seed);
-    let b = Dense::random(a.ncols, cfg.n_cols, &mut rng);
-
-    let da = DistCsr::scatter(&fabric, a, grid);
-    let db = DistDense::scatter(&fabric, &b, grid);
-    let dc = DistDense::zeros(&fabric, a.nrows, cfg.n_cols, grid);
-    let queues = AccQueues::create(&fabric, cfg.queue_cap);
-    let ctx = SpmmCtx {
-        a: da,
-        b: db,
-        c: dc,
-        queues,
-        res2d: cfg.alg.needs_res2d().then(|| ResGrid2D::create(&fabric, grid)),
-        res3d: cfg.alg.needs_res3d().then(|| ResGrid3D::create(&fabric, grid)),
-        backend: cfg.backend.clone(),
-    };
-
-    let alg = cfg.alg;
-    let t0 = Instant::now();
-    let (_, stats) = fabric.launch(|pe| alg.run(pe, &ctx));
-    let wall_ns = t0.elapsed().as_nanos() as f64;
-
-    let report = Report::new(alg.name(), cfg.profile.name, stats, wall_ns);
-    let c = if cfg.verify {
-        let got = ctx.c.gather(&fabric);
-        let want = local_spmm::spmm(a, &b);
-        let err = got.rel_err(&want);
-        if err > 1e-4 {
-            bail!("verification failed for {}: rel err {err:.3e}", alg.name());
-        }
-        Some(got)
-    } else {
-        None
-    };
-    Ok(SpmmRun { report, c })
+    let mut sess = Session::new(cfg.session());
+    let da = sess.load_csr(a);
+    let db = sess.random_dense(a.ncols, cfg.n_cols, cfg.seed);
+    let run = sess.plan(da, db).alg(cfg.alg.into()).verify(cfg.verify).execute()?;
+    let c = run.gathered.and_then(Gathered::into_dense);
+    Ok(SpmmRun { report: run.report, c })
 }
 
 /// Configuration for one SpGEMM experiment run (C = A·A, like §6.2).
+/// Field-for-field parity with [`SpmmConfig`] (minus `n_cols`): the
+/// unified plan API exposes one configuration surface, so `seed` and
+/// `backend` exist here too even though C = A·A has no random operand
+/// and the sparse merge path is native-only today.
 #[derive(Clone)]
 pub struct SpgemmConfig {
     pub alg: SpgemmAlg,
@@ -127,12 +109,31 @@ pub struct SpgemmConfig {
     pub profile: NetProfile,
     pub queue_cap: usize,
     pub seg_bytes: usize,
+    /// Seed for randomized operands (unused by the C = A·A driver;
+    /// present for config parity with [`SpmmConfig`]).
+    pub seed: u64,
     pub verify: bool,
+    /// Local multiply backend handed to the session (reserved for AOT
+    /// sparse kernels).
+    pub backend: TileBackend,
 }
 
 impl SpgemmConfig {
     pub fn new(alg: SpgemmAlg, nprocs: usize, profile: NetProfile) -> Self {
-        SpgemmConfig { alg, nprocs, profile, queue_cap: 8192, seg_bytes: 512 << 20, verify: false }
+        SpgemmConfig {
+            alg,
+            nprocs,
+            profile,
+            queue_cap: 8192,
+            seg_bytes: 512 << 20,
+            seed: 0x5EED,
+            verify: false,
+            backend: TileBackend::Native,
+        }
+    }
+
+    fn session(&self) -> SessionConfig {
+        session_config(self.nprocs, &self.profile, self.queue_cap, self.seg_bytes, &self.backend)
     }
 }
 
@@ -146,44 +147,11 @@ pub fn run_spgemm(a: &Csr, cfg: &SpgemmConfig) -> Result<SpgemmRun> {
     if a.nrows != a.ncols {
         bail!("C = A·A needs square A, got {}x{}", a.nrows, a.ncols);
     }
-    let grid = make_grid(cfg.nprocs, cfg.alg.needs_square())?;
-    let fabric = Fabric::new(FabricConfig {
-        nprocs: cfg.nprocs,
-        profile: cfg.profile.clone(),
-        seg_capacity: cfg.seg_bytes,
-        pacing: true,
-    });
-
-    let da = DistCsr::scatter(&fabric, a, grid);
-    let db = da.clone(); // C = A·A shares one distributed operand
-    let dc = DistCsr::zeros(&fabric, a.nrows, a.ncols, grid);
-    let queues = AccQueues::create(&fabric, cfg.queue_cap);
-    let ctx = SpgemmCtx {
-        a: da,
-        b: db,
-        c: dc,
-        queues,
-        res2d: cfg.alg.needs_res2d().then(|| ResGrid2D::create(&fabric, grid)),
-    };
-
-    let alg = cfg.alg;
-    let t0 = Instant::now();
-    let (_, stats) = fabric.launch(|pe| alg.run(pe, &ctx));
-    let wall_ns = t0.elapsed().as_nanos() as f64;
-
-    let report = Report::new(alg.name(), cfg.profile.name, stats, wall_ns);
-    let c = if cfg.verify {
-        let got = ctx.c.gather(&fabric);
-        let want = crate::matrix::local_spgemm::spgemm(a, a).c;
-        let err = got.to_dense().rel_err(&want.to_dense());
-        if err > 1e-4 {
-            bail!("verification failed for {}: rel err {err:.3e}", alg.name());
-        }
-        Some(got)
-    } else {
-        None
-    };
-    Ok(SpgemmRun { report, c })
+    let mut sess = Session::new(cfg.session());
+    let da = sess.load_csr(a); // C = A·A shares one resident operand
+    let run = sess.plan(da, da).alg(cfg.alg.into()).verify(cfg.verify).execute()?;
+    let c = run.gathered.and_then(Gathered::into_csr);
+    Ok(SpgemmRun { report: run.report, c })
 }
 
 #[cfg(test)]
@@ -230,5 +198,12 @@ mod tests {
         cfg.verify = true;
         cfg.seg_bytes = 32 << 20;
         run_spmm(&a, &cfg).unwrap();
+    }
+
+    #[test]
+    fn spgemm_config_has_spmm_parity_fields() {
+        let cfg = SpgemmConfig::new(SpgemmAlg::StationaryC, 4, NetProfile::dgx2());
+        assert_eq!(cfg.seed, 0x5EED);
+        assert!(matches!(cfg.backend, TileBackend::Native));
     }
 }

@@ -17,6 +17,7 @@ use crate::util::fmt_ns;
 
 use super::driver::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
 use super::report::{BenchDoc, Report};
+use super::session::{Session, SessionConfig};
 
 /// Workload downscaling knob: 0 = default analog sizes, negative =
 /// smaller (benches use -2 for speed).
@@ -190,6 +191,23 @@ pub struct ScalingRow {
     pub report: Report,
 }
 
+/// Session config for an algorithm sweep: every algorithm's outputs and
+/// published partials bump-allocate into the *same* per-PE segments
+/// (nothing is reclaimed until the session drops), so the sweep gets 8×
+/// a one-shot run's virtual capacity — comfortably more than the old
+/// per-run 512 MiB fabrics summed over every algorithm in the sweep.
+/// Chunks are committed lazily, so unwritten capacity costs a pointer
+/// array per PE, not memory.
+fn sweep_session(nprocs: usize, profile: &NetProfile) -> SessionConfig {
+    let mut cfg = SessionConfig::new(nprocs, profile.clone());
+    cfg.seg_bytes = 4 << 30;
+    cfg
+}
+
+/// One [`Session`] per (matrix, N, p): the operands are scattered once
+/// and stay resident while every algorithm multiplies against them —
+/// the sweep itself now exercises the plan-reuse path instead of
+/// rebuilding a fabric per data point.
 fn spmm_sweep(
     opts: &ExpOpts,
     profile: &NetProfile,
@@ -209,14 +227,16 @@ fn spmm_sweep(
                 profile.name
             );
             p(opts, row);
-            for &alg in algs {
-                for &np in gpu_counts {
-                    if alg.needs_square() && crate::dist::ProcGrid::square(np).is_none() {
+            for &np in gpu_counts {
+                let mut sess = Session::new(sweep_session(np, profile));
+                let da = sess.load_csr(&a);
+                let db = sess.random_dense(a.ncols, n, 0x5EED);
+                for &alg in algs {
+                    if alg.needs_square() && !sess.grid().is_one_to_one() {
                         continue;
                     }
-                    let mut cfg = SpmmConfig::new(alg, np, profile.clone(), n);
-                    cfg.verify = opts.verify;
-                    let run = run_spmm(&a, &cfg)?;
+                    let run =
+                        sess.plan(da, db).alg(alg.into()).verify(opts.verify).execute()?;
                     let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
                         alg.name(),
@@ -289,14 +309,17 @@ pub fn fig5(opts: &ExpOpts) -> Result<Vec<ScalingRow>> {
         for &mname in *matrices {
             let a = suite::analog_scaled(mname, opts.scale_shift);
             p(opts, format!("  {mname} (m={} nnz={})", a.nrows, a.nnz()));
-            for &alg in SpgemmAlg::all() {
-                for &np in *gpus {
-                    if alg.needs_square() && crate::dist::ProcGrid::square(np).is_none() {
+            for &np in *gpus {
+                // One session per (matrix, p): A scattered once, resident
+                // for every algorithm's C = A·A.
+                let mut sess = Session::new(sweep_session(np, profile));
+                let da = sess.load_csr(&a);
+                for &alg in SpgemmAlg::all() {
+                    if alg.needs_square() && !sess.grid().is_one_to_one() {
                         continue;
                     }
-                    let mut cfg = SpgemmConfig::new(alg, np, profile.clone());
-                    cfg.verify = opts.verify;
-                    let run = run_spgemm(&a, &cfg)?;
+                    let run =
+                        sess.plan(da, da).alg(alg.into()).verify(opts.verify).execute()?;
                     let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
                         alg.name(),

@@ -1,11 +1,21 @@
-//! Coordinator: experiment configuration, the thread-per-PE launcher,
-//! and run reports — the harness every example and bench goes through.
+//! Coordinator: the session-based multiply engine, experiment
+//! harnesses, and run reports — the layer every example, bench, and
+//! test goes through.
+//!
+//! The public multiply API is [`Session`] + [`MultiplyPlan`] (see
+//! `coordinator::session`); `run_spmm` / `run_spgemm` remain as thin
+//! one-shot wrappers over a throwaway session.
 
 pub mod driver;
 pub mod experiments;
 pub mod report;
+pub mod session;
 pub mod testutil;
 
 pub use driver::{run_spgemm, run_spmm, SpgemmConfig, SpgemmRun, SpmmConfig, SpmmRun};
 pub use experiments::{bench_artifact, BENCH_ARTIFACTS};
 pub use report::{parse_json, validate_bench, BenchDoc, Jv, Report, BENCH_SCHEMA_VERSION};
+pub use session::{
+    Gathered, LedgerEntry, MultiplyPlan, MultiplyRun, OperandId, Session, SessionConfig,
+    VERIFY_TOL,
+};

@@ -1,0 +1,785 @@
+//! The session-based multiply engine — the public API the paper's
+//! workloads actually need.
+//!
+//! The paper's core claim is that one-sided RDMA lets GPUs keep
+//! operands *resident* in symmetric memory and multiply asynchronously
+//! without bulk-synchronous setup/teardown. A [`Session`] makes that
+//! first-class: it owns one long-lived [`Fabric`] + [`ProcGrid`] and a
+//! table of resident distributed operands named by [`OperandId`]
+//! handles. Operands enter the session once ([`Session::load_csr`],
+//! [`Session::load_dense`], [`Session::zeros_csr`], …) or are produced
+//! as outputs of prior multiplies — so C of one multiply chains
+//! directly as A or B of the next with **no gather / re-scatter round
+//! trip**, the access pattern of GNN layer stacks and Markov-clustering
+//! iterations.
+//!
+//! One multiply is described by a [`MultiplyPlan`] builder:
+//!
+//! ```no_run
+//! use sparta::algorithms::Alg;
+//! use sparta::coordinator::{Session, SessionConfig};
+//! use sparta::fabric::NetProfile;
+//! use sparta::matrix::gen;
+//!
+//! let mut sess = Session::new(SessionConfig::new(16, NetProfile::dgx2()));
+//! let a = sess.load_csr(&gen::rmat(10, 8, 0.57, 0.19, 0.19, 42));
+//! let h0 = sess.random_dense(1 << 10, 128, 7);
+//! let run = sess.plan(a, h0).alg(Alg::StationaryC).verify(true).execute().unwrap();
+//! let next = sess.plan(a, run.c).execute().unwrap(); // chain: C is B of the next layer
+//! println!("{}", next.report.row());
+//! ```
+//!
+//! The multiply *shape* ([`Op`]) is derived from the operand kinds
+//! (sparse×dense → SpMM, sparse×sparse → SpGEMM) and the unified
+//! [`Alg`] selector resolves to the per-op implementation — one surface
+//! instead of the old duplicated `SpmmConfig`/`SpgemmConfig` stacks
+//! (which survive as thin wrappers in `coordinator::driver`).
+//!
+//! Queues and reservation grids are allocated **once per session** and
+//! reset — not reallocated — between runs; each [`Fabric::launch`] is a
+//! fresh *stats epoch* (per-PE clocks and counters start from zero), so
+//! per-run [`Report`]s never double-count earlier runs. Every report is
+//! also accumulated into a session-level ledger that
+//! [`Session::bench_doc`] emits as one BENCH document.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::algorithms::{Alg, Op, SpgemmCtx, SpmmCtx};
+use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
+use crate::fabric::{Fabric, FabricConfig, NetProfile};
+use crate::matrix::{local_spgemm, local_spmm, Csr, Dense};
+use crate::runtime::TileBackend;
+use crate::util::Rng;
+
+use super::report::{BenchDoc, Report};
+
+/// Relative-error tolerance for distributed-vs-reference verification.
+pub const VERIFY_TOL: f64 = 1e-4;
+
+/// The one verification gate: every executed plan (and therefore the
+/// back-compat `run_spmm` / `run_spgemm` drivers) funnels through here.
+fn check_verified(alg: &str, rel_err: f64) -> Result<()> {
+    ensure!(rel_err <= VERIFY_TOL, "verification failed for {alg}: rel err {rel_err:.3e}");
+    Ok(())
+}
+
+/// Session construction parameters. One session = one fabric, one
+/// process grid, one backend, shared by every plan executed on it.
+#[derive(Clone)]
+pub struct SessionConfig {
+    /// Number of simulated PEs (GPUs).
+    pub nprocs: usize,
+    /// Cost model / topology.
+    pub profile: NetProfile,
+    /// Accumulation queue capacity per PE (allocated once, reset
+    /// between runs).
+    pub queue_cap: usize,
+    /// Symmetric heap bytes per PE.
+    pub seg_bytes: usize,
+    /// Local multiply backend (native Rust kernel or AOT PJRT kernel)
+    /// used by every plan on this session.
+    pub backend: TileBackend,
+    /// Pace PE threads to virtual time (see `FabricConfig::pacing`).
+    pub pacing: bool,
+}
+
+impl SessionConfig {
+    pub fn new(nprocs: usize, profile: NetProfile) -> Self {
+        SessionConfig {
+            nprocs,
+            profile,
+            queue_cap: 8192,
+            seg_bytes: 512 << 20,
+            backend: TileBackend::Native,
+            pacing: true,
+        }
+    }
+}
+
+/// Handle to an operand resident in a session's symmetric memory.
+/// Valid only on the session that issued it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OperandId(usize);
+
+enum OperandData {
+    Csr(DistCsr),
+    Dense(DistDense),
+}
+
+/// One completed run in the session ledger.
+pub struct LedgerEntry {
+    pub label: String,
+    /// Workload (matrix) name recorded in BENCH rows — set via
+    /// [`MultiplyPlan::matrix`], `"session"` when unset.
+    pub matrix: String,
+    /// Dense-operand width of the run (0 for SpGEMM runs).
+    pub n_cols: usize,
+    pub report: Report,
+}
+
+/// Host copy of an output captured during verification.
+pub enum Gathered {
+    Dense(Dense),
+    Csr(Csr),
+}
+
+impl Gathered {
+    pub fn into_dense(self) -> Option<Dense> {
+        match self {
+            Gathered::Dense(d) => Some(d),
+            Gathered::Csr(_) => None,
+        }
+    }
+
+    pub fn into_csr(self) -> Option<Csr> {
+        match self {
+            Gathered::Csr(c) => Some(c),
+            Gathered::Dense(_) => None,
+        }
+    }
+}
+
+/// Result of one executed [`MultiplyPlan`]: the output stays resident
+/// (chain it into the next plan); gather it explicitly when host-side
+/// values are needed.
+pub struct MultiplyRun {
+    /// The resident output operand.
+    pub c: OperandId,
+    pub report: Report,
+    /// Host copy of C captured by the verification pass (`None` when
+    /// the plan ran without `verify`) — saves callers a second gather.
+    pub gathered: Option<Gathered>,
+}
+
+/// A session: persistent fabric, resident operands, per-session
+/// accumulation queues and reservation grids, and a report ledger.
+pub struct Session {
+    fabric: Arc<Fabric>,
+    grid: ProcGrid,
+    backend: TileBackend,
+    queue_cap: usize,
+    queues: Option<AccQueues>,
+    res2d: Option<ResGrid2D>,
+    res3d: Option<ResGrid3D>,
+    operands: Vec<OperandData>,
+    /// Lazily-populated host copies of operands, keyed by operand index
+    /// — verification against the same resident inputs gathers each of
+    /// them once per session, not once per run. Entries are invalidated
+    /// whenever an operand is written (run output, rezero).
+    host_cache: HashMap<usize, Gathered>,
+    /// Single-node reference products keyed by (a, b) operand indices —
+    /// verifying several algorithms against the same residents computes
+    /// the reference once. Invalidated with the operands it derives from.
+    ref_cache: HashMap<(usize, usize), Gathered>,
+    ledger: Vec<LedgerEntry>,
+}
+
+impl Session {
+    pub fn new(cfg: SessionConfig) -> Session {
+        let grid = ProcGrid::for_nprocs(cfg.nprocs);
+        let fabric = Fabric::new(FabricConfig {
+            nprocs: cfg.nprocs,
+            profile: cfg.profile,
+            seg_capacity: cfg.seg_bytes,
+            pacing: cfg.pacing,
+        });
+        Session {
+            fabric,
+            grid,
+            backend: cfg.backend,
+            queue_cap: cfg.queue_cap,
+            queues: None,
+            res2d: None,
+            res3d: None,
+            operands: Vec::new(),
+            host_cache: HashMap::new(),
+            ref_cache: HashMap::new(),
+            ledger: Vec::new(),
+        }
+    }
+
+    /// The session's fabric (stats epochs, setup-traffic counters).
+    pub fn fabric(&self) -> &Arc<Fabric> {
+        &self.fabric
+    }
+
+    pub fn grid(&self) -> ProcGrid {
+        self.grid
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.grid.nprocs
+    }
+
+    /// Reports of every run executed on this session, in order.
+    pub fn ledger(&self) -> &[LedgerEntry] {
+        &self.ledger
+    }
+
+    // ---------------------------------------------------------------
+    // Operand table
+    // ---------------------------------------------------------------
+
+    fn insert(&mut self, d: OperandData) -> OperandId {
+        self.operands.push(d);
+        OperandId(self.operands.len() - 1)
+    }
+
+    /// Scatter a sparse matrix into session-resident tiles.
+    pub fn load_csr(&mut self, m: &Csr) -> OperandId {
+        self.insert(OperandData::Csr(DistCsr::scatter(&self.fabric, m, self.grid)))
+    }
+
+    /// Scatter a dense matrix into session-resident tiles.
+    pub fn load_dense(&mut self, m: &Dense) -> OperandId {
+        self.insert(OperandData::Dense(DistDense::scatter(&self.fabric, m, self.grid)))
+    }
+
+    /// All-zero resident sparse operand.
+    pub fn zeros_csr(&mut self, nrows: usize, ncols: usize) -> OperandId {
+        self.insert(OperandData::Csr(DistCsr::zeros(&self.fabric, nrows, ncols, self.grid)))
+    }
+
+    /// All-zero resident dense operand.
+    pub fn zeros_dense(&mut self, nrows: usize, ncols: usize) -> OperandId {
+        self.insert(OperandData::Dense(DistDense::zeros(&self.fabric, nrows, ncols, self.grid)))
+    }
+
+    /// Seeded random resident dense operand (the B of the paper's SpMM
+    /// sweeps).
+    pub fn random_dense(&mut self, nrows: usize, ncols: usize, seed: u64) -> OperandId {
+        let mut rng = Rng::new(seed);
+        let b = Dense::random(nrows, ncols, &mut rng);
+        self.load_dense(&b)
+    }
+
+    fn operand(&self, id: OperandId) -> Result<&OperandData> {
+        self.operands.get(id.0).with_context(|| format!("unknown operand id {}", id.0))
+    }
+
+    fn csr(&self, id: OperandId) -> Result<&DistCsr> {
+        match self.operand(id)? {
+            OperandData::Csr(m) => Ok(m),
+            OperandData::Dense(_) => bail!("operand {} is dense, expected sparse", id.0),
+        }
+    }
+
+    fn dense(&self, id: OperandId) -> Result<&DistDense> {
+        match self.operand(id)? {
+            OperandData::Dense(m) => Ok(m),
+            OperandData::Csr(_) => bail!("operand {} is sparse, expected dense", id.0),
+        }
+    }
+
+    /// (rows, cols) of a resident operand.
+    pub fn dims(&self, id: OperandId) -> Result<(usize, usize)> {
+        Ok(match self.operand(id)? {
+            OperandData::Csr(m) => (m.nrows, m.ncols),
+            OperandData::Dense(m) => (m.nrows, m.ncols),
+        })
+    }
+
+    pub fn is_sparse(&self, id: OperandId) -> Result<bool> {
+        Ok(matches!(self.operand(id)?, OperandData::Csr(_)))
+    }
+
+    /// Drop every cached host-side artifact derived from `id` — called
+    /// whenever an operand's distributed contents are written.
+    fn invalidate_host(&mut self, id: OperandId) {
+        self.host_cache.remove(&id.0);
+        self.ref_cache.retain(|&(x, y), _| x != id.0 && y != id.0);
+    }
+
+    /// Reset a resident operand to all-zero *in place* (no symmetric-heap
+    /// reallocation) so it can be reused as an output buffer.
+    pub fn rezero(&mut self, id: OperandId) -> Result<()> {
+        match self.operand(id)? {
+            OperandData::Csr(m) => m.rezero(&self.fabric),
+            OperandData::Dense(m) => m.rezero(&self.fabric),
+        }
+        self.invalidate_host(id);
+        Ok(())
+    }
+
+    /// Host copy of a sparse operand for verification, gathered at most
+    /// once per session while the operand stays unwritten.
+    fn host_csr(&mut self, id: OperandId) -> Result<Csr> {
+        if let Some(Gathered::Csr(c)) = self.host_cache.get(&id.0) {
+            return Ok(c.clone());
+        }
+        let c = self.csr(id)?.gather(&self.fabric);
+        self.host_cache.insert(id.0, Gathered::Csr(c.clone()));
+        Ok(c)
+    }
+
+    /// Host copy of a dense operand for verification (cached like
+    /// [`Session::host_csr`]).
+    fn host_dense(&mut self, id: OperandId) -> Result<Dense> {
+        if let Some(Gathered::Dense(d)) = self.host_cache.get(&id.0) {
+            return Ok(d.clone());
+        }
+        let d = self.dense(id)?.gather(&self.fabric);
+        self.host_cache.insert(id.0, Gathered::Dense(d.clone()));
+        Ok(d)
+    }
+
+    /// Drop all cached host copies and reference products. Verification
+    /// keeps a host copy per operand it has touched (so repeat verifies
+    /// don't re-gather); long verified chains can call this periodically
+    /// to bound host-side memory at the cost of one re-gather per live
+    /// operand.
+    pub fn clear_host_cache(&mut self) {
+        self.host_cache.clear();
+        self.ref_cache.clear();
+    }
+
+    /// Read a resident sparse operand back to a single-node `Csr`
+    /// (untimed; shows up in the fabric's setup-read counters).
+    pub fn gather_csr(&self, id: OperandId) -> Result<Csr> {
+        Ok(self.csr(id)?.gather(&self.fabric))
+    }
+
+    /// Read a resident dense operand back to a single-node `Dense`.
+    pub fn gather_dense(&self, id: OperandId) -> Result<Dense> {
+        Ok(self.dense(id)?.gather(&self.fabric))
+    }
+
+    // ---------------------------------------------------------------
+    // Planning and execution
+    // ---------------------------------------------------------------
+
+    /// The multiply shape implied by two resident operands.
+    pub fn op_of(&self, a: OperandId, b: OperandId) -> Result<Op> {
+        match (self.operand(a)?, self.operand(b)?) {
+            (OperandData::Csr(_), OperandData::Dense(_)) => Ok(Op::Spmm),
+            (OperandData::Csr(_), OperandData::Csr(_)) => Ok(Op::Spgemm),
+            (OperandData::Dense(_), _) => {
+                bail!("left operand must be sparse: dense×dense / dense×sparse are unsupported")
+            }
+        }
+    }
+
+    /// Start describing one multiply C = A·B over resident operands.
+    /// Defaults: stationary-C, no verification, fresh output operand.
+    pub fn plan(&mut self, a: OperandId, b: OperandId) -> MultiplyPlan<'_> {
+        MultiplyPlan {
+            session: self,
+            a,
+            b,
+            alg: Alg::StationaryC,
+            verify: false,
+            output: None,
+            label: None,
+            matrix: None,
+        }
+    }
+
+    fn prepare_queues(&mut self) -> AccQueues {
+        if let Some(q) = &self.queues {
+            q.reset(&self.fabric);
+            q.clone()
+        } else {
+            let q = AccQueues::create(&self.fabric, self.queue_cap);
+            self.queues = Some(q.clone());
+            q
+        }
+    }
+
+    fn prepare_res2d(&mut self) -> ResGrid2D {
+        if let Some(r) = &self.res2d {
+            r.reset(&self.fabric);
+            r.clone()
+        } else {
+            let r = ResGrid2D::create(&self.fabric, self.grid);
+            self.res2d = Some(r.clone());
+            r
+        }
+    }
+
+    fn prepare_res3d(&mut self) -> ResGrid3D {
+        if let Some(r) = &self.res3d {
+            r.reset(&self.fabric);
+            r.clone()
+        } else {
+            let r = ResGrid3D::create(&self.fabric, self.grid);
+            self.res3d = Some(r.clone());
+            r
+        }
+    }
+
+    fn run_plan(
+        &mut self,
+        a: OperandId,
+        b: OperandId,
+        alg: Alg,
+        verify: bool,
+        output: Option<OperandId>,
+        label: Option<String>,
+        matrix: Option<String>,
+    ) -> Result<MultiplyRun> {
+        let op = self.op_of(a, b)?;
+        let (am, an) = self.dims(a)?;
+        let (bm, bn) = self.dims(b)?;
+        ensure!(an == bm, "operand shapes do not compose: {am}x{an} · {bm}x{bn}");
+        if alg.needs_square() && !self.grid.is_one_to_one() {
+            bail!(
+                "{} requires a perfect-square process count, got {}",
+                alg.name(),
+                self.grid.nprocs
+            );
+        }
+        if let Some(out) = output {
+            ensure!(out != a && out != b, "output operand must not alias an input");
+            ensure!(
+                self.dims(out)? == (am, bn),
+                "output operand shape {:?} != result shape {:?}",
+                self.dims(out)?,
+                (am, bn)
+            );
+        }
+        match op {
+            Op::Spmm => self.run_spmm_plan(a, b, alg, verify, output, label, matrix, bn),
+            Op::Spgemm => self.run_spgemm_plan(a, b, alg, verify, output, label, matrix),
+        }
+    }
+
+    fn run_spmm_plan(
+        &mut self,
+        a: OperandId,
+        b: OperandId,
+        alg: Alg,
+        verify: bool,
+        output: Option<OperandId>,
+        label: Option<String>,
+        matrix: Option<String>,
+        n_cols: usize,
+    ) -> Result<MultiplyRun> {
+        let spmm_alg = alg
+            .spmm()
+            .with_context(|| format!("{} has no SpMM (sparse×dense) variant", alg.name()))?;
+        let (am, _) = self.dims(a)?;
+        let c_id = match output {
+            Some(id) => {
+                self.dense(id)?.rezero(&self.fabric);
+                id
+            }
+            None => self.zeros_dense(am, n_cols),
+        };
+        let queues = self.prepare_queues();
+        let res2d = spmm_alg.needs_res2d().then(|| self.prepare_res2d());
+        let res3d = spmm_alg.needs_res3d().then(|| self.prepare_res3d());
+        let ctx = SpmmCtx {
+            a: self.csr(a)?.clone(),
+            b: self.dense(b)?.clone(),
+            c: self.dense(c_id)?.clone(),
+            queues,
+            res2d,
+            res3d,
+            backend: self.backend.clone(),
+        };
+        let t0 = Instant::now();
+        let (_, stats) = self.fabric.launch(|pe| spmm_alg.run(pe, &ctx));
+        let wall_ns = t0.elapsed().as_nanos() as f64;
+        self.invalidate_host(c_id); // the run wrote C
+        let report = Report::new(spmm_alg.name(), self.fabric.profile().name, stats, wall_ns);
+        let mut gathered = None;
+        if verify {
+            let want = match self.ref_cache.get(&(a.0, b.0)) {
+                Some(Gathered::Dense(w)) => w.clone(),
+                _ => {
+                    let w = local_spmm::spmm(&self.host_csr(a)?, &self.host_dense(b)?);
+                    self.ref_cache.insert((a.0, b.0), Gathered::Dense(w.clone()));
+                    w
+                }
+            };
+            let got = ctx.c.gather(&self.fabric);
+            check_verified(spmm_alg.name(), got.rel_err(&want))?;
+            self.host_cache.insert(c_id.0, Gathered::Dense(got.clone()));
+            gathered = Some(Gathered::Dense(got));
+        }
+        self.ledger.push(LedgerEntry {
+            label: label.unwrap_or_else(|| spmm_alg.name().to_string()),
+            matrix: matrix.unwrap_or_else(|| "session".to_string()),
+            n_cols,
+            report: report.clone(),
+        });
+        Ok(MultiplyRun { c: c_id, report, gathered })
+    }
+
+    fn run_spgemm_plan(
+        &mut self,
+        a: OperandId,
+        b: OperandId,
+        alg: Alg,
+        verify: bool,
+        output: Option<OperandId>,
+        label: Option<String>,
+        matrix: Option<String>,
+    ) -> Result<MultiplyRun> {
+        let spgemm_alg = alg
+            .spgemm()
+            .with_context(|| format!("{} has no SpGEMM (sparse×sparse) variant", alg.name()))?;
+        let (am, _) = self.dims(a)?;
+        let (_, bn) = self.dims(b)?;
+        let c_id = match output {
+            Some(id) => {
+                self.csr(id)?.rezero(&self.fabric);
+                id
+            }
+            None => self.zeros_csr(am, bn),
+        };
+        let queues = self.prepare_queues();
+        let res2d = spgemm_alg.needs_res2d().then(|| self.prepare_res2d());
+        let ctx = SpgemmCtx {
+            a: self.csr(a)?.clone(),
+            b: self.csr(b)?.clone(),
+            c: self.csr(c_id)?.clone(),
+            queues,
+            res2d,
+            backend: self.backend.clone(),
+        };
+        let t0 = Instant::now();
+        let (_, stats) = self.fabric.launch(|pe| spgemm_alg.run(pe, &ctx));
+        let wall_ns = t0.elapsed().as_nanos() as f64;
+        self.invalidate_host(c_id); // the run wrote C
+        let report = Report::new(spgemm_alg.name(), self.fabric.profile().name, stats, wall_ns);
+        let mut gathered = None;
+        if verify {
+            let want = match self.ref_cache.get(&(a.0, b.0)) {
+                Some(Gathered::Csr(w)) => w.clone(),
+                _ => {
+                    // host_csr caches, so C = A·A gathers its operand once.
+                    let ga = self.host_csr(a)?;
+                    let gb = if b == a { ga.clone() } else { self.host_csr(b)? };
+                    let w = local_spgemm::spgemm(&ga, &gb).c;
+                    self.ref_cache.insert((a.0, b.0), Gathered::Csr(w.clone()));
+                    w
+                }
+            };
+            let got = ctx.c.gather(&self.fabric);
+            check_verified(spgemm_alg.name(), got.to_dense().rel_err(&want.to_dense()))?;
+            self.host_cache.insert(c_id.0, Gathered::Csr(got.clone()));
+            gathered = Some(Gathered::Csr(got));
+        }
+        self.ledger.push(LedgerEntry {
+            label: label.unwrap_or_else(|| spgemm_alg.name().to_string()),
+            matrix: matrix.unwrap_or_else(|| "session".to_string()),
+            n_cols: 0,
+            report: report.clone(),
+        });
+        Ok(MultiplyRun { c: c_id, report, gathered })
+    }
+
+    /// Emit the whole session ledger as one BENCH document (see
+    /// `coordinator::report`): one `run` row per executed plan.
+    pub fn bench_doc(&self, artifact: &str, scale_shift: i32) -> BenchDoc {
+        let mut doc = BenchDoc::new(artifact, scale_shift);
+        for e in &self.ledger {
+            doc.push_run(&e.label, &e.matrix, e.n_cols, &e.report);
+        }
+        doc
+    }
+}
+
+/// Builder for one multiply on a session. Terminal call:
+/// [`MultiplyPlan::execute`].
+pub struct MultiplyPlan<'s> {
+    session: &'s mut Session,
+    a: OperandId,
+    b: OperandId,
+    alg: Alg,
+    verify: bool,
+    output: Option<OperandId>,
+    label: Option<String>,
+    matrix: Option<String>,
+}
+
+impl MultiplyPlan<'_> {
+    /// Select the algorithm (default: stationary-C).
+    pub fn alg(mut self, alg: Alg) -> Self {
+        self.alg = alg;
+        self
+    }
+
+    /// Check the result against the single-node reference after the run
+    /// (gathers the operands — untimed, but not free).
+    pub fn verify(mut self, on: bool) -> Self {
+        self.verify = on;
+        self
+    }
+
+    /// Write into an existing resident operand (rezeroed in place)
+    /// instead of allocating a fresh output.
+    pub fn output(mut self, id: OperandId) -> Self {
+        self.output = Some(id);
+        self
+    }
+
+    /// Ledger label for this run (default: the algorithm name).
+    pub fn label(mut self, label: &str) -> Self {
+        self.label = Some(label.to_string());
+        self
+    }
+
+    /// Workload (matrix) name recorded in the ledger's BENCH rows
+    /// (default: `"session"`).
+    pub fn matrix(mut self, name: &str) -> Self {
+        self.matrix = Some(name.to_string());
+        self
+    }
+
+    /// Run the multiply on the session's fabric: one launch epoch, one
+    /// ledger entry, output resident.
+    pub fn execute(self) -> Result<MultiplyRun> {
+        let MultiplyPlan { session, a, b, alg, verify, output, label, matrix } = self;
+        session.run_plan(a, b, alg, verify, output, label, matrix)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::report::validate_bench;
+    use crate::matrix::gen;
+
+    fn small_session(nprocs: usize) -> Session {
+        let mut cfg = SessionConfig::new(nprocs, NetProfile::dgx2());
+        cfg.seg_bytes = 64 << 20;
+        Session::new(cfg)
+    }
+
+    #[test]
+    fn spmm_plan_executes_and_verifies() {
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&gen::erdos_renyi(48, 5, 1));
+        let b = sess.random_dense(48, 8, 2);
+        let run = sess.plan(a, b).alg(Alg::StationaryC).verify(true).execute().unwrap();
+        assert!(run.report.makespan_ns > 0.0);
+        assert_eq!(sess.dims(run.c).unwrap(), (48, 8));
+        assert!(!sess.is_sparse(run.c).unwrap());
+        assert_eq!(sess.ledger().len(), 1);
+        assert_eq!(sess.fabric().epochs(), 1);
+    }
+
+    #[test]
+    fn chained_spgemm_reuses_resident_output_without_gather() {
+        // C = A·B then D = C·E, with C consumed directly from symmetric
+        // memory — the satellite's "no gather between multiplies" test.
+        let a_m = gen::erdos_renyi(40, 4, 3);
+        let b_m = gen::erdos_renyi(40, 4, 4);
+        let e_m = gen::erdos_renyi(40, 4, 5);
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&a_m);
+        let b = sess.load_csr(&b_m);
+        let e = sess.load_csr(&e_m);
+        let reads_before = sess.fabric().setup_reads();
+        let c = sess.plan(a, b).execute().unwrap().c;
+        let d = sess.plan(c, e).execute().unwrap().c;
+        assert_eq!(
+            sess.fabric().setup_reads(),
+            reads_before,
+            "chained multiplies must not gather intermediates"
+        );
+        let got = sess.gather_csr(d).unwrap();
+        let want = local_spgemm::spgemm(&local_spgemm::spgemm(&a_m, &b_m).c, &e_m).c;
+        let err = got.to_dense().rel_err(&want.to_dense());
+        assert!(err < VERIFY_TOL, "chained result diverges: rel err {err:.3e}");
+    }
+
+    #[test]
+    fn spmm_chains_dense_output_as_next_b() {
+        let a_m = gen::erdos_renyi(32, 4, 7);
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&a_m);
+        let h0 = sess.random_dense(32, 8, 11);
+        let h1 = sess.plan(a, h0).execute().unwrap().c;
+        let h2 = sess.plan(a, h1).execute().unwrap().c;
+        let got = sess.gather_dense(h2).unwrap();
+        let h0_host = sess.gather_dense(h0).unwrap();
+        let want = local_spmm::spmm(&a_m, &local_spmm::spmm(&a_m, &h0_host));
+        assert!(got.rel_err(&want) < VERIFY_TOL);
+        assert_eq!(sess.fabric().epochs(), 2);
+    }
+
+    #[test]
+    fn repeated_runs_on_one_fabric_do_not_double_count_stats() {
+        // Same plan twice on the same session: per-run reports must be
+        // identical (stationary-C is deterministic), not cumulative.
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&gen::erdos_renyi(64, 5, 9));
+        let b = sess.random_dense(64, 8, 10);
+        let r1 = sess.plan(a, b).execute().unwrap().report;
+        let r2 = sess.plan(a, b).execute().unwrap().report;
+        let (t1, t2) = (r1.totals(), r2.totals());
+        assert_eq!(t1.n_gets, t2.n_gets, "second epoch must not accumulate the first");
+        assert_eq!(t1.bytes_get, t2.bytes_get);
+        assert_eq!(r1.makespan_ns, r2.makespan_ns);
+        // The fabric's lifetime record is the across-epoch sum.
+        let life = sess.fabric().lifetime_stats();
+        assert_eq!(life.n_gets, t1.n_gets + t2.n_gets);
+    }
+
+    #[test]
+    fn output_reuse_rezeros_in_place() {
+        let a_m = gen::erdos_renyi(32, 4, 13);
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&a_m);
+        let b = sess.random_dense(32, 8, 14);
+        let c = sess.zeros_dense(32, 8);
+        for _ in 0..2 {
+            // Without the rezero the second run would double C.
+            let run = sess.plan(a, b).output(c).verify(true).execute().unwrap();
+            assert_eq!(run.c, c);
+        }
+        assert_eq!(sess.ledger().len(), 2);
+    }
+
+    #[test]
+    fn plan_rejects_bad_shapes_ops_and_algs() {
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&gen::erdos_renyi(24, 3, 1));
+        let b = sess.random_dense(24, 8, 2);
+        let short = sess.random_dense(12, 8, 3);
+        assert!(sess.plan(b, a).execute().is_err(), "dense left operand");
+        assert!(sess.plan(a, short).execute().is_err(), "shape mismatch");
+        assert!(sess.plan(a, b).alg(Alg::SummaPetsc).execute().is_err(), "no SpMM petsc");
+        assert!(sess.plan(a, a).alg(Alg::LocalityWsC).execute().is_err(), "no SpGEMM LA-WS");
+        let mut six = small_session(6);
+        let a6 = six.load_csr(&gen::erdos_renyi(24, 3, 1));
+        let b6 = six.random_dense(24, 8, 2);
+        assert!(six.plan(a6, b6).alg(Alg::SummaMpi).execute().is_err(), "non-square nprocs");
+    }
+
+    #[test]
+    fn verification_gathers_each_resident_operand_once() {
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&gen::erdos_renyi(48, 4, 19));
+        let b = sess.random_dense(48, 8, 20);
+        sess.plan(a, b).verify(true).execute().unwrap();
+        let reads_after_first = sess.fabric().setup_reads();
+        sess.plan(a, b).alg(Alg::StationaryA).verify(true).execute().unwrap();
+        // The second verified run gathers only its own fresh C (one read
+        // per tile); A and B come from the session's host cache.
+        let delta = sess.fabric().setup_reads() - reads_after_first;
+        let tile_reads = (sess.grid().t * sess.grid().t) as u64;
+        assert_eq!(delta, tile_reads, "only the new C should be gathered");
+    }
+
+    #[test]
+    fn ledger_emits_one_valid_bench_document() {
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&gen::erdos_renyi(32, 4, 17));
+        let b = sess.random_dense(32, 8, 18);
+        sess.plan(a, b).label("step 1").execute().unwrap();
+        sess.plan(a, a).label("step 2").execute().unwrap();
+        let doc = sess.bench_doc("session_unit", -1).to_json();
+        validate_bench(&doc).unwrap();
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("label").unwrap().as_str(), Some("step 1"));
+    }
+}

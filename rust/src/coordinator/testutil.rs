@@ -98,6 +98,7 @@ pub fn spgemm_fixture(nprocs: usize, scale: u32, seed: u64) -> (SpgemmFixture, C
         c: DistCsr::zeros(&fabric, a.nrows, a.ncols, grid),
         queues: AccQueues::create(&fabric, 4096),
         res2d: Some(ResGrid2D::create(&fabric, grid)),
+        backend: TileBackend::Native,
     };
     (SpgemmFixture { fabric, ctx }, want)
 }

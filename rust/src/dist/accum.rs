@@ -119,6 +119,15 @@ impl AccQueues {
         self.queues[0].capacity()
     }
 
+    /// Reset every PE's queue to its freshly-created state, reusing the
+    /// existing allocations (setup phase, untimed — a session calls this
+    /// between multiply runs so the queues are allocated once).
+    pub fn reset(&self, fabric: &Fabric) {
+        for q in self.queues.iter() {
+            q.reset(fabric);
+        }
+    }
+
     /// Publish a dense partial for C tile (i, j) and enqueue its
     /// descriptor on `owner`'s queue. Cost: one local put (publish) +
     /// one remote FAA + one remote put (the queue push).
@@ -291,6 +300,27 @@ mod tests {
         assert!(stats[0].bytes_bulk >= 64.0);
         // Sender: FAA (slot claim) + seq publish are word ops.
         assert!(stats[1].n_word_ops >= 2);
+    }
+
+    #[test]
+    fn queues_are_reusable_across_runs_after_reset() {
+        let f = fab(2);
+        let q = AccQueues::create(&f, 8);
+        for _ in 0..2 {
+            f.launch(|pe| {
+                if pe.rank() == 1 {
+                    let part = Dense::from_vec(1, 2, vec![1.0, 2.0]);
+                    q.send_dense_partial(pe, 0, 0, 0, &part);
+                }
+                pe.barrier();
+                if pe.rank() == 0 {
+                    let msg = q.pop_wait(pe).expect("one partial per run");
+                    assert_eq!(msg.fetch_dense(pe).data, vec![1.0, 2.0]);
+                    assert!(q.try_pop(pe).is_none());
+                }
+            });
+            q.reset(&f);
+        }
     }
 
     #[test]

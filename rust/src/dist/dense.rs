@@ -139,6 +139,17 @@ impl DistDense {
         pe.put_as(self.tile_ptr(i, j), &tile.data, kind);
     }
 
+    /// Zero every tile in place (setup phase, untimed), reusing the
+    /// existing allocations — the operand-reset path a session uses to
+    /// recycle a resident output buffer between multiply runs.
+    pub fn rezero(&self, fabric: &Fabric) {
+        for gp in self.tiles.iter() {
+            if !gp.is_empty() {
+                fabric.write(*gp, &vec![0f32; gp.len()]);
+            }
+        }
+    }
+
     /// Read the whole matrix back to a single-node `Dense` (untimed
     /// verification path).
     pub fn gather(&self, fabric: &Fabric) -> Dense {
@@ -251,6 +262,18 @@ mod tests {
         assert_eq!(out[(0, 4)], 2.0); // tile (0,1) owned by rank 1
         assert_eq!(out[(4, 0)], 3.0);
         assert_eq!(out[(4, 4)], 4.0);
+    }
+
+    #[test]
+    fn rezero_clears_in_place_without_reallocating() {
+        let f = fab(4);
+        let mut rng = Rng::new(13);
+        let m = Dense::random(16, 16, &mut rng);
+        let d = DistDense::scatter(&f, &m, ProcGrid::for_nprocs(4));
+        let ptr_before = d.tile_ptr(1, 1);
+        d.rezero(&f);
+        assert_eq!(d.tile_ptr(1, 1), ptr_before, "rezero must reuse the allocation");
+        assert!(d.gather(&f).data.iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -50,6 +50,14 @@ impl ResGrid2D {
     pub fn reserve(&self, pe: &Pe, i: usize, k: usize) -> i64 {
         pe.fetch_add(self.cells[i * self.t + k], 0, 1)
     }
+
+    /// Zero every counter in place (setup phase, untimed) so the grid
+    /// can be reused by the next multiply run on the same session.
+    pub fn reset(&self, fabric: &Fabric) {
+        for &c in self.cells.iter() {
+            fabric.write(c, &[0i64]);
+        }
+    }
 }
 
 /// t × t × t grid of per-component claim flags for locality-aware
@@ -86,6 +94,14 @@ impl ResGrid3D {
     /// globally. One remote fetch-and-add.
     pub fn try_claim(&self, pe: &Pe, i: usize, j: usize, k: usize) -> bool {
         pe.fetch_add(self.cells[(i * self.t + j) * self.t + k], 0, 1) == 0
+    }
+
+    /// Zero every claim flag in place (setup phase, untimed) so the grid
+    /// can be reused by the next multiply run on the same session.
+    pub fn reset(&self, fabric: &Fabric) {
+        for &c in self.cells.iter() {
+            fabric.write(c, &[0i64]);
+        }
     }
 }
 
@@ -167,6 +183,31 @@ mod tests {
             won
         });
         assert_eq!(wins.iter().sum::<u64>(), (t * t * t) as u64);
+    }
+
+    #[test]
+    fn reset_makes_grids_reusable() {
+        let f = fab(2);
+        let grid = ProcGrid::for_nprocs(2);
+        let r2 = ResGrid2D::create(&f, grid);
+        let r3 = ResGrid3D::create(&f, grid);
+        f.launch(|pe| {
+            if pe.rank() == 0 {
+                r2.reserve(pe, 0, 0);
+                assert!(r3.try_claim(pe, 0, 0, 0));
+                assert!(!r3.try_claim(pe, 0, 0, 0));
+            }
+            pe.barrier();
+        });
+        r2.reset(&f);
+        r3.reset(&f);
+        f.launch(|pe| {
+            if pe.rank() == 1 {
+                assert_eq!(r2.reserve(pe, 0, 0), 0, "counter starts over after reset");
+                assert!(r3.try_claim(pe, 0, 0, 0), "flag is claimable again after reset");
+            }
+            pe.barrier();
+        });
     }
 
     #[test]

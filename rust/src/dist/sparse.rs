@@ -237,6 +237,23 @@ impl DistCsr {
         pe.barrier();
     }
 
+    /// Reset every tile to the all-zero matrix in place (setup phase,
+    /// untimed): zeros are written into each tile's existing rowptr
+    /// array and the colind/vals entries become zero-length views of
+    /// their current arrays — no new symmetric-heap allocation. This is
+    /// the operand-reset path a session uses to recycle a resident
+    /// sparse output between multiply runs.
+    pub fn rezero(&self, fabric: &Fabric) {
+        for cell in self.tiles.iter() {
+            let mut h = cell.write().unwrap();
+            if !h.rowptr.is_empty() {
+                fabric.write(h.rowptr, &vec![0i64; h.rowptr.len()]);
+            }
+            h.colind = h.colind.slice(0, 0);
+            h.vals = h.vals.slice(0, 0);
+        }
+    }
+
     /// Read the whole matrix back to a single-node `Csr` (untimed
     /// verification path). Preserves the exact stored entries — no
     /// merging or zero-dropping — so structural comparisons are exact.
@@ -375,6 +392,23 @@ mod tests {
         let back = d.gather(&f);
         assert_eq!(back.nnz(), 8);
         assert!(back.max_abs_diff(&Csr::eye(8)) < 1e-6);
+    }
+
+    #[test]
+    fn rezero_resets_tiles_without_reallocating() {
+        let f = fab(4);
+        let m = gen::erdos_renyi(32, 4, 21);
+        let d = DistCsr::scatter(&f, &m, ProcGrid::for_nprocs(4));
+        let rowptr_before = d.handle(0, 0).rowptr;
+        d.rezero(&f);
+        let h = d.handle(0, 0);
+        assert_eq!(h.rowptr, rowptr_before, "rowptr must reuse the allocation");
+        assert_eq!(h.nnz(), 0);
+        assert_eq!(d.nnz(), 0);
+        let back = d.gather(&f);
+        back.validate().unwrap();
+        assert_eq!(back.nnz(), 0);
+        assert_eq!((back.nrows, back.ncols), (32, 32));
     }
 
     #[test]

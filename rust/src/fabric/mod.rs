@@ -47,6 +47,7 @@ pub use stats::{Kind, Stats};
 pub use topology::{ComputeModel, Link, LinkKind, NetProfile};
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Fabric construction parameters.
@@ -82,6 +83,21 @@ pub struct Fabric {
     /// the whole run fails fast instead of deadlocking.
     aborted: Arc<std::sync::atomic::AtomicBool>,
     pacing: bool,
+    /// Completed [`Fabric::launch`] calls — the *stats epoch* counter. A
+    /// session runs many multiplies on one fabric; each launch starts
+    /// every PE from a fresh clock and `Stats`, so per-run reports never
+    /// double-count earlier epochs.
+    launches: AtomicU64,
+    /// Cumulative stats merged across all epochs (`final_clock_ns` is
+    /// the max epoch makespan, everything else sums).
+    lifetime: Mutex<Stats>,
+    /// Untimed coordinator traffic (`Fabric::read` / `Fabric::write`):
+    /// scatters, gathers, resets. Tracked so tests can assert that a
+    /// chained multiply pipeline performs *zero* intermediate gathers.
+    setup_reads: AtomicU64,
+    setup_read_bytes: AtomicU64,
+    setup_writes: AtomicU64,
+    setup_write_bytes: AtomicU64,
 }
 
 impl Fabric {
@@ -98,6 +114,12 @@ impl Fabric {
             teams: Mutex::new(HashMap::new()),
             aborted,
             pacing,
+            launches: AtomicU64::new(0),
+            lifetime: Mutex::new(Stats::default()),
+            setup_reads: AtomicU64::new(0),
+            setup_read_bytes: AtomicU64::new(0),
+            setup_writes: AtomicU64::new(0),
+            setup_write_bytes: AtomicU64::new(0),
         })
     }
 
@@ -130,6 +152,36 @@ impl Fabric {
         &self.global_barrier
     }
 
+    /// Completed launch epochs on this fabric (one per multiply run).
+    pub fn epochs(&self) -> u64 {
+        self.launches.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative stats over all launch epochs so far.
+    pub fn lifetime_stats(&self) -> Stats {
+        self.lifetime.lock().unwrap().clone()
+    }
+
+    /// Untimed coordinator reads performed so far (gathers, verification).
+    pub fn setup_reads(&self) -> u64 {
+        self.setup_reads.load(Ordering::Relaxed)
+    }
+
+    /// Bytes moved by untimed coordinator reads.
+    pub fn setup_read_bytes(&self) -> u64 {
+        self.setup_read_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Untimed coordinator writes performed so far (scatters, resets).
+    pub fn setup_writes(&self) -> u64 {
+        self.setup_writes.load(Ordering::Relaxed)
+    }
+
+    /// Bytes moved by untimed coordinator writes.
+    pub fn setup_write_bytes(&self) -> u64 {
+        self.setup_write_bytes.load(Ordering::Relaxed)
+    }
+
     /// Get-or-create a team barrier keyed by `(tag, id)`. All `size`
     /// members must agree on the key and size.
     pub fn team(&self, tag: &str, id: u64, size: usize) -> Arc<ClockBarrier> {
@@ -160,6 +212,8 @@ impl Fabric {
             std::slice::from_raw_parts(src.as_ptr() as *const u8, std::mem::size_of_val(src))
         };
         self.segments[gp.rank()].write_bytes_bulk(gp.byte_offset(), bytes);
+        self.setup_writes.fetch_add(1, Ordering::Relaxed);
+        self.setup_write_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
     }
 
     /// Untimed read (verification / gathering results). Uses the bulk
@@ -173,6 +227,9 @@ impl Fabric {
             )
         };
         self.segments[gp.rank()].read_bytes_bulk(gp.byte_offset(), bytes);
+        self.setup_reads.fetch_add(1, Ordering::Relaxed);
+        let nbytes = (out.len() * std::mem::size_of::<T>()) as u64;
+        self.setup_read_bytes.fetch_add(nbytes, Ordering::Relaxed);
         out
     }
 
@@ -217,6 +274,14 @@ impl Fabric {
             rs.push(r);
             stats.push(s);
         }
+        // Close the stats epoch: fold this run into the lifetime record.
+        {
+            let mut life = self.lifetime.lock().unwrap();
+            for s in &stats {
+                life.merge(s);
+            }
+        }
+        self.launches.fetch_add(1, Ordering::Relaxed);
         (rs, stats)
     }
 }
@@ -276,6 +341,56 @@ mod tests {
         let (rs, _) = f.launch(|pe| pe.get_vec(gp));
         assert_eq!(rs[0], vec![9, 8, 7, 6]);
         assert_eq!(rs[1], vec![9, 8, 7, 6]);
+    }
+
+    #[test]
+    fn launch_epochs_accumulate_lifetime_but_not_per_run_stats() {
+        let f = Fabric::new(FabricConfig {
+            nprocs: 2,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 1 << 20,
+            pacing: false,
+        });
+        assert_eq!(f.epochs(), 0);
+        let gp = f.alloc_on::<f32>(1, 64);
+        let run = |f: &Arc<Fabric>| {
+            let (_, stats) = f.launch(|pe| {
+                if pe.rank() == 0 {
+                    let _ = pe.get_vec(gp);
+                }
+                pe.barrier();
+            });
+            stats
+        };
+        let s1 = run(&f);
+        let s2 = run(&f);
+        // Second epoch starts from fresh per-PE stats: no double counting.
+        assert_eq!(s1[0].n_gets, 1);
+        assert_eq!(s2[0].n_gets, 1);
+        assert_eq!(s2[0].bytes_get, s1[0].bytes_get);
+        assert_eq!(f.epochs(), 2);
+        // Lifetime is the sum over epochs.
+        let life = f.lifetime_stats();
+        assert_eq!(life.n_gets, 2);
+        assert_eq!(life.bytes_get, s1[0].bytes_get + s2[0].bytes_get);
+    }
+
+    #[test]
+    fn setup_traffic_is_counted() {
+        let f = Fabric::new(FabricConfig {
+            nprocs: 1,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 1 << 20,
+            pacing: false,
+        });
+        let gp = f.alloc_on::<i64>(0, 8);
+        assert_eq!((f.setup_writes(), f.setup_reads()), (0, 0));
+        f.write(gp, &[7i64; 8]);
+        assert_eq!(f.setup_writes(), 1);
+        assert_eq!(f.setup_write_bytes(), 64);
+        let _ = f.read(gp);
+        assert_eq!(f.setup_reads(), 1);
+        assert_eq!(f.setup_read_bytes(), 64);
     }
 
     #[test]

@@ -90,6 +90,15 @@ impl<T: QueueItem> QueueHandle<T> {
         self.base.rank()
     }
 
+    /// Reset to the freshly-created state (tail = head = 0, all slot
+    /// sequence words cleared), reusing the existing allocation. Setup
+    /// phase only (untimed, via the coordinator): must not race with PE
+    /// threads — a session calls this *between* launches so one queue
+    /// allocation serves every run.
+    pub fn reset(&self, fabric: &super::Fabric) {
+        fabric.write(self.base, &vec![0i64; self.base.len()]);
+    }
+
     pub fn capacity(&self) -> usize {
         self.cap as usize
     }
@@ -314,6 +323,45 @@ mod tests {
                 assert_eq!(gp.rank(), 1);
                 let data = pe.get_vec(gp);
                 assert_eq!(data, vec![1.5, 2.5]);
+            }
+        });
+    }
+
+    #[test]
+    fn reset_restores_fresh_state_for_reuse() {
+        let f = fab(2);
+        let q = QueueHandle::<Msg>::create(&f, 0, 4);
+        for round in 0..3u64 {
+            f.launch(|pe| {
+                if pe.rank() == 1 {
+                    for i in 0..6 {
+                        // 6 pushes through a 4-slot queue: exercises
+                        // wraparound before each reset.
+                        q.push(pe, &Msg { a: round, b: i, c: 0 });
+                    }
+                    pe.barrier();
+                } else {
+                    let mut got = 0;
+                    while got < 6 {
+                        if q.pop_wait(pe).is_some() {
+                            got += 1;
+                        }
+                        pe.fabric().check_abort();
+                    }
+                    pe.barrier();
+                    assert!(q.try_pop(pe).is_none());
+                }
+            });
+            q.reset(&f);
+        }
+        // After a reset the queue behaves exactly like a fresh one.
+        f.launch(|pe| {
+            if pe.rank() == 1 {
+                q.push(pe, &Msg { a: 9, b: 9, c: 9 });
+            }
+            pe.barrier();
+            if pe.rank() == 0 {
+                assert_eq!(q.pop_wait(pe).unwrap(), Msg { a: 9, b: 9, c: 9 });
             }
         });
     }

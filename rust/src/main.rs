@@ -9,19 +9,24 @@
 //!   `BENCH_<artifact>.json` each (the measured-perf pipeline; CI's
 //!   bench-smoke job runs `sparta bench --smoke`).
 //! * `sparta run spmm|spgemm [options]` — one experiment run.
+//! * `sparta chain spmm|spgemm [options]` — an N-step multiply pipeline
+//!   on one session: operands stay resident, each step's output chains
+//!   into the next with zero intermediate gathers (DESIGN.md §5).
 //! * `sparta list` — available matrices, algorithms, profiles.
 //!
 //! Common options: `--scale-shift <i>` (workload downscaling, default 0),
-//! `--verify`, and for `run`: `--alg`, `--nprocs`, `--matrix`,
-//! `--ncols`, `--profile summit|dgx2|flat:<GBps>`, `--pjrt`.
+//! `--verify`, and for `run`/`chain`: `--alg`, `--nprocs`, `--matrix`,
+//! `--ncols`, `--profile summit|dgx2|flat:<GBps>`, `--pjrt`; `chain`
+//! adds `--steps <n>` and `--out DIR` (BENCH JSON of the whole chain).
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use sparta::algorithms::{SpgemmAlg, SpmmAlg};
+use sparta::algorithms::{Alg, SpgemmAlg, SpmmAlg};
 use sparta::coordinator::experiments::{self, ExpOpts};
 use sparta::coordinator::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
+use sparta::coordinator::{Session, SessionConfig};
 use sparta::fabric::NetProfile;
 use sparta::matrix::{mm_io, suite, Csr};
 use sparta::runtime::TileBackend;
@@ -35,35 +40,40 @@ fn main() {
 }
 
 /// Minimal flag parser: positional args + `--key value` + `--flag`.
+/// Each subcommand declares its boolean flags in `bool_flags`; every
+/// other `--key` requires a value and errors when none follows.
 struct Opts {
     positional: Vec<String>,
     flags: HashMap<String, String>,
 }
 
 impl Opts {
-    fn parse(args: &[String]) -> Opts {
+    fn parse(args: &[String], bool_flags: &[&str]) -> Result<Opts> {
         let mut positional = Vec::new();
         let mut flags = HashMap::new();
         let mut i = 0;
         while i < args.len() {
             let a = &args[i];
             if let Some(key) = a.strip_prefix("--") {
-                let boolean = matches!(key, "verify" | "pjrt" | "quiet" | "smoke");
-                if boolean {
+                if bool_flags.contains(&key) {
                     flags.insert(key.to_string(), "true".to_string());
                 } else {
                     i += 1;
-                    flags.insert(
-                        key.to_string(),
-                        args.get(i).cloned().unwrap_or_default(),
-                    );
+                    // A trailing flag, or one followed by another --flag,
+                    // has no value — error instead of misparsing.
+                    match args.get(i) {
+                        Some(value) if !value.starts_with("--") => {
+                            flags.insert(key.to_string(), value.clone());
+                        }
+                        _ => bail!("missing value for --{key}"),
+                    }
                 }
             } else {
                 positional.push(a.clone());
             }
             i += 1;
         }
-        Opts { positional, flags }
+        Ok(Opts { positional, flags })
     }
 
     fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
@@ -112,12 +122,14 @@ fn dispatch(args: &[String]) -> Result<()> {
         print_help();
         return Ok(());
     };
-    let opts = Opts::parse(&args[1..]);
+    let rest = &args[1..];
     match cmd.as_str() {
-        "repro" => repro(&opts),
-        "bench" => bench(&opts),
-        "run" => run(&opts),
+        "repro" => repro(&Opts::parse(rest, &["verify", "quiet"])?),
+        "bench" => bench(&Opts::parse(rest, &["smoke", "verify", "quiet"])?),
+        "run" => run(&Opts::parse(rest, &["verify", "pjrt", "quiet"])?),
+        "chain" => chain(&Opts::parse(rest, &["verify", "pjrt", "quiet"])?),
         "list" => {
+            Opts::parse(rest, &[])?;
             println!("matrices (suite analogs):");
             for e in suite::table1() {
                 println!("  {:<16} {:<11} paper imb. {:.2}", e.name, e.kind, e.paper_imbalance);
@@ -259,6 +271,93 @@ fn run(opts: &Opts) -> Result<()> {
     Ok(())
 }
 
+/// An N-step multiply pipeline on one session — the workload shape the
+/// session API exists for. `spmm` iterates H ← A·H (a GNN propagation
+/// stack); `spgemm` iterates C ← A·C (matrix powers, the expansion
+/// kernel of Markov clustering). Operands are scattered once; each
+/// step's output is consumed directly from symmetric memory.
+fn chain(opts: &Opts) -> Result<()> {
+    let kind = opts.positional.first().map(String::as_str).unwrap_or("spmm");
+    let steps: usize = opts.get("steps", 3)?;
+    if steps == 0 {
+        bail!("--steps must be at least 1");
+    }
+    let scale_shift: i32 = opts.get("scale-shift", 0)?;
+    let nprocs: usize = opts.get("nprocs", 16)?;
+    let profile = parse_profile(&opts.str("profile", "dgx2"))?;
+    let matrix = opts.str("matrix", "amazon");
+    let verify = opts.has("verify");
+    let quiet = opts.has("quiet");
+    let a = load_matrix(&matrix, scale_shift)?;
+    if a.nrows != a.ncols {
+        bail!("chaining needs a square sparse matrix, got {}x{}", a.nrows, a.ncols);
+    }
+    let alg = Alg::from_name(&opts.str("alg", "sc"))
+        .context("bad --alg (sc|sa|rws|lws-c|lws-a|summa|comblas|petsc)")?;
+
+    let mut cfg = SessionConfig::new(nprocs, profile);
+    if opts.has("pjrt") {
+        cfg.backend = TileBackend::pjrt(std::path::Path::new("artifacts"))?;
+    }
+    let mut sess = Session::new(cfg);
+    let da = sess.load_csr(&a);
+    if !quiet {
+        println!(
+            "chain {kind}: {steps} steps of {} on {matrix} ({}x{}, nnz {}), {nprocs} PEs",
+            alg.name(),
+            a.nrows,
+            a.ncols,
+            a.nnz()
+        );
+    }
+
+    let reads_before = sess.fabric().setup_reads();
+    let mut operand = match kind {
+        "spmm" => sess.random_dense(a.ncols, opts.get("ncols", 128)?, 0x5EED),
+        "spgemm" => da,
+        other => bail!("unknown chain kind {other:?} (spmm|spgemm)"),
+    };
+    let mut total_makespan_ns = 0.0;
+    for step in 1..=steps {
+        let run = sess
+            .plan(da, operand)
+            .alg(alg)
+            .verify(verify)
+            .label(&format!("step {step}"))
+            .matrix(&matrix)
+            .execute()?;
+        total_makespan_ns += run.report.makespan_ns;
+        if !quiet {
+            println!("  step {step}: {}", run.report.row());
+        }
+        operand = run.c;
+        if verify {
+            // Verification caches host copies of the operands it touches;
+            // a long chain would accumulate one per step, so bound it.
+            sess.clear_host_cache();
+        }
+    }
+    let gathers = if verify {
+        "(verification gathers only)".to_string()
+    } else {
+        (sess.fabric().setup_reads() - reads_before).to_string()
+    };
+    if !quiet {
+        println!(
+            "chain done: {} steps, total simulated makespan {:.3} ms, intermediate gathers: {}",
+            steps,
+            total_makespan_ns / 1e6,
+            gathers
+        );
+    }
+    if opts.has("out") {
+        let dir = std::path::PathBuf::from(opts.str("out", "bench-out"));
+        let path = sess.bench_doc("chain", scale_shift).write(&dir)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "sparta — RDMA-based sparse matrix multiplication (Brock, Buluç & Yelick 2023), reproduced
@@ -268,7 +367,15 @@ USAGE:
   sparta bench [fig1|...|table2b|all] [--smoke] [--scale-shift N] [--out DIR] [--quiet]
   sparta run spmm   --alg sc --nprocs 24 --matrix amazon --ncols 128 --profile summit [--pjrt] [--verify]
   sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify]
+  sparta chain spmm --steps 3 --alg sc --nprocs 16 --matrix amazon --ncols 128 [--verify] [--out DIR]
+  sparta chain spgemm --steps 3 --alg sc --nprocs 16 --matrix mouse_gene [--verify] [--out DIR]
   sparta list
+
+`sparta chain` runs an N-step multiply pipeline on ONE session: the
+sparse matrix is scattered once, queues and reservation grids are
+allocated once and reset between steps, and each step's output stays
+resident as the next step's input (zero intermediate gathers). With
+--out it writes the whole session ledger as one BENCH_chain.json.
 
 `sparta bench` writes one schema-versioned BENCH_<artifact>.json per
 harness (makespan, per-PE time breakdown, bytes moved, op counts, wall

@@ -1,0 +1,123 @@
+//! End-to-end tests of the session-based multiply engine: multi-step
+//! chains on one persistent fabric, zero intermediate gathers, stats
+//! epochs, resource reuse, and agreement with the one-shot drivers.
+
+use sparta::algorithms::Alg;
+use sparta::coordinator::{run_spmm, Session, SessionConfig, SpmmConfig, VERIFY_TOL};
+use sparta::fabric::NetProfile;
+use sparta::matrix::{gen, local_spgemm, local_spmm};
+
+fn session(nprocs: usize) -> Session {
+    let mut cfg = SessionConfig::new(nprocs, NetProfile::dgx2());
+    cfg.seg_bytes = 128 << 20;
+    Session::new(cfg)
+}
+
+#[test]
+fn three_step_chain_has_zero_intermediate_gathers_and_verifies() {
+    // H3 = A·(A·(A·H0)) on one session: the acceptance-criterion chain.
+    let a = gen::rmat(8, 6, 0.55, 0.15, 0.15, 3);
+    let mut sess = session(6);
+    let da = sess.load_csr(&a);
+    let h0 = sess.random_dense(a.ncols, 16, 0x5EED);
+    let h0_host = sess.gather_dense(h0).unwrap();
+
+    let reads_before = sess.fabric().setup_reads();
+    let mut h = h0;
+    for step in 0..3 {
+        let run = sess
+            .plan(da, h)
+            .alg(Alg::StationaryC)
+            .label(&format!("chain step {step}"))
+            .execute()
+            .unwrap();
+        h = run.c;
+    }
+    // Zero intermediate gathers, asserted via the fabric's untimed-read
+    // counter: nothing left symmetric memory during the chain.
+    assert_eq!(
+        sess.fabric().setup_reads(),
+        reads_before,
+        "chained multiplies must consume intermediates from symmetric memory"
+    );
+    assert_eq!(sess.fabric().epochs(), 3, "three runs = three launch epochs on one fabric");
+
+    // Verified output: gather only the final H and compare against the
+    // thrice-applied single-node reference.
+    let got = sess.gather_dense(h).unwrap();
+    let mut want = h0_host;
+    for _ in 0..3 {
+        want = local_spmm::spmm(&a, &want);
+    }
+    let err = got.rel_err(&want);
+    assert!(err < VERIFY_TOL, "3-step chain diverges from reference: rel err {err:.3e}");
+    assert_eq!(sess.ledger().len(), 3);
+}
+
+#[test]
+fn spgemm_powers_chain_on_one_session() {
+    // A^4 by repeated squaring: C1 = A·A, C2 = C1·C1 — sparse outputs
+    // chained as both inputs of the next multiply.
+    let a = gen::rmat(7, 4, 0.5, 0.17, 0.17, 9);
+    let mut sess = session(4);
+    let da = sess.load_csr(&a);
+    let c1 = sess.plan(da, da).execute().unwrap().c;
+    let c2 = sess.plan(c1, c1).execute().unwrap().c;
+    let got = sess.gather_csr(c2).unwrap();
+    let a2 = local_spgemm::spgemm(&a, &a).c;
+    let want = local_spgemm::spgemm(&a2, &a2).c;
+    let err = got.to_dense().rel_err(&want.to_dense());
+    assert!(err < VERIFY_TOL, "A^4 chain diverges: rel err {err:.3e}");
+}
+
+#[test]
+fn mixed_op_session_shares_one_resource_set() {
+    // SpGEMM and SpMM interleaved on one session: queue/reservation
+    // resources are reset, not reallocated, between heterogeneous runs.
+    let a = gen::rmat(8, 5, 0.5, 0.17, 0.17, 5);
+    let mut sess = session(4);
+    let da = sess.load_csr(&a);
+    let db = sess.random_dense(a.ncols, 16, 2);
+    sess.plan(da, da).alg(Alg::RandomWs).verify(true).execute().unwrap();
+    sess.plan(da, db).alg(Alg::RandomWs).verify(true).execute().unwrap();
+    sess.plan(da, db).alg(Alg::LocalityWsA).verify(true).execute().unwrap();
+    sess.plan(da, da).alg(Alg::StationaryA).verify(true).execute().unwrap();
+    assert_eq!(sess.fabric().epochs(), 4);
+}
+
+#[test]
+fn per_run_reports_match_the_one_shot_driver() {
+    // A session run and a fresh-fabric driver run of the same problem
+    // must report identical virtual makespans (stationary-C is
+    // deterministic): reusing the fabric does not leak state into the
+    // cost model.
+    let a = gen::erdos_renyi(96, 5, 4);
+    let mut sess = session(4);
+    let da = sess.load_csr(&a);
+    let db = sess.random_dense(a.ncols, 16, 0x5EED);
+    let warmup = sess.plan(da, db).execute().unwrap().report.makespan_ns;
+    let reused = sess.plan(da, db).execute().unwrap().report.makespan_ns;
+    assert_eq!(warmup, reused, "a reused fabric must not change virtual timing");
+
+    let cfg = SpmmConfig::new(sparta::algorithms::SpmmAlg::StationaryC, 4, NetProfile::dgx2(), 16);
+    let driver = run_spmm(&a, &cfg).unwrap().report.makespan_ns;
+    assert_eq!(driver, reused, "driver wrapper and session must agree");
+}
+
+#[test]
+fn session_ledger_rolls_up_into_one_bench_doc() {
+    let a = gen::erdos_renyi(64, 4, 8);
+    let mut sess = session(4);
+    let da = sess.load_csr(&a);
+    let db = sess.random_dense(a.ncols, 8, 1);
+    for step in 0..3 {
+        sess.plan(da, db).label(&format!("step {step}")).execute().unwrap();
+    }
+    let dir = std::env::temp_dir().join(format!("sparta_session_e2e_{}", std::process::id()));
+    let path = sess.bench_doc("chain_e2e", -2).write(&dir).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = sparta::coordinator::parse_json(&text).unwrap();
+    sparta::coordinator::validate_bench(&doc).unwrap();
+    assert_eq!(doc.get("rows").unwrap().as_arr().unwrap().len(), 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
