@@ -5,9 +5,47 @@
 use std::collections::HashMap;
 
 use crate::dist::{AccMsg, AccQueues, DistCsr, DistDense, ResGrid2D, ResGrid3D};
+use crate::dist::{CsrTileFuture, DenseTileFuture};
 use crate::fabric::{Kind, Pe};
 use crate::matrix::{local_spmm, Coo, Csr, Dense};
 use crate::runtime::TileBackend;
+
+/// How remote B tiles are fetched — the communication-mode selector
+/// plumbed through contexts, the session plan builder, the drivers, and
+/// the CLI.
+///
+/// `RowSelective` is the sparsity-aware strategy of Hong et al.
+/// (arXiv:2408.14558): a consumer multiplying A[i,k]·B[k,j] only reads
+/// the B rows in A[i,k]'s column support, so the fetch gathers just
+/// those row extents instead of the whole tile. Each fetch falls back
+/// to a full-tile get when the gather would move at least as many
+/// bytes — the hybrid strategy of McFarland et al. (arXiv:2504.06408).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Comm {
+    /// Fetch whole remote tiles (the paper's baseline behavior).
+    #[default]
+    FullTile,
+    /// Fetch only the rows the consumer's A support references.
+    RowSelective,
+}
+
+impl Comm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Comm::FullTile => "full-tile",
+            Comm::RowSelective => "row-selective",
+        }
+    }
+
+    /// CLI spelling.
+    pub fn from_name(s: &str) -> Option<Comm> {
+        Some(match s {
+            "full" | "full-tile" => Comm::FullTile,
+            "row" | "row-selective" => Comm::RowSelective,
+            _ => return None,
+        })
+    }
+}
 
 /// Everything a SpMM algorithm needs: the distributed operands, the
 /// accumulation queues, and (for workstealing) reservation grids.
@@ -21,6 +59,8 @@ pub struct SpmmCtx {
     pub res3d: Option<ResGrid3D>,
     /// Local multiply backend (native Rust kernel or AOT PJRT kernel).
     pub backend: TileBackend,
+    /// B-tile communication mode (full-tile vs row-selective gets).
+    pub comm: Comm,
 }
 
 /// SpGEMM context (C = A·B, all sparse).
@@ -36,6 +76,68 @@ pub struct SpgemmCtx {
     /// field set behind the unified plan API) and for future AOT sparse
     /// kernels.
     pub backend: TileBackend,
+    /// B-tile communication mode (full-tile vs row-selective gets).
+    pub comm: Comm,
+}
+
+/// Fetch B[k, j] for a component multiply against A[i, k], honoring the
+/// context's communication mode (non-blocking; the prefetch sites). In
+/// row-selective mode the wanted rows come from A[i, k]'s column
+/// support in the sparsity directory, so the fetch can be issued before
+/// the A tile's own data arrives — prefetch overlap is preserved.
+pub fn fetch_spmm_b(pe: &Pe, ctx: &SpmmCtx, i: usize, k: usize, j: usize) -> DenseTileFuture {
+    match ctx.comm {
+        Comm::FullTile => ctx.b.async_get_tile(pe, k, j),
+        Comm::RowSelective => ctx.b.async_get_rows(pe, k, j, &ctx.a.col_support(i, k)),
+    }
+}
+
+/// Blocking flavor of [`fetch_spmm_b`]; returns the tile and the wire
+/// bytes the fetch moved (bulk-synchronous baselines charge their
+/// library overhead on the actual transfer size).
+pub fn fetch_spmm_b_now(
+    pe: &Pe,
+    ctx: &SpmmCtx,
+    i: usize,
+    k: usize,
+    j: usize,
+    kind: Kind,
+) -> (Dense, f64) {
+    match ctx.comm {
+        Comm::FullTile => {
+            let bytes = ctx.b.tile_ptr(k, j).bytes() as f64;
+            (ctx.b.get_tile_as(pe, k, j, kind), bytes)
+        }
+        Comm::RowSelective => ctx.b.get_rows_as(pe, k, j, &ctx.a.col_support(i, k), kind),
+    }
+}
+
+/// Fetch sparse B[k, j] for a component multiply against A[i, k],
+/// honoring the context's communication mode (non-blocking).
+pub fn fetch_spgemm_b(pe: &Pe, ctx: &SpgemmCtx, i: usize, k: usize, j: usize) -> CsrTileFuture {
+    match ctx.comm {
+        Comm::FullTile => ctx.b.async_get_tile(pe, k, j),
+        Comm::RowSelective => ctx.b.async_get_rows(pe, k, j, &ctx.a.col_support(i, k)),
+    }
+}
+
+/// Blocking flavor of [`fetch_spgemm_b`]; returns the tile and the wire
+/// bytes moved.
+pub fn fetch_spgemm_b_now(
+    pe: &Pe,
+    ctx: &SpgemmCtx,
+    i: usize,
+    k: usize,
+    j: usize,
+    kind: Kind,
+) -> (Csr, f64) {
+    match ctx.comm {
+        Comm::FullTile => {
+            let bytes = ctx.b.handle(k, j).bytes() as f64;
+            (ctx.b.get_tile_as(pe, k, j, kind), bytes)
+        }
+        Comm::RowSelective => ctx.b.get_rows_as(pe, k, j, &ctx.a.col_support(i, k), kind),
+    }
 }
 
 /// Overheads of a bulk-synchronous library baseline, applied on top of
@@ -287,6 +389,16 @@ pub fn wait_for_contributions(pe: &Pe, mut step: impl FnMut(&Pe) -> bool) {
 mod tests {
     use super::*;
     use crate::matrix::gen;
+
+    #[test]
+    fn comm_names_roundtrip() {
+        assert_eq!(Comm::from_name("full"), Some(Comm::FullTile));
+        assert_eq!(Comm::from_name("row"), Some(Comm::RowSelective));
+        assert_eq!(Comm::from_name("row-selective"), Some(Comm::RowSelective));
+        assert_eq!(Comm::from_name("nope"), None);
+        assert_eq!(Comm::default(), Comm::FullTile);
+        assert_eq!(Comm::RowSelective.name(), "row-selective");
+    }
 
     #[test]
     fn merge_csr_sums_overlaps() {

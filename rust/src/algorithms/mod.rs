@@ -11,7 +11,7 @@ pub mod spgemm;
 pub mod spmm;
 pub mod spmm_ws;
 
-pub use common::{AccSink, LibOverhead, SpgemmCtx, SpmmCtx};
+pub use common::{AccSink, Comm, LibOverhead, SpgemmCtx, SpmmCtx};
 pub use spmm_ws::Stationary;
 
 use crate::fabric::Pe;

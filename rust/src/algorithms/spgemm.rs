@@ -8,8 +8,8 @@ use crate::fabric::{Kind, Pe};
 use crate::matrix::{local_spgemm, Csr};
 
 use super::common::{
-    drain_spgemm_queue, wait_for_contributions, LibOverhead, PendingTracker, SparseAccumulators,
-    SpgemmCtx,
+    drain_spgemm_queue, fetch_spgemm_b, fetch_spgemm_b_now, wait_for_contributions, LibOverhead,
+    PendingTracker, SparseAccumulators, SpgemmCtx,
 };
 
 /// One local sparse multiply with roofline cost charging.
@@ -28,14 +28,14 @@ pub fn spgemm_stationary_c(pe: &Pe, ctx: &SpgemmCtx) {
     for &(i, j) in &my_c {
         let k_off = i + j;
         let mut buf_a = Some(ctx.a.async_get_tile(pe, i, k_off % t));
-        let mut buf_b = Some(ctx.b.async_get_tile(pe, k_off % t, j));
+        let mut buf_b = Some(fetch_spgemm_b(pe, ctx, i, k_off % t, j));
         for k_ in 0..t {
             let local_a = buf_a.take().unwrap().wait(pe);
             let local_b = buf_b.take().unwrap().wait(pe);
             if k_ + 1 < t {
                 let kn = (k_ + 1 + k_off) % t;
                 buf_a = Some(ctx.a.async_get_tile(pe, i, kn));
-                buf_b = Some(ctx.b.async_get_tile(pe, kn, j));
+                buf_b = Some(fetch_spgemm_b(pe, ctx, i, kn, j));
             }
             let part = local_spgemm_charged(pe, &local_a, &local_b);
             if part.nnz() > 0 {
@@ -59,12 +59,12 @@ pub fn spgemm_stationary_a(pe: &Pe, ctx: &SpgemmCtx) {
     for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
         let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
         let j_off = i + k;
-        let mut buf_b = Some(ctx.b.async_get_tile(pe, k, j_off % t));
+        let mut buf_b = Some(fetch_spgemm_b(pe, ctx, i, k, j_off % t));
         for j_ in 0..t {
             let j = (j_ + j_off) % t;
             let b_tile = buf_b.take().unwrap().wait(pe);
             if j_ + 1 < t {
-                buf_b = Some(ctx.b.async_get_tile(pe, k, (j_ + 1 + j_off) % t));
+                buf_b = Some(fetch_spgemm_b(pe, ctx, i, k, (j_ + 1 + j_off) % t));
             }
             let part = local_spgemm_charged(pe, &a_tile, &b_tile);
             let owner = ctx.c.owner(i, j);
@@ -106,9 +106,12 @@ pub fn spgemm_summa(pe: &Pe, ctx: &SpgemmCtx, lib: &LibOverhead) {
         let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
         lib.charge_tile(pe, a_src, ctx.a.handle(i, k).bytes() as f64);
         pe.barrier_on(&row_team);
+        // In row-selective mode each member fetches only the B rows its
+        // own A[i,k] references; the library overhead is charged on the
+        // actual transfer size.
         let b_src = ctx.b.owner(k, j);
-        let b_tile = ctx.b.get_tile_as(pe, k, j, Kind::Comm);
-        lib.charge_tile(pe, b_src, ctx.b.handle(k, j).bytes() as f64);
+        let (b_tile, b_bytes) = fetch_spgemm_b_now(pe, ctx, i, k, j, Kind::Comm);
+        lib.charge_tile(pe, b_src, b_bytes);
         pe.barrier_on(&col_team);
         let part = local_spgemm_charged(pe, &a_tile, &b_tile);
         if part.nnz() > 0 {
@@ -141,7 +144,7 @@ pub fn spgemm_random_ws_a(pe: &Pe, ctx: &SpgemmCtx) {
             }
             let j = (my_j as usize + i + k) % t;
             let a_ref = a_tile.get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
-            let b_tile = ctx.b.get_tile(pe, k, j);
+            let (b_tile, _) = fetch_spgemm_b_now(pe, ctx, i, k, j, Kind::Comm);
             let part = local_spgemm_charged(pe, a_ref, &b_tile);
             let owner = ctx.c.owner(i, j);
             if owner == pe.rank() {
@@ -187,7 +190,8 @@ pub fn spgemm_random_ws_a(pe: &Pe, ctx: &SpgemmCtx) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::testutil::{spgemm_fixture, verify_spgemm};
+    use crate::coordinator::testutil::{spgemm_fixture, spgemm_fixture_banded, verify_spgemm};
+    use crate::algorithms::Comm;
 
     #[test]
     fn stationary_c_squares_rmat() {
@@ -226,6 +230,48 @@ mod tests {
         let t = fx.ctx.a.t() as u64;
         let total: u64 = stats.iter().map(|s| s.n_own_work + s.n_steals).sum();
         assert_eq!(total, t * t * t, "every component multiply claimed exactly once");
+    }
+
+    #[test]
+    fn row_selective_matches_full_tile_and_saves_bytes() {
+        // Banded A: a consumer's A[i,k] column support covers a thin
+        // stripe of B[k,j], so the selective path must engage, cut
+        // get-bytes, and leave the product untouched.
+        for alg in [
+            spgemm_stationary_c as fn(&Pe, &SpgemmCtx),
+            spgemm_stationary_a as fn(&Pe, &SpgemmCtx),
+        ] {
+            let (fx_full, want) = spgemm_fixture_banded(4, 64, 0x36);
+            let (_, s_full) = fx_full.fabric.launch(|pe| alg(pe, &fx_full.ctx));
+            verify_spgemm(&fx_full, &want);
+
+            let (mut fx_row, want_row) = spgemm_fixture_banded(4, 64, 0x36);
+            fx_row.ctx.comm = Comm::RowSelective;
+            let (_, s_row) = fx_row.fabric.launch(|pe| alg(pe, &fx_row.ctx));
+            verify_spgemm(&fx_row, &want_row);
+
+            let get = |ss: &Vec<crate::fabric::Stats>| {
+                ss.iter().map(|s| s.bytes_get).sum::<f64>()
+            };
+            let selective: u64 = s_row.iter().map(|s| s.n_selective_gets).sum();
+            assert!(selective > 0, "row-selective fetches never engaged");
+            assert!(
+                get(&s_row) < get(&s_full),
+                "selective gets must move fewer bytes: {} vs {}",
+                get(&s_row),
+                get(&s_full)
+            );
+            let saved: f64 = s_row.iter().map(|s| s.bytes_saved_sparsity).sum();
+            assert!(saved > 0.0);
+        }
+    }
+
+    #[test]
+    fn random_ws_row_selective_correct() {
+        let (mut fx, want) = spgemm_fixture(4, 9, 0x37);
+        fx.ctx.comm = Comm::RowSelective;
+        fx.fabric.launch(|pe| spgemm_random_ws_a(pe, &fx.ctx));
+        verify_spgemm(&fx, &want);
     }
 
     #[test]

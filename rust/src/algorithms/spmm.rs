@@ -10,8 +10,8 @@ use crate::fabric::{Kind, Pe};
 use crate::matrix::Dense;
 
 use super::common::{
-    drain_spmm_queue, local_spmm_charged, wait_for_contributions, DenseAccumulators, LibOverhead,
-    PendingTracker, SpmmCtx,
+    drain_spmm_queue, fetch_spmm_b, fetch_spmm_b_now, local_spmm_charged, wait_for_contributions,
+    DenseAccumulators, LibOverhead, PendingTracker, SpmmCtx,
 };
 
 /// Optimized RDMA stationary-C SpMM — Algorithm 2 of the paper.
@@ -25,7 +25,7 @@ pub fn spmm_stationary_c(pe: &Pe, ctx: &SpmmCtx) {
     for (i, j) in ctx.c.grid.my_tiles(pe.rank()) {
         let k_off = i + j;
         let mut buf_a = Some(ctx.a.async_get_tile(pe, i, k_off % t));
-        let mut buf_b = Some(ctx.b.async_get_tile(pe, k_off % t, j));
+        let mut buf_b = Some(fetch_spmm_b(pe, ctx, i, k_off % t, j));
         let (cr, cc) = ctx.c.tile_dims(i, j);
         let mut local_c = Dense::zeros(cr, cc);
         for k_ in 0..t {
@@ -34,7 +34,7 @@ pub fn spmm_stationary_c(pe: &Pe, ctx: &SpmmCtx) {
             if k_ + 1 < t {
                 let kn = (k_ + 1 + k_off) % t;
                 buf_a = Some(ctx.a.async_get_tile(pe, i, kn));
-                buf_b = Some(ctx.b.async_get_tile(pe, kn, j));
+                buf_b = Some(fetch_spmm_b(pe, ctx, i, kn, j));
             }
             local_spmm_charged(pe, &ctx.backend, &local_a, &local_b, &mut local_c);
         }
@@ -58,7 +58,7 @@ pub fn spmm_stationary_c_unoptimized(pe: &Pe, ctx: &SpmmCtx) {
         let mut local_c = Dense::zeros(cr, cc);
         for k in 0..t {
             let local_a = ctx.a.get_tile(pe, i, k);
-            let local_b = ctx.b.get_tile(pe, k, j);
+            let (local_b, _) = fetch_spmm_b_now(pe, ctx, i, k, j, Kind::Comm);
             local_spmm_charged(pe, &ctx.backend, &local_a, &local_b, &mut local_c);
         }
         ctx.c.put_tile_as(pe, i, j, &local_c, Kind::Comm);
@@ -128,12 +128,12 @@ pub fn spmm_stationary_a(pe: &Pe, ctx: &SpmmCtx) {
         // A tile is local to this rank: a cheap device-local get.
         let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
         let j_off = i + k;
-        let mut buf_b = Some(ctx.b.async_get_tile(pe, k, j_off % t));
+        let mut buf_b = Some(fetch_spmm_b(pe, ctx, i, k, j_off % t));
         for j_ in 0..t {
             let j = (j_ + j_off) % t;
             let b_tile = buf_b.take().unwrap().wait(pe);
             if j_ + 1 < t {
-                buf_b = Some(ctx.b.async_get_tile(pe, k, (j_ + 1 + j_off) % t));
+                buf_b = Some(fetch_spmm_b(pe, ctx, i, k, (j_ + 1 + j_off) % t));
             }
             let (cr, cc) = ctx.c.tile_dims(i, j);
             let mut part = Dense::zeros(cr, cc);
@@ -185,10 +185,13 @@ pub fn spmm_summa(pe: &Pe, ctx: &SpmmCtx, lib: &LibOverhead) {
         let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
         lib.charge_tile(pe, a_src, ctx.a.handle(i, k).bytes() as f64);
         pe.barrier_on(&row_team);
-        // Broadcast B[k,j] in column team.
+        // Broadcast B[k,j] in column team. In row-selective mode each
+        // member fetches only the rows its own A[i,k] references (the
+        // hybrid-communication SUMMA of McFarland et al.), and the
+        // library overhead is charged on the actual transfer size.
         let b_src = ctx.b.owner(k, j);
-        let b_tile = ctx.b.get_tile_as(pe, k, j, Kind::Comm);
-        lib.charge_tile(pe, b_src, ctx.b.tile_ptr(k, j).bytes() as f64);
+        let (b_tile, b_bytes) = fetch_spmm_b_now(pe, ctx, i, k, j, Kind::Comm);
+        lib.charge_tile(pe, b_src, b_bytes);
         pe.barrier_on(&col_team);
         local_spmm_charged(pe, &ctx.backend, &a_tile, &b_tile, &mut local_c);
     }
@@ -199,7 +202,8 @@ pub fn spmm_summa(pe: &Pe, ctx: &SpmmCtx, lib: &LibOverhead) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::testutil::{spmm_fixture, verify_spmm};
+    use crate::coordinator::testutil::{spmm_fixture, spmm_fixture_banded, verify_spmm};
+    use crate::algorithms::Comm;
 
     #[test]
     fn stationary_c_correct_4pe() {
@@ -257,6 +261,42 @@ mod tests {
             mk(&s_opt),
             mk(&s_unopt)
         );
+    }
+
+    #[test]
+    fn row_selective_matches_full_tile_across_algorithms() {
+        for alg in [
+            spmm_stationary_c as fn(&Pe, &SpmmCtx),
+            spmm_stationary_a as fn(&Pe, &SpmmCtx),
+            spmm_stationary_c_unoptimized as fn(&Pe, &SpmmCtx),
+        ] {
+            let (fx_full, want) = spmm_fixture_banded(4, 64, 8, 0x44);
+            let (_, s_full) = fx_full.fabric.launch(|pe| alg(pe, &fx_full.ctx));
+            verify_spmm(&fx_full, &want);
+
+            let (mut fx_row, want_row) = spmm_fixture_banded(4, 64, 8, 0x44);
+            fx_row.ctx.comm = Comm::RowSelective;
+            let (_, s_row) = fx_row.fabric.launch(|pe| alg(pe, &fx_row.ctx));
+            verify_spmm(&fx_row, &want_row);
+
+            // Same multiplies either way; strictly fewer get-bytes.
+            let flops = |ss: &Vec<crate::fabric::Stats>| ss.iter().map(|s| s.flops).sum::<f64>();
+            assert_eq!(flops(&s_full), flops(&s_row));
+            let get = |ss: &Vec<crate::fabric::Stats>| {
+                ss.iter().map(|s| s.bytes_get).sum::<f64>()
+            };
+            assert!(get(&s_row) < get(&s_full), "selective must cut get traffic");
+            assert!(s_row.iter().map(|s| s.n_selective_gets).sum::<u64>() > 0);
+        }
+    }
+
+    #[test]
+    fn summa_row_selective_correct() {
+        let (mut fx, want) = spmm_fixture_banded(9, 54, 8, 0x45);
+        fx.ctx.comm = Comm::RowSelective;
+        let lib = LibOverhead::mpi();
+        fx.fabric.launch(|pe| spmm_summa(pe, &fx.ctx, &lib));
+        verify_spmm(&fx, &want);
     }
 
     #[test]

@@ -14,8 +14,8 @@ use crate::fabric::{Kind, Pe};
 use crate::matrix::{Csr, Dense};
 
 use super::common::{
-    drain_spmm_queue, local_spmm_charged, wait_for_contributions, DenseAccumulators,
-    PendingTracker, SpmmCtx,
+    drain_spmm_queue, fetch_spmm_b_now, local_spmm_charged, wait_for_contributions,
+    DenseAccumulators, PendingTracker, SpmmCtx,
 };
 
 /// Which matrix the owner-compute loop is organized around.
@@ -72,7 +72,7 @@ fn attempt_work_2d(
         // is device-local, a thief pays a remote get — the cost asymmetry
         // the paper describes.
         let a_ref = a_tile.get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
-        let b_tile = ctx.b.get_tile(pe, k, j);
+        let (b_tile, _) = fetch_spmm_b_now(pe, ctx, i, k, j, Kind::Comm);
         let (cr, cc) = ctx.c.tile_dims(i, j);
         let mut part = Dense::zeros(cr, cc);
         local_spmm_charged(pe, &ctx.backend, a_ref, &b_tile, &mut part);
@@ -119,7 +119,10 @@ pub fn spmm_random_ws_a(pe: &Pe, ctx: &SpmmCtx) {
     pe.barrier();
 }
 
-/// Compute one claimed component (i, j, k) and deliver it.
+/// Compute one claimed component (i, j, k) and deliver it. Callers that
+/// hold one of the operand tiles already (their own stationary tile, or
+/// the loop-cached tile of a steal sweep) pass it in; the other operand
+/// is fetched, honoring the context's communication mode for B.
 fn do_component(
     pe: &Pe,
     ctx: &SpmmCtx,
@@ -127,6 +130,7 @@ fn do_component(
     j: usize,
     k: usize,
     a_cached: Option<&Csr>,
+    b_cached: Option<&Dense>,
     acc: &mut DenseAccumulators,
     pending: &mut PendingTracker,
 ) {
@@ -138,10 +142,17 @@ fn do_component(
             &owned_a
         }
     };
-    let b_tile = ctx.b.get_tile(pe, k, j);
+    let owned_b;
+    let b_ref = match b_cached {
+        Some(b) => b,
+        None => {
+            owned_b = fetch_spmm_b_now(pe, ctx, i, k, j, Kind::Comm).0;
+            &owned_b
+        }
+    };
     let (cr, cc) = ctx.c.tile_dims(i, j);
     let mut part = Dense::zeros(cr, cc);
-    local_spmm_charged(pe, &ctx.backend, a_ref, &b_tile, &mut part);
+    local_spmm_charged(pe, &ctx.backend, a_ref, b_ref, &mut part);
     deliver(pe, ctx, acc, pending, i, j, &part);
 }
 
@@ -167,7 +178,7 @@ pub fn spmm_locality_ws(pe: &Pe, ctx: &SpmmCtx, stationary: Stationary) {
                 for k_ in 0..t {
                     let k = (k_ + k_off) % t;
                     if res.try_claim(pe, i, j, k) {
-                        do_component(pe, ctx, i, j, k, None, &mut acc, &mut pending);
+                        do_component(pe, ctx, i, j, k, None, None, &mut acc, &mut pending);
                         pe.stats_mut().n_own_work += 1;
                     }
                     drain_spmm_queue(pe, ctx, &mut acc, &mut pending, false);
@@ -177,11 +188,12 @@ pub fn spmm_locality_ws(pe: &Pe, ctx: &SpmmCtx, stationary: Stationary) {
         Stationary::A => {
             for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
                 let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
+                let a_ref = Some(&a_tile);
                 let j_off = i + k;
                 for j_ in 0..t {
                     let j = (j_ + j_off) % t;
                     if res.try_claim(pe, i, j, k) {
-                        do_component(pe, ctx, i, j, k, Some(&a_tile), &mut acc, &mut pending);
+                        do_component(pe, ctx, i, j, k, a_ref, None, &mut acc, &mut pending);
                         pe.stats_mut().n_own_work += 1;
                     }
                     drain_spmm_queue(pe, ctx, &mut acc, &mut pending, false);
@@ -191,29 +203,8 @@ pub fn spmm_locality_ws(pe: &Pe, ctx: &SpmmCtx, stationary: Stationary) {
     }
 
     // Phase 2: steal only work touching tiles we own.
-    // Components using my A tiles…
-    for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
-        let mut a_tile: Option<Csr> = None;
-        for j in 0..t {
-            if res.try_claim(pe, i, j, k) {
-                let a_ref = a_tile
-                    .get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
-                do_component(pe, ctx, i, j, k, Some(a_ref), &mut acc, &mut pending);
-                pe.stats_mut().n_steals += 1;
-            }
-        }
-        drain_spmm_queue(pe, ctx, &mut acc, &mut pending, false);
-    }
-    // …and components using my B tiles.
-    for (k, j) in ctx.b.grid.my_tiles(pe.rank()) {
-        for i in 0..t {
-            if res.try_claim(pe, i, j, k) {
-                do_component(pe, ctx, i, j, k, None, &mut acc, &mut pending);
-                pe.stats_mut().n_steals += 1;
-            }
-        }
-        drain_spmm_queue(pe, ctx, &mut acc, &mut pending, false);
-    }
+    steal_from_own_a(pe, ctx, &mut acc, &mut pending);
+    steal_from_own_b(pe, ctx, &mut acc, &mut pending);
 
     wait_for_contributions(pe, |pe| {
         drain_spmm_queue(pe, ctx, &mut acc, &mut pending, true);
@@ -223,10 +214,65 @@ pub fn spmm_locality_ws(pe: &Pe, ctx: &SpmmCtx, stationary: Stationary) {
     pe.barrier();
 }
 
+/// Phase-2 steal sweep over components using this PE's A tiles: the A
+/// tile is fetched lazily once per (i, k) and reused across the j loop.
+fn steal_from_own_a(
+    pe: &Pe,
+    ctx: &SpmmCtx,
+    acc: &mut DenseAccumulators,
+    pending: &mut PendingTracker,
+) {
+    let t = ctx.a.t();
+    let res = ctx.res3d.as_ref().expect("locality-aware WS needs a 3D reservation grid");
+    for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
+        let mut a_tile: Option<Csr> = None;
+        for j in 0..t {
+            if res.try_claim(pe, i, j, k) {
+                let a_ref = a_tile.get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
+                do_component(pe, ctx, i, j, k, Some(a_ref), None, acc, pending);
+                pe.stats_mut().n_steals += 1;
+            }
+        }
+        drain_spmm_queue(pe, ctx, acc, pending, false);
+    }
+}
+
+/// Phase-2 steal sweep over components using this PE's B tiles. The
+/// owned B tile is fetched lazily once per (k, j) and reused across the
+/// i loop — it used to be refetched on every iteration via
+/// `do_component`, unlike the A sweep above, which cached its tile.
+fn steal_from_own_b(
+    pe: &Pe,
+    ctx: &SpmmCtx,
+    acc: &mut DenseAccumulators,
+    pending: &mut PendingTracker,
+) {
+    let t = ctx.a.t();
+    let res = ctx.res3d.as_ref().expect("locality-aware WS needs a 3D reservation grid");
+    for (k, j) in ctx.b.grid.my_tiles(pe.rank()) {
+        let mut b_tile: Option<Dense> = None;
+        for i in 0..t {
+            if res.try_claim(pe, i, j, k) {
+                // The whole owned tile is fetched (a device-local get):
+                // it serves every stolen i of this (k, j), so a
+                // row-selective fetch of one consumer's support would
+                // defeat the cache.
+                let b_ref = b_tile.get_or_insert_with(|| ctx.b.get_tile_as(pe, k, j, Kind::Comm));
+                do_component(pe, ctx, i, j, k, None, Some(b_ref), acc, pending);
+                pe.stats_mut().n_steals += 1;
+            }
+        }
+        drain_spmm_queue(pe, ctx, acc, pending, false);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::testutil::{spmm_fixture, spmm_fixture_imbalanced, verify_spmm};
+    use crate::coordinator::testutil::{
+        spmm_fixture, spmm_fixture_banded, spmm_fixture_imbalanced, verify_spmm,
+    };
+    use crate::algorithms::Comm;
 
     #[test]
     fn random_ws_correct_4pe() {
@@ -265,6 +311,57 @@ mod tests {
         let t = fx.ctx.a.t() as u64;
         let total: u64 = stats.iter().map(|s| s.n_own_work + s.n_steals).sum();
         assert_eq!(total, t * t * t);
+    }
+
+    #[test]
+    fn owned_b_tile_fetched_at_most_once_per_steal_loop() {
+        // Regression: the phase-2 B-tile steal loop used to refetch the
+        // *owned* B tile via `do_component` on every i iteration instead
+        // of caching it per (k, j) like the A-tile loop. Run the sweep in
+        // isolation on one rank with nothing pre-claimed, and count gets.
+        let (fx, _) = spmm_fixture(2, 32, 4, 0x26);
+        let t = fx.ctx.a.t();
+        assert_eq!(t, 2);
+        let (_, stats) = fx.fabric.launch(|pe| {
+            if pe.rank() == 1 {
+                let my_c = fx.ctx.c.grid.my_tiles(pe.rank());
+                let mut acc = DenseAccumulators::new(&fx.ctx.c, &my_c);
+                let mut pending = PendingTracker::new(&my_c, t);
+                steal_from_own_b(pe, &fx.ctx, &mut acc, &mut pending);
+            }
+        });
+        // Rank 1 owns B tiles (0,1) and (1,1); it claims all t components
+        // of each. Per tile: ONE dense B get + t sparse A fetches of 3
+        // arrays each. The buggy loop paid t B gets per tile.
+        let b_tiles = fx.ctx.b.grid.my_tiles(1).len() as u64;
+        assert_eq!(stats[1].n_steals, b_tiles * t as u64);
+        assert_eq!(
+            stats[1].n_gets,
+            b_tiles * (1 + 3 * t as u64),
+            "owned B tile must be fetched once per (k, j), not once per component"
+        );
+    }
+
+    #[test]
+    fn locality_ws_row_selective_correct_and_saves_bytes() {
+        // Banded A: off-diagonal tiles have tiny column support, so the
+        // selective path must engage and must not change the result.
+        let (mut fx, want) = spmm_fixture_banded(4, 64, 8, 0x27);
+        fx.ctx.comm = Comm::RowSelective;
+        let (_, stats) = fx.fabric.launch(|pe| spmm_locality_ws(pe, &fx.ctx, Stationary::A));
+        verify_spmm(&fx, &want);
+        let selective: u64 = stats.iter().map(|s| s.n_selective_gets).sum();
+        let saved: f64 = stats.iter().map(|s| s.bytes_saved_sparsity).sum();
+        assert!(selective > 0, "row-selective fetches never engaged");
+        assert!(saved > 0.0);
+    }
+
+    #[test]
+    fn random_ws_row_selective_correct() {
+        let (mut fx, want) = spmm_fixture(4, 64, 8, 0x28);
+        fx.ctx.comm = Comm::RowSelective;
+        fx.fabric.launch(|pe| spmm_random_ws_a(pe, &fx.ctx));
+        verify_spmm(&fx, &want);
     }
 
     #[test]

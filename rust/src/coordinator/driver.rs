@@ -10,7 +10,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::algorithms::{SpgemmAlg, SpmmAlg};
+use crate::algorithms::{Comm, SpgemmAlg, SpmmAlg};
 use crate::fabric::NetProfile;
 use crate::matrix::{Csr, Dense};
 use crate::runtime::TileBackend;
@@ -54,6 +54,8 @@ pub struct SpmmConfig {
     /// Check the distributed result against a single-node reference.
     pub verify: bool,
     pub backend: TileBackend,
+    /// B-tile communication mode (full-tile vs row-selective gets).
+    pub comm: Comm,
 }
 
 impl SpmmConfig {
@@ -68,6 +70,7 @@ impl SpmmConfig {
             seed: 0x5EED,
             verify: false,
             backend: TileBackend::Native,
+            comm: Comm::FullTile,
         }
     }
 
@@ -92,7 +95,12 @@ pub fn run_spmm(a: &Csr, cfg: &SpmmConfig) -> Result<SpmmRun> {
     let mut sess = Session::new(cfg.session());
     let da = sess.load_csr(a);
     let db = sess.random_dense(a.ncols, cfg.n_cols, cfg.seed);
-    let run = sess.plan(da, db).alg(cfg.alg.into()).verify(cfg.verify).execute()?;
+    let run = sess
+        .plan(da, db)
+        .alg(cfg.alg.into())
+        .comm(cfg.comm)
+        .verify(cfg.verify)
+        .execute()?;
     let c = run.gathered.and_then(Gathered::into_dense);
     Ok(SpmmRun { report: run.report, c })
 }
@@ -116,6 +124,8 @@ pub struct SpgemmConfig {
     /// Local multiply backend handed to the session (reserved for AOT
     /// sparse kernels).
     pub backend: TileBackend,
+    /// B-tile communication mode (full-tile vs row-selective gets).
+    pub comm: Comm,
 }
 
 impl SpgemmConfig {
@@ -129,6 +139,7 @@ impl SpgemmConfig {
             seed: 0x5EED,
             verify: false,
             backend: TileBackend::Native,
+            comm: Comm::FullTile,
         }
     }
 
@@ -149,7 +160,12 @@ pub fn run_spgemm(a: &Csr, cfg: &SpgemmConfig) -> Result<SpgemmRun> {
     }
     let mut sess = Session::new(cfg.session());
     let da = sess.load_csr(a); // C = A·A shares one resident operand
-    let run = sess.plan(da, da).alg(cfg.alg.into()).verify(cfg.verify).execute()?;
+    let run = sess
+        .plan(da, da)
+        .alg(cfg.alg.into())
+        .comm(cfg.comm)
+        .verify(cfg.verify)
+        .execute()?;
     let c = run.gathered.and_then(Gathered::into_csr);
     Ok(SpgemmRun { report: run.report, c })
 }

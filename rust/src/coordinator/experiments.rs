@@ -8,7 +8,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
-use crate::algorithms::{SpgemmAlg, SpmmAlg};
+use crate::algorithms::{Comm, SpgemmAlg, SpmmAlg};
 use crate::analysis::loadimb::{grid_load_imbalance, spgemm_tile_flops};
 use crate::fabric::NetProfile;
 use crate::matrix::{local_spgemm, suite};
@@ -27,11 +27,15 @@ pub struct ExpOpts {
     pub verify: bool,
     /// Print rows as they are produced.
     pub print: bool,
+    /// B-tile communication mode for every fabric run the harness
+    /// performs (`--comm row` reproduces the figures with row-selective
+    /// gets).
+    pub comm: Comm,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { scale_shift: 0, verify: false, print: true }
+        ExpOpts { scale_shift: 0, verify: false, print: true, comm: Comm::FullTile }
     }
 }
 
@@ -112,6 +116,7 @@ pub fn fig2(opts: &ExpOpts) -> Result<Vec<RooflinePoint>> {
             * np as f64;
         let mut cfg = SpmmConfig::new(SpmmAlg::StationaryC, np, profile.clone(), n);
         cfg.verify = opts.verify;
+        cfg.comm = opts.comm;
         let run = run_spmm(&a, &cfg)?;
         let achieved = run.report.gflops();
         let row = format!(
@@ -158,6 +163,7 @@ pub fn fig2(opts: &ExpOpts) -> Result<Vec<RooflinePoint>> {
         let bound = (roofline::roofline(model.internode_ai(), bw, peak) * np as f64).min(lpeak);
         let mut cfg = SpgemmConfig::new(SpgemmAlg::StationaryC, np, profile.clone());
         cfg.verify = opts.verify;
+        cfg.comm = opts.comm;
         let run = run_spgemm(&a4, &cfg)?;
         let achieved = run.report.gflops();
         let row = format!(
@@ -235,8 +241,12 @@ fn spmm_sweep(
                     if alg.needs_square() && !sess.grid().is_one_to_one() {
                         continue;
                     }
-                    let run =
-                        sess.plan(da, db).alg(alg.into()).verify(opts.verify).execute()?;
+                    let run = sess
+                        .plan(da, db)
+                        .alg(alg.into())
+                        .comm(opts.comm)
+                        .verify(opts.verify)
+                        .execute()?;
                     let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
                         alg.name(),
@@ -318,8 +328,12 @@ pub fn fig5(opts: &ExpOpts) -> Result<Vec<ScalingRow>> {
                     if alg.needs_square() && !sess.grid().is_one_to_one() {
                         continue;
                     }
-                    let run =
-                        sess.plan(da, da).alg(alg.into()).verify(opts.verify).execute()?;
+                    let run = sess
+                        .plan(da, da)
+                        .alg(alg.into())
+                        .comm(opts.comm)
+                        .verify(opts.verify)
+                        .execute()?;
                     let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
                         alg.name(),
@@ -472,7 +486,8 @@ pub fn table2a(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
         (SpmmAlg::SummaMpi, &[16, 64]),
     ] {
         for &np in counts {
-            let cfg = SpmmConfig::new(alg, np, NetProfile::summit(), 256);
+            let mut cfg = SpmmConfig::new(alg, np, NetProfile::summit(), 256);
+            cfg.comm = opts.comm;
             let run = run_spmm(&amazon, &cfg)?;
             rows.push(t2_row(opts, "Summit", "amazon", cfg.n_cols, &run.report));
         }
@@ -485,7 +500,8 @@ pub fn table2a(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
         (SpmmAlg::SummaMpi, &[16]),
     ] {
         for &np in counts {
-            let cfg = SpmmConfig::new(alg, np, NetProfile::dgx2(), 256);
+            let mut cfg = SpmmConfig::new(alg, np, NetProfile::dgx2(), 256);
+            cfg.comm = opts.comm;
             let run = run_spmm(&nm7, &cfg)?;
             rows.push(t2_row(opts, "DGX-2", "Nm-7", cfg.n_cols, &run.report));
         }
@@ -508,7 +524,8 @@ pub fn table2b(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
     ] {
         let env = if profile.name == "summit" { "Summit" } else { "DGX-2" };
         for &np in counts {
-            let cfg = SpgemmConfig::new(alg, np, profile.clone());
+            let mut cfg = SpgemmConfig::new(alg, np, profile.clone());
+            cfg.comm = opts.comm;
             let run = run_spgemm(&gene, &cfg)?;
             rows.push(t2_row(opts, env, "Mouse Gene", 0, &run.report));
         }

@@ -117,7 +117,9 @@ impl Report {
 // ---------------------------------------------------------------------
 
 /// Version of the BENCH JSON schema (bumped on incompatible change).
-pub const BENCH_SCHEMA_VERSION: i64 = 1;
+/// v2: run rows gained `bytes.saved_sparsity` and `ops.selective_gets`
+/// (row-selective communication accounting), both required.
+pub const BENCH_SCHEMA_VERSION: i64 = 2;
 
 /// A JSON value. The build is fully offline (no serde), so emission,
 /// parsing, and validation are hand-rolled here; the grammar subset is
@@ -498,6 +500,7 @@ impl BenchDoc {
                     ("get", Jv::Num(t.bytes_get)),
                     ("put", Jv::Num(t.bytes_put)),
                     ("bulk", Jv::Num(t.bytes_bulk)),
+                    ("saved_sparsity", Jv::Num(t.bytes_saved_sparsity)),
                 ]),
             ),
             (
@@ -509,6 +512,7 @@ impl BenchDoc {
                     ("queue_push", Jv::Int(t.n_queue_push as i64)),
                     ("queue_pop", Jv::Int(t.n_queue_pop as i64)),
                     ("steals", Jv::Int(t.n_steals as i64)),
+                    ("selective_gets", Jv::Int(t.n_selective_gets as i64)),
                     ("bulk_xfers", Jv::Int(t.n_bulk_xfers as i64)),
                     ("word_ops", Jv::Int(t.n_word_ops as i64)),
                 ]),
@@ -628,11 +632,11 @@ fn validate_row(row: &Jv) -> Result<()> {
             let breakdown = req(row, "breakdown_ns")?;
             req_finite_all(breakdown, &["comp", "comm", "acc", "queue", "imbalance"])?;
             let bytes = req(row, "bytes")?;
-            req_finite_all(bytes, &["get", "put", "bulk"])?;
+            req_finite_all(bytes, &["get", "put", "bulk", "saved_sparsity"])?;
             let ops = req(row, "ops")?;
             let op_keys = [
-                "gets", "puts", "faa", "queue_push", "queue_pop", "steals", "bulk_xfers",
-                "word_ops",
+                "gets", "puts", "faa", "queue_push", "queue_pop", "steals", "selective_gets",
+                "bulk_xfers", "word_ops",
             ];
             req_finite_all(ops, &op_keys)?;
             let per_rank = req(row, "per_rank")?;

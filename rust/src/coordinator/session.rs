@@ -48,7 +48,7 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::algorithms::{Alg, Op, SpgemmCtx, SpmmCtx};
+use crate::algorithms::{Alg, Comm, Op, SpgemmCtx, SpmmCtx};
 use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
 use crate::fabric::{Fabric, FabricConfig, NetProfile};
 use crate::matrix::{local_spgemm, local_spmm, Csr, Dense};
@@ -364,13 +364,15 @@ impl Session {
     }
 
     /// Start describing one multiply C = A·B over resident operands.
-    /// Defaults: stationary-C, no verification, fresh output operand.
+    /// Defaults: stationary-C, full-tile communication, no verification,
+    /// fresh output operand.
     pub fn plan(&mut self, a: OperandId, b: OperandId) -> MultiplyPlan<'_> {
         MultiplyPlan {
             session: self,
             a,
             b,
             alg: Alg::StationaryC,
+            comm: Comm::FullTile,
             verify: false,
             output: None,
             label: None,
@@ -416,6 +418,7 @@ impl Session {
         a: OperandId,
         b: OperandId,
         alg: Alg,
+        comm: Comm,
         verify: bool,
         output: Option<OperandId>,
         label: Option<String>,
@@ -442,8 +445,8 @@ impl Session {
             );
         }
         match op {
-            Op::Spmm => self.run_spmm_plan(a, b, alg, verify, output, label, matrix, bn),
-            Op::Spgemm => self.run_spgemm_plan(a, b, alg, verify, output, label, matrix),
+            Op::Spmm => self.run_spmm_plan(a, b, alg, comm, verify, output, label, matrix, bn),
+            Op::Spgemm => self.run_spgemm_plan(a, b, alg, comm, verify, output, label, matrix),
         }
     }
 
@@ -452,6 +455,7 @@ impl Session {
         a: OperandId,
         b: OperandId,
         alg: Alg,
+        comm: Comm,
         verify: bool,
         output: Option<OperandId>,
         label: Option<String>,
@@ -480,6 +484,7 @@ impl Session {
             res2d,
             res3d,
             backend: self.backend.clone(),
+            comm,
         };
         let t0 = Instant::now();
         let (_, stats) = self.fabric.launch(|pe| spmm_alg.run(pe, &ctx));
@@ -515,6 +520,7 @@ impl Session {
         a: OperandId,
         b: OperandId,
         alg: Alg,
+        comm: Comm,
         verify: bool,
         output: Option<OperandId>,
         label: Option<String>,
@@ -541,6 +547,7 @@ impl Session {
             queues,
             res2d,
             backend: self.backend.clone(),
+            comm,
         };
         let t0 = Instant::now();
         let (_, stats) = self.fabric.launch(|pe| spgemm_alg.run(pe, &ctx));
@@ -592,6 +599,7 @@ pub struct MultiplyPlan<'s> {
     a: OperandId,
     b: OperandId,
     alg: Alg,
+    comm: Comm,
     verify: bool,
     output: Option<OperandId>,
     label: Option<String>,
@@ -602,6 +610,14 @@ impl MultiplyPlan<'_> {
     /// Select the algorithm (default: stationary-C).
     pub fn alg(mut self, alg: Alg) -> Self {
         self.alg = alg;
+        self
+    }
+
+    /// Select the B-tile communication mode (default: full-tile gets;
+    /// `Comm::RowSelective` fetches only the rows each consumer's A
+    /// support references).
+    pub fn comm(mut self, comm: Comm) -> Self {
+        self.comm = comm;
         self
     }
 
@@ -635,8 +651,8 @@ impl MultiplyPlan<'_> {
     /// Run the multiply on the session's fabric: one launch epoch, one
     /// ledger entry, output resident.
     pub fn execute(self) -> Result<MultiplyRun> {
-        let MultiplyPlan { session, a, b, alg, verify, output, label, matrix } = self;
-        session.run_plan(a, b, alg, verify, output, label, matrix)
+        let MultiplyPlan { session, a, b, alg, comm, verify, output, label, matrix } = self;
+        session.run_plan(a, b, alg, comm, verify, output, label, matrix)
     }
 }
 
@@ -767,6 +783,23 @@ mod tests {
         let delta = sess.fabric().setup_reads() - reads_after_first;
         let tile_reads = (sess.grid().t * sess.grid().t) as u64;
         assert_eq!(delta, tile_reads, "only the new C should be gathered");
+    }
+
+    #[test]
+    fn plan_comm_mode_cuts_get_bytes_with_same_result() {
+        // Banded A: the row-selective plan must verify AND move fewer
+        // get-bytes than the full-tile plan over the same residents.
+        let a_m = crate::matrix::gen::banded(64, 2, 0.8, 31);
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&a_m);
+        let b = sess.random_dense(64, 8, 32);
+        let full = sess.plan(a, b).verify(true).execute().unwrap();
+        let row = sess.plan(a, b).comm(Comm::RowSelective).verify(true).execute().unwrap();
+        let (tf, tr) = (full.report.totals(), row.report.totals());
+        assert!(tr.bytes_get < tf.bytes_get, "{} !< {}", tr.bytes_get, tf.bytes_get);
+        assert!(tr.n_selective_gets > 0);
+        assert!(tr.bytes_saved_sparsity > 0.0);
+        assert_eq!(tf.flops, tr.flops, "same multiplies either way");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use crate::algorithms::{SpgemmCtx, SpmmCtx};
+use crate::algorithms::{Comm, SpgemmCtx, SpmmCtx};
 use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
 use crate::fabric::{Fabric, FabricConfig, NetProfile};
 use crate::matrix::{gen, local_spgemm, local_spmm, Coo, Csr, Dense};
@@ -33,6 +33,7 @@ fn build_spmm(nprocs: usize, a: Csr, b: Dense) -> (SpmmFixture, Dense) {
         res2d: Some(ResGrid2D::create(&fabric, grid)),
         res3d: Some(ResGrid3D::create(&fabric, grid)),
         backend: TileBackend::Native,
+        comm: Comm::FullTile,
     };
     (SpmmFixture { fabric, ctx }, want)
 }
@@ -41,6 +42,21 @@ fn build_spmm(nprocs: usize, a: Csr, b: Dense) -> (SpmmFixture, Dense) {
 pub fn spmm_fixture(nprocs: usize, n: usize, n_cols: usize, seed: u64) -> (SpmmFixture, Dense) {
     let mut rng = Rng::new(seed);
     let a = gen::erdos_renyi(n, 5, seed);
+    let b = Dense::random(n, n_cols, &mut rng);
+    build_spmm(nprocs, a, b)
+}
+
+/// Banded sparse A times random dense B: off-diagonal A tiles have a
+/// thin column support, so `Comm::RowSelective` reliably engages (and
+/// saves) on the B fetches. Set `ctx.comm` after construction.
+pub fn spmm_fixture_banded(
+    nprocs: usize,
+    n: usize,
+    n_cols: usize,
+    seed: u64,
+) -> (SpmmFixture, Dense) {
+    let mut rng = Rng::new(seed);
+    let a = gen::banded(n, 2, 0.8, seed);
     let b = Dense::random(n, n_cols, &mut rng);
     build_spmm(nprocs, a, b)
 }
@@ -81,8 +97,7 @@ pub struct SpgemmFixture {
     pub ctx: SpgemmCtx,
 }
 
-pub fn spgemm_fixture(nprocs: usize, scale: u32, seed: u64) -> (SpgemmFixture, Csr) {
-    let a = gen::rmat(scale.min(10), 4, 0.5, 0.17, 0.17, seed);
+fn build_spgemm(nprocs: usize, a: Csr) -> (SpgemmFixture, Csr) {
     let want = local_spgemm::spgemm(&a, &a).c;
     let fabric = Fabric::new(FabricConfig {
         nprocs,
@@ -99,8 +114,19 @@ pub fn spgemm_fixture(nprocs: usize, scale: u32, seed: u64) -> (SpgemmFixture, C
         queues: AccQueues::create(&fabric, 4096),
         res2d: Some(ResGrid2D::create(&fabric, grid)),
         backend: TileBackend::Native,
+        comm: Comm::FullTile,
     };
     (SpgemmFixture { fabric, ctx }, want)
+}
+
+pub fn spgemm_fixture(nprocs: usize, scale: u32, seed: u64) -> (SpgemmFixture, Csr) {
+    build_spgemm(nprocs, gen::rmat(scale.min(10), 4, 0.5, 0.17, 0.17, seed))
+}
+
+/// C = A·A on a banded A: thin off-diagonal column supports make the
+/// row-selective path engage reliably. Set `ctx.comm` after construction.
+pub fn spgemm_fixture_banded(nprocs: usize, n: usize, seed: u64) -> (SpgemmFixture, Csr) {
+    build_spgemm(nprocs, gen::banded(n, 2, 0.8, seed))
 }
 
 pub fn verify_spgemm(fx: &SpgemmFixture, want: &Csr) {

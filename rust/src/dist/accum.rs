@@ -37,7 +37,60 @@ pub struct AccMsg {
     colind: GlobalPtr<i32>,
 }
 
+/// Checked `usize` → `u32` narrowing at the wire-format boundary: the
+/// old construction sites cast with `as`, which silently truncated
+/// oversized values into a *different* tile's coordinates.
+fn wire_u32(v: usize, what: &str) -> u32 {
+    assert!(v <= u32::MAX as usize, "{what} {v} exceeds the AccMsg wire format");
+    v as u32
+}
+
+/// Tile rows share their wire word with the sparse flag, so they get
+/// one bit less than the other fields.
+fn wire_ti(v: usize) -> u32 {
+    assert!(v < 1 << 31, "tile row {v} exceeds the encodable range (31 bits)");
+    v as u32
+}
+
 impl AccMsg {
+    /// Checked descriptor for a dense partial tile. Every field is
+    /// validated against the wire format (ti: 31 bits; tj, nrows,
+    /// ncols: 32 bits) instead of silently truncating.
+    pub fn dense(ti: usize, tj: usize, nrows: usize, ncols: usize, data: GlobalPtr<f32>) -> AccMsg {
+        AccMsg {
+            ti: wire_ti(ti),
+            tj: wire_u32(tj, "tile col"),
+            nrows: wire_u32(nrows, "nrows"),
+            ncols: wire_u32(ncols, "ncols"),
+            sparse: false,
+            data,
+            rowptr: GlobalPtr::null(),
+            colind: GlobalPtr::null(),
+        }
+    }
+
+    /// Checked descriptor for a sparse partial tile (see [`AccMsg::dense`]).
+    pub fn sparse(
+        ti: usize,
+        tj: usize,
+        nrows: usize,
+        ncols: usize,
+        rowptr: GlobalPtr<i64>,
+        colind: GlobalPtr<i32>,
+        vals: GlobalPtr<f32>,
+    ) -> AccMsg {
+        AccMsg {
+            ti: wire_ti(ti),
+            tj: wire_u32(tj, "tile col"),
+            nrows: wire_u32(nrows, "nrows"),
+            ncols: wire_u32(ncols, "ncols"),
+            sparse: true,
+            data: vals,
+            rowptr,
+            colind,
+        }
+    }
+
     /// Pull a dense partial tile (charged as Acc — accumulation traffic).
     pub fn fetch_dense(&self, pe: &Pe) -> Dense {
         assert!(!self.sparse, "fetch_dense on a sparse partial");
@@ -71,6 +124,10 @@ impl QueueItem for AccMsg {
     const WORDS: usize = 8;
 
     fn encode(&self, out: &mut [u64]) {
+        // Symmetric wire validation: ti shares word 0 with the sparse
+        // flag (31 bits); tj / nrows / ncols occupy full 32-bit lanes,
+        // so their `u32` type is exactly the wire range — the checked
+        // constructors above guard the usize boundary.
         assert!(self.ti < (1 << 31), "tile row {} exceeds encodable range", self.ti);
         out[0] = ((self.sparse as u64) << 63) | ((self.ti as u64) << 32) | self.tj as u64;
         out[1] = ((self.nrows as u64) << 32) | self.ncols as u64;
@@ -133,16 +190,7 @@ impl AccQueues {
     /// one remote FAA + one remote put (the queue push).
     pub fn send_dense_partial(&self, pe: &Pe, owner: usize, i: usize, j: usize, part: &Dense) {
         let data = pe.publish(&part.data, Kind::Acc);
-        let msg = AccMsg {
-            ti: i as u32,
-            tj: j as u32,
-            nrows: part.nrows as u32,
-            ncols: part.ncols as u32,
-            sparse: false,
-            data,
-            rowptr: GlobalPtr::null(),
-            colind: GlobalPtr::null(),
-        };
+        let msg = AccMsg::dense(i, j, part.nrows, part.ncols, data);
         self.queues[owner].push(pe, &msg);
     }
 
@@ -153,16 +201,7 @@ impl AccQueues {
         let rowptr = pe.publish(&part.rowptr, Kind::Acc);
         let colind = pe.publish(&part.colind, Kind::Acc);
         let vals = pe.publish(&part.vals, Kind::Acc);
-        let msg = AccMsg {
-            ti: i as u32,
-            tj: j as u32,
-            nrows: part.nrows as u32,
-            ncols: part.ncols as u32,
-            sparse: true,
-            data: vals,
-            rowptr,
-            colind,
-        };
+        let msg = AccMsg::sparse(i, j, part.nrows, part.ncols, rowptr, colind, vals);
         self.queues[owner].push(pe, &msg);
     }
 
@@ -219,6 +258,73 @@ mod tests {
         let back = AccMsg::decode(&w);
         assert!(back.sparse);
         assert_eq!(back.rowptr, sparse.rowptr);
+    }
+
+    #[test]
+    fn prop_wire_format_roundtrips_all_fields() {
+        use crate::testing::check;
+        check(
+            "AccMsg encode/decode preserves every field, including wire extremes",
+            64,
+            0xACC,
+            |rng| {
+                let sparse = rng.below(2) == 1;
+                // Mix random values with the exact wire-format extremes.
+                let pick = |rng: &mut crate::util::Rng, max: u64| match rng.below(4) {
+                    0 => 0,
+                    1 => max,
+                    _ => rng.below(max),
+                };
+                let gp = |rng: &mut crate::util::Rng| {
+                    if rng.below(4) == 0 {
+                        GlobalPtr::<f32>::null()
+                    } else {
+                        GlobalPtr::new(
+                            rng.below((1 << 24) - 1) as usize,
+                            (rng.next_u64() % (1 << 40)) as usize,
+                            rng.below((1 << 40) - 1) as usize,
+                        )
+                    }
+                };
+                AccMsg {
+                    ti: pick(rng, (1 << 31) - 1) as u32,
+                    tj: pick(rng, u32::MAX as u64) as u32,
+                    nrows: pick(rng, u32::MAX as u64) as u32,
+                    ncols: pick(rng, u32::MAX as u64) as u32,
+                    sparse,
+                    data: gp(rng),
+                    rowptr: GlobalPtr::decode(gp(rng).encode()),
+                    colind: GlobalPtr::decode(gp(rng).encode()),
+                }
+            },
+            |m| {
+                let mut w = [0u64; AccMsg::WORDS];
+                m.encode(&mut w);
+                let back = AccMsg::decode(&w);
+                let same = (back.ti, back.tj, back.nrows, back.ncols, back.sparse)
+                    == (m.ti, m.tj, m.nrows, m.ncols, m.sparse)
+                    && back.data == m.data
+                    && back.rowptr.encode() == m.rowptr.encode()
+                    && back.colind.encode() == m.colind.encode();
+                if same {
+                    Ok(())
+                } else {
+                    Err(format!("roundtrip mismatch: {back:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the encodable range")]
+    fn oversized_tile_row_is_rejected_at_construction() {
+        let _ = AccMsg::dense(1 << 31, 0, 4, 4, GlobalPtr::null());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the AccMsg wire format")]
+    fn oversized_tile_col_is_rejected_at_construction() {
+        let _ = AccMsg::dense(0, (u32::MAX as usize) + 1, 4, 4, GlobalPtr::null());
     }
 
     #[test]

@@ -27,17 +27,44 @@ pub struct DistDense {
 }
 
 /// An in-flight one-sided tile get; [`DenseTileFuture::wait`] yields the
-/// tile once the (virtual-time) transfer completes.
+/// tile once the (virtual-time) transfer completes. Carries either the
+/// whole tile or, for a row-selective fetch, the gathered row runs
+/// (unselected rows come back zero — the consumer's A support never
+/// reads them).
 pub struct DenseTileFuture {
     fut: GetFuture<f32>,
     nrows: usize,
     ncols: usize,
+    bytes: f64,
+    /// Row runs of a selective fetch; `None` for a full-tile fetch.
+    runs: Option<Vec<(usize, usize)>>,
+}
+
+/// Scatter the gathered row runs back into a zeroed full-height tile.
+fn assemble_rows(nrows: usize, ncols: usize, runs: &[(usize, usize)], data: Vec<f32>) -> Dense {
+    let mut out = Dense::zeros(nrows, ncols);
+    let mut off = 0usize;
+    for &(r0, n) in runs {
+        let len = n * ncols;
+        out.data[r0 * ncols..r0 * ncols + len].copy_from_slice(&data[off..off + len]);
+        off += len;
+    }
+    out
 }
 
 impl DenseTileFuture {
+    /// Wire bytes this fetch moves (full tile, or the selective rows).
+    pub fn bytes(&self) -> f64 {
+        self.bytes
+    }
+
     /// Block until the transfer completes, charging the wait to `kind`.
     pub fn wait_as(self, pe: &Pe, kind: Kind) -> Dense {
-        Dense::from_vec(self.nrows, self.ncols, self.fut.wait_as(pe, kind))
+        let data = self.fut.wait_as(pe, kind);
+        match self.runs {
+            None => Dense::from_vec(self.nrows, self.ncols, data),
+            Some(runs) => assemble_rows(self.nrows, self.ncols, &runs, data),
+        }
     }
 
     /// Block until the transfer completes (charged as Comm).
@@ -126,7 +153,90 @@ impl DistDense {
     /// [`DenseTileFuture::wait`] — the prefetch primitive of §3.3.
     pub fn async_get_tile(&self, pe: &Pe, i: usize, j: usize) -> DenseTileFuture {
         let (r, c) = self.tile_dims(i, j);
-        DenseTileFuture { fut: pe.async_get(self.tile_ptr(i, j)), nrows: r, ncols: c }
+        let gp = self.tile_ptr(i, j);
+        DenseTileFuture {
+            fut: pe.async_get(gp),
+            nrows: r,
+            ncols: c,
+            bytes: gp.bytes() as f64,
+            runs: None,
+        }
+    }
+
+    /// Lay out a row-selective fetch of tile (i, j): merged runs of
+    /// consecutive selected rows and their element ranges. `None` means
+    /// the gather would move at least as many bytes as the whole tile
+    /// (hybrid fallback to a full fetch).
+    #[allow(clippy::type_complexity)]
+    fn plan_rows(
+        &self,
+        i: usize,
+        j: usize,
+        rows: &[u32],
+    ) -> Option<(GlobalPtr<f32>, Vec<(usize, usize)>, Vec<(usize, usize)>)> {
+        let gp = self.tile_ptr(i, j);
+        let (r, c) = self.tile_dims(i, j);
+        let mut runs: Vec<(usize, usize)> = Vec::new();
+        for &row in rows {
+            let row = row as usize;
+            debug_assert!(row < r, "selected row {row} outside tile of {r} rows");
+            match runs.last_mut() {
+                Some((r0, n)) if *r0 + *n == row => *n += 1,
+                _ => runs.push((row, 1)),
+            }
+        }
+        let ranges: Vec<_> = runs.iter().map(|&(r0, n)| (r0 * c, n * c)).collect();
+        if gp.gather_wire_bytes(&ranges) >= gp.bytes() {
+            return None;
+        }
+        Some((gp, runs, ranges))
+    }
+
+    /// Non-blocking **row-selective** fetch of tile (i, j): gather only
+    /// the rows a consumer's A-tile column support references, falling
+    /// back to a full-tile fetch when that would be cheaper. Unselected
+    /// rows of the returned tile are zero. Bumps `n_selective_gets` /
+    /// `bytes_saved_sparsity` when the selective path is taken.
+    pub fn async_get_rows(&self, pe: &Pe, i: usize, j: usize, rows: &[u32]) -> DenseTileFuture {
+        match self.plan_rows(i, j, rows) {
+            None => self.async_get_tile(pe, i, j),
+            Some((gp, runs, ranges)) => {
+                let (r, c) = self.tile_dims(i, j);
+                let (fut, wire) = pe.async_gather(gp, &ranges);
+                let mut s = pe.stats_mut();
+                s.n_selective_gets += 1;
+                s.bytes_saved_sparsity += (gp.bytes() - wire) as f64;
+                drop(s);
+                DenseTileFuture { fut, nrows: r, ncols: c, bytes: wire as f64, runs: Some(runs) }
+            }
+        }
+    }
+
+    /// Blocking row-selective fetch of tile (i, j); returns the tile and
+    /// the wire bytes moved. See [`DistDense::async_get_rows`].
+    pub fn get_rows_as(
+        &self,
+        pe: &Pe,
+        i: usize,
+        j: usize,
+        rows: &[u32],
+        kind: Kind,
+    ) -> (Dense, f64) {
+        match self.plan_rows(i, j, rows) {
+            None => {
+                let gp = self.tile_ptr(i, j);
+                (self.get_tile_as(pe, i, j, kind), gp.bytes() as f64)
+            }
+            Some((gp, runs, ranges)) => {
+                let (r, c) = self.tile_dims(i, j);
+                let (data, wire) = pe.gather_as(gp, &ranges, kind);
+                let mut s = pe.stats_mut();
+                s.n_selective_gets += 1;
+                s.bytes_saved_sparsity += (gp.bytes() - wire) as f64;
+                drop(s);
+                (assemble_rows(r, c, &runs, data), wire as f64)
+            }
+        }
     }
 
     /// One-sided put of a full tile into place, charged to `kind`.
@@ -242,6 +352,55 @@ mod tests {
         let tile_bytes = (r * c * 4) as f64;
         assert_eq!(stats[0].n_bulk_xfers, 2, "one tile get + one tile put");
         assert_eq!(stats[0].bytes_bulk, 2.0 * tile_bytes);
+    }
+
+    #[test]
+    fn get_rows_fetches_selected_rows_zeros_the_rest() {
+        let f = fab(4);
+        let mut rng = Rng::new(19);
+        let m = Dense::random(32, 12, &mut rng);
+        let grid = ProcGrid::for_nprocs(4);
+        let d = DistDense::scatter(&f, &m, grid);
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() != 0 {
+                return;
+            }
+            let full = d.get_tile(pe, 1, 0);
+            let rows: Vec<u32> = vec![0, 1, 2, 7, 8, 13];
+            let (got, bytes) = d.get_rows_as(pe, 1, 0, &rows, Kind::Comm);
+            assert_eq!((got.nrows, got.ncols), (full.nrows, full.ncols));
+            assert!(bytes < d.tile_ptr(1, 0).bytes() as f64);
+            for r in 0..full.nrows {
+                if rows.contains(&(r as u32)) {
+                    assert_eq!(got.row(r), full.row(r), "row {r}");
+                } else {
+                    assert!(got.row(r).iter().all(|&x| x == 0.0), "row {r} should be zero");
+                }
+            }
+            let fut = d.async_get_rows(pe, 1, 0, &rows);
+            assert_eq!(fut.wait(pe).data, got.data);
+        });
+        assert_eq!(stats[0].n_selective_gets, 2);
+        assert!(stats[0].bytes_saved_sparsity > 0.0);
+    }
+
+    #[test]
+    fn get_rows_all_rows_falls_back_to_full_tile() {
+        let f = fab(4);
+        let mut rng = Rng::new(21);
+        let m = Dense::random(16, 8, &mut rng);
+        let d = DistDense::scatter(&f, &m, ProcGrid::for_nprocs(4));
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() == 0 {
+                let (r, _) = d.tile_dims(1, 1);
+                let all: Vec<u32> = (0..r as u32).collect();
+                let (got, bytes) = d.get_rows_as(pe, 1, 1, &all, Kind::Comm);
+                assert_eq!(got.data, d.get_tile(pe, 1, 1).data);
+                assert_eq!(bytes, d.tile_ptr(1, 1).bytes() as f64);
+            }
+            pe.barrier();
+        });
+        assert_eq!(stats[0].n_selective_gets, 0, "full selection is not selective");
     }
 
     #[test]

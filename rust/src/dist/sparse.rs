@@ -42,35 +42,121 @@ impl CsrHandle {
     }
 }
 
+/// One directory slot: the tile's storage handle plus its sparsity
+/// summaries — the **row-extent directory** (a host-shared copy of the
+/// tile's rowptr, so a consumer can lay out a row-selective gather
+/// without a remote round trip) and the tile's **column support** (the
+/// sorted distinct columns it occupies — exactly the rows of a B tile
+/// a consumer multiplying against this tile needs). Both are refreshed
+/// together with the handle on `replace_tile` / `renew_tiles`, so they
+/// always describe the stored arrays.
+struct TileSlot {
+    h: CsrHandle,
+    rowext: Arc<Vec<i64>>,
+    colsup: Arc<Vec<u32>>,
+}
+
+impl TileSlot {
+    fn new(h: CsrHandle, tile: &Csr) -> TileSlot {
+        let mut seen = vec![false; tile.ncols];
+        for &c in &tile.colind {
+            seen[c as usize] = true;
+        }
+        let mut colsup = Vec::new();
+        for (c, &s) in seen.iter().enumerate() {
+            if s {
+                colsup.push(c as u32);
+            }
+        }
+        TileSlot { h, rowext: Arc::new(tile.rowptr.clone()), colsup: Arc::new(colsup) }
+    }
+}
+
 /// A CSR matrix distributed tile-by-tile over a [`ProcGrid`].
 #[derive(Clone)]
 pub struct DistCsr {
     pub grid: ProcGrid,
     pub nrows: usize,
     pub ncols: usize,
-    /// Mutable directory: tile (i, j)'s handle at `tiles[i * t + j]`.
-    /// Owners update entries via `replace_tile`; everyone else reads.
-    tiles: Arc<Vec<RwLock<CsrHandle>>>,
+    /// Mutable directory: tile (i, j)'s handle and sparsity summaries at
+    /// `tiles[i * t + j]`. Owners update entries via `replace_tile`;
+    /// everyone else reads.
+    tiles: Arc<Vec<RwLock<TileSlot>>>,
 }
 
-/// Three in-flight one-sided gets (rowptr, colind, vals) of one tile.
+/// The gather layout of one row-selective tile fetch: merged runs of
+/// consecutive wanted rows, plus the element ranges of the three CSR
+/// arrays those runs occupy.
+struct CsrGatherPlan {
+    h: CsrHandle,
+    runs: Vec<(usize, usize)>,
+    rp_ranges: Vec<(usize, usize)>,
+    entry_ranges: Vec<(usize, usize)>,
+}
+
+/// Rebuild a full-height tile from the gathered rowptr spans and entry
+/// slices of the selected row runs. Unselected rows come back empty, so
+/// the result multiplies exactly like the full tile wherever the
+/// consumer's A support actually reaches.
+fn assemble_selected(
+    nrows: usize,
+    ncols: usize,
+    runs: &[(usize, usize)],
+    spans: &[i64],
+    colind: Vec<i32>,
+    vals: Vec<f32>,
+) -> Csr {
+    let mut rowptr = vec![0i64; nrows + 1];
+    let mut cum = 0i64;
+    let mut sp = 0usize;
+    let mut row = 0usize;
+    for &(r0, n) in runs {
+        while row < r0 {
+            row += 1;
+            rowptr[row] = cum;
+        }
+        let span = &spans[sp..sp + n + 1];
+        sp += n + 1;
+        for k in 0..n {
+            cum += span[k + 1] - span[k];
+            row += 1;
+            rowptr[row] = cum;
+        }
+    }
+    while row < nrows {
+        row += 1;
+        rowptr[row] = cum;
+    }
+    Csr { nrows, ncols, rowptr, colind, vals }
+}
+
+/// Three in-flight one-sided gets (rowptr, colind, vals) of one tile —
+/// full arrays, or the row-selective spans of a `get_rows` fetch.
 pub struct CsrTileFuture {
     rowptr: GetFuture<i64>,
     colind: GetFuture<i32>,
     vals: GetFuture<f32>,
     nrows: usize,
     ncols: usize,
+    bytes: f64,
+    /// Row runs of a selective fetch; `None` for a full-tile fetch.
+    runs: Option<Vec<(usize, usize)>>,
 }
 
 impl CsrTileFuture {
+    /// Wire bytes this fetch moves (full arrays, or the selective spans).
+    pub fn bytes(&self) -> f64 {
+        self.bytes
+    }
+
     /// Block until all three transfers complete, charging waits to `kind`.
     pub fn wait_as(self, pe: &Pe, kind: Kind) -> Csr {
-        Csr {
-            nrows: self.nrows,
-            ncols: self.ncols,
-            rowptr: self.rowptr.wait_as(pe, kind),
-            colind: self.colind.wait_as(pe, kind),
-            vals: self.vals.wait_as(pe, kind),
+        let rowptr = self.rowptr.wait_as(pe, kind);
+        let colind = self.colind.wait_as(pe, kind);
+        let vals = self.vals.wait_as(pe, kind);
+        match self.runs {
+            None => Csr { nrows: self.nrows, ncols: self.ncols, rowptr, colind, vals },
+            Some(runs) => assemble_selected(self.nrows, self.ncols, &runs, &rowptr, colind, vals),
         }
     }
 
@@ -109,7 +195,8 @@ impl DistCsr {
                 let (r0, r1) = grid.block(m.nrows, i);
                 let (c0, c1) = grid.block(m.ncols, j);
                 let tile = m.submatrix(r0, r1, c0, c1);
-                tiles.push(RwLock::new(store_tile(fabric, grid.owner(i, j), &tile)));
+                let h = store_tile(fabric, grid.owner(i, j), &tile);
+                tiles.push(RwLock::new(TileSlot::new(h, &tile)));
             }
         }
         DistCsr { grid, nrows: m.nrows, ncols: m.ncols, tiles: Arc::new(tiles) }
@@ -140,12 +227,26 @@ impl DistCsr {
 
     /// Current directory entry for tile (i, j).
     pub fn handle(&self, i: usize, j: usize) -> CsrHandle {
-        *self.tiles[i * self.grid.t + j].read().unwrap()
+        self.tiles[i * self.grid.t + j].read().unwrap().h
+    }
+
+    /// Row-extent directory entry of tile (i, j): a host-shared copy of
+    /// the tile's rowptr, maintained alongside the handle.
+    pub fn row_extents(&self, i: usize, j: usize) -> Arc<Vec<i64>> {
+        Arc::clone(&self.tiles[i * self.grid.t + j].read().unwrap().rowext)
+    }
+
+    /// Column support of tile (i, j): the sorted distinct columns it
+    /// occupies. When this matrix is the A of a multiply, the support of
+    /// A[i, k] is exactly the set of B[k, j] rows the component multiply
+    /// reads — the input of a row-selective B fetch.
+    pub fn col_support(&self, i: usize, j: usize) -> Arc<Vec<u32>> {
+        Arc::clone(&self.tiles[i * self.grid.t + j].read().unwrap().colsup)
     }
 
     /// Global nonzero count (sum over tile handles).
     pub fn nnz(&self) -> usize {
-        self.tiles.iter().map(|h| h.read().unwrap().nnz()).sum()
+        self.tiles.iter().map(|s| s.read().unwrap().h.nnz()).sum()
     }
 
     /// Nonzeros stored on `rank`.
@@ -198,6 +299,101 @@ impl DistCsr {
             vals: pe.async_get(h.vals),
             nrows: h.nrows,
             ncols: h.ncols,
+            bytes: h.bytes() as f64,
+            runs: None,
+        }
+    }
+
+    /// Lay out a row-selective fetch of tile (i, j) restricted to `rows`
+    /// (sorted ascending, typically a consumer A tile's column support).
+    /// Rows the tile itself leaves empty are skipped via the row-extent
+    /// directory. `Err(h)` means the gather would move at least as many
+    /// bytes as the whole tile — the hybrid fallback to a full fetch.
+    fn plan_rows(&self, i: usize, j: usize, rows: &[u32]) -> Result<CsrGatherPlan, CsrHandle> {
+        let slot = self.tiles[i * self.grid.t + j].read().unwrap();
+        let h = slot.h;
+        let rp = &slot.rowext;
+        let mut runs: Vec<(usize, usize)> = Vec::new();
+        for &r in rows {
+            let r = r as usize;
+            debug_assert!(r < h.nrows, "selected row {r} outside tile of {} rows", h.nrows);
+            if rp[r + 1] == rp[r] {
+                continue; // empty in this tile: nothing to move
+            }
+            match runs.last_mut() {
+                Some((r0, n)) if *r0 + *n == r => *n += 1,
+                _ => runs.push((r, 1)),
+            }
+        }
+        let rp_ranges: Vec<_> = runs.iter().map(|&(r0, n)| (r0, n + 1)).collect();
+        let entry_ranges: Vec<_> = runs
+            .iter()
+            .map(|&(r0, n)| (rp[r0] as usize, (rp[r0 + n] - rp[r0]) as usize))
+            .collect();
+        let wire = h.rowptr.gather_wire_bytes(&rp_ranges)
+            + h.colind.gather_wire_bytes(&entry_ranges)
+            + h.vals.gather_wire_bytes(&entry_ranges);
+        if wire >= h.bytes() {
+            return Err(h);
+        }
+        Ok(CsrGatherPlan { h, runs, rp_ranges, entry_ranges })
+    }
+
+    /// Non-blocking **row-selective** fetch of tile (i, j): gather only
+    /// the rowptr spans and colind/vals slices of `rows` (the consumer's
+    /// A-tile column support), falling back to a full-tile fetch when
+    /// that would be cheaper. Unselected rows of the returned tile are
+    /// empty. Bumps the `n_selective_gets` / `bytes_saved_sparsity`
+    /// counters when the selective path is taken.
+    pub fn async_get_rows(&self, pe: &Pe, i: usize, j: usize, rows: &[u32]) -> CsrTileFuture {
+        match self.plan_rows(i, j, rows) {
+            Err(_) => self.async_get_tile(pe, i, j),
+            Ok(p) => {
+                let (rowptr, w1) = pe.async_gather(p.h.rowptr, &p.rp_ranges);
+                let (colind, w2) = pe.async_gather(p.h.colind, &p.entry_ranges);
+                let (vals, w3) = pe.async_gather(p.h.vals, &p.entry_ranges);
+                let wire = w1 + w2 + w3;
+                let mut s = pe.stats_mut();
+                s.n_selective_gets += 1;
+                s.bytes_saved_sparsity += (p.h.bytes() - wire) as f64;
+                drop(s);
+                CsrTileFuture {
+                    rowptr,
+                    colind,
+                    vals,
+                    nrows: p.h.nrows,
+                    ncols: p.h.ncols,
+                    bytes: wire as f64,
+                    runs: Some(p.runs),
+                }
+            }
+        }
+    }
+
+    /// Blocking row-selective fetch of tile (i, j); returns the tile and
+    /// the wire bytes moved. See [`DistCsr::async_get_rows`].
+    pub fn get_rows_as(
+        &self,
+        pe: &Pe,
+        i: usize,
+        j: usize,
+        rows: &[u32],
+        kind: Kind,
+    ) -> (Csr, f64) {
+        match self.plan_rows(i, j, rows) {
+            Err(h) => (self.get_tile_as(pe, i, j, kind), h.bytes() as f64),
+            Ok(p) => {
+                let (spans, w1) = pe.gather_as(p.h.rowptr, &p.rp_ranges, kind);
+                let (colind, w2) = pe.gather_as(p.h.colind, &p.entry_ranges, kind);
+                let (vals, w3) = pe.gather_as(p.h.vals, &p.entry_ranges, kind);
+                let wire = w1 + w2 + w3;
+                let mut s = pe.stats_mut();
+                s.n_selective_gets += 1;
+                s.bytes_saved_sparsity += (p.h.bytes() - wire) as f64;
+                drop(s);
+                let tile = assemble_selected(p.h.nrows, p.h.ncols, &p.runs, &spans, colind, vals);
+                (tile, wire as f64)
+            }
         }
     }
 
@@ -222,16 +418,21 @@ impl DistCsr {
         pe.put_as(colind, &tile.colind, Kind::Comm);
         let vals = pe.alloc::<f32>(tile.vals.len());
         pe.put_as(vals, &tile.vals, Kind::Comm);
-        *self.tiles[i * self.grid.t + j].write().unwrap() =
-            CsrHandle { rowptr, colind, vals, nrows: tile.nrows, ncols: tile.ncols };
+        let h = CsrHandle { rowptr, colind, vals, nrows: tile.nrows, ncols: tile.ncols };
+        *self.tiles[i * self.grid.t + j].write().unwrap() = TileSlot::new(h, tile);
     }
 
     /// Collective directory refresh after `replace_tile`s: every PE
-    /// re-fetches the t² updated handles (modeled as one allgather-style
+    /// re-fetches the t² updated handles plus the row-extent /
+    /// column-support summaries (modeled as one allgather-style
     /// exchange) and synchronizes. Must be called by all PEs.
     pub fn renew_tiles(&self, pe: &Pe) {
         let t = self.grid.t;
-        let bytes = (t * t * std::mem::size_of::<CsrHandle>()) as f64;
+        let mut bytes = (t * t * std::mem::size_of::<CsrHandle>()) as f64;
+        for cell in self.tiles.iter() {
+            let slot = cell.read().unwrap();
+            bytes += (slot.rowext.len() * 8 + slot.colsup.len() * 4) as f64;
+        }
         let link = pe.fabric().profile().inter;
         pe.advance(Kind::Comm, link.xfer_ns(bytes));
         pe.barrier();
@@ -245,12 +446,14 @@ impl DistCsr {
     /// sparse output between multiply runs.
     pub fn rezero(&self, fabric: &Fabric) {
         for cell in self.tiles.iter() {
-            let mut h = cell.write().unwrap();
-            if !h.rowptr.is_empty() {
-                fabric.write(h.rowptr, &vec![0i64; h.rowptr.len()]);
+            let mut slot = cell.write().unwrap();
+            if !slot.h.rowptr.is_empty() {
+                fabric.write(slot.h.rowptr, &vec![0i64; slot.h.rowptr.len()]);
             }
-            h.colind = h.colind.slice(0, 0);
-            h.vals = h.vals.slice(0, 0);
+            slot.h.colind = slot.h.colind.slice(0, 0);
+            slot.h.vals = slot.h.vals.slice(0, 0);
+            slot.rowext = Arc::new(vec![0i64; slot.h.rowptr.len()]);
+            slot.colsup = Arc::new(Vec::new());
         }
     }
 
@@ -409,6 +612,135 @@ mod tests {
         back.validate().unwrap();
         assert_eq!(back.nnz(), 0);
         assert_eq!((back.nrows, back.ncols), (32, 32));
+    }
+
+    #[test]
+    fn directory_tracks_extents_and_support() {
+        let f = fab(4);
+        let m = gen::erdos_renyi(40, 3, 17);
+        let grid = ProcGrid::for_nprocs(4);
+        let d = DistCsr::scatter(&f, &m, grid);
+        for i in 0..grid.t {
+            for j in 0..grid.t {
+                let (r0, r1) = grid.block(m.nrows, i);
+                let (c0, c1) = grid.block(m.ncols, j);
+                let tile = m.submatrix(r0, r1, c0, c1);
+                assert_eq!(*d.row_extents(i, j), tile.rowptr, "rowext of ({i},{j})");
+                let mut want: Vec<u32> = tile.colind.iter().map(|&c| c as u32).collect();
+                want.sort_unstable();
+                want.dedup();
+                assert_eq!(*d.col_support(i, j), want, "colsup of ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn get_rows_matches_tile_with_other_rows_emptied() {
+        let f = fab(4);
+        // Low degree so the selective path engages (sparse support).
+        let m = gen::erdos_renyi(64, 2, 23);
+        let grid = ProcGrid::for_nprocs(4);
+        let d = DistCsr::scatter(&f, &m, grid);
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() != 0 {
+                return;
+            }
+            for i in 0..grid.t {
+                for j in 0..grid.t {
+                    let full = d.get_tile(pe, i, j);
+                    // A contiguous third of the rows: few DMA segments,
+                    // so the selective path always wins the hybrid check.
+                    let rows: Vec<u32> = (0..full.nrows as u32 / 3).collect();
+                    let (got, bytes) = d.get_rows_as(pe, i, j, &rows, Kind::Comm);
+                    got.validate().unwrap();
+                    assert_eq!((got.nrows, got.ncols), (full.nrows, full.ncols));
+                    assert!(bytes > 0.0);
+                    // Selected rows match the full tile; the rest are empty.
+                    for r in 0..full.nrows {
+                        if rows.contains(&(r as u32)) {
+                            assert_eq!(got.row(r), full.row(r), "tile ({i},{j}) row {r}");
+                        } else {
+                            assert!(got.row(r).0.is_empty(), "row {r} should be empty");
+                        }
+                    }
+                    // The async flavor assembles the same tile.
+                    let fut = d.async_get_rows(pe, i, j, &rows);
+                    assert_eq!(fut.wait(pe), got, "async/blocking mismatch at ({i},{j})");
+                }
+            }
+        });
+        assert!(stats[0].n_selective_gets > 0, "selective path never engaged");
+        assert!(stats[0].bytes_saved_sparsity > 0.0);
+    }
+
+    #[test]
+    fn get_rows_full_support_falls_back_to_full_tile() {
+        let f = fab(4);
+        // Every row of every tile nonempty: selecting all rows lays out
+        // exactly the full arrays, so the hybrid check keeps the plain
+        // fetch (wire == full is not a saving).
+        let m = Csr::eye(32);
+        let grid = ProcGrid::for_nprocs(4);
+        let d = DistCsr::scatter(&f, &m, grid);
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() == 0 {
+                let (r, _) = d.tile_dims(1, 1);
+                let all: Vec<u32> = (0..r as u32).collect();
+                let (got, bytes) = d.get_rows_as(pe, 1, 1, &all, Kind::Comm);
+                assert_eq!(got, d.get_tile(pe, 1, 1));
+                assert_eq!(bytes, d.handle(1, 1).bytes() as f64);
+            }
+            pe.barrier();
+        });
+        // Asking for every (nonempty) row costs at least a full tile, so
+        // the hybrid fallback keeps the plain fetch.
+        assert_eq!(stats[0].n_selective_gets, 0);
+        assert_eq!(stats[0].bytes_saved_sparsity, 0.0);
+    }
+
+    #[test]
+    fn get_rows_empty_selection_moves_nothing() {
+        let f = fab(2);
+        let m = gen::erdos_renyi(16, 3, 31);
+        let d = DistCsr::scatter(&f, &m, ProcGrid::for_nprocs(2));
+        let (_, stats) = f.launch(|pe| {
+            if pe.rank() == 0 {
+                let (tile, bytes) = d.get_rows_as(pe, 1, 1, &[], Kind::Comm);
+                assert_eq!(bytes, 0.0);
+                assert_eq!(tile.nnz(), 0);
+                tile.validate().unwrap();
+            }
+            pe.barrier();
+        });
+        assert_eq!(stats[0].n_gets, 0, "empty selection issues no transfers");
+        assert_eq!(stats[0].n_selective_gets, 1);
+        assert_eq!(
+            stats[0].bytes_saved_sparsity,
+            d.handle(1, 1).bytes() as f64,
+            "the whole tile was saved"
+        );
+    }
+
+    #[test]
+    fn replace_tile_refreshes_directory_for_selective_gets() {
+        let f = fab(4);
+        let grid = ProcGrid::for_nprocs(4);
+        let d = DistCsr::zeros(&f, 16, 16, grid);
+        f.launch(|pe| {
+            for (i, j) in grid.my_tiles(pe.rank()) {
+                let (r, c) = d.tile_dims(i, j);
+                let tile = if i == j { Csr::eye(r) } else { Csr::zero(r, c) };
+                d.replace_tile(pe, i, j, &tile);
+            }
+            d.renew_tiles(pe);
+            // Selective fetch against the renewed directory sees the new
+            // contents (the eye tile's support is its full diagonal).
+            assert_eq!(*d.col_support(1, 1), (0..8u32).collect::<Vec<_>>());
+            let (got, _) = d.get_rows_as(pe, 1, 1, &[2, 3], Kind::Comm);
+            assert_eq!(got.nnz(), 2);
+            assert_eq!(got.row(2).0, &[2]);
+            assert_eq!(got.row(3).0, &[3]);
+        });
     }
 
     #[test]

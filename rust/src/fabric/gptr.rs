@@ -109,6 +109,26 @@ impl<T> GlobalPtr<T> {
         self.bytes() & !7
     }
 
+    /// Wire bytes a multi-range gather of `ranges` (element `(start,
+    /// len)` pairs) would move: each non-empty range is one DMA segment
+    /// whose span is widened to whole 8-byte words (the segment word
+    /// granularity), so a 4-byte-element range starting at an odd index
+    /// pays up to one extra word at each edge. Used by the dist layer to
+    /// decide between a row-selective gather and a full-tile fetch (the
+    /// hybrid fetch strategy) before issuing anything.
+    pub fn gather_wire_bytes(&self, ranges: &[(usize, usize)]) -> usize {
+        let sz = std::mem::size_of::<T>();
+        let mut total = 0usize;
+        for &(start, len) in ranges {
+            if len == 0 {
+                continue;
+            }
+            let lead = (self.byte_offset() + start * sz) % 8;
+            total += (lead + len * sz).div_ceil(8) * 8;
+        }
+        total
+    }
+
     /// Sub-array view: elements `[start, start+len)`.
     /// The element size must keep the resulting byte offset 8-aligned for
     /// word-atomic access; all matrix arrays use 4- or 8-byte elements and
@@ -176,6 +196,20 @@ mod tests {
     fn slice_oob() {
         let p = GlobalPtr::<f64>::new(0, 0, 10);
         let _ = p.slice(8, 3);
+    }
+
+    #[test]
+    fn gather_wire_bytes_widens_to_words() {
+        let p = GlobalPtr::<f32>::new(0, 64, 100);
+        // Aligned even range: exact.
+        assert_eq!(p.gather_wire_bytes(&[(0, 4)]), 16);
+        // Odd start and odd length both widen to the word edges.
+        assert_eq!(p.gather_wire_bytes(&[(1, 1)]), 8);
+        assert_eq!(p.gather_wire_bytes(&[(2, 3)]), 16);
+        // Empty ranges are free; i64 ranges are always word-exact.
+        assert_eq!(p.gather_wire_bytes(&[(5, 0)]), 0);
+        let q = GlobalPtr::<i64>::new(0, 0, 100);
+        assert_eq!(q.gather_wire_bytes(&[(3, 5), (20, 1)]), 48);
     }
 
     #[test]

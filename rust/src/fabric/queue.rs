@@ -111,18 +111,34 @@ impl<T: QueueItem> QueueHandle<T> {
     /// Spins (with backpressure polling) if the queue is full.
     pub fn push(&self, pe: &Pe, item: &T) {
         let t = pe.fetch_add(self.base, TAIL, 1);
-        // Backpressure: wait until the slot for our ticket is free.
-        let mut spins = 0u64;
-        while t - pe.atomic_load(self.base, HEAD) >= self.cap as i64 {
-            spins += 1;
+        // Backpressure: wait until the slot for our ticket is free. A
+        // merely *slow* consumer keeps advancing head, so the stall
+        // detector tracks progress instead of counting raw spins (a
+        // fixed spin budget turned a busy consumer into a whole-fabric
+        // panic). Only a consumer that makes no progress at all for the
+        // wall-clock window — a genuine deadlock, since a panicked peer
+        // already trips `check_abort` — fails the push. Yielding (not
+        // `spin_loop`) keeps the consumer runnable on oversubscribed
+        // hosts, which is exactly when consumers are slow.
+        const STALL_LIMIT: std::time::Duration = std::time::Duration::from_secs(30);
+        let mut last_head = pe.atomic_load(self.base, HEAD);
+        let mut stalled_since: Option<std::time::Instant> = None;
+        while t - last_head >= self.cap as i64 {
             pe.fabric().check_abort();
+            let start = *stalled_since.get_or_insert_with(std::time::Instant::now);
             assert!(
-                spins < 10_000_000,
-                "remote queue on rank {} deadlocked (capacity {})",
+                start.elapsed() < STALL_LIMIT,
+                "remote queue on rank {} deadlocked: no pop for {:?} (capacity {})",
                 self.owner(),
+                STALL_LIMIT,
                 self.cap
             );
-            std::hint::spin_loop();
+            std::thread::yield_now();
+            let head = pe.atomic_load(self.base, HEAD);
+            if head != last_head {
+                last_head = head;
+                stalled_since = None;
+            }
         }
         let sb = self.slot_base(t);
         // Payload + timestamp in one put (words [1..]).
@@ -364,6 +380,39 @@ mod tests {
                 assert_eq!(q.pop_wait(pe).unwrap(), Msg { a: 9, b: 9, c: 9 });
             }
         });
+    }
+
+    #[test]
+    fn push_survives_slow_consumer() {
+        // Regression for the fixed 10M-spin backpressure assert: a
+        // consumer that sits on a full queue for hundreds of
+        // milliseconds used to convert backpressure into a fabric-wide
+        // "deadlocked" panic. With progress-tracked stalling the pushes
+        // simply wait the consumer out.
+        let f = fab(2);
+        let q = QueueHandle::<Msg>::create(&f, 0, 2); // tiny: always full
+        let (counts, _) = f.launch(|pe| {
+            if pe.rank() == 1 {
+                for i in 0..8u64 {
+                    q.push(pe, &Msg { a: i, b: 0, c: 0 });
+                }
+                0
+            } else {
+                // Deliberately slow consumer: let the producer hit a
+                // full queue and spin well past the old 10M budget's
+                // intent before the first pop.
+                std::thread::sleep(std::time::Duration::from_millis(400));
+                let mut got = 0u64;
+                while got < 8 {
+                    if q.pop_wait(pe).is_some() {
+                        got += 1;
+                    }
+                    pe.fabric().check_abort();
+                }
+                got
+            }
+        });
+        assert_eq!(counts[0], 8);
     }
 
     #[test]

@@ -49,6 +49,13 @@ pub struct Stats {
     /// per-word round trips the bulk path exists to avoid on data.
     pub n_word_ops: u64,
     pub n_faa: u64,
+    /// Row-selective (sparsity-aware) tile fetches: remote gets that
+    /// gathered only the row extents a consumer needed instead of the
+    /// whole tile (`Comm::RowSelective`).
+    pub n_selective_gets: u64,
+    /// Bytes *not* moved thanks to row-selective fetches: the full-tile
+    /// size minus what the selective gather actually put on the wire.
+    pub bytes_saved_sparsity: f64,
     pub n_queue_push: u64,
     pub n_queue_pop: u64,
     /// Pieces of work stolen from other PEs (workstealing algorithms).
@@ -105,6 +112,8 @@ impl Stats {
         self.bytes_bulk += o.bytes_bulk;
         self.n_word_ops += o.n_word_ops;
         self.n_faa += o.n_faa;
+        self.n_selective_gets += o.n_selective_gets;
+        self.bytes_saved_sparsity += o.bytes_saved_sparsity;
         self.n_queue_push += o.n_queue_push;
         self.n_queue_pop += o.n_queue_pop;
         self.n_steals += o.n_steals;
@@ -168,5 +177,15 @@ mod tests {
         assert_eq!(a.n_bulk_xfers, 7);
         assert_eq!(a.bytes_bulk, 100.0);
         assert_eq!(a.n_word_ops, 7);
+    }
+
+    #[test]
+    fn merge_sums_sparsity_counters() {
+        let mut a =
+            Stats { n_selective_gets: 2, bytes_saved_sparsity: 128.0, ..Default::default() };
+        let b = Stats { n_selective_gets: 3, bytes_saved_sparsity: 72.0, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.n_selective_gets, 5);
+        assert_eq!(a.bytes_saved_sparsity, 200.0);
     }
 }

@@ -15,15 +15,16 @@
 //! * `sparta list` — available matrices, algorithms, profiles.
 //!
 //! Common options: `--scale-shift <i>` (workload downscaling, default 0),
-//! `--verify`, and for `run`/`chain`: `--alg`, `--nprocs`, `--matrix`,
-//! `--ncols`, `--profile summit|dgx2|flat:<GBps>`, `--pjrt`; `chain`
-//! adds `--steps <n>` and `--out DIR` (BENCH JSON of the whole chain).
+//! `--verify`, `--comm full|row` (full-tile vs row-selective B fetches),
+//! and for `run`/`chain`: `--alg`, `--nprocs`, `--matrix`, `--ncols`,
+//! `--profile summit|dgx2|flat:<GBps>`, `--pjrt`; `chain` adds
+//! `--steps <n>` and `--out DIR` (BENCH JSON of the whole chain).
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use sparta::algorithms::{Alg, SpgemmAlg, SpmmAlg};
+use sparta::algorithms::{Alg, Comm, SpgemmAlg, SpmmAlg};
 use sparta::coordinator::experiments::{self, ExpOpts};
 use sparta::coordinator::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
 use sparta::coordinator::{Session, SessionConfig};
@@ -109,6 +110,11 @@ fn parse_profile(s: &str) -> Result<NetProfile> {
     }
 }
 
+fn parse_comm(opts: &Opts) -> Result<Comm> {
+    let s = opts.str("comm", "full");
+    Comm::from_name(&s).with_context(|| format!("bad --comm {s:?} (full|row)"))
+}
+
 fn load_matrix(name: &str, scale_shift: i32) -> Result<Csr> {
     if name.ends_with(".mtx") {
         return mm_io::read_matrix_market(std::path::Path::new(name))
@@ -137,6 +143,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             println!("\nspmm algorithms: sc sa rws lws-c lws-a summa comblas");
             println!("spgemm algorithms: sc sa rws summa petsc");
             println!("profiles: summit dgx2 wallclock flat:<GBps>");
+            println!("comm modes: full row (row-selective B fetches)");
             Ok(())
         }
         "help" | "--help" | "-h" => {
@@ -153,6 +160,7 @@ fn repro(opts: &Opts) -> Result<()> {
         scale_shift: opts.get("scale-shift", 0)?,
         verify: opts.has("verify"),
         print: !opts.has("quiet"),
+        comm: parse_comm(opts)?,
     };
     let run_one = |w: &str| -> Result<()> {
         match w {
@@ -208,6 +216,7 @@ fn bench(opts: &Opts) -> Result<()> {
         scale_shift: opts.get("scale-shift", default_shift)?,
         verify: opts.has("verify"),
         print: !opts.has("quiet"),
+        comm: parse_comm(opts)?,
     };
     let out_dir = std::path::PathBuf::from(opts.str("out", "bench-out"));
     let artifacts: Vec<&str> = if what == "all" {
@@ -239,6 +248,7 @@ fn run(opts: &Opts) -> Result<()> {
                 .context("bad --alg (sc|sa|rws|lws-c|lws-a|summa|comblas)")?;
             let mut cfg = SpmmConfig::new(alg, nprocs, profile, opts.get("ncols", 128)?);
             cfg.verify = opts.has("verify");
+            cfg.comm = parse_comm(opts)?;
             if opts.has("pjrt") {
                 cfg.backend = TileBackend::pjrt(std::path::Path::new("artifacts"))?;
             }
@@ -260,6 +270,7 @@ fn run(opts: &Opts) -> Result<()> {
                 .context("bad --alg (sc|sa|rws|summa|petsc)")?;
             let mut cfg = SpgemmConfig::new(alg, nprocs, profile);
             cfg.verify = opts.has("verify");
+            cfg.comm = parse_comm(opts)?;
             let run = run_spgemm(&a, &cfg)?;
             println!("{}", run.report.row());
             if cfg.verify {
@@ -294,6 +305,7 @@ fn chain(opts: &Opts) -> Result<()> {
     }
     let alg = Alg::from_name(&opts.str("alg", "sc"))
         .context("bad --alg (sc|sa|rws|lws-c|lws-a|summa|comblas|petsc)")?;
+    let comm = parse_comm(opts)?;
 
     let mut cfg = SessionConfig::new(nprocs, profile);
     if opts.has("pjrt") {
@@ -322,6 +334,7 @@ fn chain(opts: &Opts) -> Result<()> {
         let run = sess
             .plan(da, operand)
             .alg(alg)
+            .comm(comm)
             .verify(verify)
             .label(&format!("step {step}"))
             .matrix(&matrix)
@@ -363,13 +376,17 @@ fn print_help() {
         "sparta — RDMA-based sparse matrix multiplication (Brock, Buluç & Yelick 2023), reproduced
 
 USAGE:
-  sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all> [--scale-shift N] [--verify]
-  sparta bench [fig1|...|table2b|all] [--smoke] [--scale-shift N] [--out DIR] [--quiet]
-  sparta run spmm   --alg sc --nprocs 24 --matrix amazon --ncols 128 --profile summit [--pjrt] [--verify]
-  sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify]
+  sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all> [--scale-shift N] [--verify] [--comm full|row]
+  sparta bench [fig1|...|table2b|all] [--smoke] [--scale-shift N] [--out DIR] [--quiet] [--comm full|row]
+  sparta run spmm   --alg sc --nprocs 24 --matrix amazon --ncols 128 --profile summit [--pjrt] [--verify] [--comm full|row]
+  sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify] [--comm full|row]
   sparta chain spmm --steps 3 --alg sc --nprocs 16 --matrix amazon --ncols 128 [--verify] [--out DIR]
   sparta chain spgemm --steps 3 --alg sc --nprocs 16 --matrix mouse_gene [--verify] [--out DIR]
   sparta list
+
+`--comm row` switches every remote B-tile fetch to the sparsity-aware
+row-selective gather (only the rows each consumer's A tile references
+move; hybrid fallback to a full get when selective would cost more).
 
 `sparta chain` runs an N-step multiply pipeline on ONE session: the
 sparse matrix is scattered once, queues and reservation grids are

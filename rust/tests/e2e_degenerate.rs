@@ -1,0 +1,97 @@
+//! Degenerate tile-extent coverage: when a matrix dimension is smaller
+//! than the tile grid (n < t), `ProcGrid::block` yields empty trailing
+//! blocks, so algorithms must survive 0×k and k×0 tiles, empty partial
+//! products, and zero-length one-sided transfers — in both
+//! communication modes, across every algorithm of both ops.
+
+use sparta::algorithms::{Alg, Comm, SpgemmAlg};
+use sparta::coordinator::{Session, SessionConfig};
+use sparta::dist::ProcGrid;
+use sparta::fabric::NetProfile;
+use sparta::matrix::gen;
+
+fn tiny_session(nprocs: usize) -> Session {
+    let mut cfg = SessionConfig::new(nprocs, NetProfile::dgx2());
+    cfg.seg_bytes = 8 << 20;
+    Session::new(cfg)
+}
+
+const COMMS: [Comm; 2] = [Comm::FullTile, Comm::RowSelective];
+
+#[test]
+fn block_splits_smaller_extent_than_grid_into_empty_tails() {
+    let g = ProcGrid::for_nprocs(16); // t = 4
+    assert_eq!(g.t, 4);
+    let blocks: Vec<_> = (0..g.t).map(|i| g.block(3, i)).collect();
+    assert_eq!(blocks, vec![(0, 1), (1, 2), (2, 3), (3, 3)], "trailing block is empty");
+}
+
+#[test]
+fn spmm_all_algorithms_survive_n3_on_t4_grid() {
+    // n = 3 on a t = 4 grid (16 PEs, one-to-one, so SUMMA runs too).
+    let a = gen::erdos_renyi(3, 2, 0x51);
+    let algs = [
+        Alg::StationaryC,
+        Alg::StationaryA,
+        Alg::StationaryB,
+        Alg::StationaryCUnopt,
+        Alg::RandomWs,
+        Alg::LocalityWsC,
+        Alg::LocalityWsA,
+        Alg::SummaMpi,
+        Alg::SummaCombBlas,
+    ];
+    for comm in COMMS {
+        let mut sess = tiny_session(16);
+        let da = sess.load_csr(&a);
+        let db = sess.random_dense(3, 2, 0x52);
+        for alg in algs {
+            let run = sess.plan(da, db).alg(alg).comm(comm).verify(true).execute();
+            run.unwrap_or_else(|e| panic!("{} ({}): {e}", alg.name(), comm.name()));
+        }
+    }
+}
+
+#[test]
+fn spmm_nonsquare_count_survives_n2_on_t3_grid() {
+    // 5 PEs -> t = 3 with cyclic multi-tile ownership; n = 2 leaves the
+    // whole last tile row/column empty.
+    let a = gen::erdos_renyi(2, 1, 0x53);
+    let algs =
+        [Alg::StationaryC, Alg::StationaryA, Alg::RandomWs, Alg::LocalityWsC, Alg::LocalityWsA];
+    for comm in COMMS {
+        let mut sess = tiny_session(5);
+        let da = sess.load_csr(&a);
+        let db = sess.random_dense(2, 3, 0x54);
+        for alg in algs {
+            let run = sess.plan(da, db).alg(alg).comm(comm).verify(true).execute();
+            run.unwrap_or_else(|e| panic!("{} ({}): {e}", alg.name(), comm.name()));
+        }
+    }
+}
+
+#[test]
+fn spgemm_all_algorithms_survive_n3_on_t4_grid() {
+    let a = gen::erdos_renyi(3, 2, 0x55);
+    for comm in COMMS {
+        let mut sess = tiny_session(16);
+        let da = sess.load_csr(&a);
+        for &alg in SpgemmAlg::all() {
+            let run = sess.plan(da, da).alg(alg.into()).comm(comm).verify(true).execute();
+            run.unwrap_or_else(|e| panic!("{} ({}): {e}", alg.name(), comm.name()));
+        }
+    }
+}
+
+#[test]
+fn spgemm_nonsquare_count_survives_tiny_dims() {
+    let a = gen::erdos_renyi(2, 2, 0x56);
+    for comm in COMMS {
+        let mut sess = tiny_session(5);
+        let da = sess.load_csr(&a);
+        for alg in [Alg::StationaryC, Alg::StationaryA, Alg::RandomWs] {
+            let run = sess.plan(da, da).alg(alg).comm(comm).verify(true).execute();
+            run.unwrap_or_else(|e| panic!("{} ({}): {e}", alg.name(), comm.name()));
+        }
+    }
+}

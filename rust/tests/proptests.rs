@@ -407,3 +407,100 @@ fn prop_makespan_monotone_with_library_overhead() {
         },
     );
 }
+
+#[test]
+fn prop_comm_modes_produce_identical_results() {
+    // The tentpole invariant: `Comm::RowSelective` is a pure
+    // communication optimization. Against random Erdős–Rényi and R-MAT
+    // operands, both ops must produce the same result as
+    // `Comm::FullTile`, perform the same multiplies (flops, comp time,
+    // queue pushes), and never move *more* get-bytes.
+    use sparta::algorithms::Comm;
+
+    check(
+        "row-selective == full-tile up to communication",
+        6,
+        0xC033,
+        |rng| {
+            let nprocs = [4usize, 6, 9][rng.below_usize(3)];
+            let a = if rng.below(2) == 0 {
+                gen::erdos_renyi(24 + 8 * rng.below_usize(6), 2, rng.next_u64())
+            } else {
+                gen::rmat(6, 3, 0.5, 0.17, 0.17, rng.next_u64())
+            };
+            (a, nprocs)
+        },
+        |(a, nprocs)| {
+            // SpMM, deterministic algorithms (workstealing claim order is
+            // racy, so its stats are not comparable across runs).
+            for alg in [SpmmAlg::StationaryC, SpmmAlg::StationaryA] {
+                let mut out = Vec::new();
+                for comm in [Comm::FullTile, Comm::RowSelective] {
+                    let mut cfg = SpmmConfig::new(alg, *nprocs, NetProfile::dgx2(), 8);
+                    cfg.verify = true;
+                    cfg.seg_bytes = 32 << 20;
+                    cfg.comm = comm;
+                    let what = format!("{} {:?}", alg.name(), comm);
+                    let run = run_spmm(a, &cfg).map_err(|e| format!("{what}: {e}"))?;
+                    out.push((run.report, run.c.expect("verify gathers C")));
+                }
+                let (full, row) = (&out[0], &out[1]);
+                let (tf, tr) = (full.0.totals(), row.0.totals());
+                if tf.flops != tr.flops {
+                    return Err(format!("{}: flops differ across comm modes", alg.name()));
+                }
+                // f64 charge order can vary by ulps (HashMap iteration),
+                // so compare compute time to a tight relative tolerance.
+                if (tf.comp_ns - tr.comp_ns).abs() > 1e-9 * tf.comp_ns.max(1.0) {
+                    return Err(format!("{}: comp time differs", alg.name()));
+                }
+                if tf.n_queue_push != tr.n_queue_push {
+                    return Err(format!("{}: queue pushes differ", alg.name()));
+                }
+                if tr.bytes_get > tf.bytes_get {
+                    return Err(format!(
+                        "{}: selective moved more get-bytes ({} > {})",
+                        alg.name(),
+                        tr.bytes_get,
+                        tf.bytes_get
+                    ));
+                }
+                // Queue arrival order (and so f32 accumulation order) is
+                // timing-dependent for stationary-A: compare to tolerance.
+                if full.1.rel_err(&row.1) > 1e-5 {
+                    return Err(format!("{}: results diverge", alg.name()));
+                }
+            }
+            // SpGEMM, deterministic algorithms.
+            for alg in [SpgemmAlg::StationaryC, SpgemmAlg::StationaryA] {
+                let mut out = Vec::new();
+                for comm in [Comm::FullTile, Comm::RowSelective] {
+                    let mut cfg = SpgemmConfig::new(alg, *nprocs, NetProfile::dgx2());
+                    cfg.verify = true;
+                    cfg.seg_bytes = 64 << 20;
+                    cfg.comm = comm;
+                    let what = format!("{} {:?}", alg.name(), comm);
+                    let run = run_spgemm(a, &cfg).map_err(|e| format!("{what}: {e}"))?;
+                    out.push((run.report, run.c.expect("verify gathers C")));
+                }
+                let (full, row) = (&out[0], &out[1]);
+                let (tf, tr) = (full.0.totals(), row.0.totals());
+                if tf.flops != tr.flops
+                    || (tf.comp_ns - tr.comp_ns).abs() > 1e-9 * tf.comp_ns.max(1.0)
+                {
+                    return Err(format!("{}: work stats differ across comm modes", alg.name()));
+                }
+                if tr.bytes_get > tf.bytes_get {
+                    return Err(format!("{}: selective moved more get-bytes", alg.name()));
+                }
+                if full.1.nnz() != row.1.nnz() {
+                    return Err(format!("{}: output structure differs", alg.name()));
+                }
+                if full.1.to_dense().rel_err(&row.1.to_dense()) > 1e-5 {
+                    return Err(format!("{}: results diverge", alg.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
