@@ -6,7 +6,13 @@ use sparta::coordinator::experiments::ExpOpts;
 
 fn main() {
     let t0 = std::time::Instant::now();
-    let opts = ExpOpts { scale_shift: 0, verify: false, print: true, comm: Default::default() };
+    let opts = ExpOpts {
+        scale_shift: 0,
+        verify: false,
+        print: true,
+        comm: Default::default(),
+        trace: false,
+    };
     let path =
         sparta::coordinator::bench_artifact("fig1", &opts, Path::new("bench-out")).expect("fig1");
     println!("[fig1 regenerated in {:.1?} -> {}]", t0.elapsed(), path.display());

@@ -7,7 +7,13 @@ use sparta::coordinator::experiments::ExpOpts;
 
 fn main() {
     let t0 = std::time::Instant::now();
-    let opts = ExpOpts { scale_shift: -1, verify: false, print: true, comm: Default::default() };
+    let opts = ExpOpts {
+        scale_shift: -1,
+        verify: false,
+        print: true,
+        comm: Default::default(),
+        trace: false,
+    };
     for artifact in ["table1", "table2a", "table2b"] {
         let path = sparta::coordinator::bench_artifact(artifact, &opts, Path::new("bench-out"))
             .unwrap_or_else(|e| panic!("{artifact}: {e:#}"));

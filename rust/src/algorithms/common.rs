@@ -6,7 +6,7 @@ use std::collections::HashMap;
 
 use crate::dist::{AccMsg, AccQueues, DistCsr, DistDense, ResGrid2D, ResGrid3D};
 use crate::dist::{CsrTileFuture, DenseTileFuture};
-use crate::fabric::{Kind, Pe};
+use crate::fabric::{Kind, Pe, SpanCtx};
 use crate::matrix::{local_spmm, Coo, Csr, Dense};
 use crate::runtime::TileBackend;
 
@@ -61,6 +61,10 @@ pub struct SpmmCtx {
     pub backend: TileBackend,
     /// B-tile communication mode (full-tile vs row-selective gets).
     pub comm: Comm,
+    /// Span tracing requested for this run (the fabric must also have
+    /// tracing armed via `Fabric::set_tracing`; algorithms may use this
+    /// to skip building trace-only metadata).
+    pub trace: bool,
 }
 
 /// SpGEMM context (C = A·B, all sparse).
@@ -78,6 +82,8 @@ pub struct SpgemmCtx {
     pub backend: TileBackend,
     /// B-tile communication mode (full-tile vs row-selective gets).
     pub comm: Comm,
+    /// Span tracing requested for this run (see [`SpmmCtx::trace`]).
+    pub trace: bool,
 }
 
 /// Fetch B[k, j] for a component multiply against A[i, k], honoring the
@@ -103,13 +109,21 @@ pub fn fetch_spmm_b_now(
     j: usize,
     kind: Kind,
 ) -> (Dense, f64) {
-    match ctx.comm {
+    pe.trace_note(SpanCtx {
+        label: "fetch_b",
+        peer: ctx.b.owner(k, j) as i32,
+        tile: [k as i32, j as i32, -1],
+        bytes: 0.0,
+    });
+    let got = match ctx.comm {
         Comm::FullTile => {
             let bytes = ctx.b.tile_ptr(k, j).bytes() as f64;
             (ctx.b.get_tile_as(pe, k, j, kind), bytes)
         }
         Comm::RowSelective => ctx.b.get_rows_as(pe, k, j, &ctx.a.col_support(i, k), kind),
-    }
+    };
+    pe.trace_done();
+    got
 }
 
 /// Fetch sparse B[k, j] for a component multiply against A[i, k],
@@ -131,13 +145,21 @@ pub fn fetch_spgemm_b_now(
     j: usize,
     kind: Kind,
 ) -> (Csr, f64) {
-    match ctx.comm {
+    pe.trace_note(SpanCtx {
+        label: "fetch_b",
+        peer: ctx.b.owner(k, j) as i32,
+        tile: [k as i32, j as i32, -1],
+        bytes: 0.0,
+    });
+    let got = match ctx.comm {
         Comm::FullTile => {
             let bytes = ctx.b.handle(k, j).bytes() as f64;
             (ctx.b.get_tile_as(pe, k, j, kind), bytes)
         }
         Comm::RowSelective => ctx.b.get_rows_as(pe, k, j, &ctx.a.col_support(i, k), kind),
-    }
+    };
+    pe.trace_done();
+    got
 }
 
 /// Overheads of a bulk-synchronous library baseline, applied on top of

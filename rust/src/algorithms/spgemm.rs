@@ -4,7 +4,7 @@
 //! tiles, and the output C is assembled with `replace_tile` +
 //! `renew_tiles`.
 
-use crate::fabric::{Kind, Pe};
+use crate::fabric::{Kind, Pe, SpanCtx};
 use crate::matrix::{local_spgemm, Csr};
 
 use super::common::{
@@ -138,7 +138,14 @@ pub fn spgemm_random_ws_a(pe: &Pe, ctx: &SpgemmCtx) {
                        pending: &mut PendingTracker| {
         let mut a_tile: Option<Csr> = None;
         loop {
+            pe.trace_note(SpanCtx {
+                label: if own { "own_claim" } else { "steal_claim" },
+                peer: ctx.a.owner(i, k) as i32,
+                tile: [i as i32, -1, k as i32],
+                bytes: 0.0,
+            });
             let my_j = res.reserve(pe, i, k);
+            pe.trace_done();
             if my_j >= t as i64 {
                 break;
             }

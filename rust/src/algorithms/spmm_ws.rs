@@ -10,7 +10,7 @@
 //!   own work first, then only steal components for which they already
 //!   own one of the operands, bounding the extra communication.
 
-use crate::fabric::{Kind, Pe};
+use crate::fabric::{Kind, Pe, SpanCtx};
 use crate::matrix::{Csr, Dense};
 
 use super::common::{
@@ -61,7 +61,14 @@ fn attempt_work_2d(
     let res = ctx.res2d.as_ref().expect("random WS needs a 2D reservation grid");
     let mut a_tile: Option<Csr> = None;
     loop {
+        pe.trace_note(SpanCtx {
+            label: if own { "own_claim" } else { "steal_claim" },
+            peer: ctx.a.owner(i, k) as i32,
+            tile: [i as i32, -1, k as i32],
+            bytes: 0.0,
+        });
         let my_j = res.reserve(pe, i, k);
+        pe.trace_done();
         if my_j >= t as i64 {
             break;
         }
@@ -177,7 +184,15 @@ pub fn spmm_locality_ws(pe: &Pe, ctx: &SpmmCtx, stationary: Stationary) {
                 let k_off = i + j;
                 for k_ in 0..t {
                     let k = (k_ + k_off) % t;
-                    if res.try_claim(pe, i, j, k) {
+                    pe.trace_note(SpanCtx {
+                        label: "own_claim",
+                        peer: -1,
+                        tile: [i as i32, j as i32, k as i32],
+                        bytes: 0.0,
+                    });
+                    let claimed = res.try_claim(pe, i, j, k);
+                    pe.trace_done();
+                    if claimed {
                         do_component(pe, ctx, i, j, k, None, None, &mut acc, &mut pending);
                         pe.stats_mut().n_own_work += 1;
                     }
@@ -192,7 +207,15 @@ pub fn spmm_locality_ws(pe: &Pe, ctx: &SpmmCtx, stationary: Stationary) {
                 let j_off = i + k;
                 for j_ in 0..t {
                     let j = (j_ + j_off) % t;
-                    if res.try_claim(pe, i, j, k) {
+                    pe.trace_note(SpanCtx {
+                        label: "own_claim",
+                        peer: -1,
+                        tile: [i as i32, j as i32, k as i32],
+                        bytes: 0.0,
+                    });
+                    let claimed = res.try_claim(pe, i, j, k);
+                    pe.trace_done();
+                    if claimed {
                         do_component(pe, ctx, i, j, k, a_ref, None, &mut acc, &mut pending);
                         pe.stats_mut().n_own_work += 1;
                     }
@@ -227,7 +250,15 @@ fn steal_from_own_a(
     for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
         let mut a_tile: Option<Csr> = None;
         for j in 0..t {
-            if res.try_claim(pe, i, j, k) {
+            pe.trace_note(SpanCtx {
+                label: "steal_claim",
+                peer: -1,
+                tile: [i as i32, j as i32, k as i32],
+                bytes: 0.0,
+            });
+            let claimed = res.try_claim(pe, i, j, k);
+            pe.trace_done();
+            if claimed {
                 let a_ref = a_tile.get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
                 do_component(pe, ctx, i, j, k, Some(a_ref), None, acc, pending);
                 pe.stats_mut().n_steals += 1;
@@ -252,7 +283,15 @@ fn steal_from_own_b(
     for (k, j) in ctx.b.grid.my_tiles(pe.rank()) {
         let mut b_tile: Option<Dense> = None;
         for i in 0..t {
-            if res.try_claim(pe, i, j, k) {
+            pe.trace_note(SpanCtx {
+                label: "steal_claim",
+                peer: -1,
+                tile: [i as i32, j as i32, k as i32],
+                bytes: 0.0,
+            });
+            let claimed = res.try_claim(pe, i, j, k);
+            pe.trace_done();
+            if claimed {
                 // The whole owned tile is fetched (a device-local get):
                 // it serves every stolen i of this (k, j), so a
                 // row-selective fetch of one consumer's support would

@@ -56,6 +56,8 @@ pub struct SpmmConfig {
     pub backend: TileBackend,
     /// B-tile communication mode (full-tile vs row-selective gets).
     pub comm: Comm,
+    /// Record per-PE span traces (see `fabric::trace`) on the report.
+    pub trace: bool,
 }
 
 impl SpmmConfig {
@@ -71,6 +73,7 @@ impl SpmmConfig {
             verify: false,
             backend: TileBackend::Native,
             comm: Comm::FullTile,
+            trace: false,
         }
     }
 
@@ -100,6 +103,7 @@ pub fn run_spmm(a: &Csr, cfg: &SpmmConfig) -> Result<SpmmRun> {
         .alg(cfg.alg.into())
         .comm(cfg.comm)
         .verify(cfg.verify)
+        .trace(cfg.trace)
         .execute()?;
     let c = run.gathered.and_then(Gathered::into_dense);
     Ok(SpmmRun { report: run.report, c })
@@ -126,6 +130,8 @@ pub struct SpgemmConfig {
     pub backend: TileBackend,
     /// B-tile communication mode (full-tile vs row-selective gets).
     pub comm: Comm,
+    /// Record per-PE span traces (see `fabric::trace`) on the report.
+    pub trace: bool,
 }
 
 impl SpgemmConfig {
@@ -140,6 +146,7 @@ impl SpgemmConfig {
             verify: false,
             backend: TileBackend::Native,
             comm: Comm::FullTile,
+            trace: false,
         }
     }
 
@@ -165,6 +172,7 @@ pub fn run_spgemm(a: &Csr, cfg: &SpgemmConfig) -> Result<SpgemmRun> {
         .alg(cfg.alg.into())
         .comm(cfg.comm)
         .verify(cfg.verify)
+        .trace(cfg.trace)
         .execute()?;
     let c = run.gathered.and_then(Gathered::into_csr);
     Ok(SpgemmRun { report: run.report, c })

@@ -31,11 +31,15 @@ pub struct ExpOpts {
     /// performs (`--comm row` reproduces the figures with row-selective
     /// gets).
     pub comm: Comm,
+    /// Record per-PE span traces on every fabric run; `bench_artifact`
+    /// then writes `TRACE_<artifact>.json` next to the BENCH document
+    /// and the BENCH run rows carry `phases` summaries.
+    pub trace: bool,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { scale_shift: 0, verify: false, print: true, comm: Comm::FullTile }
+        ExpOpts { scale_shift: 0, verify: false, print: true, comm: Comm::FullTile, trace: false }
     }
 }
 
@@ -117,6 +121,7 @@ pub fn fig2(opts: &ExpOpts) -> Result<Vec<RooflinePoint>> {
         let mut cfg = SpmmConfig::new(SpmmAlg::StationaryC, np, profile.clone(), n);
         cfg.verify = opts.verify;
         cfg.comm = opts.comm;
+        cfg.trace = opts.trace;
         let run = run_spmm(&a, &cfg)?;
         let achieved = run.report.gflops();
         let row = format!(
@@ -164,6 +169,7 @@ pub fn fig2(opts: &ExpOpts) -> Result<Vec<RooflinePoint>> {
         let mut cfg = SpgemmConfig::new(SpgemmAlg::StationaryC, np, profile.clone());
         cfg.verify = opts.verify;
         cfg.comm = opts.comm;
+        cfg.trace = opts.trace;
         let run = run_spgemm(&a4, &cfg)?;
         let achieved = run.report.gflops();
         let row = format!(
@@ -246,6 +252,7 @@ fn spmm_sweep(
                         .alg(alg.into())
                         .comm(opts.comm)
                         .verify(opts.verify)
+                        .trace(opts.trace)
                         .execute()?;
                     let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
@@ -333,6 +340,7 @@ pub fn fig5(opts: &ExpOpts) -> Result<Vec<ScalingRow>> {
                         .alg(alg.into())
                         .comm(opts.comm)
                         .verify(opts.verify)
+                        .trace(opts.trace)
                         .execute()?;
                     let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
@@ -488,6 +496,7 @@ pub fn table2a(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
         for &np in counts {
             let mut cfg = SpmmConfig::new(alg, np, NetProfile::summit(), 256);
             cfg.comm = opts.comm;
+            cfg.trace = opts.trace;
             let run = run_spmm(&amazon, &cfg)?;
             rows.push(t2_row(opts, "Summit", "amazon", cfg.n_cols, &run.report));
         }
@@ -502,6 +511,7 @@ pub fn table2a(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
         for &np in counts {
             let mut cfg = SpmmConfig::new(alg, np, NetProfile::dgx2(), 256);
             cfg.comm = opts.comm;
+            cfg.trace = opts.trace;
             let run = run_spmm(&nm7, &cfg)?;
             rows.push(t2_row(opts, "DGX-2", "Nm-7", cfg.n_cols, &run.report));
         }
@@ -526,6 +536,7 @@ pub fn table2b(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
         for &np in counts {
             let mut cfg = SpgemmConfig::new(alg, np, profile.clone());
             cfg.comm = opts.comm;
+            cfg.trace = opts.trace;
             let run = run_spgemm(&gene, &cfg)?;
             rows.push(t2_row(opts, env, "Mouse Gene", 0, &run.report));
         }
@@ -619,5 +630,9 @@ pub fn bench_artifact(artifact: &str, opts: &ExpOpts, out_dir: &Path) -> Result<
         }
     }
     anyhow::ensure!(!doc.is_empty(), "harness {artifact} produced no rows");
-    doc.write(out_dir)
+    let path = doc.write(out_dir)?;
+    if let Some(tp) = doc.write_trace(out_dir)? {
+        println!("wrote {}", tp.display());
+    }
+    Ok(path)
 }

@@ -11,11 +11,16 @@ pub mod experiments;
 pub mod report;
 pub mod session;
 pub mod testutil;
+pub mod trace_export;
 
 pub use driver::{run_spgemm, run_spmm, SpgemmConfig, SpgemmRun, SpmmConfig, SpmmRun};
 pub use experiments::{bench_artifact, BENCH_ARTIFACTS};
-pub use report::{parse_json, validate_bench, BenchDoc, Jv, Report, BENCH_SCHEMA_VERSION};
+pub use report::{
+    check_bench_dir, compare_bench, parse_json, validate_bench, BenchDoc, BenchTolerance, Jv,
+    Report, BENCH_SCHEMA_VERSION,
+};
 pub use session::{
     Gathered, LedgerEntry, MultiplyPlan, MultiplyRun, OperandId, Session, SessionConfig,
     VERIFY_TOL,
 };
+pub use trace_export::{chrome_trace, phases_json, print_profile, write_chrome_trace};

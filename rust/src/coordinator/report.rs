@@ -8,7 +8,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::fabric::Stats;
+use crate::fabric::{Kind, PeTrace, Stats};
+
+use super::trace_export;
 
 /// Aggregated result of one distributed multiply run.
 #[derive(Clone, Debug)]
@@ -28,6 +30,9 @@ pub struct Report {
     pub flops: f64,
     /// Per-rank component stats.
     pub per_rank: Vec<Stats>,
+    /// Per-rank span traces — empty unless the run was traced (see
+    /// `fabric::trace`).
+    pub traces: Vec<PeTrace>,
 }
 
 impl Report {
@@ -39,7 +44,22 @@ impl Report {
     ) -> Report {
         let makespan_ns = per_rank.iter().map(|s| s.final_clock_ns).fold(0.0, f64::max);
         let flops = per_rank.iter().map(|s| s.flops).sum();
-        Report { alg, profile, nprocs: per_rank.len(), makespan_ns, wall_ns, flops, per_rank }
+        Report {
+            alg,
+            profile,
+            nprocs: per_rank.len(),
+            makespan_ns,
+            wall_ns,
+            flops,
+            per_rank,
+            traces: Vec::new(),
+        }
+    }
+
+    /// Attach the span traces collected for this run.
+    pub fn with_traces(mut self, traces: Vec<PeTrace>) -> Report {
+        self.traces = traces;
+        self
     }
 
     /// Simulated GFlop/s over the virtual makespan.
@@ -119,7 +139,13 @@ impl Report {
 /// Version of the BENCH JSON schema (bumped on incompatible change).
 /// v2: run rows gained `bytes.saved_sparsity` and `ops.selective_gets`
 /// (row-selective communication accounting), both required.
-pub const BENCH_SCHEMA_VERSION: i64 = 2;
+/// v3: run rows may carry a `phases` section (per-Kind span histograms
+/// and top comm waits from the tracer); the validator still accepts v2
+/// documents so committed baselines stay comparable.
+pub const BENCH_SCHEMA_VERSION: i64 = 3;
+
+/// Oldest schema version [`validate_bench`] still accepts.
+pub const BENCH_SCHEMA_MIN_VERSION: i64 = 2;
 
 /// A JSON value. The build is fully offline (no serde), so emission,
 /// parsing, and validation are hand-rolled here; the grammar subset is
@@ -456,6 +482,9 @@ pub struct BenchDoc {
     scale_shift: i32,
     t0: std::time::Instant,
     rows: Vec<Jv>,
+    /// `(run label, per-PE traces)` for every traced run pushed so far;
+    /// feeds `TRACE_<artifact>.json` emission.
+    trace_runs: Vec<(String, Vec<PeTrace>)>,
 }
 
 impl BenchDoc {
@@ -465,6 +494,7 @@ impl BenchDoc {
             scale_shift,
             t0: std::time::Instant::now(),
             rows: Vec::new(),
+            trace_runs: Vec::new(),
         }
     }
 
@@ -472,7 +502,7 @@ impl BenchDoc {
     /// `n_cols` are workload identifiers (`n_cols` 0 for SpGEMM).
     pub fn push_run(&mut self, label: &str, matrix: &str, n_cols: usize, r: &Report) {
         let t = r.totals();
-        let row = Jv::obj(vec![
+        let mut row = Jv::obj(vec![
             ("kind", Jv::str("run")),
             ("label", Jv::str(label)),
             ("alg", Jv::str(r.alg)),
@@ -529,6 +559,11 @@ impl BenchDoc {
                 ]),
             ),
         ]);
+        if !r.traces.is_empty() {
+            let Jv::Obj(fields) = &mut row else { unreachable!("push_run builds an object") };
+            fields.push(("phases".to_string(), trace_export::phases_json(&r.traces)));
+            self.trace_runs.push((label.to_string(), r.traces.clone()));
+        }
         self.rows.push(row);
     }
 
@@ -581,6 +616,20 @@ impl BenchDoc {
             .with_context(|| format!("writing {}", path.display()))?;
         Ok(path)
     }
+
+    /// Whether any pushed run carried traces.
+    pub fn has_traces(&self) -> bool {
+        !self.trace_runs.is_empty()
+    }
+
+    /// Write `TRACE_<artifact>.json` (Chrome trace-event format) for
+    /// the traced runs. Returns `None` when no run was traced.
+    pub fn write_trace(&self, dir: &Path) -> Result<Option<PathBuf>> {
+        if self.trace_runs.is_empty() {
+            return Ok(None);
+        }
+        trace_export::write_chrome_trace(&self.trace_runs, &self.artifact, dir).map(Some)
+    }
 }
 
 fn req<'a>(v: &'a Jv, key: &str) -> Result<&'a Jv> {
@@ -604,7 +653,11 @@ fn req_finite_all(v: &Jv, keys: &[&str]) -> Result<()> {
 /// this rejects what a harness emitted.
 pub fn validate_bench(doc: &Jv) -> Result<()> {
     let sv = req(doc, "schema_version")?.as_i64().context("schema_version not an int")?;
-    ensure!(sv == BENCH_SCHEMA_VERSION, "schema_version {sv} != {BENCH_SCHEMA_VERSION}");
+    ensure!(
+        (BENCH_SCHEMA_MIN_VERSION..=BENCH_SCHEMA_VERSION).contains(&sv),
+        "schema_version {sv} outside supported range \
+         {BENCH_SCHEMA_MIN_VERSION}..={BENCH_SCHEMA_VERSION}"
+    );
     let artifact = req(doc, "artifact")?.as_str().context("artifact not a string")?;
     ensure!(!artifact.is_empty(), "artifact is empty");
     req(doc, "scale_shift")?.as_i64().context("scale_shift not an int")?;
@@ -654,6 +707,9 @@ fn validate_row(row: &Jv) -> Result<()> {
                     ensure!(x.is_finite(), "per_rank.{k} has a non-finite entry");
                 }
             }
+            if let Some(phases) = row.get("phases") {
+                validate_phases(phases).context("phases section invalid")?;
+            }
         }
         Some("metrics") => {
             let metrics = req(row, "metrics")?;
@@ -672,6 +728,167 @@ fn validate_row(row: &Jv) -> Result<()> {
         None => bail!("kind not a string"),
     }
     Ok(())
+}
+
+/// Schema check for a `phases` section (schema v3): every Kind has a
+/// histogram with ordered percentiles, and the top comm waits are
+/// well-formed.
+fn validate_phases(phases: &Jv) -> Result<()> {
+    let dropped = req(phases, "dropped_spans")?.as_i64().context("dropped_spans not an int")?;
+    ensure!(dropped >= 0, "dropped_spans negative");
+    let kinds = req(phases, "kinds")?;
+    for kind in Kind::ALL {
+        let k = req(kinds, kind.name()).with_context(|| format!("kind {:?}", kind.name()))?;
+        let n = req(k, "n")?.as_i64().with_context(|| format!("{}.n not an int", kind.name()))?;
+        ensure!(n >= 0, "{}.n negative", kind.name());
+        req_finite_all(k, &["total_ns", "p50_ns", "p95_ns", "max_ns"])
+            .with_context(|| format!("kind {:?}", kind.name()))?;
+        let p50 = req_finite(k, "p50_ns")?;
+        let p95 = req_finite(k, "p95_ns")?;
+        let max = req_finite(k, "max_ns")?;
+        ensure!(
+            p50 <= p95 && p95 <= max,
+            "{} percentiles unordered: p50={p50} p95={p95} max={max}",
+            kind.name()
+        );
+    }
+    let waits = req(phases, "top_comm_waits")?.as_arr().context("top_comm_waits not an array")?;
+    for (i, w) in waits.iter().enumerate() {
+        req_finite_all(w, &["dur_ns", "t0_ns", "bytes"])
+            .with_context(|| format!("top_comm_waits[{i}]"))?;
+        req(w, "pe")?.as_i64().context("wait pe not an int")?;
+        req(w, "peer")?.as_i64().context("wait peer not an int")?;
+        req(w, "label")?.as_str().context("wait label not a string")?;
+        let tile = req(w, "tile")?.as_arr().context("wait tile not an array")?;
+        ensure!(tile.len() == 3, "wait tile has {} coords, want 3", tile.len());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// bench --check — the perf-regression gate
+// ---------------------------------------------------------------------
+
+/// Relative tolerance band for [`compare_bench`]. The defaults are
+/// deliberately wide: the workstealing algorithms are nondeterministic
+/// (claim order depends on OS thread scheduling), so run-to-run
+/// makespans at smoke scale wobble far more than a deterministic
+/// simulator's would.
+pub struct BenchTolerance {
+    /// Allowed relative makespan growth per run row (0.35 = +35%).
+    pub makespan: f64,
+    /// Allowed relative growth in total bytes moved (get + put + bulk).
+    pub bytes: f64,
+}
+
+impl Default for BenchTolerance {
+    fn default() -> BenchTolerance {
+        BenchTolerance { makespan: 0.35, bytes: 0.25 }
+    }
+}
+
+fn run_key(row: &Jv) -> Option<(String, String)> {
+    if row.get("kind")?.as_str()? != "run" {
+        return None;
+    }
+    Some((row.get("label")?.as_str()?.to_string(), row.get("alg")?.as_str()?.to_string()))
+}
+
+fn bytes_moved(row: &Jv) -> Option<f64> {
+    let b = row.get("bytes")?;
+    Some(b.get("get")?.as_f64()? + b.get("put")?.as_f64()? + b.get("bulk")?.as_f64()?)
+}
+
+/// Compare a freshly produced BENCH document against a committed
+/// baseline: every run row present in both (matched on label + alg)
+/// must stay within the tolerance band on makespan and bytes moved.
+/// Returns one human-readable line per regression (empty = pass).
+/// Rows present on only one side are ignored — adding or renaming
+/// experiments must not trip the gate.
+pub fn compare_bench(cur: &Jv, base: &Jv, tol: &BenchTolerance) -> Result<Vec<String>> {
+    let cur_rows = req(cur, "rows")?.as_arr().context("rows not an array")?;
+    let base_rows = req(base, "rows")?.as_arr().context("rows not an array")?;
+    let mut regressions = Vec::new();
+    for row in cur_rows {
+        let Some(key) = run_key(row) else { continue };
+        let Some(base_row) = base_rows.iter().find(|r| run_key(r).as_ref() == Some(&key)) else {
+            continue;
+        };
+        let (label, alg) = &key;
+        let cur_ms = req_finite(row, "makespan_ns")?;
+        let base_ms = req_finite(base_row, "makespan_ns")?;
+        if cur_ms > base_ms * (1.0 + tol.makespan) {
+            regressions.push(format!(
+                "{label} [{alg}]: makespan {} vs baseline {} (+{:.0}% > +{:.0}% allowed)",
+                crate::util::fmt_ns(cur_ms),
+                crate::util::fmt_ns(base_ms),
+                (cur_ms / base_ms - 1.0) * 100.0,
+                tol.makespan * 100.0,
+            ));
+        }
+        if let (Some(cur_b), Some(base_b)) = (bytes_moved(row), bytes_moved(base_row)) {
+            if cur_b > base_b * (1.0 + tol.bytes) && cur_b - base_b > 1.0 {
+                regressions.push(format!(
+                    "{label} [{alg}]: bytes moved {cur_b:.0} vs baseline {base_b:.0} \
+                     (+{:.0}% > +{:.0}% allowed)",
+                    (cur_b / base_b - 1.0) * 100.0,
+                    tol.bytes * 100.0,
+                ));
+            }
+        }
+    }
+    Ok(regressions)
+}
+
+/// Check every `BENCH_*.json` in `out_dir` against the same-named file
+/// in `baseline_dir`, printing regressions. Returns the regression
+/// count. An empty / missing baseline directory compares nothing and
+/// passes with a notice (bootstrap mode: baselines are committed from a
+/// CI artifact the first time around).
+pub fn check_bench_dir(out_dir: &Path, baseline_dir: &Path) -> Result<usize> {
+    let tol = BenchTolerance::default();
+    let mut checked = 0usize;
+    let mut regressions = 0usize;
+    let entries = std::fs::read_dir(out_dir)
+        .with_context(|| format!("reading bench output dir {}", out_dir.display()))?;
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    names.sort();
+    for name in &names {
+        let base_path = baseline_dir.join(name);
+        if !base_path.exists() {
+            continue;
+        }
+        let cur = parse_json(&std::fs::read_to_string(out_dir.join(name))?)
+            .with_context(|| format!("parsing {name}"))?;
+        let base = parse_json(&std::fs::read_to_string(&base_path)?)
+            .with_context(|| format!("parsing baseline {name}"))?;
+        validate_bench(&cur).with_context(|| format!("{name} invalid"))?;
+        validate_bench(&base).with_context(|| format!("baseline {name} invalid"))?;
+        let regs = compare_bench(&cur, &base, &tol)?;
+        for r in &regs {
+            eprintln!("REGRESSION {name}: {r}");
+        }
+        regressions += regs.len();
+        checked += 1;
+    }
+    if checked == 0 {
+        println!(
+            "bench --check: no baselines matching {} artifact(s) under {} — nothing compared \
+             (commit BENCH_*.json there to arm the gate)",
+            names.len(),
+            baseline_dir.display(),
+        );
+    } else {
+        println!(
+            "bench --check: {checked} artifact(s) compared against {}, {regressions} regression(s)",
+            baseline_dir.display(),
+        );
+    }
+    Ok(regressions)
 }
 
 #[cfg(test)]
@@ -769,6 +986,133 @@ mod tests {
         let mut bad = BenchDoc::new("unit", 0);
         bad.push_metrics("m", &[("x", f64::NAN)]);
         assert!(validate_bench(&bad.to_json()).is_err());
+    }
+
+    fn traced_report() -> Report {
+        use crate::fabric::{Span, NO_TILE};
+        let mk = |pe: u32, t0: f64, t1: f64, kind: Kind, label: &'static str| Span {
+            pe,
+            t0_ns: t0,
+            t1_ns: t1,
+            kind,
+            label,
+            bytes: 0.0,
+            peer: 2,
+            tile: NO_TILE,
+        };
+        sample_report().with_traces(vec![
+            PeTrace {
+                pe: 0,
+                spans: vec![
+                    mk(0, 0.0, 2e9, Kind::Comp, "kernel"),
+                    mk(0, 2e9, 3e9, Kind::Comm, "wait_tile"),
+                ],
+                dropped: 0,
+            },
+            PeTrace { pe: 1, spans: vec![mk(1, 0.0, 1e9, Kind::Comp, "kernel")], dropped: 0 },
+        ])
+    }
+
+    #[test]
+    fn traced_run_rows_carry_valid_phases_through_roundtrip() {
+        let mut doc = BenchDoc::new("unit", -2);
+        doc.push_run("traced p=2", "amazon", 128, &traced_report());
+        assert!(doc.has_traces());
+        let j = doc.to_json();
+        validate_bench(&j).unwrap();
+        let back = parse_json(&j.render()).unwrap();
+        validate_bench(&back).unwrap();
+        let phases = back.get("rows").unwrap().as_arr().unwrap()[0].get("phases").unwrap();
+        let comm = phases.get("kinds").unwrap().get("comm").unwrap();
+        assert_eq!(comm.get("n").unwrap().as_i64(), Some(1));
+        assert_eq!(comm.get("total_ns").unwrap().as_f64(), Some(1e9));
+        let waits = phases.get("top_comm_waits").unwrap().as_arr().unwrap();
+        assert_eq!(waits[0].get("label").unwrap().as_str(), Some("wait_tile"));
+        // Untraced runs stay phases-free.
+        let mut plain = BenchDoc::new("unit", -2);
+        plain.push_run("plain p=2", "amazon", 128, &sample_report());
+        assert!(!plain.has_traces());
+        let rows = plain.to_json();
+        assert!(rows.get("rows").unwrap().as_arr().unwrap()[0].get("phases").is_none());
+    }
+
+    #[test]
+    fn validator_accepts_v2_documents() {
+        let mut doc = BenchDoc::new("unit", 0);
+        doc.push_run("r", "m", 0, &sample_report());
+        let Jv::Obj(mut fields) = doc.to_json() else { panic!("not an object") };
+        fields[0].1 = Jv::Int(2);
+        validate_bench(&Jv::Obj(fields)).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_unordered_phase_percentiles() {
+        let mut doc = BenchDoc::new("unit", 0);
+        doc.push_run("r", "m", 0, &traced_report());
+        let text = doc.to_json().render();
+        let broken = text.replace("\"p95_ns\":1000000000,", "\"p95_ns\":1,");
+        assert_ne!(broken, text, "the comm p95 must have been rewritten");
+        assert!(validate_bench(&parse_json(&broken).unwrap()).is_err());
+    }
+
+    #[test]
+    fn compare_bench_flags_only_out_of_band_rows() {
+        let mut base = BenchDoc::new("unit", 0);
+        base.push_run("r p=2", "m", 0, &sample_report());
+        let base = base.to_json();
+
+        // Identical doc: clean.
+        let tol = BenchTolerance::default();
+        assert!(compare_bench(&base, &base, &tol).unwrap().is_empty());
+
+        // Slower run beyond the band: flagged once, for makespan.
+        let mut slow = sample_report();
+        slow.makespan_ns *= 1.0 + tol.makespan + 0.1;
+        let mut cur = BenchDoc::new("unit", 0);
+        cur.push_run("r p=2", "m", 0, &slow);
+        let regs = compare_bench(&cur.to_json(), &base, &tol).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("makespan"), "{regs:?}");
+
+        // Within the band: clean.
+        let mut ok = sample_report();
+        ok.makespan_ns *= 1.0 + tol.makespan - 0.1;
+        let mut cur = BenchDoc::new("unit", 0);
+        cur.push_run("r p=2", "m", 0, &ok);
+        assert!(compare_bench(&cur.to_json(), &base, &tol).unwrap().is_empty());
+
+        // Unmatched labels are ignored.
+        let mut other = BenchDoc::new("unit", 0);
+        other.push_run("renamed p=2", "m", 0, &slow);
+        assert!(compare_bench(&other.to_json(), &base, &tol).unwrap().is_empty());
+    }
+
+    #[test]
+    fn check_bench_dir_bootstraps_and_gates() {
+        let root = std::env::temp_dir().join(format!("sparta_check_test_{}", std::process::id()));
+        let out = root.join("out");
+        let baseline = root.join("baseline");
+        std::fs::create_dir_all(&out).unwrap();
+        std::fs::create_dir_all(&baseline).unwrap();
+        let mut doc = BenchDoc::new("gate", 0);
+        doc.push_run("r p=2", "m", 0, &sample_report());
+        doc.write(&out).unwrap();
+
+        // Empty baseline dir: bootstrap mode, zero regressions.
+        assert_eq!(check_bench_dir(&out, &baseline).unwrap(), 0);
+
+        // Same doc as baseline: compared, clean.
+        doc.write(&baseline).unwrap();
+        assert_eq!(check_bench_dir(&out, &baseline).unwrap(), 0);
+
+        // Regressed current doc: gate trips.
+        let mut slow = sample_report();
+        slow.makespan_ns *= 2.0;
+        let mut bad = BenchDoc::new("gate", 0);
+        bad.push_run("r p=2", "m", 0, &slow);
+        bad.write(&out).unwrap();
+        assert!(check_bench_dir(&out, &baseline).unwrap() > 0);
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

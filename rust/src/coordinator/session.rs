@@ -50,7 +50,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::algorithms::{Alg, Comm, Op, SpgemmCtx, SpmmCtx};
 use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
-use crate::fabric::{Fabric, FabricConfig, NetProfile};
+use crate::fabric::{Fabric, FabricConfig, NetProfile, DEFAULT_TRACE_CAP};
 use crate::matrix::{local_spgemm, local_spmm, Csr, Dense};
 use crate::runtime::TileBackend;
 use crate::util::Rng;
@@ -374,6 +374,7 @@ impl Session {
             alg: Alg::StationaryC,
             comm: Comm::FullTile,
             verify: false,
+            trace: false,
             output: None,
             label: None,
             matrix: None,
@@ -420,6 +421,7 @@ impl Session {
         alg: Alg,
         comm: Comm,
         verify: bool,
+        trace: bool,
         output: Option<OperandId>,
         label: Option<String>,
         matrix: Option<String>,
@@ -445,8 +447,12 @@ impl Session {
             );
         }
         match op {
-            Op::Spmm => self.run_spmm_plan(a, b, alg, comm, verify, output, label, matrix, bn),
-            Op::Spgemm => self.run_spgemm_plan(a, b, alg, comm, verify, output, label, matrix),
+            Op::Spmm => {
+                self.run_spmm_plan(a, b, alg, comm, verify, trace, output, label, matrix, bn)
+            }
+            Op::Spgemm => {
+                self.run_spgemm_plan(a, b, alg, comm, verify, trace, output, label, matrix)
+            }
         }
     }
 
@@ -457,6 +463,7 @@ impl Session {
         alg: Alg,
         comm: Comm,
         verify: bool,
+        trace: bool,
         output: Option<OperandId>,
         label: Option<String>,
         matrix: Option<String>,
@@ -485,12 +492,15 @@ impl Session {
             res3d,
             backend: self.backend.clone(),
             comm,
+            trace,
         };
+        self.fabric.set_tracing(if trace { DEFAULT_TRACE_CAP } else { 0 });
         let t0 = Instant::now();
         let (_, stats) = self.fabric.launch(|pe| spmm_alg.run(pe, &ctx));
         let wall_ns = t0.elapsed().as_nanos() as f64;
         self.invalidate_host(c_id); // the run wrote C
-        let report = Report::new(spmm_alg.name(), self.fabric.profile().name, stats, wall_ns);
+        let report = Report::new(spmm_alg.name(), self.fabric.profile().name, stats, wall_ns)
+            .with_traces(self.fabric.take_trace());
         let mut gathered = None;
         if verify {
             let want = match self.ref_cache.get(&(a.0, b.0)) {
@@ -522,6 +532,7 @@ impl Session {
         alg: Alg,
         comm: Comm,
         verify: bool,
+        trace: bool,
         output: Option<OperandId>,
         label: Option<String>,
         matrix: Option<String>,
@@ -548,12 +559,15 @@ impl Session {
             res2d,
             backend: self.backend.clone(),
             comm,
+            trace,
         };
+        self.fabric.set_tracing(if trace { DEFAULT_TRACE_CAP } else { 0 });
         let t0 = Instant::now();
         let (_, stats) = self.fabric.launch(|pe| spgemm_alg.run(pe, &ctx));
         let wall_ns = t0.elapsed().as_nanos() as f64;
         self.invalidate_host(c_id); // the run wrote C
-        let report = Report::new(spgemm_alg.name(), self.fabric.profile().name, stats, wall_ns);
+        let report = Report::new(spgemm_alg.name(), self.fabric.profile().name, stats, wall_ns)
+            .with_traces(self.fabric.take_trace());
         let mut gathered = None;
         if verify {
             let want = match self.ref_cache.get(&(a.0, b.0)) {
@@ -601,6 +615,7 @@ pub struct MultiplyPlan<'s> {
     alg: Alg,
     comm: Comm,
     verify: bool,
+    trace: bool,
     output: Option<OperandId>,
     label: Option<String>,
     matrix: Option<String>,
@@ -628,6 +643,16 @@ impl MultiplyPlan<'_> {
         self
     }
 
+    /// Record per-PE span traces for this run (see `fabric::trace`).
+    /// The traces land on the run's [`Report`] and flow into the
+    /// session ledger, so [`Session::bench_doc`] can emit both the
+    /// BENCH `phases` summaries and a `TRACE_*.json` timeline.
+    /// Tracing never charges virtual time or performs fabric ops.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
     /// Write into an existing resident operand (rezeroed in place)
     /// instead of allocating a fresh output.
     pub fn output(mut self, id: OperandId) -> Self {
@@ -651,15 +676,16 @@ impl MultiplyPlan<'_> {
     /// Run the multiply on the session's fabric: one launch epoch, one
     /// ledger entry, output resident.
     pub fn execute(self) -> Result<MultiplyRun> {
-        let MultiplyPlan { session, a, b, alg, comm, verify, output, label, matrix } = self;
-        session.run_plan(a, b, alg, comm, verify, output, label, matrix)
+        let MultiplyPlan { session, a, b, alg, comm, verify, trace, output, label, matrix } = self;
+        session.run_plan(a, b, alg, comm, verify, trace, output, label, matrix)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::report::validate_bench;
+    use crate::coordinator::report::{parse_json, validate_bench};
+    use crate::fabric::Kind;
     use crate::matrix::gen;
 
     fn small_session(nprocs: usize) -> Session {
@@ -800,6 +826,98 @@ mod tests {
         assert!(tr.n_selective_gets > 0);
         assert!(tr.bytes_saved_sparsity > 0.0);
         assert_eq!(tf.flops, tr.flops, "same multiplies either way");
+    }
+
+    /// The tracing invariant: spans are complete per PE (one per clock
+    /// advance, in order, non-overlapping) and per-Kind span sums equal
+    /// the Stats component totals.
+    fn assert_trace_mirrors_stats(report: &Report) {
+        assert_eq!(report.traces.len(), report.nprocs, "one trace per PE");
+        for (t, s) in report.traces.iter().zip(&report.per_rank) {
+            assert_eq!(t.dropped, 0, "smoke-scale runs must not overflow the ring");
+            let mut prev = 0.0;
+            for sp in &t.spans {
+                assert!(
+                    sp.t0_ns >= prev,
+                    "PE{} span at {} overlaps predecessor ending {prev}",
+                    t.pe,
+                    sp.t0_ns
+                );
+                assert!(sp.t1_ns >= sp.t0_ns, "negative-duration span");
+                prev = sp.t1_ns;
+            }
+            for kind in Kind::ALL {
+                let (got, want) = (t.kind_ns(kind), s.component_ns(kind));
+                let tol = 1.0 + 1e-9 * want;
+                assert!(
+                    (got - want).abs() <= tol,
+                    "PE{} {}: span sum {got} != stats {want}",
+                    t.pe,
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn traced_spans_mirror_stats_for_both_ops_and_comm_modes() {
+        let a_m = gen::banded(64, 2, 0.8, 41);
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&a_m);
+        let b = sess.random_dense(64, 8, 42);
+        for comm in [Comm::FullTile, Comm::RowSelective] {
+            for alg in [Alg::StationaryA, Alg::RandomWs] {
+                let spmm = sess.plan(a, b).alg(alg).comm(comm).trace(true).execute().unwrap();
+                assert_trace_mirrors_stats(&spmm.report);
+                let spgemm = sess.plan(a, a).alg(alg).comm(comm).trace(true).execute().unwrap();
+                assert_trace_mirrors_stats(&spgemm.report);
+            }
+        }
+    }
+
+    #[test]
+    fn tracing_off_changes_nothing_and_collects_nothing() {
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&gen::erdos_renyi(48, 5, 43));
+        let b = sess.random_dense(48, 8, 44);
+        let plain = sess.plan(a, b).execute().unwrap().report;
+        let traced = sess.plan(a, b).trace(true).execute().unwrap().report;
+        let off = sess.plan(a, b).execute().unwrap().report;
+        assert!(plain.traces.is_empty());
+        assert!(!traced.traces.is_empty());
+        assert!(off.traces.is_empty(), "tracing must disarm after a traced run");
+        // Stationary-C is deterministic: the traced run must be
+        // bit-identical in virtual time and fabric traffic.
+        assert_eq!(plain.makespan_ns, traced.makespan_ns, "tracing moved virtual time");
+        let (tp, tt, to) = (plain.totals(), traced.totals(), off.totals());
+        assert_eq!(tp.n_gets, tt.n_gets, "tracing added fabric gets");
+        assert_eq!(tp.n_faa, tt.n_faa, "tracing added fabric atomics");
+        assert_eq!(tp.bytes_get, tt.bytes_get);
+        assert_eq!(tp.n_gets, to.n_gets);
+    }
+
+    #[test]
+    fn session_trace_doc_writes_valid_chrome_json() {
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&gen::erdos_renyi(32, 4, 45));
+        let b = sess.random_dense(32, 8, 46);
+        sess.plan(a, b).trace(true).label("traced").execute().unwrap();
+        sess.plan(a, b).label("plain").execute().unwrap();
+        let doc = sess.bench_doc("session_trace", -1);
+        assert!(doc.has_traces());
+        validate_bench(&doc.to_json()).unwrap();
+        let dir = std::env::temp_dir().join(format!("sparta_trace_test_{}", std::process::id()));
+        let path = doc.write_trace(&dir).unwrap().expect("a traced run must emit a file");
+        assert!(path.ends_with("TRACE_session_trace.json"));
+        let parsed = parse_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X")));
+        assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M")));
+        // Only the traced run contributes a process.
+        let pids: std::collections::HashSet<i64> =
+            events.iter().filter_map(|e| e.get("pid").and_then(|p| p.as_i64())).collect();
+        assert_eq!(pids.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

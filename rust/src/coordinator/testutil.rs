@@ -34,6 +34,7 @@ fn build_spmm(nprocs: usize, a: Csr, b: Dense) -> (SpmmFixture, Dense) {
         res3d: Some(ResGrid3D::create(&fabric, grid)),
         backend: TileBackend::Native,
         comm: Comm::FullTile,
+        trace: false,
     };
     (SpmmFixture { fabric, ctx }, want)
 }
@@ -115,6 +116,7 @@ fn build_spgemm(nprocs: usize, a: Csr) -> (SpgemmFixture, Csr) {
         res2d: Some(ResGrid2D::create(&fabric, grid)),
         backend: TileBackend::Native,
         comm: Comm::FullTile,
+        trace: false,
     };
     (SpgemmFixture { fabric, ctx }, want)
 }

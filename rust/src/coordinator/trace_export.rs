@@ -1,0 +1,310 @@
+//! Trace exporters: Chrome trace-event JSON (loadable in Perfetto /
+//! `chrome://tracing`) and the in-terminal profile summary. Both are
+//! built on the dependency-free [`Jv`] writer, so the build stays fully
+//! offline.
+//!
+//! The Chrome document groups runs as processes (one `pid` per run,
+//! named by the run label) and PEs as threads (`tid` = rank). Spans
+//! with positive duration become complete (`"X"`) events; zero-duration
+//! marks (queue-stall diagnostics) become instant (`"i"`) events.
+//! Timestamps are microseconds of *virtual* time.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::fabric::{Kind, PeTrace, Span};
+
+use super::report::{parse_json, Jv};
+
+/// How many of the longest comm waits the summary keeps.
+pub const TOP_WAITS: usize = 5;
+
+/// Chrome trace-viewer reserved color per Kind, so the timeline reads
+/// the same way the Table-2 breakdown does.
+pub fn kind_cname(kind: Kind) -> &'static str {
+    match kind {
+        Kind::Comp => "thread_state_running",
+        Kind::Comm => "thread_state_iowait",
+        Kind::Acc => "thread_state_runnable",
+        Kind::Queue => "thread_state_unknown",
+        Kind::Imbalance => "terrible",
+    }
+}
+
+fn tile_jv(tile: [i32; 3]) -> Jv {
+    Jv::Arr(tile.iter().map(|&x| Jv::Int(x as i64)).collect())
+}
+
+fn meta_event(what: &str, pid: i64, tid: i64, name: &str) -> Jv {
+    Jv::obj(vec![
+        ("name", Jv::str(what)),
+        ("ph", Jv::str("M")),
+        ("pid", Jv::Int(pid)),
+        ("tid", Jv::Int(tid)),
+        ("args", Jv::obj(vec![("name", Jv::str(name))])),
+    ])
+}
+
+fn span_event(pid: i64, s: &Span) -> Jv {
+    let mut fields = vec![
+        ("name", Jv::str(s.label)),
+        ("cat", Jv::str(s.kind.name())),
+        ("pid", Jv::Int(pid)),
+        ("tid", Jv::Int(s.pe as i64)),
+        ("ts", Jv::Num(s.t0_ns / 1e3)),
+    ];
+    if s.dur_ns() > 0.0 {
+        fields.push(("ph", Jv::str("X")));
+        fields.push(("dur", Jv::Num(s.dur_ns() / 1e3)));
+    } else {
+        fields.push(("ph", Jv::str("i")));
+        fields.push(("s", Jv::str("t")));
+    }
+    fields.push(("cname", Jv::str(kind_cname(s.kind))));
+    fields.push((
+        "args",
+        Jv::obj(vec![
+            ("bytes", Jv::Num(s.bytes)),
+            ("peer", Jv::Int(s.peer as i64)),
+            ("tile", tile_jv(s.tile)),
+        ]),
+    ));
+    Jv::obj(fields)
+}
+
+/// Build one Chrome trace-event document from the traced runs of an
+/// artifact: one process per run, one thread per PE.
+pub fn chrome_trace(runs: &[(String, Vec<PeTrace>)]) -> Jv {
+    let mut events = Vec::new();
+    for (pid, (label, traces)) in runs.iter().enumerate() {
+        let pid = pid as i64;
+        events.push(meta_event("process_name", pid, 0, label));
+        for t in traces {
+            events.push(meta_event("thread_name", pid, t.pe as i64, &format!("PE {}", t.pe)));
+            for s in &t.spans {
+                events.push(span_event(pid, s));
+            }
+        }
+    }
+    Jv::obj(vec![("traceEvents", Jv::Arr(events)), ("displayTimeUnit", Jv::str("ns"))])
+}
+
+/// Render, round-trip re-parse, and write `TRACE_<artifact>.json`.
+pub fn write_chrome_trace(
+    runs: &[(String, Vec<PeTrace>)],
+    artifact: &str,
+    dir: &Path,
+) -> Result<PathBuf> {
+    let text = chrome_trace(runs).render();
+    parse_json(&text).context("emitted trace JSON does not re-parse")?;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating trace output dir {}", dir.display()))?;
+    let path = dir.join(format!("TRACE_{artifact}.json"));
+    std::fs::write(&path, text).with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (0.0 on
+/// empty input).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn sorted_durs(traces: &[PeTrace], kind: Kind) -> Vec<f64> {
+    let mut durs: Vec<f64> = traces
+        .iter()
+        .flat_map(|t| t.spans.iter())
+        .filter(|s| s.kind == kind)
+        .map(Span::dur_ns)
+        .collect();
+    durs.sort_by(f64::total_cmp);
+    durs
+}
+
+fn longest_comm_waits(traces: &[PeTrace], k: usize) -> Vec<&Span> {
+    let mut waits: Vec<&Span> = traces
+        .iter()
+        .flat_map(|t| t.spans.iter())
+        .filter(|s| s.kind == Kind::Comm && s.dur_ns() > 0.0)
+        .collect();
+    waits.sort_by(|a, b| b.dur_ns().total_cmp(&a.dur_ns()));
+    waits.truncate(k);
+    waits
+}
+
+/// The `phases` section of a BENCH run row (schema v3): per-Kind span
+/// histograms, the longest comm waits with their tile coordinates, and
+/// the ring-buffer drop count.
+pub fn phases_json(traces: &[PeTrace]) -> Jv {
+    let mut kinds = Vec::new();
+    for kind in Kind::ALL {
+        let durs = sorted_durs(traces, kind);
+        kinds.push((
+            kind.name().to_string(),
+            Jv::obj(vec![
+                ("n", Jv::Int(durs.len() as i64)),
+                ("total_ns", Jv::Num(durs.iter().sum())),
+                ("p50_ns", Jv::Num(percentile(&durs, 0.50))),
+                ("p95_ns", Jv::Num(percentile(&durs, 0.95))),
+                ("max_ns", Jv::Num(durs.last().copied().unwrap_or(0.0))),
+            ]),
+        ));
+    }
+    let dropped: u64 = traces.iter().map(|t| t.dropped).sum();
+    let waits = longest_comm_waits(traces, TOP_WAITS)
+        .into_iter()
+        .map(|s| {
+            Jv::obj(vec![
+                ("pe", Jv::Int(s.pe as i64)),
+                ("label", Jv::str(s.label)),
+                ("dur_ns", Jv::Num(s.dur_ns())),
+                ("t0_ns", Jv::Num(s.t0_ns)),
+                ("bytes", Jv::Num(s.bytes)),
+                ("peer", Jv::Int(s.peer as i64)),
+                ("tile", tile_jv(s.tile)),
+            ])
+        })
+        .collect();
+    Jv::obj(vec![
+        ("dropped_spans", Jv::Int(dropped as i64)),
+        ("kinds", Jv::Obj(kinds)),
+        ("top_comm_waits", Jv::Arr(waits)),
+    ])
+}
+
+/// Print the in-terminal profile summary for one traced run.
+pub fn print_profile(label: &str, traces: &[PeTrace]) {
+    let fmt = crate::util::fmt_ns;
+    println!("profile [{label}]:");
+    println!(
+        "  {:<10} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "kind", "spans", "total", "p50", "p95", "max"
+    );
+    for kind in Kind::ALL {
+        let durs = sorted_durs(traces, kind);
+        println!(
+            "  {:<10} {:>8} {:>12} {:>12} {:>12} {:>12}",
+            kind.name(),
+            durs.len(),
+            fmt(durs.iter().sum()),
+            fmt(percentile(&durs, 0.50)),
+            fmt(percentile(&durs, 0.95)),
+            fmt(durs.last().copied().unwrap_or(0.0)),
+        );
+    }
+    let waits = longest_comm_waits(traces, TOP_WAITS);
+    if !waits.is_empty() {
+        println!("  longest comm waits:");
+        for s in waits {
+            println!(
+                "    PE{:<3} {:<18} {:>12}  peer={:<3} tile=({},{},{})  {:.0} B",
+                s.pe,
+                s.label,
+                fmt(s.dur_ns()),
+                s.peer,
+                s.tile[0],
+                s.tile[1],
+                s.tile[2],
+                s.bytes,
+            );
+        }
+    }
+    let dropped: u64 = traces.iter().map(|t| t.dropped).sum();
+    if dropped > 0 {
+        println!("  ({dropped} spans dropped by the ring buffer — raise the trace capacity)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::NO_TILE;
+
+    fn span(pe: u32, t0: f64, t1: f64, kind: Kind, label: &'static str) -> Span {
+        let bytes = 8.0 * (t1 - t0);
+        Span { pe, t0_ns: t0, t1_ns: t1, kind, label, bytes, peer: 1, tile: NO_TILE }
+    }
+
+    fn sample_traces() -> Vec<PeTrace> {
+        vec![
+            PeTrace {
+                pe: 0,
+                spans: vec![
+                    span(0, 0.0, 100.0, Kind::Comp, "kernel"),
+                    span(0, 100.0, 250.0, Kind::Comm, "wait_tile"),
+                    span(0, 250.0, 250.0, Kind::Queue, "queue_stall"),
+                ],
+                dropped: 0,
+            },
+            PeTrace {
+                pe: 1,
+                spans: vec![
+                    span(1, 0.0, 40.0, Kind::Comm, "wait_rows"),
+                    span(1, 40.0, 90.0, Kind::Imbalance, "barrier_wait"),
+                ],
+                dropped: 2,
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_has_expected_events() {
+        let runs = vec![("spmm p=2".to_string(), sample_traces())];
+        let doc = chrome_trace(&runs);
+        let back = parse_json(&doc.render()).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 2 thread_name + 5 spans.
+        assert_eq!(events.len(), 8);
+        let xs: Vec<&Jv> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 4, "positive-duration spans are complete events");
+        let instants: Vec<&Jv> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("i"))
+            .collect();
+        assert_eq!(instants.len(), 1, "zero-duration marks are instant events");
+        // Timestamps are µs: the 150 ns comm wait renders as 0.15 / 0.1.
+        let wait = xs.iter().find(|e| e.get("name").unwrap().as_str() == Some("wait_tile")).unwrap();
+        assert!((wait.get("ts").unwrap().as_f64().unwrap() - 0.1).abs() < 1e-12);
+        assert!((wait.get("dur").unwrap().as_f64().unwrap() - 0.15).abs() < 1e-12);
+        assert_eq!(wait.get("cat").unwrap().as_str(), Some("comm"));
+    }
+
+    #[test]
+    fn phases_percentiles_are_ordered_and_waits_ranked() {
+        let traces = sample_traces();
+        let phases = phases_json(&traces);
+        assert_eq!(phases.get("dropped_spans").unwrap().as_i64(), Some(2));
+        let kinds = phases.get("kinds").unwrap();
+        for kind in Kind::ALL {
+            let k = kinds.get(kind.name()).unwrap();
+            let p50 = k.get("p50_ns").unwrap().as_f64().unwrap();
+            let p95 = k.get("p95_ns").unwrap().as_f64().unwrap();
+            let max = k.get("max_ns").unwrap().as_f64().unwrap();
+            assert!(p50 <= p95 && p95 <= max, "{}: {p50} {p95} {max}", kind.name());
+        }
+        let comm = kinds.get("comm").unwrap();
+        assert_eq!(comm.get("n").unwrap().as_i64(), Some(2));
+        assert_eq!(comm.get("total_ns").unwrap().as_f64(), Some(190.0));
+        let waits = phases.get("top_comm_waits").unwrap().as_arr().unwrap();
+        assert_eq!(waits.len(), 2);
+        assert_eq!(waits[0].get("dur_ns").unwrap().as_f64(), Some(150.0), "ranked longest-first");
+        assert_eq!(waits[0].get("label").unwrap().as_str(), Some("wait_tile"));
+    }
+
+    #[test]
+    fn empty_traces_summarize_cleanly() {
+        let phases = phases_json(&[]);
+        let comp = phases.get("kinds").unwrap().get("comp").unwrap();
+        assert_eq!(comp.get("n").unwrap().as_i64(), Some(0));
+        assert_eq!(comp.get("max_ns").unwrap().as_f64(), Some(0.0));
+        assert!(phases.get("top_comm_waits").unwrap().as_arr().unwrap().is_empty());
+    }
+}

@@ -154,13 +154,10 @@ impl DistDense {
     pub fn async_get_tile(&self, pe: &Pe, i: usize, j: usize) -> DenseTileFuture {
         let (r, c) = self.tile_dims(i, j);
         let gp = self.tile_ptr(i, j);
-        DenseTileFuture {
-            fut: pe.async_get(gp),
-            nrows: r,
-            ncols: c,
-            bytes: gp.bytes() as f64,
-            runs: None,
-        }
+        let mut fut = pe.async_get(gp);
+        fut.tag_tile([i as i32, j as i32, -1]);
+        fut.tag_label("wait_tile");
+        DenseTileFuture { fut, nrows: r, ncols: c, bytes: gp.bytes() as f64, runs: None }
     }
 
     /// Lay out a row-selective fetch of tile (i, j): merged runs of
@@ -199,10 +196,18 @@ impl DistDense {
     /// `bytes_saved_sparsity` when the selective path is taken.
     pub fn async_get_rows(&self, pe: &Pe, i: usize, j: usize, rows: &[u32]) -> DenseTileFuture {
         match self.plan_rows(i, j, rows) {
-            None => self.async_get_tile(pe, i, j),
+            None => {
+                let mut f = self.async_get_tile(pe, i, j);
+                // Hybrid fallback: the gather would move >= the whole
+                // tile, so this is a full fetch on the selective path.
+                f.fut.tag_label("wait_rows_fallback");
+                f
+            }
             Some((gp, runs, ranges)) => {
                 let (r, c) = self.tile_dims(i, j);
-                let (fut, wire) = pe.async_gather(gp, &ranges);
+                let (mut fut, wire) = pe.async_gather(gp, &ranges);
+                fut.tag_tile([i as i32, j as i32, -1]);
+                fut.tag_label("wait_rows");
                 let mut s = pe.stats_mut();
                 s.n_selective_gets += 1;
                 s.bytes_saved_sparsity += (gp.bytes() - wire) as f64;

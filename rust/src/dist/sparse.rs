@@ -293,10 +293,20 @@ impl DistCsr {
     /// Non-blocking fetch of all three tile arrays (prefetch, §3.3).
     pub fn async_get_tile(&self, pe: &Pe, i: usize, j: usize) -> CsrTileFuture {
         let h = self.handle(i, j);
+        let tile = [i as i32, j as i32, -1];
+        let mut rowptr = pe.async_get(h.rowptr);
+        let mut colind = pe.async_get(h.colind);
+        let mut vals = pe.async_get(h.vals);
+        rowptr.tag_tile(tile);
+        rowptr.tag_label("wait_tile");
+        colind.tag_tile(tile);
+        colind.tag_label("wait_tile");
+        vals.tag_tile(tile);
+        vals.tag_label("wait_tile");
         CsrTileFuture {
-            rowptr: pe.async_get(h.rowptr),
-            colind: pe.async_get(h.colind),
-            vals: pe.async_get(h.vals),
+            rowptr,
+            colind,
+            vals,
             nrows: h.nrows,
             ncols: h.ncols,
             bytes: h.bytes() as f64,
@@ -347,11 +357,26 @@ impl DistCsr {
     /// counters when the selective path is taken.
     pub fn async_get_rows(&self, pe: &Pe, i: usize, j: usize, rows: &[u32]) -> CsrTileFuture {
         match self.plan_rows(i, j, rows) {
-            Err(_) => self.async_get_tile(pe, i, j),
+            Err(_) => {
+                let mut f = self.async_get_tile(pe, i, j);
+                // Hybrid fallback: the gather would move >= the whole
+                // tile, so this is a full fetch on the selective path.
+                f.rowptr.tag_label("wait_rows_fallback");
+                f.colind.tag_label("wait_rows_fallback");
+                f.vals.tag_label("wait_rows_fallback");
+                f
+            }
             Ok(p) => {
-                let (rowptr, w1) = pe.async_gather(p.h.rowptr, &p.rp_ranges);
-                let (colind, w2) = pe.async_gather(p.h.colind, &p.entry_ranges);
-                let (vals, w3) = pe.async_gather(p.h.vals, &p.entry_ranges);
+                let tile = [i as i32, j as i32, -1];
+                let (mut rowptr, w1) = pe.async_gather(p.h.rowptr, &p.rp_ranges);
+                let (mut colind, w2) = pe.async_gather(p.h.colind, &p.entry_ranges);
+                let (mut vals, w3) = pe.async_gather(p.h.vals, &p.entry_ranges);
+                rowptr.tag_tile(tile);
+                rowptr.tag_label("wait_rows");
+                colind.tag_tile(tile);
+                colind.tag_label("wait_rows");
+                vals.tag_tile(tile);
+                vals.tag_label("wait_rows");
                 let wire = w1 + w2 + w3;
                 let mut s = pe.stats_mut();
                 s.n_selective_gets += 1;

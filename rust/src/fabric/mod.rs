@@ -37,6 +37,7 @@ pub mod queue;
 pub mod segment;
 pub mod stats;
 pub mod topology;
+pub mod trace;
 
 pub use barrier::ClockBarrier;
 pub use gptr::{GlobalPtr, Pod};
@@ -45,9 +46,10 @@ pub use queue::{QueueHandle, QueueItem};
 pub use segment::{CHUNK_BYTES, Segment};
 pub use stats::{Kind, Stats};
 pub use topology::{ComputeModel, Link, LinkKind, NetProfile};
+pub use trace::{PeTrace, Span, SpanCtx, Tracer, DEFAULT_TRACE_CAP, NO_TILE};
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Fabric construction parameters.
@@ -98,6 +100,13 @@ pub struct Fabric {
     setup_read_bytes: AtomicU64,
     setup_writes: AtomicU64,
     setup_write_bytes: AtomicU64,
+    /// Per-PE span ring capacity for the *next* launch; 0 = tracing
+    /// off (the default). See [`Fabric::set_tracing`].
+    trace_cap: AtomicUsize,
+    /// Spans deposited by PEs as they finish the current launch epoch;
+    /// cleared at the start of every launch, drained by
+    /// [`Fabric::take_trace`].
+    trace_sink: Mutex<Vec<PeTrace>>,
 }
 
 impl Fabric {
@@ -120,7 +129,34 @@ impl Fabric {
             setup_read_bytes: AtomicU64::new(0),
             setup_writes: AtomicU64::new(0),
             setup_write_bytes: AtomicU64::new(0),
+            trace_cap: AtomicUsize::new(0),
+            trace_sink: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Enable or disable span tracing for subsequent launches: `cap` is
+    /// the per-PE ring-buffer capacity in spans (0 disables). Tracing
+    /// changes neither op counts nor virtual time — it only records the
+    /// charges that already happen.
+    pub fn set_tracing(&self, cap: usize) {
+        self.trace_cap.store(cap, Ordering::Relaxed);
+    }
+
+    /// Per-PE span ring capacity for the next launch (0 = off).
+    pub fn trace_cap(&self) -> usize {
+        self.trace_cap.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn push_trace(&self, t: PeTrace) {
+        self.trace_sink.lock().unwrap().push(t);
+    }
+
+    /// Drain the spans recorded by the most recent launch, sorted by
+    /// rank. Empty when tracing was off.
+    pub fn take_trace(&self) -> Vec<PeTrace> {
+        let mut ts = std::mem::take(&mut *self.trace_sink.lock().unwrap());
+        ts.sort_by_key(|t| t.pe);
+        ts
     }
 
     /// Whether PE threads pace real time to virtual time.
@@ -244,6 +280,7 @@ impl Fabric {
     {
         let n = self.nprocs;
         let epoch = std::time::Instant::now();
+        self.trace_sink.lock().unwrap().clear();
         let mut results: Vec<Option<(R, Stats)>> = (0..n).map(|_| None).collect();
         std::thread::scope(|scope| {
             let mut handles = Vec::new();

@@ -12,6 +12,7 @@ use std::sync::Arc;
 use super::barrier::ClockBarrier;
 use super::gptr::{GlobalPtr, Pod};
 use super::stats::{Kind, Stats};
+use super::trace::{SpanCtx, Tracer, NO_TILE};
 use super::Fabric;
 
 /// CPU-side overhead to issue a non-blocking one-sided operation, ns.
@@ -42,6 +43,11 @@ pub struct Pe {
     /// simulated GPU would never have reached. Pacing makes the
     /// simulation causally consistent at the cost of real sleeping.
     epoch: std::time::Instant,
+    /// Span recorder, present only when tracing is enabled on the
+    /// fabric ([`Fabric::set_tracing`]) — every hook is a `None` check
+    /// when off, and recording never performs fabric operations or
+    /// clock charges.
+    trace: Option<Tracer>,
 }
 
 /// A non-blocking get in flight. Data is materialized eagerly (the
@@ -52,19 +58,45 @@ pub struct Pe {
 pub struct GetFuture<T> {
     data: Vec<T>,
     ready_at: f64,
+    /// Trace attribution (rank the data came from, wire bytes, tile
+    /// coordinates, wait label); carried so the *wait* span can name
+    /// what was being waited on.
+    peer: i32,
+    bytes: f64,
+    tile: [i32; 3],
+    label: &'static str,
 }
 
 impl<T> GetFuture<T> {
     /// An already-complete future (used for locally-cached tiles).
     pub fn ready(data: Vec<T>) -> Self {
-        GetFuture { data, ready_at: 0.0 }
+        GetFuture { data, ready_at: 0.0, peer: -1, bytes: 0.0, tile: NO_TILE, label: "wait" }
+    }
+
+    /// Tag the future with the tile coordinates it carries (trace
+    /// attribution only).
+    pub fn tag_tile(&mut self, tile: [i32; 3]) {
+        self.tile = tile;
+    }
+
+    /// Override the wait-span label (trace attribution only), e.g.
+    /// "wait_rows" for a selective fetch.
+    pub fn tag_label(&mut self, label: &'static str) {
+        self.label = label;
     }
 
     /// Block until the transfer completes; charges the wait to `kind`.
     pub fn wait_as(self, pe: &Pe, kind: Kind) -> Vec<T> {
         let now = pe.now();
         if self.ready_at > now {
+            pe.trace_note(SpanCtx {
+                label: self.label,
+                peer: self.peer,
+                tile: self.tile,
+                bytes: self.bytes,
+            });
             pe.advance(kind, self.ready_at - now);
+            pe.trace_done();
         }
         self.data
     }
@@ -82,6 +114,7 @@ impl<T> GetFuture<T> {
 
 impl Pe {
     pub(super) fn new(rank: usize, fabric: Arc<Fabric>, epoch: std::time::Instant) -> Self {
+        let cap = fabric.trace_cap();
         Pe {
             rank,
             fabric,
@@ -90,6 +123,52 @@ impl Pe {
             nic_free_at: Cell::new(0.0),
             nvlink_free_at: Cell::new(0.0),
             epoch,
+            trace: (cap > 0).then(|| Tracer::new(cap)),
+        }
+    }
+
+    /// Whether span tracing is active for this PE.
+    pub fn tracing(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Set the ambient trace context: spans recorded until
+    /// [`Pe::trace_done`] carry `ctx`'s label / peer / tile / bytes.
+    /// No-op when tracing is off.
+    pub fn trace_note(&self, ctx: SpanCtx) {
+        if let Some(tr) = &self.trace {
+            tr.set_ctx(ctx);
+        }
+    }
+
+    /// Clear the ambient trace context. No-op when tracing is off.
+    pub fn trace_done(&self) {
+        if let Some(tr) = &self.trace {
+            tr.clear_ctx();
+        }
+    }
+
+    /// Record an instant (zero-duration) span at the current virtual
+    /// time — diagnostics like queue-stall markers. No clock charge.
+    pub fn trace_mark(&self, kind: Kind, label: &'static str) {
+        if let Some(tr) = &self.trace {
+            let now = self.clock.get();
+            tr.record_labeled(self.rank, kind, now, now, label);
+        }
+    }
+
+    /// Record the span `[t0, t1]` (ambient-context labeled).
+    fn trace_record(&self, kind: Kind, t0: f64, t1: f64) {
+        if let Some(tr) = &self.trace {
+            tr.record(self.rank, kind, t0, t1);
+        }
+    }
+
+    /// Record the span `[t0, t1]` with an explicit label, bypassing the
+    /// ambient context (barrier accounting).
+    fn trace_record_labeled(&self, kind: Kind, t0: f64, t1: f64, label: &'static str) {
+        if let Some(tr) = &self.trace {
+            tr.record_labeled(self.rank, kind, t0, t1, label);
         }
     }
 
@@ -161,13 +240,21 @@ impl Pe {
         self.clock.get()
     }
 
-    /// Advance the virtual clock, attributing the time to `kind`.
+    /// Advance the virtual clock, attributing the time to `kind`. This
+    /// is the single charging choke point, so when tracing is on every
+    /// advance becomes one span — per-Kind span sums equal the `Stats`
+    /// component totals by construction.
     pub fn advance(&self, kind: Kind, ns: f64) {
         if !self.fabric.profile().timed {
             return;
         }
-        self.clock.set(self.clock.get() + ns);
+        let t0 = self.clock.get();
+        let t1 = t0 + ns;
+        self.clock.set(t1);
         self.stats.borrow_mut().charge(kind, ns);
+        if ns > 0.0 {
+            self.trace_record(kind, t0, t1);
+        }
         self.pace();
     }
 
@@ -185,10 +272,15 @@ impl Pe {
         self.stats.borrow_mut()
     }
 
-    /// Take the stats out at the end of a run.
+    /// Take the stats out at the end of a run; deposits this PE's spans
+    /// in the fabric's trace sink when tracing was on.
     pub(super) fn finish(self) -> Stats {
-        let mut s = self.stats.into_inner();
-        s.final_clock_ns = self.clock.get();
+        let Pe { rank, fabric, clock, stats, trace, .. } = self;
+        let mut s = stats.into_inner();
+        s.final_clock_ns = clock.get();
+        if let Some(tr) = trace {
+            fabric.push_trace(tr.into_trace(rank));
+        }
         s
     }
 
@@ -247,7 +339,14 @@ impl Pe {
         s.bytes_get += gp.bytes() as f64;
         s.charge_xfer_path(gp.bulk_bytes(), gp.bytes());
         drop(s);
-        GetFuture { data, ready_at }
+        GetFuture {
+            data,
+            ready_at,
+            peer: gp.rank() as i32,
+            bytes: gp.bytes() as f64,
+            tile: NO_TILE,
+            label: "wait",
+        }
     }
 
     /// Copy the requested element ranges of `gp` into one concatenated
@@ -333,7 +432,15 @@ impl Pe {
         let ready_at = ISSUE_NS + self.transfer_done_at(gp.rank(), wire as f64);
         self.advance(Kind::Comm, ISSUE_NS);
         self.gather_stats(ranges, wire);
-        (GetFuture { data, ready_at }, wire)
+        let fut = GetFuture {
+            data,
+            ready_at,
+            peer: gp.rank() as i32,
+            bytes: wire as f64,
+            tile: NO_TILE,
+            label: "wait",
+        };
+        (fut, wire)
     }
 
     /// Blocking one-sided put.
@@ -435,12 +542,14 @@ impl Pe {
             let lost = max - mine;
             if lost > 0.0 {
                 self.stats.borrow_mut().charge(Kind::Imbalance, lost);
+                self.trace_record_labeled(Kind::Imbalance, mine, max, "barrier_wait");
             }
             // Fixed synchronization cost: a log-depth signaling tree.
             let sync_cost =
                 self.fabric.profile().inter.lat_ns * (b.participants() as f64).log2().max(1.0);
             self.clock.set(max + sync_cost);
             self.stats.borrow_mut().charge(Kind::Queue, sync_cost);
+            self.trace_record_labeled(Kind::Queue, max, max + sync_cost, "barrier_sync");
             self.pace();
         }
     }

@@ -22,6 +22,7 @@ use std::marker::PhantomData;
 use super::gptr::GlobalPtr;
 use super::pe::Pe;
 use super::stats::Kind;
+use super::trace::{SpanCtx, NO_TILE};
 
 /// Fixed-size serializable queue payload.
 pub trait QueueItem: Sized {
@@ -110,6 +111,12 @@ impl<T: QueueItem> QueueHandle<T> {
     /// Push an item (any PE). Cost: one remote FAA + one put.
     /// Spins (with backpressure polling) if the queue is full.
     pub fn push(&self, pe: &Pe, item: &T) {
+        pe.trace_note(SpanCtx {
+            label: "queue_push",
+            peer: self.owner() as i32,
+            tile: NO_TILE,
+            bytes: ((1 + T::WORDS) * 8) as f64,
+        });
         let t = pe.fetch_add(self.base, TAIL, 1);
         // Backpressure: wait until the slot for our ticket is free. A
         // merely *slow* consumer keeps advancing head, so the stall
@@ -126,13 +133,30 @@ impl<T: QueueItem> QueueHandle<T> {
         while t - last_head >= self.cap as i64 {
             pe.fabric().check_abort();
             let start = *stalled_since.get_or_insert_with(std::time::Instant::now);
-            assert!(
-                start.elapsed() < STALL_LIMIT,
-                "remote queue on rank {} deadlocked: no pop for {:?} (capacity {})",
-                self.owner(),
-                STALL_LIMIT,
-                self.cap
-            );
+            if start.elapsed() >= STALL_LIMIT {
+                // One-line diagnostic with the queue's state before the
+                // abort: enough to see *which* queue wedged and how full
+                // it was, instead of a bare "deadlocked" panic.
+                let tail = pe.atomic_load(self.base, TAIL);
+                eprintln!(
+                    "queue stall: owner=PE{} depth={} cap={} head={} tail={} \
+                     blocked_pusher=PE{} no pop for {:?}",
+                    self.owner(),
+                    tail - last_head,
+                    self.cap,
+                    last_head,
+                    tail,
+                    pe.rank(),
+                    STALL_LIMIT
+                );
+                pe.trace_mark(Kind::Queue, "queue_stall");
+                panic!(
+                    "remote queue on rank {} deadlocked: no pop for {:?} (capacity {})",
+                    self.owner(),
+                    STALL_LIMIT,
+                    self.cap
+                );
+            }
             std::thread::yield_now();
             let head = pe.atomic_load(self.base, HEAD);
             if head != last_head {
@@ -150,6 +174,7 @@ impl<T: QueueItem> QueueHandle<T> {
         // Publish: seq = ticket + 1 (Release store).
         pe.atomic_store(self.base, sb, t + 1);
         pe.stats_mut().n_queue_push += 1;
+        pe.trace_done();
     }
 
     /// Pop an item (owner only). Returns None when the queue is
@@ -194,8 +219,16 @@ impl<T: QueueItem> QueueHandle<T> {
             if !allow_future {
                 return None;
             }
+            // Idle wait for the producer: label the causality clamp.
+            pe.trace_note(SpanCtx::new("queue_pop_wait"));
             pe.advance_to(Kind::Imbalance, arrival);
         }
+        pe.trace_note(SpanCtx {
+            label: "queue_pop",
+            peer: -1,
+            tile: NO_TILE,
+            bytes: ((1 + T::WORDS) * 8) as f64,
+        });
         let raw = pe.get_vec_as(self.base.slice(sb + 1, 1 + T::WORDS), Kind::Queue);
         let words: Vec<u64> = raw[1..].iter().map(|&w| w as u64).collect();
         let item = T::decode(&words);
@@ -203,6 +236,7 @@ impl<T: QueueItem> QueueHandle<T> {
         pe.atomic_store(self.base, sb, 0);
         pe.atomic_store(self.base, HEAD, h + 1);
         pe.stats_mut().n_queue_pop += 1;
+        pe.trace_done();
         Some(item)
     }
 

@@ -23,6 +23,23 @@ pub enum Kind {
     Imbalance,
 }
 
+impl Kind {
+    /// All kinds, in Table 2 report order.
+    pub const ALL: [Kind; 5] =
+        [Kind::Comp, Kind::Comm, Kind::Acc, Kind::Queue, Kind::Imbalance];
+
+    /// Stable lowercase name (trace categories, JSON keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Comp => "comp",
+            Kind::Comm => "comm",
+            Kind::Acc => "acc",
+            Kind::Queue => "queue",
+            Kind::Imbalance => "imbalance",
+        }
+    }
+}
+
 /// Component timing + traffic counters for one PE over one run.
 #[derive(Clone, Debug, Default)]
 pub struct Stats {
@@ -89,6 +106,17 @@ impl Stats {
             Kind::Acc => self.acc_ns += ns,
             Kind::Queue => self.queue_ns += ns,
             Kind::Imbalance => self.imb_ns += ns,
+        }
+    }
+
+    /// The component total `kind` charges accumulate into.
+    pub fn component_ns(&self, kind: Kind) -> f64 {
+        match kind {
+            Kind::Comp => self.comp_ns,
+            Kind::Comm => self.comm_ns,
+            Kind::Acc => self.acc_ns,
+            Kind::Queue => self.queue_ns,
+            Kind::Imbalance => self.imb_ns,
         }
     }
 

@@ -1,0 +1,225 @@
+//! Per-PE virtual-time span tracing.
+//!
+//! Every clock advance a PE performs is already attributed to a
+//! [`Kind`] for the `Stats` component sums; this module records the
+//! *same* charges as timeline events — `Span`s over the virtual clock —
+//! so a run can be inspected as a per-PE timeline (Perfetto / Chrome
+//! trace viewer) instead of only as totals. Because spans are recorded
+//! at the single charging choke point ([`crate::fabric::Pe::advance`]),
+//! the per-Kind span sums equal the `Stats` component totals by
+//! construction.
+//!
+//! Tracing is off by default and zero-cost when off: a `Pe` carries
+//! `Option<Tracer>`, and every hook is a `None` check. Recording never
+//! touches the fabric — no segment reads, no atomics, no clock
+//! charges — so enabling tracing changes neither the op counts nor the
+//! virtual time of a run.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+
+use super::stats::Kind;
+
+/// Ring-buffer capacity (spans per PE) used when tracing is enabled
+/// without an explicit cap. When a PE records more spans than this, the
+/// oldest are dropped (and counted in [`PeTrace::dropped`]) — the tail
+/// of the run is always retained.
+pub const DEFAULT_TRACE_CAP: usize = 1 << 18;
+
+/// Tile-coordinate placeholder for spans with no tile attribution.
+pub const NO_TILE: [i32; 3] = [-1, -1, -1];
+
+/// One attributed interval of a PE's virtual clock.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Rank of the PE this span belongs to.
+    pub pe: u32,
+    /// Start of the interval, virtual ns.
+    pub t0_ns: f64,
+    /// End of the interval, virtual ns (`t0_ns == t1_ns` marks an
+    /// instant event, e.g. a queue-stall diagnostic).
+    pub t1_ns: f64,
+    /// The Stats component the interval was charged to.
+    pub kind: Kind,
+    /// What the PE was doing ("wait_tile", "steal_try", "barrier_wait",
+    /// ...); defaults to the Kind name when no site set a context.
+    pub label: &'static str,
+    /// Wire bytes associated with the operation (0 when n/a).
+    pub bytes: f64,
+    /// Peer rank involved (transfer target / queue owner), -1 when n/a.
+    pub peer: i32,
+    /// Tile coordinates (i, j, k) of the operand involved; -1 per axis
+    /// when unknown / not applicable.
+    pub tile: [i32; 3],
+}
+
+impl Span {
+    pub fn dur_ns(&self) -> f64 {
+        self.t1_ns - self.t0_ns
+    }
+}
+
+/// Ambient attribution context: a call site names the operation about to
+/// charge time, and every span recorded until the context is cleared
+/// carries that label plus the peer / tile / bytes metadata.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanCtx {
+    pub label: &'static str,
+    pub peer: i32,
+    pub tile: [i32; 3],
+    pub bytes: f64,
+}
+
+impl SpanCtx {
+    pub fn new(label: &'static str) -> SpanCtx {
+        SpanCtx { label, peer: -1, tile: NO_TILE, bytes: 0.0 }
+    }
+}
+
+/// The spans one PE recorded over one launch epoch.
+#[derive(Clone, Debug, Default)]
+pub struct PeTrace {
+    pub pe: usize,
+    /// Spans in recording order — monotone in `t0_ns` and
+    /// non-overlapping (each span covers exactly one clock advance).
+    pub spans: Vec<Span>,
+    /// Spans evicted from the ring buffer (oldest-first) because the
+    /// run recorded more than the configured capacity.
+    pub dropped: u64,
+}
+
+impl PeTrace {
+    /// Sum of span durations charged to `kind` — the traced mirror of
+    /// the corresponding `Stats` component total.
+    pub fn kind_ns(&self, kind: Kind) -> f64 {
+        self.spans.iter().filter(|s| s.kind == kind).map(Span::dur_ns).sum()
+    }
+}
+
+/// Per-PE span recorder: a bounded ring buffer plus the ambient
+/// [`SpanCtx`]. Lives inside `Pe` (single-threaded access), hence the
+/// `Cell`/`RefCell` interior mutability.
+pub struct Tracer {
+    cap: usize,
+    buf: RefCell<VecDeque<Span>>,
+    dropped: Cell<u64>,
+    ctx: Cell<Option<SpanCtx>>,
+}
+
+impl Tracer {
+    pub fn new(cap: usize) -> Tracer {
+        assert!(cap > 0, "trace ring capacity must be positive");
+        Tracer {
+            cap,
+            buf: RefCell::new(VecDeque::new()),
+            dropped: Cell::new(0),
+            ctx: Cell::new(None),
+        }
+    }
+
+    /// Set the ambient context for subsequent spans.
+    pub fn set_ctx(&self, ctx: SpanCtx) {
+        self.ctx.set(Some(ctx));
+    }
+
+    /// Clear the ambient context.
+    pub fn clear_ctx(&self) {
+        self.ctx.set(None);
+    }
+
+    /// Record the interval `[t0, t1]` charged to `kind`, labeled from
+    /// the ambient context (or the Kind name when none is set).
+    pub fn record(&self, pe: usize, kind: Kind, t0: f64, t1: f64) {
+        let (label, peer, tile, bytes) = match self.ctx.get() {
+            Some(c) => (c.label, c.peer, c.tile, c.bytes),
+            None => (kind.name(), -1, NO_TILE, 0.0),
+        };
+        self.push(Span { pe: pe as u32, t0_ns: t0, t1_ns: t1, kind, label, bytes, peer, tile });
+    }
+
+    /// Record with an explicit label, bypassing the ambient context
+    /// (barrier waits, stall diagnostics).
+    pub fn record_labeled(&self, pe: usize, kind: Kind, t0: f64, t1: f64, label: &'static str) {
+        self.push(Span {
+            pe: pe as u32,
+            t0_ns: t0,
+            t1_ns: t1,
+            kind,
+            label,
+            bytes: 0.0,
+            peer: -1,
+            tile: NO_TILE,
+        });
+    }
+
+    fn push(&self, s: Span) {
+        let mut buf = self.buf.borrow_mut();
+        if buf.len() == self.cap {
+            buf.pop_front();
+            self.dropped.set(self.dropped.get() + 1);
+        }
+        buf.push_back(s);
+    }
+
+    /// Number of spans currently buffered.
+    pub fn len(&self) -> usize {
+        self.buf.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.borrow().is_empty()
+    }
+
+    /// Drain into the per-run record (end of a launch epoch).
+    pub fn into_trace(self, pe: usize) -> PeTrace {
+        PeTrace { pe, spans: self.buf.into_inner().into(), dropped: self.dropped.get() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(t0: f64, t1: f64, kind: Kind) -> Span {
+        Span {
+            pe: 0,
+            t0_ns: t0,
+            t1_ns: t1,
+            kind,
+            label: "x",
+            bytes: 0.0,
+            peer: -1,
+            tile: NO_TILE,
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let tr = Tracer::new(2);
+        tr.push(span(0.0, 1.0, Kind::Comp));
+        tr.push(span(1.0, 2.0, Kind::Comm));
+        tr.push(span(2.0, 3.0, Kind::Acc));
+        let t = tr.into_trace(0);
+        assert_eq!(t.dropped, 1);
+        assert_eq!(t.spans.len(), 2);
+        assert_eq!(t.spans[0].t0_ns, 1.0, "oldest span evicted first");
+    }
+
+    #[test]
+    fn ambient_ctx_labels_spans() {
+        let tr = Tracer::new(8);
+        tr.record(3, Kind::Comm, 0.0, 5.0);
+        tr.set_ctx(SpanCtx { label: "wait_tile", peer: 2, tile: [1, 2, -1], bytes: 64.0 });
+        tr.record(3, Kind::Comm, 5.0, 9.0);
+        tr.clear_ctx();
+        tr.record(3, Kind::Queue, 9.0, 10.0);
+        let t = tr.into_trace(3);
+        assert_eq!(t.spans[0].label, "comm", "default label is the Kind name");
+        assert_eq!(t.spans[1].label, "wait_tile");
+        assert_eq!(t.spans[1].peer, 2);
+        assert_eq!(t.spans[1].tile, [1, 2, -1]);
+        assert_eq!(t.spans[1].bytes, 64.0);
+        assert_eq!(t.spans[2].label, "queue");
+        assert_eq!(t.kind_ns(Kind::Comm), 9.0);
+    }
+}

@@ -4,10 +4,12 @@
 //!
 //! * `sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all>`
 //!   — regenerate a figure/table of the paper (see DESIGN.md §4).
-//! * `sparta bench [artifact|all] [--smoke] [--out DIR]` — run the
-//!   figure/table harnesses and write one schema-versioned
+//! * `sparta bench [artifact|all] [--smoke] [--out DIR] [--check DIR]`
+//!   — run the figure/table harnesses and write one schema-versioned
 //!   `BENCH_<artifact>.json` each (the measured-perf pipeline; CI's
-//!   bench-smoke job runs `sparta bench --smoke`).
+//!   bench-smoke job runs `sparta bench --smoke`). `--check DIR`
+//!   compares the fresh documents against committed baselines and
+//!   exits nonzero on a makespan/bytes regression.
 //! * `sparta run spmm|spgemm [options]` — one experiment run.
 //! * `sparta chain spmm|spgemm [options]` — an N-step multiply pipeline
 //!   on one session: operands stay resident, each step's output chains
@@ -19,6 +21,11 @@
 //! and for `run`/`chain`: `--alg`, `--nprocs`, `--matrix`, `--ncols`,
 //! `--profile summit|dgx2|flat:<GBps>`, `--pjrt`; `chain` adds
 //! `--steps <n>` and `--out DIR` (BENCH JSON of the whole chain).
+//!
+//! `run`, `chain`, and `bench` accept `--trace[=DIR]`: record per-PE
+//! span traces (see `fabric::trace`), print an in-terminal profile
+//! summary, and with `=DIR` (for `bench`: under `--out`) also write a
+//! Chrome/Perfetto `TRACE_<artifact>.json` timeline.
 
 use std::collections::HashMap;
 
@@ -26,9 +33,10 @@ use anyhow::{bail, Context, Result};
 
 use sparta::algorithms::{Alg, Comm, SpgemmAlg, SpmmAlg};
 use sparta::coordinator::experiments::{self, ExpOpts};
+use sparta::coordinator::{check_bench_dir, print_profile, write_chrome_trace};
 use sparta::coordinator::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
 use sparta::coordinator::{Session, SessionConfig};
-use sparta::fabric::NetProfile;
+use sparta::fabric::{NetProfile, PeTrace};
 use sparta::matrix::{mm_io, suite, Csr};
 use sparta::runtime::TileBackend;
 
@@ -40,9 +48,11 @@ fn main() {
     }
 }
 
-/// Minimal flag parser: positional args + `--key value` + `--flag`.
-/// Each subcommand declares its boolean flags in `bool_flags`; every
-/// other `--key` requires a value and errors when none follows.
+/// Minimal flag parser: positional args + `--key value` + `--key=value`
+/// + `--flag`. Each subcommand declares its boolean flags in
+/// `bool_flags`; every other `--key` requires a value and errors when
+/// none follows. `--key=value` works for boolean flags too, which is
+/// how `--trace=DIR` upgrades the boolean into a destination.
 struct Opts {
     positional: Vec<String>,
     flags: HashMap<String, String>,
@@ -56,7 +66,9 @@ impl Opts {
         while i < args.len() {
             let a = &args[i];
             if let Some(key) = a.strip_prefix("--") {
-                if bool_flags.contains(&key) {
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&key) {
                     flags.insert(key.to_string(), "true".to_string());
                 } else {
                     i += 1;
@@ -115,6 +127,17 @@ fn parse_comm(opts: &Opts) -> Result<Comm> {
     Comm::from_name(&s).with_context(|| format!("bad --comm {s:?} (full|row)"))
 }
 
+/// `--trace[=DIR]`: the boolean enables span recording + the terminal
+/// profile; the `=DIR` form additionally names a directory for the
+/// Chrome/Perfetto `TRACE_*.json` timeline.
+fn trace_opts(opts: &Opts) -> (bool, Option<std::path::PathBuf>) {
+    match opts.flags.get("trace").map(String::as_str) {
+        None => (false, None),
+        Some("true") => (true, None),
+        Some(dir) => (true, Some(std::path::PathBuf::from(dir))),
+    }
+}
+
 fn load_matrix(name: &str, scale_shift: i32) -> Result<Csr> {
     if name.ends_with(".mtx") {
         return mm_io::read_matrix_market(std::path::Path::new(name))
@@ -131,9 +154,9 @@ fn dispatch(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match cmd.as_str() {
         "repro" => repro(&Opts::parse(rest, &["verify", "quiet"])?),
-        "bench" => bench(&Opts::parse(rest, &["smoke", "verify", "quiet"])?),
-        "run" => run(&Opts::parse(rest, &["verify", "pjrt", "quiet"])?),
-        "chain" => chain(&Opts::parse(rest, &["verify", "pjrt", "quiet"])?),
+        "bench" => bench(&Opts::parse(rest, &["smoke", "verify", "quiet", "trace"])?),
+        "run" => run(&Opts::parse(rest, &["verify", "pjrt", "quiet", "trace"])?),
+        "chain" => chain(&Opts::parse(rest, &["verify", "pjrt", "quiet", "trace"])?),
         "list" => {
             Opts::parse(rest, &[])?;
             println!("matrices (suite analogs):");
@@ -161,6 +184,7 @@ fn repro(opts: &Opts) -> Result<()> {
         verify: opts.has("verify"),
         print: !opts.has("quiet"),
         comm: parse_comm(opts)?,
+        trace: false,
     };
     let run_one = |w: &str| -> Result<()> {
         match w {
@@ -212,11 +236,15 @@ fn bench(opts: &Opts) -> Result<()> {
     let what = opts.positional.first().map(String::as_str).unwrap_or("all");
     let smoke = opts.has("smoke");
     let default_shift = if smoke { -3 } else { -1 };
+    // Bench harnesses write TRACE files next to the BENCH files under
+    // --out, so --trace=DIR is equivalent to plain --trace here.
+    let (traced, _) = trace_opts(opts);
     let eopts = ExpOpts {
         scale_shift: opts.get("scale-shift", default_shift)?,
         verify: opts.has("verify"),
         print: !opts.has("quiet"),
         comm: parse_comm(opts)?,
+        trace: traced,
     };
     let out_dir = std::path::PathBuf::from(opts.str("out", "bench-out"));
     let artifacts: Vec<&str> = if what == "all" {
@@ -230,6 +258,25 @@ fn bench(opts: &Opts) -> Result<()> {
             .with_context(|| format!("bench harness {artifact} failed"))?;
         println!("[bench {artifact}: wrote {} in {:.1?}]", path.display(), t0.elapsed());
     }
+    if opts.has("check") {
+        let baseline = std::path::PathBuf::from(opts.str("check", ""));
+        let regressions = check_bench_dir(&out_dir, &baseline)?;
+        if regressions > 0 {
+            bail!("{regressions} perf regression(s) vs baselines in {}", baseline.display());
+        }
+    }
+    Ok(())
+}
+
+/// Print a traced run's profile summary and, when `--trace=DIR` named
+/// a directory, write the Chrome/Perfetto timeline there.
+fn emit_trace(label: &str, traces: &[PeTrace], dir: Option<&std::path::Path>) -> Result<()> {
+    print_profile(label, traces);
+    if let Some(dir) = dir {
+        let runs = vec![(label.to_string(), traces.to_vec())];
+        let tp = write_chrome_trace(&runs, label, dir)?;
+        println!("wrote {}", tp.display());
+    }
     Ok(())
 }
 
@@ -239,6 +286,7 @@ fn run(opts: &Opts) -> Result<()> {
     let nprocs: usize = opts.get("nprocs", 16)?;
     let profile = parse_profile(&opts.str("profile", "summit"))?;
     let matrix = opts.str("matrix", "amazon");
+    let (traced, trace_dir) = trace_opts(opts);
     let a = load_matrix(&matrix, scale_shift)?;
     println!("matrix {matrix}: {}x{}, nnz {}", a.nrows, a.ncols, a.nnz());
 
@@ -249,11 +297,15 @@ fn run(opts: &Opts) -> Result<()> {
             let mut cfg = SpmmConfig::new(alg, nprocs, profile, opts.get("ncols", 128)?);
             cfg.verify = opts.has("verify");
             cfg.comm = parse_comm(opts)?;
+            cfg.trace = traced;
             if opts.has("pjrt") {
                 cfg.backend = TileBackend::pjrt(std::path::Path::new("artifacts"))?;
             }
             let run = run_spmm(&a, &cfg)?;
             println!("{}", run.report.row());
+            if traced {
+                emit_trace("run_spmm", &run.report.traces, trace_dir.as_deref())?;
+            }
             if let TileBackend::Pjrt(exe) = &cfg.backend {
                 println!(
                     "pjrt: {} kernel executions, {} native fallbacks",
@@ -271,8 +323,12 @@ fn run(opts: &Opts) -> Result<()> {
             let mut cfg = SpgemmConfig::new(alg, nprocs, profile);
             cfg.verify = opts.has("verify");
             cfg.comm = parse_comm(opts)?;
+            cfg.trace = traced;
             let run = run_spgemm(&a, &cfg)?;
             println!("{}", run.report.row());
+            if traced {
+                emit_trace("run_spgemm", &run.report.traces, trace_dir.as_deref())?;
+            }
             if cfg.verify {
                 println!("verification OK");
             }
@@ -299,6 +355,7 @@ fn chain(opts: &Opts) -> Result<()> {
     let matrix = opts.str("matrix", "amazon");
     let verify = opts.has("verify");
     let quiet = opts.has("quiet");
+    let (traced, trace_dir) = trace_opts(opts);
     let a = load_matrix(&matrix, scale_shift)?;
     if a.nrows != a.ncols {
         bail!("chaining needs a square sparse matrix, got {}x{}", a.nrows, a.ncols);
@@ -330,18 +387,23 @@ fn chain(opts: &Opts) -> Result<()> {
         other => bail!("unknown chain kind {other:?} (spmm|spgemm)"),
     };
     let mut total_makespan_ns = 0.0;
+    let mut trace_runs: Vec<(String, Vec<PeTrace>)> = Vec::new();
     for step in 1..=steps {
         let run = sess
             .plan(da, operand)
             .alg(alg)
             .comm(comm)
             .verify(verify)
+            .trace(traced)
             .label(&format!("step {step}"))
             .matrix(&matrix)
             .execute()?;
         total_makespan_ns += run.report.makespan_ns;
         if !quiet {
             println!("  step {step}: {}", run.report.row());
+        }
+        if traced {
+            trace_runs.push((format!("step {step}"), run.report.traces.clone()));
         }
         operand = run.c;
         if verify {
@@ -363,10 +425,23 @@ fn chain(opts: &Opts) -> Result<()> {
             gathers
         );
     }
+    if traced {
+        for (label, traces) in &trace_runs {
+            print_profile(label, traces);
+        }
+        if let Some(dir) = &trace_dir {
+            let tp = write_chrome_trace(&trace_runs, "chain", dir)?;
+            println!("wrote {}", tp.display());
+        }
+    }
     if opts.has("out") {
         let dir = std::path::PathBuf::from(opts.str("out", "bench-out"));
-        let path = sess.bench_doc("chain", scale_shift).write(&dir)?;
+        let doc = sess.bench_doc("chain", scale_shift);
+        let path = doc.write(&dir)?;
         println!("wrote {}", path.display());
+        if let Some(tp) = doc.write_trace(&dir)? {
+            println!("wrote {}", tp.display());
+        }
     }
     Ok(())
 }
@@ -377,11 +452,11 @@ fn print_help() {
 
 USAGE:
   sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all> [--scale-shift N] [--verify] [--comm full|row]
-  sparta bench [fig1|...|table2b|all] [--smoke] [--scale-shift N] [--out DIR] [--quiet] [--comm full|row]
-  sparta run spmm   --alg sc --nprocs 24 --matrix amazon --ncols 128 --profile summit [--pjrt] [--verify] [--comm full|row]
-  sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify] [--comm full|row]
-  sparta chain spmm --steps 3 --alg sc --nprocs 16 --matrix amazon --ncols 128 [--verify] [--out DIR]
-  sparta chain spgemm --steps 3 --alg sc --nprocs 16 --matrix mouse_gene [--verify] [--out DIR]
+  sparta bench [fig1|...|table2b|all] [--smoke] [--scale-shift N] [--out DIR] [--quiet] [--comm full|row] [--trace] [--check BASELINE_DIR]
+  sparta run spmm   --alg sc --nprocs 24 --matrix amazon --ncols 128 --profile summit [--pjrt] [--verify] [--comm full|row] [--trace[=DIR]]
+  sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify] [--comm full|row] [--trace[=DIR]]
+  sparta chain spmm --steps 3 --alg sc --nprocs 16 --matrix amazon --ncols 128 [--verify] [--out DIR] [--trace[=DIR]]
+  sparta chain spgemm --steps 3 --alg sc --nprocs 16 --matrix mouse_gene [--verify] [--out DIR] [--trace[=DIR]]
   sparta list
 
 `--comm row` switches every remote B-tile fetch to the sparsity-aware
@@ -397,6 +472,16 @@ resident as the next step's input (zero intermediate gathers). With
 `sparta bench` writes one schema-versioned BENCH_<artifact>.json per
 harness (makespan, per-PE time breakdown, bytes moved, op counts, wall
 clock) under --out (default bench-out/). --smoke is the quick CI preset.
+--check BASELINE_DIR compares the fresh documents against committed
+baselines (bench_baselines/) and exits nonzero on a makespan or
+bytes-moved regression outside the tolerance band.
+
+--trace records per-PE virtual-time span traces (comp/comm/acc/queue/
+imbalance, with tile coords and peers on comm waits), prints a profile
+summary (per-kind p50/p95/max, top comm waits), and folds a `phases`
+section into the BENCH rows. --trace=DIR (run/chain) also writes a
+Chrome/Perfetto TRACE_*.json timeline; bench writes TRACE files next
+to the BENCH files under --out. Open them at https://ui.perfetto.dev.
 "
     );
 }

@@ -10,7 +10,7 @@ use sparta::fabric::NetProfile;
 use sparta::matrix::{gen, suite};
 
 fn quiet(scale_shift: i32) -> ExpOpts {
-    ExpOpts { scale_shift, verify: false, print: false, comm: Default::default() }
+    ExpOpts { scale_shift, verify: false, print: false, comm: Default::default(), trace: false }
 }
 
 #[test]
