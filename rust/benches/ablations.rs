@@ -10,6 +10,9 @@
 //! 4. Communication modes: full-tile vs row-selective (sparsity-aware)
 //!    B fetches on Table-1 analog SpGEMM/SpMM workloads — asserts the
 //!    ≥20% get-byte reduction the row-selective path exists for.
+//! 5. k-lookahead prefetch pipeline: depth 0 (blocking baseline) vs
+//!    the default depth 2 on Figure-3/4 analogs — asserts the measured
+//!    per-PE comm-wait drops while bytes moved stay exactly equal.
 //!
 //! `-- --smoke` shrinks every workload (the CI preset).
 use std::path::Path;
@@ -133,6 +136,55 @@ fn main() {
         let reduction = 1.0 - get_bytes[1] / get_bytes[0];
         println!("  spmm   {name:<12} get-byte reduction {:.1}%", reduction * 100.0);
         doc.push_metrics(&format!("ablation4 spmm {name}"), &[("get_byte_reduction", reduction)]);
+    }
+
+    println!("── ablation 5: k-lookahead prefetch depth 0 vs 2 ──");
+    // Traced runs on a Figure-3 analog (amazon @ DGX-2) and a Figure-4
+    // analog (com-orkut @ Summit): prefetching tiles k+1..k+2 while
+    // multiplying tile k takes the remote gets off the critical path.
+    // Depth changes only *when* transfer time is waited on, so the
+    // comm-wait drop must come with exactly equal get-bytes — that pair
+    // of invariants holds at every scale, including --smoke.
+    for (name, profile, np) in
+        [("amazon", NetProfile::dgx2(), 16), ("com-orkut", NetProfile::summit(), 24)]
+    {
+        let m = suite::analog_scaled(name, shift);
+        let mut comm_ns = [0.0f64; 2];
+        let mut get_bytes = [0.0f64; 2];
+        for (idx, depth) in [0usize, 2].into_iter().enumerate() {
+            let mut cfg = SpmmConfig::new(SpmmAlg::StationaryC, np, profile.clone(), 128);
+            cfg.verify = true;
+            cfg.trace = true;
+            cfg.lookahead = depth;
+            let r = run_spmm(&m, &cfg).unwrap().report;
+            let t = r.totals();
+            comm_ns[idx] = t.comm_ns;
+            get_bytes[idx] = t.bytes_get;
+            println!(
+                "  spmm {name:<12} {} depth={depth}  comm {:>9.3} ms  get-bytes {:>12.0}  makespan {:>9.3} ms",
+                profile.name,
+                t.comm_ns / r.nprocs as f64 / 1e6,
+                t.bytes_get,
+                r.makespan_s() * 1e3
+            );
+            doc.push_run(&format!("ablation5 spmm {name} depth={depth}"), name, 128, &r);
+        }
+        assert_eq!(
+            get_bytes[0], get_bytes[1],
+            "lookahead changed the bytes moved on {name}"
+        );
+        assert!(
+            comm_ns[1] < comm_ns[0],
+            "lookahead 2 must cut comm-wait on {name}: {} >= {}",
+            comm_ns[1],
+            comm_ns[0]
+        );
+        let reduction = 1.0 - comm_ns[1] / comm_ns[0];
+        println!("  spmm {name:<12} per-PE comm-wait reduction {:.1}%", reduction * 100.0);
+        doc.push_metrics(
+            &format!("ablation5 spmm {name}"),
+            &[("comm_wait_reduction", reduction)],
+        );
     }
 
     let path = doc.write(Path::new("bench-out")).expect("BENCH_ablations.json");

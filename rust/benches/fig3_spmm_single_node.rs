@@ -12,6 +12,7 @@ fn main() {
         print: true,
         comm: Default::default(),
         trace: false,
+        ..ExpOpts::default()
     };
     let path =
         sparta::coordinator::bench_artifact("fig3", &opts, Path::new("bench-out")).expect("fig3");

@@ -13,6 +13,7 @@ fn main() {
         print: true,
         comm: Default::default(),
         trace: false,
+        ..ExpOpts::default()
     };
     for artifact in ["table1", "table2a", "table2b"] {
         let path = sparta::coordinator::bench_artifact(artifact, &opts, Path::new("bench-out"))

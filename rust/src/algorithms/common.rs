@@ -2,11 +2,11 @@
 //! contexts, the pending-contribution tracker used for asynchronous
 //! termination, and bulk-synchronous library-overhead models.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::dist::{AccMsg, AccQueues, DistCsr, DistDense, ResGrid2D, ResGrid3D};
 use crate::dist::{CsrTileFuture, DenseTileFuture};
-use crate::fabric::{Kind, Pe, SpanCtx};
+use crate::fabric::{Kind, Pe};
 use crate::matrix::{local_spmm, Coo, Csr, Dense};
 use crate::runtime::TileBackend;
 
@@ -65,6 +65,9 @@ pub struct SpmmCtx {
     /// tracing armed via `Fabric::set_tracing`; algorithms may use this
     /// to skip building trace-only metadata).
     pub trace: bool,
+    /// Prefetch depth of the k-lookahead pipeline (0 = blocking fetches
+    /// on the critical path; see [`TilePipeline`]).
+    pub lookahead: usize,
 }
 
 /// SpGEMM context (C = A·B, all sparse).
@@ -84,10 +87,92 @@ pub struct SpgemmCtx {
     pub comm: Comm,
     /// Span tracing requested for this run (see [`SpmmCtx::trace`]).
     pub trace: bool,
+    /// Prefetch depth of the k-lookahead pipeline (see [`SpmmCtx::lookahead`]).
+    pub lookahead: usize,
 }
 
-/// Fetch B[k, j] for a component multiply against A[i, k], honoring the
-/// context's communication mode (non-blocking; the prefetch sites). In
+/// Default prefetch depth of the k-lookahead pipeline: double
+/// buffering — while tile k multiplies, tiles k+1 and k+2 are in
+/// flight.
+pub const DEFAULT_LOOKAHEAD: usize = 2;
+
+/// The k-lookahead prefetch pipeline — the one fetch primitive shared
+/// by every algorithm, both ops, and both comm modes.
+///
+/// A pipeline walks an iteration *schedule* (any iterator of work
+/// items, e.g. the offset-rotated k order of stationary-C) and keeps up
+/// to `depth` fetches in flight ahead of the consumer: while the caller
+/// multiplies the tile taken for step k, the fetches for steps
+/// k+1..k+depth have already been issued, so their transfer time
+/// overlaps the local compute and only the *remainder* is charged as
+/// comm wait at the next [`TilePipeline::take`].
+///
+/// Depth 0 is the blocking baseline: each fetch is issued at `take` and
+/// the caller waits for it immediately — exactly the old synchronous
+/// `fetch_*_now` helpers, now just a degenerate depth. A depth larger
+/// than the schedule simply issues the whole schedule up front and
+/// degrades gracefully (the NIC serializes transfers either way, and
+/// which bytes move never depends on depth — only *when* they are
+/// waited on).
+///
+/// The item type is free: algorithms that prefetch A and B together
+/// (stationary-C) issue a future *pair* per step; algorithms that
+/// prefetch only B issue a single future.
+pub struct TilePipeline<I, F, T>
+where
+    I: Iterator,
+    F: FnMut(&Pe, I::Item) -> T,
+{
+    depth: usize,
+    items: I,
+    issue: F,
+    inflight: VecDeque<T>,
+}
+
+impl<I, F, T> TilePipeline<I, F, T>
+where
+    I: Iterator,
+    F: FnMut(&Pe, I::Item) -> T,
+{
+    /// Build a pipeline over `items`, issuing the first `depth` fetches
+    /// immediately (the prime). `issue` maps one schedule item to its
+    /// in-flight fetch (typically a [`DenseTileFuture`] /
+    /// [`CsrTileFuture`] or a tuple of them).
+    pub fn new(pe: &Pe, depth: usize, items: impl IntoIterator<IntoIter = I>, mut issue: F) -> Self {
+        let mut items = items.into_iter();
+        let mut inflight = VecDeque::with_capacity(depth.min(64));
+        while inflight.len() < depth {
+            let Some(it) = items.next() else { break };
+            inflight.push_back(issue(pe, it));
+        }
+        TilePipeline { depth, items, issue, inflight }
+    }
+
+    /// Configured prefetch depth.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Next in-flight fetch in schedule order, topping the window back
+    /// up to `depth` by issuing the next schedule item (at depth 0 the
+    /// fetch is issued here, blocking-style). `None` once the schedule
+    /// is exhausted.
+    pub fn take(&mut self, pe: &Pe) -> Option<T> {
+        if self.depth == 0 {
+            return self.items.next().map(|it| (self.issue)(pe, it));
+        }
+        let head = self.inflight.pop_front()?;
+        if let Some(it) = self.items.next() {
+            self.inflight.push_back((self.issue)(pe, it));
+        }
+        Some(head)
+    }
+}
+
+/// Issue the fetch of B[k, j] for a component multiply against A[i, k],
+/// honoring the context's communication mode — the one SpMM fetch
+/// primitive (every fetch site feeds a [`TilePipeline`] with it, or
+/// waits the returned future immediately for blocking semantics). In
 /// row-selective mode the wanted rows come from A[i, k]'s column
 /// support in the sparsity directory, so the fetch can be issued before
 /// the A tile's own data arrives — prefetch overlap is preserved.
@@ -98,68 +183,14 @@ pub fn fetch_spmm_b(pe: &Pe, ctx: &SpmmCtx, i: usize, k: usize, j: usize) -> Den
     }
 }
 
-/// Blocking flavor of [`fetch_spmm_b`]; returns the tile and the wire
-/// bytes the fetch moved (bulk-synchronous baselines charge their
-/// library overhead on the actual transfer size).
-pub fn fetch_spmm_b_now(
-    pe: &Pe,
-    ctx: &SpmmCtx,
-    i: usize,
-    k: usize,
-    j: usize,
-    kind: Kind,
-) -> (Dense, f64) {
-    pe.trace_note(SpanCtx {
-        label: "fetch_b",
-        peer: ctx.b.owner(k, j) as i32,
-        tile: [k as i32, j as i32, -1],
-        bytes: 0.0,
-    });
-    let got = match ctx.comm {
-        Comm::FullTile => {
-            let bytes = ctx.b.tile_ptr(k, j).bytes() as f64;
-            (ctx.b.get_tile_as(pe, k, j, kind), bytes)
-        }
-        Comm::RowSelective => ctx.b.get_rows_as(pe, k, j, &ctx.a.col_support(i, k), kind),
-    };
-    pe.trace_done();
-    got
-}
-
-/// Fetch sparse B[k, j] for a component multiply against A[i, k],
-/// honoring the context's communication mode (non-blocking).
+/// Issue the fetch of sparse B[k, j] for a component multiply against
+/// A[i, k], honoring the context's communication mode — the one SpGEMM
+/// fetch primitive (see [`fetch_spmm_b`]).
 pub fn fetch_spgemm_b(pe: &Pe, ctx: &SpgemmCtx, i: usize, k: usize, j: usize) -> CsrTileFuture {
     match ctx.comm {
         Comm::FullTile => ctx.b.async_get_tile(pe, k, j),
         Comm::RowSelective => ctx.b.async_get_rows(pe, k, j, &ctx.a.col_support(i, k)),
     }
-}
-
-/// Blocking flavor of [`fetch_spgemm_b`]; returns the tile and the wire
-/// bytes moved.
-pub fn fetch_spgemm_b_now(
-    pe: &Pe,
-    ctx: &SpgemmCtx,
-    i: usize,
-    k: usize,
-    j: usize,
-    kind: Kind,
-) -> (Csr, f64) {
-    pe.trace_note(SpanCtx {
-        label: "fetch_b",
-        peer: ctx.b.owner(k, j) as i32,
-        tile: [k as i32, j as i32, -1],
-        bytes: 0.0,
-    });
-    let got = match ctx.comm {
-        Comm::FullTile => {
-            let bytes = ctx.b.handle(k, j).bytes() as f64;
-            (ctx.b.get_tile_as(pe, k, j, kind), bytes)
-        }
-        Comm::RowSelective => ctx.b.get_rows_as(pe, k, j, &ctx.a.col_support(i, k), kind),
-    };
-    pe.trace_done();
-    got
 }
 
 /// Overheads of a bulk-synchronous library baseline, applied on top of
@@ -410,7 +441,57 @@ pub fn wait_for_contributions(pe: &Pe, mut step: impl FnMut(&Pe) -> bool) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fabric::{Fabric, FabricConfig, NetProfile};
     use crate::matrix::gen;
+
+    /// The pipeline invariant, at every depth including 0 and > schedule
+    /// length: items come out in schedule order, every item is issued
+    /// exactly once, and the issue window never runs more than `depth`
+    /// ahead of consumption (depth 0 issues lazily at `take`).
+    #[test]
+    fn pipeline_issues_in_order_with_bounded_window() {
+        let fabric = Fabric::new(FabricConfig {
+            nprocs: 1,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 1 << 20,
+            pacing: false,
+        });
+        fabric.launch(|pe| {
+            for depth in [0usize, 1, 2, 4, 64] {
+                let issued = std::cell::RefCell::new(Vec::new());
+                let mut pl = TilePipeline::new(pe, depth, 0..6usize, |_pe, k| {
+                    issued.borrow_mut().push(k);
+                    k
+                });
+                assert_eq!(pl.depth(), depth);
+                assert_eq!(issued.borrow().len(), depth.min(6), "prime at depth {depth}");
+                let mut got = Vec::new();
+                while let Some(k) = pl.take(pe) {
+                    got.push(k);
+                    let want = if depth == 0 { got.len() } else { (got.len() + depth).min(6) };
+                    assert_eq!(issued.borrow().len(), want, "window at depth {depth}");
+                }
+                assert_eq!(got, vec![0, 1, 2, 3, 4, 5], "order at depth {depth}");
+                assert_eq!(*issued.borrow(), got, "issue order at depth {depth}");
+            }
+        });
+    }
+
+    #[test]
+    fn pipeline_empty_schedule_is_fine() {
+        let fabric = Fabric::new(FabricConfig {
+            nprocs: 1,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 1 << 20,
+            pacing: false,
+        });
+        fabric.launch(|pe| {
+            for depth in [0usize, 2] {
+                let mut pl = TilePipeline::new(pe, depth, std::iter::empty::<usize>(), |_, k| k);
+                assert!(pl.take(pe).is_none());
+            }
+        });
+    }
 
     #[test]
     fn comm_names_roundtrip() {

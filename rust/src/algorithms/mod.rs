@@ -11,7 +11,9 @@ pub mod spgemm;
 pub mod spmm;
 pub mod spmm_ws;
 
-pub use common::{AccSink, Comm, LibOverhead, SpgemmCtx, SpmmCtx};
+pub use common::{
+    AccSink, Comm, LibOverhead, SpgemmCtx, SpmmCtx, TilePipeline, DEFAULT_LOOKAHEAD,
+};
 pub use spmm_ws::Stationary;
 
 use crate::fabric::Pe;

@@ -8,8 +8,8 @@ use crate::fabric::{Kind, Pe, SpanCtx};
 use crate::matrix::{local_spgemm, Csr};
 
 use super::common::{
-    drain_spgemm_queue, fetch_spgemm_b, fetch_spgemm_b_now, wait_for_contributions, LibOverhead,
-    PendingTracker, SparseAccumulators, SpgemmCtx,
+    drain_spgemm_queue, fetch_spgemm_b, wait_for_contributions, LibOverhead, PendingTracker,
+    SparseAccumulators, SpgemmCtx, TilePipeline,
 };
 
 /// One local sparse multiply with roofline cost charging.
@@ -27,16 +27,13 @@ pub fn spgemm_stationary_c(pe: &Pe, ctx: &SpgemmCtx) {
     let mut acc = SparseAccumulators::new(&my_c);
     for &(i, j) in &my_c {
         let k_off = i + j;
-        let mut buf_a = Some(ctx.a.async_get_tile(pe, i, k_off % t));
-        let mut buf_b = Some(fetch_spgemm_b(pe, ctx, i, k_off % t, j));
-        for k_ in 0..t {
-            let local_a = buf_a.take().unwrap().wait(pe);
-            let local_b = buf_b.take().unwrap().wait(pe);
-            if k_ + 1 < t {
-                let kn = (k_ + 1 + k_off) % t;
-                buf_a = Some(ctx.a.async_get_tile(pe, i, kn));
-                buf_b = Some(fetch_spgemm_b(pe, ctx, i, kn, j));
-            }
+        let sched = (0..t).map(|k_| (k_ + k_off) % t);
+        let mut pipe = TilePipeline::new(pe, ctx.lookahead, sched, |pe, k| {
+            (ctx.a.async_get_tile(pe, i, k), fetch_spgemm_b(pe, ctx, i, k, j))
+        });
+        while let Some((fut_a, fut_b)) = pipe.take(pe) {
+            let local_a = fut_a.wait(pe);
+            let local_b = fut_b.wait(pe);
             let part = local_spgemm_charged(pe, &local_a, &local_b);
             if part.nnz() > 0 {
                 acc.push(i, j, part);
@@ -59,13 +56,12 @@ pub fn spgemm_stationary_a(pe: &Pe, ctx: &SpgemmCtx) {
     for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
         let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
         let j_off = i + k;
-        let mut buf_b = Some(fetch_spgemm_b(pe, ctx, i, k, j_off % t));
-        for j_ in 0..t {
-            let j = (j_ + j_off) % t;
-            let b_tile = buf_b.take().unwrap().wait(pe);
-            if j_ + 1 < t {
-                buf_b = Some(fetch_spgemm_b(pe, ctx, i, k, (j_ + 1 + j_off) % t));
-            }
+        let sched = (0..t).map(|j_| (j_ + j_off) % t);
+        let mut pipe = TilePipeline::new(pe, ctx.lookahead, sched, |pe, j| {
+            (j, fetch_spgemm_b(pe, ctx, i, k, j))
+        });
+        while let Some((j, fut_b)) = pipe.take(pe) {
+            let b_tile = fut_b.wait(pe);
             let part = local_spgemm_charged(pe, &a_tile, &b_tile);
             let owner = ctx.c.owner(i, j);
             if owner == pe.rank() {
@@ -100,17 +96,24 @@ pub fn spgemm_summa(pe: &Pe, ctx: &SpgemmCtx, lib: &LibOverhead) {
     let col_team = pe.team("summa-col", j as u64, t);
     let mut acc = SparseAccumulators::new(&[(i, j)]);
 
-    for k in 0..t {
+    // As in SpMM SUMMA: one-sided gets may be issued ahead across the
+    // team barriers; consumption stays bulk-synchronous.
+    let mut pipe = TilePipeline::new(pe, ctx.lookahead, 0..t, |pe, k| {
+        (k, ctx.a.async_get_tile(pe, i, k), fetch_spgemm_b(pe, ctx, i, k, j))
+    });
+    while let Some((k, fut_a, fut_b)) = pipe.take(pe) {
         pe.advance(Kind::Queue, lib.per_iter_ns);
         let a_src = ctx.a.owner(i, k);
-        let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
-        lib.charge_tile(pe, a_src, ctx.a.handle(i, k).bytes() as f64);
+        let a_bytes = fut_a.bytes();
+        let a_tile = fut_a.wait(pe);
+        lib.charge_tile(pe, a_src, a_bytes);
         pe.barrier_on(&row_team);
         // In row-selective mode each member fetches only the B rows its
         // own A[i,k] references; the library overhead is charged on the
         // actual transfer size.
         let b_src = ctx.b.owner(k, j);
-        let (b_tile, b_bytes) = fetch_spgemm_b_now(pe, ctx, i, k, j, Kind::Comm);
+        let b_bytes = fut_b.bytes();
+        let b_tile = fut_b.wait(pe);
         lib.charge_tile(pe, b_src, b_bytes);
         pe.barrier_on(&col_team);
         let part = local_spgemm_charged(pe, &a_tile, &b_tile);
@@ -151,7 +154,10 @@ pub fn spgemm_random_ws_a(pe: &Pe, ctx: &SpgemmCtx) {
             }
             let j = (my_j as usize + i + k) % t;
             let a_ref = a_tile.get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
-            let (b_tile, _) = fetch_spgemm_b_now(pe, ctx, i, k, j, Kind::Comm);
+            // Claims arrive one at a time, and a lost race would strand
+            // any speculative prefetch — so steal loops fetch at the
+            // unified primitive's depth-0 point: issue + immediate wait.
+            let b_tile = fetch_spgemm_b(pe, ctx, i, k, j).wait(pe);
             let part = local_spgemm_charged(pe, a_ref, &b_tile);
             let owner = ctx.c.owner(i, j);
             if owner == pe.rank() {

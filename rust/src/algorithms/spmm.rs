@@ -10,32 +10,29 @@ use crate::fabric::{Kind, Pe};
 use crate::matrix::Dense;
 
 use super::common::{
-    drain_spmm_queue, fetch_spmm_b, fetch_spmm_b_now, local_spmm_charged, wait_for_contributions,
-    DenseAccumulators, LibOverhead, PendingTracker, SpmmCtx,
+    drain_spmm_queue, fetch_spmm_b, local_spmm_charged, wait_for_contributions,
+    DenseAccumulators, LibOverhead, PendingTracker, SpmmCtx, TilePipeline,
 };
 
 /// Optimized RDMA stationary-C SpMM — Algorithm 2 of the paper.
 ///
 /// Each PE iterates its C tiles; for each, it walks the K loop starting
 /// at offset `i + j` (spacing PEs apart and making the first get local),
-/// prefetching the next A and B tiles before multiplying the current
-/// pair (communication/computation overlap).
+/// keeping the next `ctx.lookahead` A/B tile pairs in flight while the
+/// current pair multiplies (communication/computation overlap).
 pub fn spmm_stationary_c(pe: &Pe, ctx: &SpmmCtx) {
     let t = ctx.a.t();
     for (i, j) in ctx.c.grid.my_tiles(pe.rank()) {
         let k_off = i + j;
-        let mut buf_a = Some(ctx.a.async_get_tile(pe, i, k_off % t));
-        let mut buf_b = Some(fetch_spmm_b(pe, ctx, i, k_off % t, j));
+        let sched = (0..t).map(|k_| (k_ + k_off) % t);
+        let mut pipe = TilePipeline::new(pe, ctx.lookahead, sched, |pe, k| {
+            (ctx.a.async_get_tile(pe, i, k), fetch_spmm_b(pe, ctx, i, k, j))
+        });
         let (cr, cc) = ctx.c.tile_dims(i, j);
         let mut local_c = Dense::zeros(cr, cc);
-        for k_ in 0..t {
-            let local_a = buf_a.take().unwrap().wait(pe);
-            let local_b = buf_b.take().unwrap().wait(pe);
-            if k_ + 1 < t {
-                let kn = (k_ + 1 + k_off) % t;
-                buf_a = Some(ctx.a.async_get_tile(pe, i, kn));
-                buf_b = Some(fetch_spmm_b(pe, ctx, i, kn, j));
-            }
+        while let Some((fut_a, fut_b)) = pipe.take(pe) {
+            let local_a = fut_a.wait(pe);
+            let local_b = fut_b.wait(pe);
             local_spmm_charged(pe, &ctx.backend, &local_a, &local_b, &mut local_c);
         }
         ctx.c.put_tile_as(pe, i, j, &local_c, Kind::Comm);
@@ -56,9 +53,14 @@ pub fn spmm_stationary_c_unoptimized(pe: &Pe, ctx: &SpmmCtx) {
     for (i, j) in ctx.c.grid.my_tiles(pe.rank()) {
         let (cr, cc) = ctx.c.tile_dims(i, j);
         let mut local_c = Dense::zeros(cr, cc);
-        for k in 0..t {
-            let local_a = ctx.a.get_tile(pe, i, k);
-            let (local_b, _) = fetch_spmm_b_now(pe, ctx, i, k, j, Kind::Comm);
+        // Forced depth 0 (and no k offset): every fetch is issued at
+        // take and waited immediately — the blocking baseline.
+        let mut pipe = TilePipeline::new(pe, 0, 0..t, |pe, k| {
+            (ctx.a.async_get_tile(pe, i, k), fetch_spmm_b(pe, ctx, i, k, j))
+        });
+        while let Some((fut_a, fut_b)) = pipe.take(pe) {
+            let local_a = fut_a.wait(pe);
+            let local_b = fut_b.wait(pe);
             local_spmm_charged(pe, &ctx.backend, &local_a, &local_b, &mut local_c);
         }
         ctx.c.put_tile_as(pe, i, j, &local_c, Kind::Comm);
@@ -79,16 +81,17 @@ pub fn spmm_stationary_b(pe: &Pe, ctx: &SpmmCtx) {
     let mut pending = PendingTracker::new(&my_c, t);
 
     for (k, j) in ctx.b.grid.my_tiles(pe.rank()) {
-        // B tile is local to this rank.
-        let b_tile = ctx.b.get_tile_as(pe, k, j, Kind::Comm);
+        // The B tile is local to this rank: issue its (device-local) get
+        // asynchronously so it rides alongside the pipeline prime instead
+        // of blocking before the loop.
+        let b_fut = ctx.b.async_get_tile(pe, k, j);
         let i_off = k + j;
-        let mut buf_a = Some(ctx.a.async_get_tile(pe, i_off % t, k));
-        for i_ in 0..t {
-            let i = (i_ + i_off) % t;
-            let a_tile = buf_a.take().unwrap().wait(pe);
-            if i_ + 1 < t {
-                buf_a = Some(ctx.a.async_get_tile(pe, (i_ + 1 + i_off) % t, k));
-            }
+        let sched = (0..t).map(|i_| (i_ + i_off) % t);
+        let mut pipe =
+            TilePipeline::new(pe, ctx.lookahead, sched, |pe, i| (i, ctx.a.async_get_tile(pe, i, k)));
+        let b_tile = b_fut.wait(pe);
+        while let Some((i, fut_a)) = pipe.take(pe) {
+            let a_tile = fut_a.wait(pe);
             let (cr, cc) = ctx.c.tile_dims(i, j);
             let mut part = Dense::zeros(cr, cc);
             local_spmm_charged(pe, &ctx.backend, &a_tile, &b_tile, &mut part);
@@ -128,13 +131,11 @@ pub fn spmm_stationary_a(pe: &Pe, ctx: &SpmmCtx) {
         // A tile is local to this rank: a cheap device-local get.
         let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
         let j_off = i + k;
-        let mut buf_b = Some(fetch_spmm_b(pe, ctx, i, k, j_off % t));
-        for j_ in 0..t {
-            let j = (j_ + j_off) % t;
-            let b_tile = buf_b.take().unwrap().wait(pe);
-            if j_ + 1 < t {
-                buf_b = Some(fetch_spmm_b(pe, ctx, i, k, (j_ + 1 + j_off) % t));
-            }
+        let sched = (0..t).map(|j_| (j_ + j_off) % t);
+        let mut pipe =
+            TilePipeline::new(pe, ctx.lookahead, sched, |pe, j| (j, fetch_spmm_b(pe, ctx, i, k, j)));
+        while let Some((j, fut_b)) = pipe.take(pe) {
+            let b_tile = fut_b.wait(pe);
             let (cr, cc) = ctx.c.tile_dims(i, j);
             let mut part = Dense::zeros(cr, cc);
             local_spmm_charged(pe, &ctx.backend, &a_tile, &b_tile, &mut part);
@@ -176,21 +177,29 @@ pub fn spmm_summa(pe: &Pe, ctx: &SpmmCtx, lib: &LibOverhead) {
 
     let (cr, cc) = ctx.c.tile_dims(i, j);
     let mut local_c = Dense::zeros(cr, cc);
-    for k in 0..t {
+    // One-sided gets need no rendezvous, so the lookahead pipeline may
+    // issue fetches for future iterations across the team barriers; the
+    // barriers still pace the *consumption* of every stage.
+    let mut pipe = TilePipeline::new(pe, ctx.lookahead, 0..t, |pe, k| {
+        (k, ctx.a.async_get_tile(pe, i, k), fetch_spmm_b(pe, ctx, i, k, j))
+    });
+    while let Some((k, fut_a, fut_b)) = pipe.take(pe) {
         pe.advance(Kind::Queue, lib.per_iter_ns);
         // Broadcast A[i,k] in row team (root sends; we model the
         // pipelined broadcast as every member fetching from the root,
         // followed by the collective's implicit synchronization).
         let a_src = ctx.a.owner(i, k);
-        let a_tile = ctx.a.get_tile_as(pe, i, k, Kind::Comm);
-        lib.charge_tile(pe, a_src, ctx.a.handle(i, k).bytes() as f64);
+        let a_bytes = fut_a.bytes();
+        let a_tile = fut_a.wait(pe);
+        lib.charge_tile(pe, a_src, a_bytes);
         pe.barrier_on(&row_team);
         // Broadcast B[k,j] in column team. In row-selective mode each
         // member fetches only the rows its own A[i,k] references (the
         // hybrid-communication SUMMA of McFarland et al.), and the
         // library overhead is charged on the actual transfer size.
         let b_src = ctx.b.owner(k, j);
-        let (b_tile, b_bytes) = fetch_spmm_b_now(pe, ctx, i, k, j, Kind::Comm);
+        let b_bytes = fut_b.bytes();
+        let b_tile = fut_b.wait(pe);
         lib.charge_tile(pe, b_src, b_bytes);
         pe.barrier_on(&col_team);
         local_spmm_charged(pe, &ctx.backend, &a_tile, &b_tile, &mut local_c);

@@ -14,7 +14,7 @@ use crate::fabric::{Kind, Pe, SpanCtx};
 use crate::matrix::{Csr, Dense};
 
 use super::common::{
-    drain_spmm_queue, fetch_spmm_b_now, local_spmm_charged, wait_for_contributions,
+    drain_spmm_queue, fetch_spmm_b, local_spmm_charged, wait_for_contributions,
     DenseAccumulators, PendingTracker, SpmmCtx,
 };
 
@@ -79,7 +79,10 @@ fn attempt_work_2d(
         // is device-local, a thief pays a remote get — the cost asymmetry
         // the paper describes.
         let a_ref = a_tile.get_or_insert_with(|| ctx.a.get_tile_as(pe, i, k, Kind::Comm));
-        let (b_tile, _) = fetch_spmm_b_now(pe, ctx, i, k, j, Kind::Comm);
+        // Claims arrive one at a time and a lost race would strand any
+        // speculative prefetch, so steal loops use the unified fetch
+        // primitive at its depth-0 point: issue + immediate wait.
+        let b_tile = fetch_spmm_b(pe, ctx, i, k, j).wait(pe);
         let (cr, cc) = ctx.c.tile_dims(i, j);
         let mut part = Dense::zeros(cr, cc);
         local_spmm_charged(pe, &ctx.backend, a_ref, &b_tile, &mut part);
@@ -153,7 +156,7 @@ fn do_component(
     let b_ref = match b_cached {
         Some(b) => b,
         None => {
-            owned_b = fetch_spmm_b_now(pe, ctx, i, k, j, Kind::Comm).0;
+            owned_b = fetch_spmm_b(pe, ctx, i, k, j).wait(pe);
             &owned_b
         }
     };

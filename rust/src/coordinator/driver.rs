@@ -8,15 +8,17 @@
 //! a [`Session`] directly and chain plans instead — these wrappers pay
 //! a full fabric + scatter per call, by design.
 
+use std::ops::{Deref, DerefMut};
+
 use anyhow::{bail, Result};
 
-use crate::algorithms::{Comm, SpgemmAlg, SpmmAlg};
+use crate::algorithms::{SpgemmAlg, SpmmAlg};
 use crate::fabric::NetProfile;
 use crate::matrix::{Csr, Dense};
 use crate::runtime::TileBackend;
 
 use super::report::Report;
-use super::session::{Gathered, Session, SessionConfig};
+use super::session::{ExecOpts, Gathered, Session, SessionConfig};
 
 /// The one shared config translation: both driver configs describe the
 /// same session surface minus the per-op extras.
@@ -38,6 +40,11 @@ fn session_config(
 }
 
 /// Configuration for one SpMM experiment run.
+///
+/// Execution policy (comm mode, tracing, seed, backend, verification,
+/// prefetch depth) lives in the shared [`ExecOpts`] struct; the config
+/// derefs to it, so `cfg.verify = true` and `cfg.comm = ...` keep
+/// working unchanged.
 #[derive(Clone)]
 pub struct SpmmConfig {
     pub alg: SpmmAlg,
@@ -49,15 +56,21 @@ pub struct SpmmConfig {
     pub queue_cap: usize,
     /// Symmetric heap bytes per PE.
     pub seg_bytes: usize,
-    /// Seed for the dense B matrix.
-    pub seed: u64,
-    /// Check the distributed result against a single-node reference.
-    pub verify: bool,
-    pub backend: TileBackend,
-    /// B-tile communication mode (full-tile vs row-selective gets).
-    pub comm: Comm,
-    /// Record per-PE span traces (see `fabric::trace`) on the report.
-    pub trace: bool,
+    /// Shared execution policy consumed by the plan builder.
+    pub exec: ExecOpts,
+}
+
+impl Deref for SpmmConfig {
+    type Target = ExecOpts;
+    fn deref(&self) -> &ExecOpts {
+        &self.exec
+    }
+}
+
+impl DerefMut for SpmmConfig {
+    fn deref_mut(&mut self) -> &mut ExecOpts {
+        &mut self.exec
+    }
 }
 
 impl SpmmConfig {
@@ -69,11 +82,7 @@ impl SpmmConfig {
             n_cols,
             queue_cap: 8192,
             seg_bytes: 512 << 20,
-            seed: 0x5EED,
-            verify: false,
-            backend: TileBackend::Native,
-            comm: Comm::FullTile,
-            trace: false,
+            exec: ExecOpts::default(),
         }
     }
 
@@ -98,22 +107,16 @@ pub fn run_spmm(a: &Csr, cfg: &SpmmConfig) -> Result<SpmmRun> {
     let mut sess = Session::new(cfg.session());
     let da = sess.load_csr(a);
     let db = sess.random_dense(a.ncols, cfg.n_cols, cfg.seed);
-    let run = sess
-        .plan(da, db)
-        .alg(cfg.alg.into())
-        .comm(cfg.comm)
-        .verify(cfg.verify)
-        .trace(cfg.trace)
-        .execute()?;
+    let run = sess.plan(da, db).alg(cfg.alg.into()).opts(cfg.exec.clone()).execute()?;
     let c = run.gathered.and_then(Gathered::into_dense);
     Ok(SpmmRun { report: run.report, c })
 }
 
 /// Configuration for one SpGEMM experiment run (C = A·A, like §6.2).
-/// Field-for-field parity with [`SpmmConfig`] (minus `n_cols`): the
-/// unified plan API exposes one configuration surface, so `seed` and
-/// `backend` exist here too even though C = A·A has no random operand
-/// and the sparse merge path is native-only today.
+/// Field-for-field parity with [`SpmmConfig`] (minus `n_cols`): both
+/// configs share the same [`ExecOpts`] execution surface, so `seed`
+/// and `backend` exist here too even though C = A·A has no random
+/// operand and the sparse merge path is native-only today.
 #[derive(Clone)]
 pub struct SpgemmConfig {
     pub alg: SpgemmAlg,
@@ -121,17 +124,21 @@ pub struct SpgemmConfig {
     pub profile: NetProfile,
     pub queue_cap: usize,
     pub seg_bytes: usize,
-    /// Seed for randomized operands (unused by the C = A·A driver;
-    /// present for config parity with [`SpmmConfig`]).
-    pub seed: u64,
-    pub verify: bool,
-    /// Local multiply backend handed to the session (reserved for AOT
-    /// sparse kernels).
-    pub backend: TileBackend,
-    /// B-tile communication mode (full-tile vs row-selective gets).
-    pub comm: Comm,
-    /// Record per-PE span traces (see `fabric::trace`) on the report.
-    pub trace: bool,
+    /// Shared execution policy consumed by the plan builder.
+    pub exec: ExecOpts,
+}
+
+impl Deref for SpgemmConfig {
+    type Target = ExecOpts;
+    fn deref(&self) -> &ExecOpts {
+        &self.exec
+    }
+}
+
+impl DerefMut for SpgemmConfig {
+    fn deref_mut(&mut self) -> &mut ExecOpts {
+        &mut self.exec
+    }
 }
 
 impl SpgemmConfig {
@@ -142,11 +149,7 @@ impl SpgemmConfig {
             profile,
             queue_cap: 8192,
             seg_bytes: 512 << 20,
-            seed: 0x5EED,
-            verify: false,
-            backend: TileBackend::Native,
-            comm: Comm::FullTile,
-            trace: false,
+            exec: ExecOpts::default(),
         }
     }
 
@@ -167,13 +170,7 @@ pub fn run_spgemm(a: &Csr, cfg: &SpgemmConfig) -> Result<SpgemmRun> {
     }
     let mut sess = Session::new(cfg.session());
     let da = sess.load_csr(a); // C = A·A shares one resident operand
-    let run = sess
-        .plan(da, da)
-        .alg(cfg.alg.into())
-        .comm(cfg.comm)
-        .verify(cfg.verify)
-        .trace(cfg.trace)
-        .execute()?;
+    let run = sess.plan(da, da).alg(cfg.alg.into()).opts(cfg.exec.clone()).execute()?;
     let c = run.gathered.and_then(Gathered::into_csr);
     Ok(SpgemmRun { report: run.report, c })
 }
@@ -229,5 +226,26 @@ mod tests {
         let cfg = SpgemmConfig::new(SpgemmAlg::StationaryC, 4, NetProfile::dgx2());
         assert_eq!(cfg.seed, 0x5EED);
         assert!(matches!(cfg.backend, TileBackend::Native));
+        assert_eq!(cfg.lookahead, crate::algorithms::DEFAULT_LOOKAHEAD);
+    }
+
+    #[test]
+    fn lookahead_changes_timing_but_not_bytes_or_result() {
+        let a = gen::erdos_renyi(96, 5, 11);
+        let mut cfg = SpmmConfig::new(SpmmAlg::StationaryC, 4, NetProfile::dgx2(), 8);
+        cfg.verify = true;
+        cfg.seg_bytes = 32 << 20;
+        let deep = run_spmm(&a, &cfg).unwrap();
+        cfg.lookahead = 0;
+        let blocking = run_spmm(&a, &cfg).unwrap();
+        assert_eq!(deep.report.flops, blocking.report.flops);
+        let bytes = |r: &SpmmRun| r.report.per_rank.iter().map(|s| s.bytes_get).sum::<f64>();
+        assert_eq!(bytes(&deep), bytes(&blocking), "prefetch must not change bytes moved");
+        assert!(
+            deep.report.makespan_ns <= blocking.report.makespan_ns,
+            "lookahead must not slow the run: {} > {}",
+            deep.report.makespan_ns,
+            blocking.report.makespan_ns
+        );
     }
 }

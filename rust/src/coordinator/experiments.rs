@@ -8,7 +8,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
-use crate::algorithms::{Comm, SpgemmAlg, SpmmAlg};
+use crate::algorithms::{Comm, SpgemmAlg, SpmmAlg, DEFAULT_LOOKAHEAD};
 use crate::analysis::loadimb::{grid_load_imbalance, spgemm_tile_flops};
 use crate::fabric::NetProfile;
 use crate::matrix::{local_spgemm, suite};
@@ -35,11 +35,21 @@ pub struct ExpOpts {
     /// then writes `TRACE_<artifact>.json` next to the BENCH document
     /// and the BENCH run rows carry `phases` summaries.
     pub trace: bool,
+    /// Prefetch depth of the k-lookahead tile pipeline for every fabric
+    /// run (`--lookahead 0` reproduces the blocking-fetch baseline).
+    pub lookahead: usize,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { scale_shift: 0, verify: false, print: true, comm: Comm::FullTile, trace: false }
+        ExpOpts {
+            scale_shift: 0,
+            verify: false,
+            print: true,
+            comm: Comm::FullTile,
+            trace: false,
+            lookahead: DEFAULT_LOOKAHEAD,
+        }
     }
 }
 
@@ -122,6 +132,7 @@ pub fn fig2(opts: &ExpOpts) -> Result<Vec<RooflinePoint>> {
         cfg.verify = opts.verify;
         cfg.comm = opts.comm;
         cfg.trace = opts.trace;
+        cfg.lookahead = opts.lookahead;
         let run = run_spmm(&a, &cfg)?;
         let achieved = run.report.gflops();
         let row = format!(
@@ -170,6 +181,7 @@ pub fn fig2(opts: &ExpOpts) -> Result<Vec<RooflinePoint>> {
         cfg.verify = opts.verify;
         cfg.comm = opts.comm;
         cfg.trace = opts.trace;
+        cfg.lookahead = opts.lookahead;
         let run = run_spgemm(&a4, &cfg)?;
         let achieved = run.report.gflops();
         let row = format!(
@@ -253,6 +265,7 @@ fn spmm_sweep(
                         .comm(opts.comm)
                         .verify(opts.verify)
                         .trace(opts.trace)
+                        .lookahead(opts.lookahead)
                         .execute()?;
                     let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
@@ -341,6 +354,7 @@ pub fn fig5(opts: &ExpOpts) -> Result<Vec<ScalingRow>> {
                         .comm(opts.comm)
                         .verify(opts.verify)
                         .trace(opts.trace)
+                        .lookahead(opts.lookahead)
                         .execute()?;
                     let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
@@ -497,6 +511,7 @@ pub fn table2a(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
             let mut cfg = SpmmConfig::new(alg, np, NetProfile::summit(), 256);
             cfg.comm = opts.comm;
             cfg.trace = opts.trace;
+            cfg.lookahead = opts.lookahead;
             let run = run_spmm(&amazon, &cfg)?;
             rows.push(t2_row(opts, "Summit", "amazon", cfg.n_cols, &run.report));
         }
@@ -512,6 +527,7 @@ pub fn table2a(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
             let mut cfg = SpmmConfig::new(alg, np, NetProfile::dgx2(), 256);
             cfg.comm = opts.comm;
             cfg.trace = opts.trace;
+            cfg.lookahead = opts.lookahead;
             let run = run_spmm(&nm7, &cfg)?;
             rows.push(t2_row(opts, "DGX-2", "Nm-7", cfg.n_cols, &run.report));
         }
@@ -537,6 +553,7 @@ pub fn table2b(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
             let mut cfg = SpgemmConfig::new(alg, np, profile.clone());
             cfg.comm = opts.comm;
             cfg.trace = opts.trace;
+            cfg.lookahead = opts.lookahead;
             let run = run_spgemm(&gene, &cfg)?;
             rows.push(t2_row(opts, env, "Mouse Gene", 0, &run.report));
         }

@@ -20,7 +20,7 @@ pub use report::{
     Report, BENCH_SCHEMA_VERSION,
 };
 pub use session::{
-    Gathered, LedgerEntry, MultiplyPlan, MultiplyRun, OperandId, Session, SessionConfig,
+    ExecOpts, Gathered, LedgerEntry, MultiplyPlan, MultiplyRun, OperandId, Session, SessionConfig,
     VERIFY_TOL,
 };
 pub use trace_export::{chrome_trace, phases_json, print_profile, write_chrome_trace};

@@ -48,7 +48,7 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::algorithms::{Alg, Comm, Op, SpgemmCtx, SpmmCtx};
+use crate::algorithms::{Alg, Comm, Op, SpgemmCtx, SpmmCtx, DEFAULT_LOOKAHEAD};
 use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
 use crate::fabric::{Fabric, FabricConfig, NetProfile, DEFAULT_TRACE_CAP};
 use crate::matrix::{local_spgemm, local_spmm, Csr, Dense};
@@ -65,6 +65,47 @@ pub const VERIFY_TOL: f64 = 1e-4;
 fn check_verified(alg: &str, rel_err: f64) -> Result<()> {
     ensure!(rel_err <= VERIFY_TOL, "verification failed for {alg}: rel err {rel_err:.3e}");
     Ok(())
+}
+
+/// Execution options shared by every multiply surface: the session
+/// plan builder and the one-shot `SpmmConfig`/`SpgemmConfig` drivers
+/// (which embed one and `Deref` to it). One struct instead of two
+/// drifting field sets — PR 3 already had to patch up parity between
+/// the driver configs once.
+///
+/// `seed` and `backend` are *driver-level* options: the one-shot
+/// drivers use them to materialize the random B operand and the
+/// throwaway session's kernel backend. Plans on an existing session
+/// take the backend from their [`SessionConfig`] and never generate
+/// operands, so those two fields are inert on the plan path.
+#[derive(Clone, Debug)]
+pub struct ExecOpts {
+    /// B-tile communication mode (full-tile vs row-selective gets).
+    pub comm: Comm,
+    /// Record per-PE span traces for the run.
+    pub trace: bool,
+    /// Seed for driver-generated random operands.
+    pub seed: u64,
+    /// Local multiply backend (native Rust kernel or AOT PJRT kernel).
+    pub backend: TileBackend,
+    /// Check the result against the single-node reference.
+    pub verify: bool,
+    /// Prefetch depth of the k-lookahead pipeline (0 = blocking
+    /// fetches; see `algorithms::TilePipeline`).
+    pub lookahead: usize,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        ExecOpts {
+            comm: Comm::FullTile,
+            trace: false,
+            seed: 0x5EED,
+            backend: TileBackend::Native,
+            verify: false,
+            lookahead: DEFAULT_LOOKAHEAD,
+        }
+    }
 }
 
 /// Session construction parameters. One session = one fabric, one
@@ -372,9 +413,7 @@ impl Session {
             a,
             b,
             alg: Alg::StationaryC,
-            comm: Comm::FullTile,
-            verify: false,
-            trace: false,
+            opts: ExecOpts::default(),
             output: None,
             label: None,
             matrix: None,
@@ -419,9 +458,7 @@ impl Session {
         a: OperandId,
         b: OperandId,
         alg: Alg,
-        comm: Comm,
-        verify: bool,
-        trace: bool,
+        opts: &ExecOpts,
         output: Option<OperandId>,
         label: Option<String>,
         matrix: Option<String>,
@@ -447,23 +484,18 @@ impl Session {
             );
         }
         match op {
-            Op::Spmm => {
-                self.run_spmm_plan(a, b, alg, comm, verify, trace, output, label, matrix, bn)
-            }
-            Op::Spgemm => {
-                self.run_spgemm_plan(a, b, alg, comm, verify, trace, output, label, matrix)
-            }
+            Op::Spmm => self.run_spmm_plan(a, b, alg, opts, output, label, matrix, bn),
+            Op::Spgemm => self.run_spgemm_plan(a, b, alg, opts, output, label, matrix),
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn run_spmm_plan(
         &mut self,
         a: OperandId,
         b: OperandId,
         alg: Alg,
-        comm: Comm,
-        verify: bool,
-        trace: bool,
+        opts: &ExecOpts,
         output: Option<OperandId>,
         label: Option<String>,
         matrix: Option<String>,
@@ -491,10 +523,11 @@ impl Session {
             res2d,
             res3d,
             backend: self.backend.clone(),
-            comm,
-            trace,
+            comm: opts.comm,
+            trace: opts.trace,
+            lookahead: opts.lookahead,
         };
-        self.fabric.set_tracing(if trace { DEFAULT_TRACE_CAP } else { 0 });
+        self.fabric.set_tracing(if opts.trace { DEFAULT_TRACE_CAP } else { 0 });
         let t0 = Instant::now();
         let (_, stats) = self.fabric.launch(|pe| spmm_alg.run(pe, &ctx));
         let wall_ns = t0.elapsed().as_nanos() as f64;
@@ -502,7 +535,7 @@ impl Session {
         let report = Report::new(spmm_alg.name(), self.fabric.profile().name, stats, wall_ns)
             .with_traces(self.fabric.take_trace());
         let mut gathered = None;
-        if verify {
+        if opts.verify {
             let want = match self.ref_cache.get(&(a.0, b.0)) {
                 Some(Gathered::Dense(w)) => w.clone(),
                 _ => {
@@ -525,14 +558,13 @@ impl Session {
         Ok(MultiplyRun { c: c_id, report, gathered })
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn run_spgemm_plan(
         &mut self,
         a: OperandId,
         b: OperandId,
         alg: Alg,
-        comm: Comm,
-        verify: bool,
-        trace: bool,
+        opts: &ExecOpts,
         output: Option<OperandId>,
         label: Option<String>,
         matrix: Option<String>,
@@ -558,10 +590,11 @@ impl Session {
             queues,
             res2d,
             backend: self.backend.clone(),
-            comm,
-            trace,
+            comm: opts.comm,
+            trace: opts.trace,
+            lookahead: opts.lookahead,
         };
-        self.fabric.set_tracing(if trace { DEFAULT_TRACE_CAP } else { 0 });
+        self.fabric.set_tracing(if opts.trace { DEFAULT_TRACE_CAP } else { 0 });
         let t0 = Instant::now();
         let (_, stats) = self.fabric.launch(|pe| spgemm_alg.run(pe, &ctx));
         let wall_ns = t0.elapsed().as_nanos() as f64;
@@ -569,7 +602,7 @@ impl Session {
         let report = Report::new(spgemm_alg.name(), self.fabric.profile().name, stats, wall_ns)
             .with_traces(self.fabric.take_trace());
         let mut gathered = None;
-        if verify {
+        if opts.verify {
             let want = match self.ref_cache.get(&(a.0, b.0)) {
                 Some(Gathered::Csr(w)) => w.clone(),
                 _ => {
@@ -613,9 +646,7 @@ pub struct MultiplyPlan<'s> {
     a: OperandId,
     b: OperandId,
     alg: Alg,
-    comm: Comm,
-    verify: bool,
-    trace: bool,
+    opts: ExecOpts,
     output: Option<OperandId>,
     label: Option<String>,
     matrix: Option<String>,
@@ -628,18 +659,25 @@ impl MultiplyPlan<'_> {
         self
     }
 
+    /// Replace the whole option set at once (the builder methods below
+    /// tweak individual fields of the same [`ExecOpts`]).
+    pub fn opts(mut self, opts: ExecOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
     /// Select the B-tile communication mode (default: full-tile gets;
     /// `Comm::RowSelective` fetches only the rows each consumer's A
     /// support references).
     pub fn comm(mut self, comm: Comm) -> Self {
-        self.comm = comm;
+        self.opts.comm = comm;
         self
     }
 
     /// Check the result against the single-node reference after the run
     /// (gathers the operands — untimed, but not free).
     pub fn verify(mut self, on: bool) -> Self {
-        self.verify = on;
+        self.opts.verify = on;
         self
     }
 
@@ -649,7 +687,16 @@ impl MultiplyPlan<'_> {
     /// BENCH `phases` summaries and a `TRACE_*.json` timeline.
     /// Tracing never charges virtual time or performs fabric ops.
     pub fn trace(mut self, on: bool) -> Self {
-        self.trace = on;
+        self.opts.trace = on;
+        self
+    }
+
+    /// Prefetch depth of the k-lookahead pipeline (default
+    /// `DEFAULT_LOOKAHEAD` = 2; 0 = blocking fetches on the critical
+    /// path). Depth changes only *when* transfer time is waited on,
+    /// never which bytes move or what the result is.
+    pub fn lookahead(mut self, depth: usize) -> Self {
+        self.opts.lookahead = depth;
         self
     }
 
@@ -676,8 +723,8 @@ impl MultiplyPlan<'_> {
     /// Run the multiply on the session's fabric: one launch epoch, one
     /// ledger entry, output resident.
     pub fn execute(self) -> Result<MultiplyRun> {
-        let MultiplyPlan { session, a, b, alg, comm, verify, trace, output, label, matrix } = self;
-        session.run_plan(a, b, alg, comm, verify, trace, output, label, matrix)
+        let MultiplyPlan { session, a, b, alg, opts, output, label, matrix } = self;
+        session.run_plan(a, b, alg, &opts, output, label, matrix)
     }
 }
 

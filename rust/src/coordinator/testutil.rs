@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use crate::algorithms::{Comm, SpgemmCtx, SpmmCtx};
+use crate::algorithms::{Comm, SpgemmCtx, SpmmCtx, DEFAULT_LOOKAHEAD};
 use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
 use crate::fabric::{Fabric, FabricConfig, NetProfile};
 use crate::matrix::{gen, local_spgemm, local_spmm, Coo, Csr, Dense};
@@ -35,6 +35,7 @@ fn build_spmm(nprocs: usize, a: Csr, b: Dense) -> (SpmmFixture, Dense) {
         backend: TileBackend::Native,
         comm: Comm::FullTile,
         trace: false,
+        lookahead: DEFAULT_LOOKAHEAD,
     };
     (SpmmFixture { fabric, ctx }, want)
 }
@@ -117,6 +118,7 @@ fn build_spgemm(nprocs: usize, a: Csr) -> (SpgemmFixture, Csr) {
         backend: TileBackend::Native,
         comm: Comm::FullTile,
         trace: false,
+        lookahead: DEFAULT_LOOKAHEAD,
     };
     (SpgemmFixture { fabric, ctx }, want)
 }

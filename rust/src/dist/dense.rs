@@ -138,10 +138,11 @@ impl DistDense {
         self.tiles[i * self.grid.t + j]
     }
 
-    /// Blocking one-sided fetch of tile (i, j), charged to `kind`.
+    /// Blocking one-sided fetch of tile (i, j), charged to `kind` — the
+    /// async fetch waited immediately, so exactly one code path charges
+    /// virtual time for dense tile gets.
     pub fn get_tile_as(&self, pe: &Pe, i: usize, j: usize, kind: Kind) -> Dense {
-        let (r, c) = self.tile_dims(i, j);
-        Dense::from_vec(r, c, pe.get_vec_as(self.tile_ptr(i, j), kind))
+        self.async_get_tile(pe, i, j).wait_as(pe, kind)
     }
 
     /// Blocking one-sided fetch of tile (i, j) (charged as Comm).
@@ -218,7 +219,8 @@ impl DistDense {
     }
 
     /// Blocking row-selective fetch of tile (i, j); returns the tile and
-    /// the wire bytes moved. See [`DistDense::async_get_rows`].
+    /// the wire bytes moved — the async fetch waited immediately. See
+    /// [`DistDense::async_get_rows`].
     pub fn get_rows_as(
         &self,
         pe: &Pe,
@@ -227,21 +229,9 @@ impl DistDense {
         rows: &[u32],
         kind: Kind,
     ) -> (Dense, f64) {
-        match self.plan_rows(i, j, rows) {
-            None => {
-                let gp = self.tile_ptr(i, j);
-                (self.get_tile_as(pe, i, j, kind), gp.bytes() as f64)
-            }
-            Some((gp, runs, ranges)) => {
-                let (r, c) = self.tile_dims(i, j);
-                let (data, wire) = pe.gather_as(gp, &ranges, kind);
-                let mut s = pe.stats_mut();
-                s.n_selective_gets += 1;
-                s.bytes_saved_sparsity += (gp.bytes() - wire) as f64;
-                drop(s);
-                (assemble_rows(r, c, &runs, data), wire as f64)
-            }
-        }
+        let fut = self.async_get_rows(pe, i, j, rows);
+        let bytes = fut.bytes();
+        (fut.wait_as(pe, kind), bytes)
     }
 
     /// One-sided put of a full tile into place, charged to `kind`.

@@ -273,16 +273,11 @@ impl DistCsr {
         }
     }
 
-    /// Blocking one-sided fetch of tile (i, j), charged to `kind`.
+    /// Blocking one-sided fetch of tile (i, j), charged to `kind` — the
+    /// async fetch waited immediately, so exactly one code path charges
+    /// virtual time for sparse tile gets.
     pub fn get_tile_as(&self, pe: &Pe, i: usize, j: usize, kind: Kind) -> Csr {
-        let h = self.handle(i, j);
-        Csr {
-            nrows: h.nrows,
-            ncols: h.ncols,
-            rowptr: pe.get_vec_as(h.rowptr, kind),
-            colind: pe.get_vec_as(h.colind, kind),
-            vals: pe.get_vec_as(h.vals, kind),
-        }
+        self.async_get_tile(pe, i, j).wait_as(pe, kind)
     }
 
     /// Blocking one-sided fetch of tile (i, j) (charged as Comm).
@@ -396,7 +391,8 @@ impl DistCsr {
     }
 
     /// Blocking row-selective fetch of tile (i, j); returns the tile and
-    /// the wire bytes moved. See [`DistCsr::async_get_rows`].
+    /// the wire bytes moved — the async fetch waited immediately. See
+    /// [`DistCsr::async_get_rows`].
     pub fn get_rows_as(
         &self,
         pe: &Pe,
@@ -405,21 +401,9 @@ impl DistCsr {
         rows: &[u32],
         kind: Kind,
     ) -> (Csr, f64) {
-        match self.plan_rows(i, j, rows) {
-            Err(h) => (self.get_tile_as(pe, i, j, kind), h.bytes() as f64),
-            Ok(p) => {
-                let (spans, w1) = pe.gather_as(p.h.rowptr, &p.rp_ranges, kind);
-                let (colind, w2) = pe.gather_as(p.h.colind, &p.entry_ranges, kind);
-                let (vals, w3) = pe.gather_as(p.h.vals, &p.entry_ranges, kind);
-                let wire = w1 + w2 + w3;
-                let mut s = pe.stats_mut();
-                s.n_selective_gets += 1;
-                s.bytes_saved_sparsity += (p.h.bytes() - wire) as f64;
-                drop(s);
-                let tile = assemble_selected(p.h.nrows, p.h.ncols, &p.runs, &spans, colind, vals);
-                (tile, wire as f64)
-            }
-        }
+        let fut = self.async_get_rows(pe, i, j, rows);
+        let bytes = fut.bytes();
+        (fut.wait_as(pe, kind), bytes)
     }
 
     /// Install a freshly assembled tile (owner-only): allocate new

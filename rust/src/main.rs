@@ -31,7 +31,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use sparta::algorithms::{Alg, Comm, SpgemmAlg, SpmmAlg};
+use sparta::algorithms::{Alg, Comm, SpgemmAlg, SpmmAlg, DEFAULT_LOOKAHEAD};
 use sparta::coordinator::experiments::{self, ExpOpts};
 use sparta::coordinator::{check_bench_dir, print_profile, write_chrome_trace};
 use sparta::coordinator::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
@@ -127,6 +127,12 @@ fn parse_comm(opts: &Opts) -> Result<Comm> {
     Comm::from_name(&s).with_context(|| format!("bad --comm {s:?} (full|row)"))
 }
 
+/// `--lookahead N`: prefetch depth of the k-lookahead tile pipeline
+/// (default [`DEFAULT_LOOKAHEAD`]; 0 = blocking fetches).
+fn parse_lookahead(opts: &Opts) -> Result<usize> {
+    opts.get("lookahead", DEFAULT_LOOKAHEAD)
+}
+
 /// `--trace[=DIR]`: the boolean enables span recording + the terminal
 /// profile; the `=DIR` form additionally names a directory for the
 /// Chrome/Perfetto `TRACE_*.json` timeline.
@@ -185,6 +191,7 @@ fn repro(opts: &Opts) -> Result<()> {
         print: !opts.has("quiet"),
         comm: parse_comm(opts)?,
         trace: false,
+        lookahead: parse_lookahead(opts)?,
     };
     let run_one = |w: &str| -> Result<()> {
         match w {
@@ -245,6 +252,7 @@ fn bench(opts: &Opts) -> Result<()> {
         print: !opts.has("quiet"),
         comm: parse_comm(opts)?,
         trace: traced,
+        lookahead: parse_lookahead(opts)?,
     };
     let out_dir = std::path::PathBuf::from(opts.str("out", "bench-out"));
     let artifacts: Vec<&str> = if what == "all" {
@@ -298,6 +306,7 @@ fn run(opts: &Opts) -> Result<()> {
             cfg.verify = opts.has("verify");
             cfg.comm = parse_comm(opts)?;
             cfg.trace = traced;
+            cfg.lookahead = parse_lookahead(opts)?;
             if opts.has("pjrt") {
                 cfg.backend = TileBackend::pjrt(std::path::Path::new("artifacts"))?;
             }
@@ -324,6 +333,7 @@ fn run(opts: &Opts) -> Result<()> {
             cfg.verify = opts.has("verify");
             cfg.comm = parse_comm(opts)?;
             cfg.trace = traced;
+            cfg.lookahead = parse_lookahead(opts)?;
             let run = run_spgemm(&a, &cfg)?;
             println!("{}", run.report.row());
             if traced {
@@ -363,6 +373,7 @@ fn chain(opts: &Opts) -> Result<()> {
     let alg = Alg::from_name(&opts.str("alg", "sc"))
         .context("bad --alg (sc|sa|rws|lws-c|lws-a|summa|comblas|petsc)")?;
     let comm = parse_comm(opts)?;
+    let lookahead = parse_lookahead(opts)?;
 
     let mut cfg = SessionConfig::new(nprocs, profile);
     if opts.has("pjrt") {
@@ -395,6 +406,7 @@ fn chain(opts: &Opts) -> Result<()> {
             .comm(comm)
             .verify(verify)
             .trace(traced)
+            .lookahead(lookahead)
             .label(&format!("step {step}"))
             .matrix(&matrix)
             .execute()?;
@@ -451,17 +463,23 @@ fn print_help() {
         "sparta — RDMA-based sparse matrix multiplication (Brock, Buluç & Yelick 2023), reproduced
 
 USAGE:
-  sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all> [--scale-shift N] [--verify] [--comm full|row]
-  sparta bench [fig1|...|table2b|all] [--smoke] [--scale-shift N] [--out DIR] [--quiet] [--comm full|row] [--trace] [--check BASELINE_DIR]
-  sparta run spmm   --alg sc --nprocs 24 --matrix amazon --ncols 128 --profile summit [--pjrt] [--verify] [--comm full|row] [--trace[=DIR]]
-  sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify] [--comm full|row] [--trace[=DIR]]
-  sparta chain spmm --steps 3 --alg sc --nprocs 16 --matrix amazon --ncols 128 [--verify] [--out DIR] [--trace[=DIR]]
-  sparta chain spgemm --steps 3 --alg sc --nprocs 16 --matrix mouse_gene [--verify] [--out DIR] [--trace[=DIR]]
+  sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all> [--scale-shift N] [--verify] [--comm full|row] [--lookahead N]
+  sparta bench [fig1|...|table2b|all] [--smoke] [--scale-shift N] [--out DIR] [--quiet] [--comm full|row] [--lookahead N] [--trace] [--check BASELINE_DIR]
+  sparta run spmm   --alg sc --nprocs 24 --matrix amazon --ncols 128 --profile summit [--pjrt] [--verify] [--comm full|row] [--lookahead N] [--trace[=DIR]]
+  sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify] [--comm full|row] [--lookahead N] [--trace[=DIR]]
+  sparta chain spmm --steps 3 --alg sc --nprocs 16 --matrix amazon --ncols 128 [--verify] [--out DIR] [--lookahead N] [--trace[=DIR]]
+  sparta chain spgemm --steps 3 --alg sc --nprocs 16 --matrix mouse_gene [--verify] [--out DIR] [--lookahead N] [--trace[=DIR]]
   sparta list
 
 `--comm row` switches every remote B-tile fetch to the sparsity-aware
 row-selective gather (only the rows each consumer's A tile references
 move; hybrid fallback to a full get when selective would cost more).
+
+`--lookahead N` sets the prefetch depth of the k-lookahead tile
+pipeline (default 2): while a PE multiplies tile k, the async gets for
+tiles k+1..k+N are already in flight. 0 restores the blocking-fetch
+baseline. Depth changes only when transfer time is waited on — never
+which bytes move or what the result is.
 
 `sparta chain` runs an N-step multiply pipeline on ONE session: the
 sparse matrix is scattered once, queues and reservation grids are

@@ -10,7 +10,7 @@ use sparta::fabric::NetProfile;
 use sparta::matrix::{gen, suite};
 
 fn quiet(scale_shift: i32) -> ExpOpts {
-    ExpOpts { scale_shift, verify: false, print: false, comm: Default::default(), trace: false }
+    ExpOpts { scale_shift, print: false, ..ExpOpts::default() }
 }
 
 #[test]
@@ -128,6 +128,30 @@ fn profiles_change_timing_not_numerics() {
     assert!(max_err(&out[0].1, &out[2].1) < 1e-3);
     // Summit (3.83 GB/s inter-node) must be slower than DGX-2 (50 GB/s).
     assert!(out[1].0 > out[0].0, "summit {:.0} <= dgx2 {:.0}", out[1].0, out[0].0);
+}
+
+#[test]
+fn lookahead_deeper_than_schedule_degrades_gracefully() {
+    // A prefetch depth far beyond the tile count just issues the whole
+    // schedule up front — results must still verify for both ops,
+    // including the bulk-synchronous SUMMA variant (gets are one-sided,
+    // so they may be issued across team barriers).
+    let a = gen::erdos_renyi(96, 5, 12);
+    for alg in [SpmmAlg::StationaryC, SpmmAlg::StationaryA, SpmmAlg::SummaMpi] {
+        let mut cfg = SpmmConfig::new(alg, 4, NetProfile::dgx2(), 8);
+        cfg.verify = true;
+        cfg.seg_bytes = 32 << 20;
+        cfg.lookahead = 64;
+        run_spmm(&a, &cfg).unwrap_or_else(|e| panic!("{}: {e}", alg.name()));
+    }
+    let g = gen::rmat(7, 4, 0.5, 0.17, 0.17, 12);
+    for alg in [SpgemmAlg::StationaryC, SpgemmAlg::StationaryA] {
+        let mut cfg = SpgemmConfig::new(alg, 4, NetProfile::dgx2());
+        cfg.verify = true;
+        cfg.seg_bytes = 64 << 20;
+        cfg.lookahead = 64;
+        run_spgemm(&g, &cfg).unwrap_or_else(|e| panic!("{}: {e}", alg.name()));
+    }
 }
 
 #[test]

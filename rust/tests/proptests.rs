@@ -409,6 +409,115 @@ fn prop_makespan_monotone_with_library_overhead() {
 }
 
 #[test]
+fn prop_lookahead_depth_is_timing_only() {
+    // Tentpole invariant of the k-lookahead pipeline: prefetch depth
+    // changes only *when* transfer time is waited on — never which
+    // bytes move, how many gets are issued, how many multiplies run,
+    // or what the result is. Checked across both ops, both comm modes,
+    // and depths {0 (blocking baseline), 1, 2, 4}.
+    use sparta::algorithms::Comm;
+
+    check(
+        "lookahead depths {0,1,2,4} agree up to timing",
+        4,
+        0x10CA,
+        |rng| {
+            let nprocs = [4usize, 6, 9][rng.below_usize(3)];
+            let a = if rng.below(2) == 0 {
+                gen::erdos_renyi(24 + 8 * rng.below_usize(6), 2, rng.next_u64())
+            } else {
+                gen::rmat(6, 3, 0.5, 0.17, 0.17, rng.next_u64())
+            };
+            let comm = if rng.below(2) == 0 { Comm::FullTile } else { Comm::RowSelective };
+            (a, nprocs, comm)
+        },
+        |(a, nprocs, comm)| {
+            // SpMM, deterministic algorithms (workstealing claim order is
+            // racy, so its stats are not comparable across runs).
+            for alg in [SpmmAlg::StationaryC, SpmmAlg::StationaryA] {
+                let mut base: Option<(sparta::fabric::Stats, Dense)> = None;
+                for depth in [0usize, 1, 2, 4] {
+                    let mut cfg = SpmmConfig::new(alg, *nprocs, NetProfile::dgx2(), 8);
+                    cfg.verify = true;
+                    cfg.seg_bytes = 32 << 20;
+                    cfg.comm = *comm;
+                    cfg.lookahead = depth;
+                    let what = format!("{} {:?} depth={depth}", alg.name(), comm);
+                    let run = run_spmm(a, &cfg).map_err(|e| format!("{what}: {e}"))?;
+                    let t = run.report.totals();
+                    let c = run.c.expect("verify gathers C");
+                    let Some((t0, c0)) = &base else {
+                        base = Some((t, c));
+                        continue;
+                    };
+                    if t.flops != t0.flops {
+                        return Err(format!("{what}: flops changed with depth"));
+                    }
+                    if t.bytes_get != t0.bytes_get || t.bytes_put != t0.bytes_put {
+                        return Err(format!(
+                            "{what}: bytes moved changed with depth (get {} vs {}, put {} vs {})",
+                            t.bytes_get, t0.bytes_get, t.bytes_put, t0.bytes_put
+                        ));
+                    }
+                    if t.n_gets != t0.n_gets {
+                        return Err(format!("{what}: get count changed with depth"));
+                    }
+                    if (t.comp_ns - t0.comp_ns).abs() > 1e-9 * t0.comp_ns.max(1.0) {
+                        return Err(format!("{what}: comp time changed with depth"));
+                    }
+                    // Stationary-C accumulates locally in k order, which the
+                    // pipeline preserves: results are bitwise identical.
+                    // Stationary-A's queue arrival order (and so its f32
+                    // accumulation order) is timing-dependent.
+                    if alg == SpmmAlg::StationaryC {
+                        if c.data != c0.data {
+                            return Err(format!("{what}: result not bitwise identical"));
+                        }
+                    } else if c.rel_err(c0) > 1e-5 {
+                        return Err(format!("{what}: results diverge"));
+                    }
+                }
+            }
+            // SpGEMM, deterministic algorithms.
+            for alg in [SpgemmAlg::StationaryC, SpgemmAlg::StationaryA] {
+                let mut base: Option<(sparta::fabric::Stats, Csr)> = None;
+                for depth in [0usize, 1, 2, 4] {
+                    let mut cfg = SpgemmConfig::new(alg, *nprocs, NetProfile::dgx2());
+                    cfg.verify = true;
+                    cfg.seg_bytes = 64 << 20;
+                    cfg.comm = *comm;
+                    cfg.lookahead = depth;
+                    let what = format!("{} {:?} depth={depth}", alg.name(), comm);
+                    let run = run_spgemm(a, &cfg).map_err(|e| format!("{what}: {e}"))?;
+                    let t = run.report.totals();
+                    let c = run.c.expect("verify gathers C");
+                    let Some((t0, c0)) = &base else {
+                        base = Some((t, c));
+                        continue;
+                    };
+                    if t.flops != t0.flops {
+                        return Err(format!("{what}: flops changed with depth"));
+                    }
+                    if t.bytes_get != t0.bytes_get || t.n_gets != t0.n_gets {
+                        return Err(format!("{what}: communication changed with depth"));
+                    }
+                    if (t.comp_ns - t0.comp_ns).abs() > 1e-9 * t0.comp_ns.max(1.0) {
+                        return Err(format!("{what}: comp time changed with depth"));
+                    }
+                    if c.nnz() != c0.nnz() {
+                        return Err(format!("{what}: output structure changed with depth"));
+                    }
+                    if c.to_dense().rel_err(&c0.to_dense()) > 1e-5 {
+                        return Err(format!("{what}: results diverge"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_comm_modes_produce_identical_results() {
     // The tentpole invariant: `Comm::RowSelective` is a pure
     // communication optimization. Against random Erdős–Rényi and R-MAT
