@@ -189,6 +189,10 @@ impl Jv {
         Jv::Arr(xs.into_iter().map(Jv::Num).collect())
     }
 
+    pub fn ints(xs: impl IntoIterator<Item = i64>) -> Jv {
+        Jv::Arr(xs.into_iter().map(Jv::Int).collect())
+    }
+
     /// Field lookup on an object.
     pub fn get(&self, key: &str) -> Option<&Jv> {
         match self {
@@ -216,6 +220,13 @@ impl Jv {
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Jv::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Jv::Bool(b) => Some(*b),
             _ => None,
         }
     }

@@ -50,7 +50,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::algorithms::{Alg, Comm, Op, SpgemmCtx, SpmmCtx, DEFAULT_LOOKAHEAD};
 use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
-use crate::fabric::{Fabric, FabricConfig, NetProfile, DEFAULT_TRACE_CAP};
+use crate::fabric::{Fabric, FabricConfig, NetProfile, DEFAULT_QUEUE_STALL_MS, DEFAULT_TRACE_CAP};
 use crate::matrix::{local_spgemm, local_spmm, Csr, Dense};
 use crate::runtime::TileBackend;
 use crate::util::Rng;
@@ -93,6 +93,12 @@ pub struct ExecOpts {
     /// Prefetch depth of the k-lookahead pipeline (0 = blocking
     /// fetches; see `algorithms::TilePipeline`).
     pub lookahead: usize,
+    /// Wall-clock milliseconds a full accumulation queue may make zero
+    /// progress before the blocked pusher declares the fabric
+    /// deadlocked (`QueueHandle::push` backpressure). Long-lived serve
+    /// runs raise this; smoke tests shrink it so a genuine wedge fails
+    /// in milliseconds instead of 30 seconds.
+    pub queue_stall_ms: u64,
 }
 
 impl Default for ExecOpts {
@@ -104,6 +110,7 @@ impl Default for ExecOpts {
             backend: TileBackend::Native,
             verify: false,
             lookahead: DEFAULT_LOOKAHEAD,
+            queue_stall_ms: DEFAULT_QUEUE_STALL_MS,
         }
     }
 }
@@ -126,6 +133,12 @@ pub struct SessionConfig {
     pub backend: TileBackend,
     /// Pace PE threads to virtual time (see `FabricConfig::pacing`).
     pub pacing: bool,
+    /// Byte budget for the verify host-copy / reference-product cache
+    /// (`usize::MAX` = unbounded, the historical behavior). When set,
+    /// least-recently-used entries are evicted so the cache never
+    /// exceeds the budget; evicted operands are simply re-gathered on
+    /// the next verified run. The serve daemon's evictor is this knob.
+    pub host_cache_bytes: usize,
 }
 
 impl SessionConfig {
@@ -137,6 +150,7 @@ impl SessionConfig {
             seg_bytes: 512 << 20,
             backend: TileBackend::Native,
             pacing: true,
+            host_cache_bytes: usize::MAX,
         }
     }
 }
@@ -182,6 +196,138 @@ impl Gathered {
             Gathered::Dense(_) => None,
         }
     }
+
+    /// Host-memory footprint of the copy, for the LRU cache accounting.
+    pub fn host_bytes(&self) -> usize {
+        match self {
+            Gathered::Dense(d) => std::mem::size_of_val(d.data.as_slice()) + 16,
+            Gathered::Csr(c) => {
+                std::mem::size_of_val(c.rowptr.as_slice())
+                    + std::mem::size_of_val(c.colind.as_slice())
+                    + std::mem::size_of_val(c.vals.as_slice())
+                    + 16
+            }
+        }
+    }
+}
+
+/// The session's verify-side cache: host copies of resident operands
+/// (keyed by operand index) and single-node reference products (keyed
+/// by `(a, b)` operand indices), under one shared LRU byte budget.
+/// Verification against the same residents gathers/computes each entry
+/// once; when a budget is set, least-recently-used entries are dropped
+/// first and simply rebuilt on next use — results are never affected,
+/// only how much host memory long verified chains hold.
+struct HostCache {
+    cap_bytes: usize,
+    bytes: usize,
+    /// Monotonic use counter; higher = more recently used.
+    tick: u64,
+    ops: HashMap<usize, (Gathered, usize, u64)>,
+    refs: HashMap<(usize, usize), (Gathered, usize, u64)>,
+    evictions: u64,
+}
+
+impl HostCache {
+    fn new(cap_bytes: usize) -> HostCache {
+        HostCache {
+            cap_bytes,
+            bytes: 0,
+            tick: 0,
+            ops: HashMap::new(),
+            refs: HashMap::new(),
+            evictions: 0,
+        }
+    }
+
+    fn bump(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn get_op(&mut self, id: usize) -> Option<&Gathered> {
+        let tick = self.bump();
+        self.ops.get_mut(&id).map(|e| {
+            e.2 = tick;
+            &e.0
+        })
+    }
+
+    fn get_ref(&mut self, key: (usize, usize)) -> Option<&Gathered> {
+        let tick = self.bump();
+        self.refs.get_mut(&key).map(|e| {
+            e.2 = tick;
+            &e.0
+        })
+    }
+
+    fn put_op(&mut self, id: usize, g: Gathered) {
+        self.remove_op(id);
+        let (b, tick) = (g.host_bytes(), self.bump());
+        self.bytes += b;
+        self.ops.insert(id, (g, b, tick));
+        self.evict_to_fit();
+    }
+
+    fn put_ref(&mut self, key: (usize, usize), g: Gathered) {
+        self.remove_ref(key);
+        let (b, tick) = (g.host_bytes(), self.bump());
+        self.bytes += b;
+        self.refs.insert(key, (g, b, tick));
+        self.evict_to_fit();
+    }
+
+    fn remove_op(&mut self, id: usize) {
+        if let Some((_, b, _)) = self.ops.remove(&id) {
+            self.bytes -= b;
+        }
+    }
+
+    fn remove_ref(&mut self, key: (usize, usize)) {
+        if let Some((_, b, _)) = self.refs.remove(&key) {
+            self.bytes -= b;
+        }
+    }
+
+    /// Drop every cached artifact derived from operand `id`.
+    fn invalidate(&mut self, id: usize) {
+        self.remove_op(id);
+        let stale: Vec<(usize, usize)> =
+            self.refs.keys().filter(|&&(x, y)| x == id || y == id).copied().collect();
+        for key in stale {
+            self.remove_ref(key);
+        }
+    }
+
+    fn clear(&mut self) {
+        self.ops.clear();
+        self.refs.clear();
+        self.bytes = 0;
+    }
+
+    fn set_cap(&mut self, cap_bytes: usize) {
+        self.cap_bytes = cap_bytes;
+        self.evict_to_fit();
+    }
+
+    /// Evict globally-least-recently-used entries (operand copies and
+    /// reference products share the budget) until under the cap. An
+    /// entry larger than the whole budget is evicted too — the cache
+    /// never exceeds its cap; such entries are rebuilt on every use.
+    fn evict_to_fit(&mut self) {
+        while self.bytes > self.cap_bytes {
+            let op_lru = self.ops.iter().min_by_key(|(_, e)| e.2).map(|(&k, e)| (k, e.2));
+            let ref_lru = self.refs.iter().min_by_key(|(_, e)| e.2).map(|(&k, e)| (k, e.2));
+            match (op_lru, ref_lru) {
+                (Some((ok, ot)), Some((_, rt))) if ot <= rt => self.remove_op(ok),
+                (Some(_), Some((rk, _))) => self.remove_ref(rk),
+                (Some((ok, _)), None) => self.remove_op(ok),
+                (None, Some((rk, _))) => self.remove_ref(rk),
+                (None, None) => break,
+            }
+            self.evictions += 1;
+        }
+    }
 }
 
 /// Result of one executed [`MultiplyPlan`]: the output stays resident
@@ -207,15 +353,12 @@ pub struct Session {
     res2d: Option<ResGrid2D>,
     res3d: Option<ResGrid3D>,
     operands: Vec<OperandData>,
-    /// Lazily-populated host copies of operands, keyed by operand index
-    /// — verification against the same resident inputs gathers each of
-    /// them once per session, not once per run. Entries are invalidated
-    /// whenever an operand is written (run output, rezero).
-    host_cache: HashMap<usize, Gathered>,
-    /// Single-node reference products keyed by (a, b) operand indices —
-    /// verifying several algorithms against the same residents computes
-    /// the reference once. Invalidated with the operands it derives from.
-    ref_cache: HashMap<(usize, usize), Gathered>,
+    /// Lazily-populated host copies of operands and single-node
+    /// reference products under one LRU byte budget (see [`HostCache`]).
+    /// Entries are invalidated whenever an operand is written (run
+    /// output, rezero) and evicted least-recently-used when the budget
+    /// is exceeded.
+    cache: HostCache,
     ledger: Vec<LedgerEntry>,
 }
 
@@ -237,8 +380,7 @@ impl Session {
             res2d: None,
             res3d: None,
             operands: Vec::new(),
-            host_cache: HashMap::new(),
-            ref_cache: HashMap::new(),
+            cache: HostCache::new(cfg.host_cache_bytes),
             ledger: Vec::new(),
         }
     }
@@ -331,8 +473,14 @@ impl Session {
     /// Drop every cached host-side artifact derived from `id` — called
     /// whenever an operand's distributed contents are written.
     fn invalidate_host(&mut self, id: OperandId) {
-        self.host_cache.remove(&id.0);
-        self.ref_cache.retain(|&(x, y), _| x != id.0 && y != id.0);
+        self.cache.invalidate(id.0);
+    }
+
+    /// Public form of the invalidation hook: the serve registry calls
+    /// this when a tenant releases an operand name, so the host-copy
+    /// budget is returned immediately instead of waiting for eviction.
+    pub fn invalidate_host_copies(&mut self, id: OperandId) {
+        self.invalidate_host(id);
     }
 
     /// Reset a resident operand to all-zero *in place* (no symmetric-heap
@@ -347,35 +495,62 @@ impl Session {
     }
 
     /// Host copy of a sparse operand for verification, gathered at most
-    /// once per session while the operand stays unwritten.
+    /// once per session while the operand stays unwritten and cached.
     fn host_csr(&mut self, id: OperandId) -> Result<Csr> {
-        if let Some(Gathered::Csr(c)) = self.host_cache.get(&id.0) {
-            return Ok(c.clone());
+        let hit = match self.cache.get_op(id.0) {
+            Some(Gathered::Csr(c)) => Some(c.clone()),
+            _ => None,
+        };
+        if let Some(c) = hit {
+            return Ok(c);
         }
         let c = self.csr(id)?.gather(&self.fabric);
-        self.host_cache.insert(id.0, Gathered::Csr(c.clone()));
+        self.cache.put_op(id.0, Gathered::Csr(c.clone()));
         Ok(c)
     }
 
     /// Host copy of a dense operand for verification (cached like
     /// [`Session::host_csr`]).
     fn host_dense(&mut self, id: OperandId) -> Result<Dense> {
-        if let Some(Gathered::Dense(d)) = self.host_cache.get(&id.0) {
-            return Ok(d.clone());
+        let hit = match self.cache.get_op(id.0) {
+            Some(Gathered::Dense(d)) => Some(d.clone()),
+            _ => None,
+        };
+        if let Some(d) = hit {
+            return Ok(d);
         }
         let d = self.dense(id)?.gather(&self.fabric);
-        self.host_cache.insert(id.0, Gathered::Dense(d.clone()));
+        self.cache.put_op(id.0, Gathered::Dense(d.clone()));
         Ok(d)
     }
 
-    /// Drop all cached host copies and reference products. Verification
-    /// keeps a host copy per operand it has touched (so repeat verifies
-    /// don't re-gather); long verified chains can call this periodically
-    /// to bound host-side memory at the cost of one re-gather per live
-    /// operand.
+    /// Drop all cached host copies and reference products. With an LRU
+    /// byte budget ([`SessionConfig::host_cache_bytes`] /
+    /// [`Session::set_host_cache_cap`]) the cache bounds itself; this
+    /// remains for callers that want an explicit full flush.
     pub fn clear_host_cache(&mut self) {
-        self.host_cache.clear();
-        self.ref_cache.clear();
+        self.cache.clear();
+    }
+
+    /// Set (or change) the host-copy cache byte budget; evicts
+    /// least-recently-used entries immediately if over the new cap.
+    pub fn set_host_cache_cap(&mut self, cap_bytes: usize) {
+        self.cache.set_cap(cap_bytes);
+    }
+
+    /// Current host-copy cache footprint in bytes.
+    pub fn host_cache_bytes(&self) -> usize {
+        self.cache.bytes
+    }
+
+    /// Configured host-copy cache byte budget (`usize::MAX` = unbounded).
+    pub fn host_cache_cap(&self) -> usize {
+        self.cache.cap_bytes
+    }
+
+    /// LRU evictions performed so far (0 while unbounded).
+    pub fn host_cache_evictions(&self) -> u64 {
+        self.cache.evictions
     }
 
     /// Read a resident sparse operand back to a single-node `Csr`
@@ -483,6 +658,7 @@ impl Session {
                 (am, bn)
             );
         }
+        self.fabric.set_queue_stall_ms(opts.queue_stall_ms);
         match op {
             Op::Spmm => self.run_spmm_plan(a, b, alg, opts, output, label, matrix, bn),
             Op::Spgemm => self.run_spgemm_plan(a, b, alg, opts, output, label, matrix),
@@ -536,17 +712,21 @@ impl Session {
             .with_traces(self.fabric.take_trace());
         let mut gathered = None;
         if opts.verify {
-            let want = match self.ref_cache.get(&(a.0, b.0)) {
-                Some(Gathered::Dense(w)) => w.clone(),
-                _ => {
+            let cached = match self.cache.get_ref((a.0, b.0)) {
+                Some(Gathered::Dense(w)) => Some(w.clone()),
+                _ => None,
+            };
+            let want = match cached {
+                Some(w) => w,
+                None => {
                     let w = local_spmm::spmm(&self.host_csr(a)?, &self.host_dense(b)?);
-                    self.ref_cache.insert((a.0, b.0), Gathered::Dense(w.clone()));
+                    self.cache.put_ref((a.0, b.0), Gathered::Dense(w.clone()));
                     w
                 }
             };
             let got = ctx.c.gather(&self.fabric);
             check_verified(spmm_alg.name(), got.rel_err(&want))?;
-            self.host_cache.insert(c_id.0, Gathered::Dense(got.clone()));
+            self.cache.put_op(c_id.0, Gathered::Dense(got.clone()));
             gathered = Some(Gathered::Dense(got));
         }
         self.ledger.push(LedgerEntry {
@@ -603,20 +783,24 @@ impl Session {
             .with_traces(self.fabric.take_trace());
         let mut gathered = None;
         if opts.verify {
-            let want = match self.ref_cache.get(&(a.0, b.0)) {
-                Some(Gathered::Csr(w)) => w.clone(),
-                _ => {
+            let cached = match self.cache.get_ref((a.0, b.0)) {
+                Some(Gathered::Csr(w)) => Some(w.clone()),
+                _ => None,
+            };
+            let want = match cached {
+                Some(w) => w,
+                None => {
                     // host_csr caches, so C = A·A gathers its operand once.
                     let ga = self.host_csr(a)?;
                     let gb = if b == a { ga.clone() } else { self.host_csr(b)? };
                     let w = local_spgemm::spgemm(&ga, &gb).c;
-                    self.ref_cache.insert((a.0, b.0), Gathered::Csr(w.clone()));
+                    self.cache.put_ref((a.0, b.0), Gathered::Csr(w.clone()));
                     w
                 }
             };
             let got = ctx.c.gather(&self.fabric);
             check_verified(spgemm_alg.name(), got.to_dense().rel_err(&want.to_dense()))?;
-            self.host_cache.insert(c_id.0, Gathered::Csr(got.clone()));
+            self.cache.put_op(c_id.0, Gathered::Csr(got.clone()));
             gathered = Some(Gathered::Csr(got));
         }
         self.ledger.push(LedgerEntry {
@@ -697,6 +881,14 @@ impl MultiplyPlan<'_> {
     /// never which bytes move or what the result is.
     pub fn lookahead(mut self, depth: usize) -> Self {
         self.opts.lookahead = depth;
+        self
+    }
+
+    /// Queue-backpressure stall deadline in wall-clock milliseconds
+    /// (default `DEFAULT_QUEUE_STALL_MS` = 30 s; see
+    /// [`ExecOpts::queue_stall_ms`]).
+    pub fn stall_ms(mut self, ms: u64) -> Self {
+        self.opts.queue_stall_ms = ms;
         self
     }
 
@@ -965,6 +1157,78 @@ mod tests {
             events.iter().filter_map(|e| e.get("pid").and_then(|p| p.as_i64())).collect();
         assert_eq!(pids.len(), 1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn host_cache_stays_under_byte_budget_with_correct_results() {
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&gen::erdos_renyi(48, 4, 51));
+        let b = sess.random_dense(48, 8, 52);
+        // Budget far below one host copy of A/B/C: every verified run
+        // must still pass, with the cache evicting to stay under cap.
+        let cap = 4 << 10;
+        sess.set_host_cache_cap(cap);
+        for alg in [Alg::StationaryC, Alg::StationaryA, Alg::RandomWs] {
+            sess.plan(a, b).alg(alg).verify(true).execute().unwrap();
+            assert!(
+                sess.host_cache_bytes() <= cap,
+                "cache {} bytes exceeds budget {cap}",
+                sess.host_cache_bytes()
+            );
+            sess.plan(a, a).alg(alg).verify(true).execute().unwrap();
+            assert!(sess.host_cache_bytes() <= cap);
+        }
+        assert!(sess.host_cache_evictions() > 0, "a 4 KiB budget must have evicted");
+    }
+
+    #[test]
+    fn host_cache_unbounded_by_default_and_caps_retroactively() {
+        let mut sess = small_session(4);
+        assert_eq!(sess.host_cache_cap(), usize::MAX);
+        let a = sess.load_csr(&gen::erdos_renyi(48, 4, 53));
+        let b = sess.random_dense(48, 8, 54);
+        sess.plan(a, b).verify(true).execute().unwrap();
+        assert!(sess.host_cache_bytes() > 0);
+        assert_eq!(sess.host_cache_evictions(), 0);
+        // Tightening the cap below the current footprint evicts at once.
+        sess.set_host_cache_cap(1);
+        assert!(sess.host_cache_bytes() <= 1);
+        assert!(sess.host_cache_evictions() > 0);
+        // And results are still correct afterwards (operands re-gather).
+        sess.plan(a, b).verify(true).execute().unwrap();
+    }
+
+    #[test]
+    fn host_cache_evicts_least_recently_used_first() {
+        let mut c = HostCache::new(usize::MAX);
+        let small = |seed| Gathered::Csr(gen::erdos_renyi(8, 2, seed));
+        c.put_op(0, small(1));
+        c.put_op(1, small(2));
+        c.put_op(2, small(3));
+        // Touch 0 so 1 becomes the LRU entry.
+        assert!(c.get_op(0).is_some());
+        let keep_two = c.ops[&0].1 + c.ops[&2].1 + 1;
+        c.set_cap(keep_two);
+        assert!(c.ops.contains_key(&0), "recently-used entry evicted");
+        assert!(!c.ops.contains_key(&1), "LRU entry survived");
+        assert!(c.ops.contains_key(&2));
+        assert_eq!(c.evictions, 1);
+    }
+
+    #[test]
+    fn queue_stall_opt_reaches_the_fabric() {
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&gen::erdos_renyi(32, 4, 55));
+        let b = sess.random_dense(32, 8, 56);
+        let opts = ExecOpts { queue_stall_ms: 1234, ..ExecOpts::default() };
+        sess.plan(a, b).opts(opts).execute().unwrap();
+        assert_eq!(sess.fabric().queue_stall_limit(), std::time::Duration::from_millis(1234));
+        // The next plan with default opts restores the default bound.
+        sess.plan(a, b).execute().unwrap();
+        assert_eq!(
+            sess.fabric().queue_stall_limit(),
+            std::time::Duration::from_millis(DEFAULT_QUEUE_STALL_MS)
+        );
     }
 
     #[test]

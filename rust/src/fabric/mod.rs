@@ -48,6 +48,10 @@ pub use stats::{Kind, Stats};
 pub use topology::{ComputeModel, Link, LinkKind, NetProfile};
 pub use trace::{PeTrace, Span, SpanCtx, Tracer, DEFAULT_TRACE_CAP, NO_TILE};
 
+/// Default queue-backpressure stall deadline in milliseconds (the
+/// historical hardcoded 30s bound; see [`Fabric::set_queue_stall_ms`]).
+pub const DEFAULT_QUEUE_STALL_MS: u64 = 30_000;
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -103,6 +107,11 @@ pub struct Fabric {
     /// Per-PE span ring capacity for the *next* launch; 0 = tracing
     /// off (the default). See [`Fabric::set_tracing`].
     trace_cap: AtomicUsize,
+    /// Wall-clock milliseconds a full remote queue may make zero
+    /// progress before the blocked pusher declares the fabric
+    /// deadlocked (see `QueueHandle::push`). Settable per run: serve
+    /// daemons want a long bound, smoke tests a short one.
+    queue_stall_ms: AtomicU64,
     /// Spans deposited by PEs as they finish the current launch epoch;
     /// cleared at the start of every launch, drained by
     /// [`Fabric::take_trace`].
@@ -130,8 +139,21 @@ impl Fabric {
             setup_writes: AtomicU64::new(0),
             setup_write_bytes: AtomicU64::new(0),
             trace_cap: AtomicUsize::new(0),
+            queue_stall_ms: AtomicU64::new(DEFAULT_QUEUE_STALL_MS),
             trace_sink: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Set the queue-backpressure stall deadline for subsequent pushes
+    /// (clamped to at least 1ms so the detector can never be disabled
+    /// into a silent hang).
+    pub fn set_queue_stall_ms(&self, ms: u64) {
+        self.queue_stall_ms.store(ms.max(1), Ordering::Relaxed);
+    }
+
+    /// Current queue-backpressure stall deadline.
+    pub fn queue_stall_limit(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.queue_stall_ms.load(Ordering::Relaxed))
     }
 
     /// Enable or disable span tracing for subsequent launches: `cap` is

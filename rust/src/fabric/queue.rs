@@ -124,16 +124,18 @@ impl<T: QueueItem> QueueHandle<T> {
         // fixed spin budget turned a busy consumer into a whole-fabric
         // panic). Only a consumer that makes no progress at all for the
         // wall-clock window — a genuine deadlock, since a panicked peer
-        // already trips `check_abort` — fails the push. Yielding (not
+        // already trips `check_abort` — fails the push. The window is
+        // fabric-configurable (`Fabric::set_queue_stall_ms`): long-lived
+        // serve daemons raise it, smoke tests shrink it. Yielding (not
         // `spin_loop`) keeps the consumer runnable on oversubscribed
         // hosts, which is exactly when consumers are slow.
-        const STALL_LIMIT: std::time::Duration = std::time::Duration::from_secs(30);
+        let stall_limit = pe.fabric().queue_stall_limit();
         let mut last_head = pe.atomic_load(self.base, HEAD);
         let mut stalled_since: Option<std::time::Instant> = None;
         while t - last_head >= self.cap as i64 {
             pe.fabric().check_abort();
             let start = *stalled_since.get_or_insert_with(std::time::Instant::now);
-            if start.elapsed() >= STALL_LIMIT {
+            if start.elapsed() >= stall_limit {
                 // One-line diagnostic with the queue's state before the
                 // abort: enough to see *which* queue wedged and how full
                 // it was, instead of a bare "deadlocked" panic.
@@ -147,13 +149,13 @@ impl<T: QueueItem> QueueHandle<T> {
                     last_head,
                     tail,
                     pe.rank(),
-                    STALL_LIMIT
+                    stall_limit
                 );
                 pe.trace_mark(Kind::Queue, "queue_stall");
                 panic!(
                     "remote queue on rank {} deadlocked: no pop for {:?} (capacity {})",
                     self.owner(),
-                    STALL_LIMIT,
+                    stall_limit,
                     self.cap
                 );
             }
@@ -447,6 +449,75 @@ mod tests {
             }
         });
         assert_eq!(counts[0], 8);
+    }
+
+    #[test]
+    fn stall_deadline_is_configurable() {
+        let f = fab(2);
+        assert_eq!(
+            f.queue_stall_limit(),
+            std::time::Duration::from_millis(crate::fabric::DEFAULT_QUEUE_STALL_MS)
+        );
+        f.set_queue_stall_ms(250);
+        assert_eq!(f.queue_stall_limit(), std::time::Duration::from_millis(250));
+        // 0 clamps to the 1ms floor: the detector can be made eager but
+        // never disabled into a silent hang.
+        f.set_queue_stall_ms(0);
+        assert_eq!(f.queue_stall_limit(), std::time::Duration::from_millis(1));
+    }
+
+    #[test]
+    fn slow_consumer_survives_within_configured_deadline() {
+        // Same shape as push_survives_slow_consumer, but with the
+        // deadline explicitly configured well above the consumer's
+        // delay: a 2s window must tolerate a ~300ms stall.
+        let f = fab(2);
+        f.set_queue_stall_ms(2_000);
+        let q = QueueHandle::<Msg>::create(&f, 0, 2);
+        let (counts, _) = f.launch(|pe| {
+            if pe.rank() == 1 {
+                for i in 0..8u64 {
+                    q.push(pe, &Msg { a: i, b: 0, c: 0 });
+                }
+                0
+            } else {
+                std::thread::sleep(std::time::Duration::from_millis(300));
+                let mut got = 0u64;
+                while got < 8 {
+                    if q.pop_wait(pe).is_some() {
+                        got += 1;
+                    }
+                    pe.fabric().check_abort();
+                }
+                got
+            }
+        });
+        assert_eq!(counts[0], 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "PE thread panicked")]
+    fn short_stall_deadline_trips_on_genuine_deadlock() {
+        // A consumer that never pops is a real deadlock; with a 100ms
+        // deadline the blocked pusher fails the fabric quickly instead
+        // of spinning for the default 30s.
+        let f = fab(2);
+        f.set_queue_stall_ms(100);
+        let q = QueueHandle::<Msg>::create(&f, 0, 1);
+        let done = std::sync::atomic::AtomicBool::new(false);
+        f.launch(|pe| {
+            if pe.rank() == 1 {
+                // Second push must stall: capacity 1, nobody pops.
+                q.push(pe, &Msg { a: 0, b: 0, c: 0 });
+                q.push(pe, &Msg { a: 1, b: 0, c: 0 });
+                done.store(true, std::sync::atomic::Ordering::Release);
+            } else {
+                while !done.load(std::sync::atomic::Ordering::Acquire) {
+                    pe.fabric().check_abort();
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            }
+        });
     }
 
     #[test]

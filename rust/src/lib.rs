@@ -29,6 +29,7 @@ pub mod fabric;
 pub mod matrix;
 pub mod roofline;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;
 

@@ -35,10 +35,11 @@ use sparta::algorithms::{Alg, Comm, SpgemmAlg, SpmmAlg, DEFAULT_LOOKAHEAD};
 use sparta::coordinator::experiments::{self, ExpOpts};
 use sparta::coordinator::{check_bench_dir, print_profile, write_chrome_trace};
 use sparta::coordinator::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
-use sparta::coordinator::{Session, SessionConfig};
-use sparta::fabric::{NetProfile, PeTrace};
+use sparta::coordinator::{Jv, Session, SessionConfig};
+use sparta::fabric::{NetProfile, PeTrace, DEFAULT_QUEUE_STALL_MS};
 use sparta::matrix::{mm_io, suite, Csr};
 use sparta::runtime::TileBackend;
+use sparta::serve::{CsrSource, DenseSource, MultiplyReq, ServeClient, ServeConfig, ServeDaemon};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -152,6 +153,27 @@ fn load_matrix(name: &str, scale_shift: i32) -> Result<Csr> {
     Ok(suite::analog_scaled(name, scale_shift))
 }
 
+/// Every subcommand with its one-line description — the discoverability
+/// table `help` and unknown-subcommand errors print.
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("repro", "regenerate a figure/table of the paper (fig1..fig5, table1..table2b, all)"),
+    ("bench", "run the harnesses, write BENCH_<artifact>.json, optional perf gate (--check)"),
+    ("run", "one SpMM/SpGEMM experiment run on a throwaway session"),
+    ("chain", "N-step multiply pipeline on one session (operands stay resident)"),
+    ("serve", "long-lived multi-tenant multiply daemon over a TCP line protocol"),
+    ("client", "drive a running serve daemon (ping/load/multiply/bench/stats/shutdown)"),
+    ("list", "available matrices, algorithms, profiles, comm modes"),
+    ("help", "this message"),
+];
+
+fn subcommand_table() -> String {
+    SUBCOMMANDS
+        .iter()
+        .map(|(name, desc)| format!("  {name:<8} {desc}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
 fn dispatch(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         print_help();
@@ -163,6 +185,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "bench" => bench(&Opts::parse(rest, &["smoke", "verify", "quiet", "trace"])?),
         "run" => run(&Opts::parse(rest, &["verify", "pjrt", "quiet", "trace"])?),
         "chain" => chain(&Opts::parse(rest, &["verify", "pjrt", "quiet", "trace"])?),
+        "serve" => serve(&Opts::parse(rest, &["trace"])?),
+        "client" => client(&Opts::parse(rest, &["verify"])?),
         "list" => {
             Opts::parse(rest, &[])?;
             println!("matrices (suite analogs):");
@@ -179,7 +203,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             print_help();
             Ok(())
         }
-        other => bail!("unknown command {other:?}; try `sparta help`"),
+        other => bail!("unknown command {other:?}\n\nsubcommands:\n{}", subcommand_table()),
     }
 }
 
@@ -307,6 +331,7 @@ fn run(opts: &Opts) -> Result<()> {
             cfg.comm = parse_comm(opts)?;
             cfg.trace = traced;
             cfg.lookahead = parse_lookahead(opts)?;
+            cfg.queue_stall_ms = opts.get("stall-ms", DEFAULT_QUEUE_STALL_MS)?;
             if opts.has("pjrt") {
                 cfg.backend = TileBackend::pjrt(std::path::Path::new("artifacts"))?;
             }
@@ -334,6 +359,7 @@ fn run(opts: &Opts) -> Result<()> {
             cfg.comm = parse_comm(opts)?;
             cfg.trace = traced;
             cfg.lookahead = parse_lookahead(opts)?;
+            cfg.queue_stall_ms = opts.get("stall-ms", DEFAULT_QUEUE_STALL_MS)?;
             let run = run_spgemm(&a, &cfg)?;
             println!("{}", run.report.row());
             if traced {
@@ -374,6 +400,7 @@ fn chain(opts: &Opts) -> Result<()> {
         .context("bad --alg (sc|sa|rws|lws-c|lws-a|summa|comblas|petsc)")?;
     let comm = parse_comm(opts)?;
     let lookahead = parse_lookahead(opts)?;
+    let stall_ms: u64 = opts.get("stall-ms", DEFAULT_QUEUE_STALL_MS)?;
 
     let mut cfg = SessionConfig::new(nprocs, profile);
     if opts.has("pjrt") {
@@ -407,6 +434,7 @@ fn chain(opts: &Opts) -> Result<()> {
             .verify(verify)
             .trace(traced)
             .lookahead(lookahead)
+            .stall_ms(stall_ms)
             .label(&format!("step {step}"))
             .matrix(&matrix)
             .execute()?;
@@ -458,9 +486,177 @@ fn chain(opts: &Opts) -> Result<()> {
     Ok(())
 }
 
+/// `sparta serve`: run the multi-tenant multiply daemon until SIGTERM,
+/// Ctrl-C, or a protocol `shutdown` — then drain, write per-tenant
+/// BENCH ledgers (with `--out`), and exit 0.
+fn serve(opts: &Opts) -> Result<()> {
+    let mut cfg = ServeConfig::new(&opts.str("addr", "127.0.0.1:7077"));
+    cfg.nprocs = opts.get("nprocs", 4)?;
+    cfg.profile = parse_profile(&opts.str("profile", "dgx2"))?;
+    cfg.seg_bytes = opts.get::<usize>("seg-mb", 256)? << 20;
+    cfg.host_cache_bytes = opts.get::<usize>("cache-mb", 256)? << 20;
+    cfg.max_inflight = opts.get("max-inflight", 32)?;
+    cfg.batch_max = opts.get("batch", 16)?;
+    cfg.default_timeout_ms = opts.get("timeout-ms", 120_000)?;
+    cfg.queue_stall_ms = opts.get("stall-ms", DEFAULT_QUEUE_STALL_MS)?;
+    cfg.trace = opts.has("trace");
+    if opts.has("out") {
+        cfg.out_dir = Some(std::path::PathBuf::from(opts.str("out", "serve-out")));
+    }
+    cfg.install_signal_handlers = true;
+    let daemon = ServeDaemon::bind(cfg)?;
+    println!(
+        "sparta serve listening on {} (nprocs={}, profile={}, max-inflight={})",
+        daemon.local_addr()?,
+        opts.get::<usize>("nprocs", 4)?,
+        opts.str("profile", "dgx2"),
+        opts.get::<usize>("max-inflight", 32)?,
+    );
+    let summary = daemon.run()?;
+    println!("serve: drained and shut down; tenants with runs: {:?}", summary.tenants);
+    for p in &summary.bench_paths {
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+/// Build a sparse-operand source from `client load-csr` flags: either
+/// `--matrix <suite-name>` or `--gen er|banded|rmat` with its knobs.
+fn csr_source(opts: &Opts) -> Result<CsrSource> {
+    if opts.has("matrix") {
+        return Ok(CsrSource::Suite {
+            name: opts.str("matrix", "amazon"),
+            scale_shift: opts.get("scale-shift", 0)?,
+        });
+    }
+    let seed: u64 = opts.get("seed", 0x5EED)?;
+    Ok(match opts.str("gen", "er").as_str() {
+        "er" => CsrSource::ErdosRenyi {
+            n: opts.get("n", 256)?,
+            avg_deg: opts.get("deg", 8)?,
+            seed,
+        },
+        "banded" => CsrSource::Banded {
+            n: opts.get("n", 256)?,
+            band: opts.get("band", 2)?,
+            fill: opts.get("fill", 0.8)?,
+            seed,
+        },
+        "rmat" => CsrSource::Rmat {
+            scale: opts.get("scale", 8)?,
+            edgefactor: opts.get("edgefactor", 8)?,
+            seed,
+        },
+        other => bail!("unknown --gen {other:?} (er|banded|rmat)"),
+    })
+}
+
+/// `sparta client`: one action per invocation against a running daemon.
+fn client(opts: &Opts) -> Result<()> {
+    let addr = opts.str("addr", "127.0.0.1:7077");
+    let tenant = opts.str("tenant", "default");
+    let action = opts.positional.first().map(String::as_str).unwrap_or("ping");
+    let mut c = ServeClient::connect(&addr, &tenant)?;
+    match action {
+        "ping" => {
+            c.ping()?;
+            println!("pong");
+        }
+        "load-csr" => {
+            let name = opts.positional.get(1).context("usage: client load-csr NAME [flags]")?;
+            let info = c.load_csr(name, csr_source(opts)?)?;
+            let verb = if info.created { "created" } else { "acquired" };
+            println!("{verb} {} (refs {})", info.name, info.refs);
+        }
+        "load-dense" => {
+            let name = opts.positional.get(1).context("usage: client load-dense NAME [flags]")?;
+            let source = DenseSource::Random {
+                nrows: opts.get("nrows", 256)?,
+                ncols: opts.get("ncols", 32)?,
+                seed: opts.get("seed", 0x5EED)?,
+            };
+            let info = c.load_dense(name, source)?;
+            let verb = if info.created { "created" } else { "acquired" };
+            println!("{verb} {} (refs {})", info.name, info.refs);
+        }
+        "multiply" => {
+            let a = opts.positional.get(1).context("usage: client multiply A B [flags]")?;
+            let b = opts.positional.get(2).context("usage: client multiply A B [flags]")?;
+            let mut req = MultiplyReq::new(a, b);
+            req.alg = Alg::from_name(&opts.str("alg", "sc"))
+                .context("bad --alg (sc|sa|sb|sc-unopt|rws|lws-c|lws-a|summa|comblas|petsc)")?;
+            req.comm = parse_comm(opts)?;
+            req.verify = opts.has("verify");
+            req.lookahead = parse_lookahead(opts)?;
+            if opts.has("output") {
+                req.output = Some(opts.str("output", ""));
+            }
+            if opts.has("timeout-ms") {
+                req.timeout_ms = Some(opts.get("timeout-ms", 0)?);
+            }
+            let s = c.multiply(req)?;
+            println!(
+                "c={} epoch={} makespan={:.3}ms bytes_get={:.0} flops={:.0} verified={} coalesced={}",
+                s.c,
+                s.epoch,
+                s.makespan_ns / 1e6,
+                s.bytes_get,
+                s.flops,
+                s.verified,
+                s.coalesced
+            );
+        }
+        "unload" => {
+            let name = opts.positional.get(1).context("usage: client unload NAME")?;
+            let refs = c.unload(name)?;
+            println!("{name}: {refs} reference(s) remain");
+        }
+        "list" => {
+            for op in c.list()? {
+                println!("{}", op.render());
+            }
+        }
+        "bench" => match c.bench()? {
+            None => println!("no runs for tenant {tenant:?} yet"),
+            Some(doc) => {
+                if opts.has("out") {
+                    let dir = std::path::PathBuf::from(opts.str("out", "serve-out"));
+                    std::fs::create_dir_all(&dir)?;
+                    let artifact = doc
+                        .get("artifact")
+                        .and_then(Jv::as_str)
+                        .unwrap_or("tenant")
+                        .to_string();
+                    let path = dir.join(format!("BENCH_{artifact}.json"));
+                    std::fs::write(&path, doc.render())?;
+                    println!("wrote {}", path.display());
+                } else {
+                    println!("{}", doc.render());
+                }
+            }
+        },
+        "stats" => {
+            for (k, v) in c.stats()? {
+                println!("{k}: {}", v.render());
+            }
+        }
+        "shutdown" => {
+            c.shutdown()?;
+            println!("daemon draining");
+        }
+        other => bail!(
+            "unknown client action {other:?} (ping|load-csr|load-dense|multiply|unload|list|bench|stats|shutdown)"
+        ),
+    }
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "sparta — RDMA-based sparse matrix multiplication (Brock, Buluç & Yelick 2023), reproduced
+
+SUBCOMMANDS:
+{}
 
 USAGE:
   sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all> [--scale-shift N] [--verify] [--comm full|row] [--lookahead N]
@@ -469,6 +665,8 @@ USAGE:
   sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify] [--comm full|row] [--lookahead N] [--trace[=DIR]]
   sparta chain spmm --steps 3 --alg sc --nprocs 16 --matrix amazon --ncols 128 [--verify] [--out DIR] [--lookahead N] [--trace[=DIR]]
   sparta chain spgemm --steps 3 --alg sc --nprocs 16 --matrix mouse_gene [--verify] [--out DIR] [--lookahead N] [--trace[=DIR]]
+  sparta serve [--addr HOST:PORT] [--nprocs N] [--profile P] [--seg-mb N] [--cache-mb N] [--max-inflight N] [--batch N] [--timeout-ms N] [--stall-ms N] [--trace] [--out DIR]
+  sparta client [ACTION] [--addr HOST:PORT] [--tenant NAME] — actions: ping | load-csr NAME | load-dense NAME | multiply A B | unload NAME | list | bench | stats | shutdown
   sparta list
 
 `--comm row` switches every remote B-tile fetch to the sparsity-aware
@@ -500,6 +698,16 @@ summary (per-kind p50/p95/max, top comm waits), and folds a `phases`
 section into the BENCH rows. --trace=DIR (run/chain) also writes a
 Chrome/Perfetto TRACE_*.json timeline; bench writes TRACE files next
 to the BENCH files under --out. Open them at https://ui.perfetto.dev.
-"
+
+`sparta serve` keeps one fabric and its resident operands alive across
+many multiplies and many clients: tenant/name operand namespaces with
+ref-counted residency, a shared public/ namespace, bounded admission
+with batching of identical requests, per-request deadlines, graceful
+drain on SIGTERM/Ctrl-C or the protocol shutdown command, and one
+BENCH_tenant_<name>.json ledger per tenant (written under --out). Talk
+to it with `sparta client` or any newline-delimited-JSON TCP client;
+see DESIGN.md §8 for the wire grammar.
+",
+        subcommand_table()
     );
 }

@@ -1,0 +1,269 @@
+//! Admission control for the serve daemon: a bounded, condvar-signalled
+//! job queue between connection threads and the single engine thread.
+//!
+//! Plans ([`Cmd::Multiply`]) count against `max_inflight` — admitted
+//! but not yet answered — so a burst of clients cannot pile unbounded
+//! work onto one fabric; over-cap submissions get a structured
+//! `admission_full` rejection immediately instead of queueing forever.
+//! Control commands (ping, load, list, …) are cheap registry calls and
+//! bypass the cap. After [`Admission::close`] every new submission is
+//! refused with `shutting_down`, but the engine keeps draining what was
+//! already admitted — that is the graceful part of graceful shutdown.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::protocol::{Cmd, Request, Response};
+
+/// One admitted request plus its reply path.
+pub struct Job {
+    pub req: Request,
+    pub reply: Sender<Response>,
+    /// Set by the connection thread when its client-side deadline
+    /// already expired — the engine skips the work (if it hasn't
+    /// started) since nobody is listening for the answer.
+    pub cancelled: Arc<AtomicBool>,
+}
+
+impl Job {
+    pub fn is_plan(&self) -> bool {
+        matches!(self.req.cmd, Cmd::Multiply(_))
+    }
+}
+
+/// Why a submission was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// `max_inflight` plans are already admitted and unanswered.
+    Full,
+    /// The daemon is shutting down; no new admissions.
+    Closed,
+}
+
+impl AdmitError {
+    pub fn code(&self) -> &'static str {
+        match self {
+            AdmitError::Full => "admission_full",
+            AdmitError::Closed => "shutting_down",
+        }
+    }
+}
+
+struct Inner {
+    queue: VecDeque<Job>,
+    /// Admitted plans not yet answered (queued + executing).
+    inflight_plans: usize,
+    closed: bool,
+}
+
+/// The shared queue. Clone the `Arc` into every connection thread.
+pub struct Admission {
+    inner: Mutex<Inner>,
+    cvar: Condvar,
+    max_inflight: usize,
+    batch_max: usize,
+}
+
+impl Admission {
+    pub fn new(max_inflight: usize, batch_max: usize) -> Arc<Admission> {
+        Arc::new(Admission {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                inflight_plans: 0,
+                closed: false,
+            }),
+            cvar: Condvar::new(),
+            max_inflight,
+            batch_max: batch_max.max(1),
+        })
+    }
+
+    /// Admit a job or refuse it with a structured reason.
+    pub fn submit(&self, job: Job) -> Result<(), AdmitError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(AdmitError::Closed);
+        }
+        if job.is_plan() {
+            if inner.inflight_plans >= self.max_inflight {
+                return Err(AdmitError::Full);
+            }
+            inner.inflight_plans += 1;
+        }
+        inner.queue.push_back(job);
+        self.cvar.notify_one();
+        Ok(())
+    }
+
+    /// The engine calls this once per answered plan to release its
+    /// admission slot.
+    pub fn plan_done(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.inflight_plans = inner.inflight_plans.saturating_sub(1);
+    }
+
+    /// Pop the next batch: the head job plus, when the head is a
+    /// coalescible plan, every queued plan from the same tenant with an
+    /// equal coalesce key (up to `batch_max` total) — those compute the
+    /// same result and share one fabric epoch. Control commands batch
+    /// alone. Blocks up to `wait`; returns `None` when the queue is
+    /// empty and either closed (engine should exit after a final drain)
+    /// or the wait timed out.
+    pub fn next_batch(&self, wait: Duration) -> Option<Vec<Job>> {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.queue.is_empty() {
+            if inner.closed {
+                return None;
+            }
+            let (guard, timeout) = self.cvar.wait_timeout(inner, wait).unwrap();
+            inner = guard;
+            if timeout.timed_out() && inner.queue.is_empty() {
+                return None;
+            }
+        }
+        let head = inner.queue.pop_front().unwrap();
+        let mut batch = vec![head];
+        let key = match &batch[0].req.cmd {
+            Cmd::Multiply(m) => m.coalesce_key().map(|k| (batch[0].req.tenant.clone(), k)),
+            _ => None,
+        };
+        if let Some(key) = key {
+            let mut rest = VecDeque::new();
+            while let Some(job) = inner.queue.pop_front() {
+                if batch.len() >= self.batch_max {
+                    rest.push_back(job);
+                    continue;
+                }
+                let matches = match &job.req.cmd {
+                    Cmd::Multiply(m) => {
+                        job.req.tenant == key.0 && m.coalesce_key().as_ref() == Some(&key.1)
+                    }
+                    _ => false,
+                };
+                if matches {
+                    batch.push(job);
+                } else {
+                    rest.push_back(job);
+                }
+            }
+            inner.queue = rest;
+        }
+        Some(batch)
+    }
+
+    /// Refuse all future submissions; already-admitted jobs still
+    /// drain. Wakes the engine so it can observe the closure.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        self.cvar.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Queued jobs not yet handed to the engine.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::MultiplyReq;
+    use std::sync::mpsc::channel;
+
+    fn job(tenant: &str, cmd: Cmd) -> (Job, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = channel();
+        (
+            Job {
+                req: Request { id: 1, tenant: tenant.to_string(), cmd },
+                reply: tx,
+                cancelled: Arc::new(AtomicBool::new(false)),
+            },
+            rx,
+        )
+    }
+
+    fn plan(tenant: &str, a: &str) -> (Job, std::sync::mpsc::Receiver<Response>) {
+        job(tenant, Cmd::Multiply(MultiplyReq::new(a, "H")))
+    }
+
+    #[test]
+    fn cap_bounds_inflight_plans_but_not_control_commands() {
+        let adm = Admission::new(2, 8);
+        let (j1, _r1) = plan("t", "A");
+        let (j2, _r2) = plan("t", "B");
+        let (j3, _r3) = plan("t", "C");
+        adm.submit(j1).unwrap();
+        adm.submit(j2).unwrap();
+        assert_eq!(adm.submit(j3).unwrap_err(), AdmitError::Full);
+        // Control commands are never refused for fullness.
+        let (ping, _rp) = job("t", Cmd::Ping);
+        adm.submit(ping).unwrap();
+        // Answering a plan frees a slot.
+        adm.plan_done();
+        let (j4, _r4) = plan("t", "D");
+        adm.submit(j4).unwrap();
+    }
+
+    #[test]
+    fn close_refuses_new_but_drains_admitted() {
+        let adm = Admission::new(8, 8);
+        let (j1, _r1) = plan("t", "A");
+        adm.submit(j1).unwrap();
+        adm.close();
+        let (j2, _r2) = plan("t", "B");
+        assert_eq!(adm.submit(j2).unwrap_err(), AdmitError::Closed);
+        // The admitted job still comes out; then the closed queue ends.
+        let batch = adm.next_batch(Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(adm.next_batch(Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn identical_same_tenant_plans_batch_together() {
+        let adm = Admission::new(8, 8);
+        let (j1, _r1) = plan("t", "A");
+        let (j2, _r2) = plan("t", "A");
+        let (j3, _r3) = plan("other", "A"); // different tenant: own epoch
+        let (j4, _r4) = plan("t", "B"); // different key
+        let (j5, _r5) = plan("t", "A"); // matches again, behind non-match
+        for j in [j1, j2, j3, j4, j5] {
+            adm.submit(j).unwrap();
+        }
+        let batch = adm.next_batch(Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 3, "the three identical t×A plans coalesce");
+        assert!(batch.iter().all(|j| j.req.tenant == "t"));
+        // Queue order of the others is preserved.
+        let next = adm.next_batch(Duration::from_millis(10)).unwrap();
+        assert_eq!(next.len(), 1);
+        assert_eq!(next[0].req.tenant, "other");
+        let last = adm.next_batch(Duration::from_millis(10)).unwrap();
+        assert_eq!(last.len(), 1);
+        // Named-output plans never coalesce.
+        let mut m = MultiplyReq::new("A", "H");
+        m.output = Some("out".into());
+        let (o1, _ro1) = job("t", Cmd::Multiply(m.clone()));
+        let (o2, _ro2) = job("t", Cmd::Multiply(m));
+        adm.submit(o1).unwrap();
+        adm.submit(o2).unwrap();
+        assert_eq!(adm.next_batch(Duration::from_millis(10)).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn batch_max_limits_one_batch() {
+        let adm = Admission::new(16, 2);
+        for _ in 0..4 {
+            let (j, _r) = plan("t", "A");
+            adm.submit(j).unwrap();
+        }
+        assert_eq!(adm.next_batch(Duration::from_millis(10)).unwrap().len(), 2);
+        assert_eq!(adm.next_batch(Duration::from_millis(10)).unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,177 @@
+//! A thin blocking client for the serve protocol — what the `sparta
+//! client` subcommand and the e2e tests drive the daemon with.
+//!
+//! One [`ServeClient`] is one TCP connection authenticated (in the
+//! trust-the-header sense of a reproduction) as one tenant. Calls are
+//! synchronous request/response; server-side failures come back as
+//! [`ServeError`] with the structured protocol code preserved, so tests
+//! can assert on `admission_full` vs `timeout` vs `forbidden`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::report::Jv;
+
+use super::protocol::{Cmd, CsrSource, DenseSource, MultiplyReq, Request, Response};
+
+/// A protocol-level error reply (`ok: false`), carrying the stable
+/// error code (`admission_full`, `timeout`, `forbidden`, …).
+#[derive(Debug)]
+pub struct ServeError {
+    pub code: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Extract the protocol error code from an `anyhow::Error`, if the
+/// failure was a structured server reply.
+pub fn error_code(e: &anyhow::Error) -> Option<&str> {
+    e.downcast_ref::<ServeError>().map(|s| s.code.as_str())
+}
+
+/// Result of a load: the qualified name and whether this call created
+/// the resident (vs acquired a reference to an existing one).
+#[derive(Debug)]
+pub struct LoadInfo {
+    pub name: String,
+    pub created: bool,
+    pub refs: i64,
+}
+
+/// Result of a multiply.
+#[derive(Debug)]
+pub struct MultiplySummary {
+    /// Qualified name of the resident output operand.
+    pub c: String,
+    /// Fabric stats epoch the run executed as.
+    pub epoch: u64,
+    pub makespan_ns: f64,
+    pub bytes_get: f64,
+    pub flops: f64,
+    pub verified: bool,
+    /// How many identical requests shared this run's epoch.
+    pub coalesced: i64,
+}
+
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    tenant: String,
+    next_id: i64,
+}
+
+impl ServeClient {
+    pub fn connect(addr: &str, tenant: &str) -> Result<ServeClient> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("cannot connect to {addr}"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(ServeClient { reader, writer: stream, tenant: tenant.to_string(), next_id: 1 })
+    }
+
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// One request/response round trip; protocol errors become
+    /// [`ServeError`] values inside the `anyhow` chain.
+    fn call(&mut self, cmd: Cmd) -> Result<Response> {
+        let req = Request { id: self.next_id, tenant: self.tenant.clone(), cmd };
+        self.next_id += 1;
+        writeln!(self.writer, "{}", req.encode()).context("send failed")?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("recv failed")?;
+        anyhow::ensure!(n > 0, "daemon closed the connection");
+        let resp = Response::decode(line.trim_end())?;
+        if !resp.ok {
+            let (code, message) = resp
+                .error
+                .clone()
+                .unwrap_or_else(|| ("unknown".to_string(), "unspecified error".to_string()));
+            return Err(ServeError { code, message }.into());
+        }
+        Ok(resp)
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        self.call(Cmd::Ping).map(|_| ())
+    }
+
+    pub fn load_csr(&mut self, name: &str, source: CsrSource) -> Result<LoadInfo> {
+        let resp = self.call(Cmd::LoadCsr { name: name.to_string(), source })?;
+        decode_load(&resp)
+    }
+
+    pub fn load_dense(&mut self, name: &str, source: DenseSource) -> Result<LoadInfo> {
+        let resp = self.call(Cmd::LoadDense { name: name.to_string(), source })?;
+        decode_load(&resp)
+    }
+
+    pub fn multiply(&mut self, req: MultiplyReq) -> Result<MultiplySummary> {
+        let resp = self.call(Cmd::Multiply(req))?;
+        let f = |k: &str| resp.get(k).and_then(Jv::as_f64).unwrap_or(0.0);
+        Ok(MultiplySummary {
+            c: resp
+                .get("c")
+                .and_then(Jv::as_str)
+                .context("multiply reply missing \"c\"")?
+                .to_string(),
+            epoch: resp.get("epoch").and_then(Jv::as_i64).unwrap_or(0) as u64,
+            makespan_ns: f("makespan_ns"),
+            bytes_get: f("bytes_get"),
+            flops: f("flops"),
+            verified: resp.get("verified").and_then(Jv::as_bool).unwrap_or(false),
+            coalesced: resp.get("coalesced").and_then(Jv::as_i64).unwrap_or(1),
+        })
+    }
+
+    pub fn unload(&mut self, name: &str) -> Result<i64> {
+        let resp = self.call(Cmd::Unload { name: name.to_string() })?;
+        Ok(resp.get("refs").and_then(Jv::as_i64).unwrap_or(0))
+    }
+
+    /// Operands visible to this tenant, as raw body rows.
+    pub fn list(&mut self) -> Result<Vec<Jv>> {
+        let resp = self.call(Cmd::List)?;
+        Ok(resp.get("operands").and_then(Jv::as_arr).unwrap_or(&[]).to_vec())
+    }
+
+    /// This tenant's BENCH document (`None` before its first run).
+    pub fn bench(&mut self) -> Result<Option<Jv>> {
+        let resp = self.call(Cmd::Bench)?;
+        Ok(match resp.get("doc") {
+            None | Some(Jv::Null) => None,
+            Some(doc) => Some(doc.clone()),
+        })
+    }
+
+    /// Per-tenant + global accounting (see `Registry::stats_body`).
+    pub fn stats(&mut self) -> Result<Vec<(String, Jv)>> {
+        Ok(self.call(Cmd::Stats)?.body)
+    }
+
+    /// Ask the daemon to drain and exit.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.call(Cmd::Shutdown).map(|_| ())
+    }
+}
+
+fn decode_load(resp: &Response) -> Result<LoadInfo> {
+    Ok(LoadInfo {
+        name: resp
+            .get("name")
+            .and_then(Jv::as_str)
+            .context("load reply missing \"name\"")?
+            .to_string(),
+        created: resp.get("created").and_then(Jv::as_bool).unwrap_or(false),
+        refs: resp.get("refs").and_then(Jv::as_i64).unwrap_or(1),
+    })
+}

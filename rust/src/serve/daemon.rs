@@ -1,0 +1,462 @@
+//! The `sparta serve` daemon: one fabric, one engine thread, many
+//! client connections.
+//!
+//! Threading model — the [`Session`]/[`Registry`] is intentionally
+//! single-owner (PE threads inside a launch are where the parallelism
+//! lives), so the daemon runs:
+//!
+//! * an **accept loop** (caller thread) on a nonblocking listener,
+//!   polling the shutdown flag and the signal handler between accepts;
+//! * one short-lived **connection thread** per client, which parses
+//!   request lines, intercepts `shutdown`, submits everything else to
+//!   the [`Admission`] queue, and enforces the per-request deadline on
+//!   the reply channel;
+//! * one **engine thread** owning the [`Registry`], popping admission
+//!   batches — a coalesced batch of identical same-tenant plans runs as
+//!   a single fabric epoch with the result fanned back out to every
+//!   requester.
+//!
+//! Graceful shutdown (SIGTERM/SIGINT via the dependency-free handler
+//! below, or the protocol `shutdown` command): admissions close —
+//! late submissions get a `shutting_down` error — the engine drains
+//! what was admitted, and [`ServeDaemon::run`] writes one BENCH
+//! document per tenant before returning.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::report::Jv;
+use crate::coordinator::{Session, SessionConfig};
+use crate::fabric::{NetProfile, DEFAULT_QUEUE_STALL_MS};
+
+use super::admission::{Admission, Job};
+use super::protocol::{Cmd, Request, Response};
+use super::registry::Registry;
+
+/// Serve daemon configuration (the `sparta serve` flags).
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks a free port (tests).
+    pub addr: String,
+    pub nprocs: usize,
+    pub profile: NetProfile,
+    /// Symmetric heap bytes per PE.
+    pub seg_bytes: usize,
+    /// Byte budget for the verify host-copy LRU cache.
+    pub host_cache_bytes: usize,
+    /// Plans admitted but unanswered before `admission_full`.
+    pub max_inflight: usize,
+    /// Most identical plans coalesced into one fabric epoch.
+    pub batch_max: usize,
+    /// Reply deadline when a request carries no `timeout_ms`.
+    pub default_timeout_ms: u64,
+    /// Queue-backpressure stall bound for every plan.
+    pub queue_stall_ms: u64,
+    /// Arm span tracing on every run (BENCH `phases` + TRACE export).
+    pub trace: bool,
+    /// Where to write per-tenant `BENCH_tenant_*.json` on shutdown.
+    pub out_dir: Option<PathBuf>,
+    /// Install SIGINT/SIGTERM handlers (the CLI does; tests don't, so
+    /// Ctrl-C still kills a test run).
+    pub install_signal_handlers: bool,
+}
+
+impl ServeConfig {
+    pub fn new(addr: &str) -> ServeConfig {
+        ServeConfig {
+            addr: addr.to_string(),
+            nprocs: 4,
+            profile: NetProfile::dgx2(),
+            seg_bytes: 256 << 20,
+            host_cache_bytes: 256 << 20,
+            max_inflight: 32,
+            batch_max: 16,
+            default_timeout_ms: 120_000,
+            queue_stall_ms: DEFAULT_QUEUE_STALL_MS,
+            trace: false,
+            out_dir: None,
+            install_signal_handlers: false,
+        }
+    }
+}
+
+/// What the daemon did, returned by [`ServeDaemon::run`] after a
+/// graceful shutdown.
+pub struct ServeSummary {
+    /// Tenants that completed at least one run.
+    pub tenants: Vec<String>,
+    /// Per-tenant BENCH (and TRACE) files written under `out_dir`.
+    pub bench_paths: Vec<PathBuf>,
+}
+
+pub struct ServeDaemon {
+    cfg: ServeConfig,
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ServeDaemon {
+    /// Bind the listener (so tests learn the port before serving) —
+    /// [`ServeDaemon::run`] starts the engine and blocks.
+    pub fn bind(cfg: ServeConfig) -> Result<ServeDaemon> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("cannot bind {}", cfg.addr))?;
+        Ok(ServeDaemon { cfg, listener, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Setting this flag from any thread triggers graceful shutdown
+    /// (same path as SIGTERM and the protocol `shutdown` command).
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Serve until shutdown; drains in-flight plans, writes per-tenant
+    /// BENCH ledgers, and returns what happened.
+    pub fn run(self) -> Result<ServeSummary> {
+        if self.cfg.install_signal_handlers {
+            signals::install();
+        }
+        let mut scfg = SessionConfig::new(self.cfg.nprocs, self.cfg.profile);
+        scfg.seg_bytes = self.cfg.seg_bytes;
+        scfg.host_cache_bytes = self.cfg.host_cache_bytes;
+        let mut registry = Registry::new(Session::new(scfg));
+        registry.set_queue_stall_ms(self.cfg.queue_stall_ms);
+        registry.set_trace(self.cfg.trace);
+
+        let admission = Admission::new(self.cfg.max_inflight, self.cfg.batch_max);
+        let engine = {
+            let admission = Arc::clone(&admission);
+            std::thread::Builder::new()
+                .name("serve-engine".to_string())
+                .spawn(move || engine_loop(registry, &admission))
+                .context("cannot spawn engine thread")?
+        };
+
+        self.listener.set_nonblocking(true).context("nonblocking listener")?;
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) || signals::triggered() {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let admission = Arc::clone(&admission);
+                    let shutdown = Arc::clone(&self.shutdown);
+                    let default_timeout = self.cfg.default_timeout_ms;
+                    // Connection threads are detached: they die when
+                    // their client disconnects or the reply path ends.
+                    let _ = std::thread::Builder::new()
+                        .name("serve-conn".to_string())
+                        .spawn(move || serve_conn(stream, &admission, &shutdown, default_timeout));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+
+        // Drain: no new admissions; the engine finishes what was let in.
+        admission.close();
+        drop(self.listener);
+        let registry = engine.join().expect("engine thread panicked");
+
+        let tenants = registry.tenants_with_runs();
+        let mut bench_paths = Vec::new();
+        if let Some(dir) = &self.cfg.out_dir {
+            for tenant in &tenants {
+                if let Some(doc) = registry.bench_doc(tenant) {
+                    bench_paths.push(doc.write(dir)?);
+                    if let Some(tp) = doc.write_trace(dir)? {
+                        bench_paths.push(tp);
+                    }
+                }
+            }
+        }
+        Ok(ServeSummary { tenants, bench_paths })
+    }
+}
+
+/// The engine: owns the registry until shutdown, then hands it back
+/// for ledger writing.
+fn engine_loop(mut registry: Registry, admission: &Admission) -> Registry {
+    loop {
+        match admission.next_batch(Duration::from_millis(50)) {
+            None => {
+                if admission.is_closed() {
+                    return registry;
+                }
+            }
+            Some(batch) => handle_batch(&mut registry, admission, batch),
+        }
+    }
+}
+
+fn handle_batch(registry: &mut Registry, admission: &Admission, batch: Vec<Job>) {
+    let plans = batch.iter().filter(|j| j.is_plan()).count();
+    let live: Vec<&Job> = batch
+        .iter()
+        .filter(|j| !j.cancelled.load(Ordering::SeqCst))
+        .collect();
+    if !live.is_empty() {
+        if plans > 0 {
+            // One execution serves the whole coalesced batch: identical
+            // same-tenant requests share a single fabric epoch.
+            let head = live[0];
+            let Cmd::Multiply(req) = &head.req.cmd else { unreachable!() };
+            let coalesced = live.len() as i64;
+            match registry.multiply(&head.req.tenant, req) {
+                Ok(outcome) => {
+                    for job in &live {
+                        let body = vec![
+                            ("c".to_string(), Jv::str(&outcome.c)),
+                            ("epoch".to_string(), Jv::Int(outcome.epoch as i64)),
+                            ("makespan_ns".to_string(), Jv::Num(outcome.makespan_ns)),
+                            ("bytes_get".to_string(), Jv::Num(outcome.bytes_get)),
+                            ("flops".to_string(), Jv::Num(outcome.flops)),
+                            ("verified".to_string(), Jv::Bool(outcome.verified)),
+                            ("coalesced".to_string(), Jv::Int(coalesced)),
+                        ];
+                        let _ = job.reply.send(Response::ok(job.req.id, "multiply", body));
+                    }
+                }
+                Err(e) => {
+                    for job in &live {
+                        let _ = job
+                            .reply
+                            .send(Response::err(job.req.id, classify(&e), &format!("{e:#}")));
+                    }
+                }
+            }
+        } else {
+            for job in &live {
+                let resp = exec_control(registry, &job.req);
+                let _ = job.reply.send(resp);
+            }
+        }
+    }
+    for _ in 0..plans {
+        admission.plan_done();
+    }
+}
+
+/// Map a registry error onto a stable protocol error code.
+fn classify(e: &anyhow::Error) -> &'static str {
+    let msg = format!("{e}");
+    if msg.contains("may not access") {
+        "forbidden"
+    } else if msg.starts_with("no operand") {
+        "not_found"
+    } else if msg.contains("verification failed") {
+        "verify_failed"
+    } else if msg.contains("already loaded") || msg.contains("wrong shape") {
+        "exists"
+    } else if msg.contains("bad operand reference")
+        || msg.contains("shapes do not compose")
+        || msg.contains("has no Sp")
+    {
+        "bad_request"
+    } else {
+        "exec_error"
+    }
+}
+
+fn exec_control(registry: &mut Registry, req: &Request) -> Response {
+    let id = req.id;
+    match &req.cmd {
+        Cmd::Ping => Response::ok(
+            id,
+            "pong",
+            vec![(
+                "fabric_epochs".to_string(),
+                Jv::Int(registry.session().fabric().epochs() as i64),
+            )],
+        ),
+        Cmd::LoadCsr { name, source } => {
+            let result =
+                registry.load_csr(&req.tenant, name, source).map(|(c, op)| (c, op.refs));
+            match result {
+                Ok((created, refs)) => load_ok(id, registry, &req.tenant, name, created, refs),
+                Err(e) => Response::err(id, classify(&e), &format!("{e:#}")),
+            }
+        }
+        Cmd::LoadDense { name, source } => {
+            let result =
+                registry.load_dense(&req.tenant, name, source).map(|(c, op)| (c, op.refs));
+            match result {
+                Ok((created, refs)) => load_ok(id, registry, &req.tenant, name, created, refs),
+                Err(e) => Response::err(id, classify(&e), &format!("{e:#}")),
+            }
+        }
+        Cmd::Unload { name } => match registry.unload(&req.tenant, name) {
+            Ok(refs) => {
+                Response::ok(id, "unload", vec![("refs".to_string(), Jv::Int(refs as i64))])
+            }
+            Err(e) => Response::err(id, classify(&e), &format!("{e:#}")),
+        },
+        Cmd::List => {
+            let ops: Vec<Jv> = registry
+                .list(&req.tenant)
+                .into_iter()
+                .map(|(name, op)| {
+                    Jv::obj(vec![
+                        ("name", Jv::str(&name)),
+                        ("sparse", Jv::Bool(op.sparse)),
+                        ("nrows", Jv::Int(op.nrows as i64)),
+                        ("ncols", Jv::Int(op.ncols as i64)),
+                        ("refs", Jv::Int(op.refs as i64)),
+                    ])
+                })
+                .collect();
+            Response::ok(id, "list", vec![("operands".to_string(), Jv::Arr(ops))])
+        }
+        Cmd::Bench => {
+            let doc = match registry.bench_doc(&req.tenant) {
+                Some(doc) => doc.to_json(),
+                None => Jv::Null,
+            };
+            Response::ok(id, "bench", vec![("doc".to_string(), doc)])
+        }
+        Cmd::Stats => Response::ok(id, "stats", registry.stats_body(&req.tenant)),
+        // Handled by the connection thread; reaching the engine with it
+        // is a protocol misuse, not a crash.
+        Cmd::Shutdown => Response::err(id, "bad_request", "shutdown is connection-level"),
+        Cmd::Multiply(_) => unreachable!("plans take the batch path"),
+    }
+}
+
+fn load_ok(
+    id: i64,
+    registry: &Registry,
+    tenant: &str,
+    name: &str,
+    created: bool,
+    refs: usize,
+) -> Response {
+    // Echo back the fully qualified name so clients can share it.
+    let qualified = match registry.resolve(tenant, name) {
+        Ok((owner, base)) => format!("{owner}/{base}"),
+        Err(_) => name.to_string(),
+    };
+    Response::ok(
+        id,
+        "load",
+        vec![
+            ("name".to_string(), Jv::str(&qualified)),
+            ("created".to_string(), Jv::Bool(created)),
+            ("refs".to_string(), Jv::Int(refs as i64)),
+        ],
+    )
+}
+
+/// Per-connection loop: line in, line out, deadline enforced here.
+fn serve_conn(
+    stream: TcpStream,
+    admission: &Admission,
+    shutdown: &AtomicBool,
+    default_timeout_ms: u64,
+) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut writer = stream;
+    let reader = BufReader::new(read_half);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(&line, admission, shutdown, default_timeout_ms);
+        if writeln!(writer, "{}", resp.encode()).is_err() {
+            break;
+        }
+    }
+}
+
+fn handle_line(
+    line: &str,
+    admission: &Admission,
+    shutdown: &AtomicBool,
+    default_timeout_ms: u64,
+) -> Response {
+    let req = match Request::decode(line) {
+        Ok(req) => req,
+        Err(e) => return Response::err(0, "bad_request", &format!("{e:#}")),
+    };
+    let id = req.id;
+    if matches!(req.cmd, Cmd::Shutdown) {
+        // Close admissions first so nothing slips in behind the flag.
+        admission.close();
+        shutdown.store(true, Ordering::SeqCst);
+        return Response::ok(id, "shutdown", vec![("draining".to_string(), Jv::Bool(true))]);
+    }
+    let timeout_ms = match &req.cmd {
+        Cmd::Multiply(m) => m.timeout_ms.unwrap_or(default_timeout_ms),
+        _ => default_timeout_ms,
+    };
+    let (tx, rx) = channel();
+    let cancelled = Arc::new(AtomicBool::new(false));
+    let job = Job { req, reply: tx, cancelled: Arc::clone(&cancelled) };
+    if let Err(refusal) = admission.submit(job) {
+        return Response::err(id, refusal.code(), "admission refused");
+    }
+    match rx.recv_timeout(Duration::from_millis(timeout_ms)) {
+        Ok(resp) => resp,
+        Err(_) => {
+            // Tell the engine nobody is listening; if the run already
+            // started it completes (a fabric launch cannot be torn out
+            // from under its PE threads) but the reply is dropped.
+            cancelled.store(true, Ordering::SeqCst);
+            Response::err(id, "timeout", &format!("no reply within {timeout_ms} ms"))
+        }
+    }
+}
+
+/// Dependency-free POSIX signal hookup: a handler may only set an
+/// async-signal-safe flag, which the accept loop polls.
+#[cfg(unix)]
+mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+    type SigHandler = extern "C" fn(i32);
+    extern "C" {
+        fn signal(signum: i32, handler: SigHandler) -> usize;
+    }
+
+    extern "C" fn on_signal(_sig: i32) {
+        TRIGGERED.store(true, Ordering::SeqCst);
+    }
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    pub fn install() {
+        unsafe {
+            let _ = signal(SIGINT, on_signal);
+            let _ = signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn triggered() -> bool {
+        TRIGGERED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod signals {
+    pub fn install() {}
+
+    pub fn triggered() -> bool {
+        false
+    }
+}

@@ -1,0 +1,42 @@
+//! `sparta serve` — the multi-tenant resident-operand multiply service.
+//!
+//! The paper's core asset is a persistent one-sided fabric with
+//! operands resident on device; this module turns that into a
+//! long-lived daemon. One [`ServeDaemon`] owns one `Fabric` +
+//! `ProcGrid` (via a [`crate::coordinator::Session`]) and exposes the
+//! session engine over a newline-delimited JSON line protocol on TCP
+//! (`serve::protocol`; values are the dependency-free `Jv` type — no
+//! serde). On top of the session it adds the layers a service needs:
+//!
+//! * **tenant namespaces** (`serve::registry`): `tenant/name` operand
+//!   ids, ref-counted residency with load-acquire / unload-release, and
+//!   a shared `public/` namespace for cross-tenant residents;
+//! * **admission control** (`serve::admission`): a bounded in-flight
+//!   plan budget with structured `admission_full` refusals, and
+//!   batching of identical same-tenant plans into one fabric epoch;
+//! * **graceful shutdown + deadlines** (`serve::daemon`): SIGTERM /
+//!   Ctrl-C / protocol `shutdown` drain in-flight plans and refuse new
+//!   admissions; every request carries a reply deadline that produces a
+//!   structured `timeout` error instead of a dead daemon;
+//! * **per-tenant BENCH ledgers**: each run is one fabric stats epoch
+//!   tagged to exactly one tenant, so `BENCH_tenant_*.json` documents
+//!   contain only that tenant's runs with zero cross-tenant stat bleed.
+//!
+//! [`ServeClient`] (`serve::client`) is the matching blocking client,
+//! used by the `sparta client` subcommand and the e2e tests. See
+//! DESIGN.md §8 for the protocol grammar and lifecycle rules.
+
+pub mod admission;
+pub mod client;
+pub mod daemon;
+pub mod protocol;
+pub mod registry;
+
+pub use admission::{AdmitError, Admission, Job};
+pub use client::{error_code, LoadInfo, MultiplySummary, ServeClient, ServeError};
+pub use daemon::{ServeConfig, ServeDaemon, ServeSummary};
+pub use protocol::{
+    alg_wire_name, comm_wire_name, valid_name, Cmd, CsrSource, DenseSource, MultiplyReq, Request,
+    Response, PUBLIC_TENANT,
+};
+pub use registry::{NamedOperand, Registry, RunOutcome, TenantRun};

@@ -1,0 +1,672 @@
+//! The `sparta serve` wire protocol: newline-delimited JSON over TCP.
+//!
+//! One request per line, one response per line, both JSON objects
+//! encoded with the dependency-free [`Jv`] value type from
+//! `coordinator::report` (the build stays serde-free). The grammar:
+//!
+//! ```text
+//! request  := { "id": int, "tenant": name, "cmd": string, ...cmd fields }
+//! response := { "id": int, "ok": bool, "kind": string,
+//!               "error"?: { "code": string, "message": string },
+//!               ...body fields }
+//! ```
+//!
+//! Commands: `ping`, `load_csr`, `load_dense`, `multiply`, `unload`,
+//! `list`, `bench`, `stats`, `shutdown`. Operand references are either
+//! unqualified (`"H"`, resolved in the caller's tenant namespace) or
+//! qualified (`"public/A"`); see `serve::registry` for the visibility
+//! rules. Every malformed line or failed command produces a structured
+//! error response — the daemon never dies on client input.
+
+use anyhow::{bail, Context, Result};
+
+use crate::algorithms::{Alg, Comm};
+use crate::coordinator::report::Jv;
+use crate::coordinator::ExecOpts;
+use crate::matrix::{Csr, Dense};
+
+/// Tenant and operand base names: non-empty `[A-Za-z0-9_.-]`, so names
+/// compose into `tenant/name` references and BENCH artifact file names
+/// without escaping.
+pub fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= 64
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '.' | '-'))
+}
+
+/// The reserved tenant whose operands every tenant may read and load
+/// into (the shared-residents namespace).
+pub const PUBLIC_TENANT: &str = "public";
+
+/// How a client describes a sparse operand. Generator variants keep
+/// smoke traffic off the wire; `Data` ships an explicit CSR.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CsrSource {
+    ErdosRenyi { n: usize, avg_deg: usize, seed: u64 },
+    Banded { n: usize, band: usize, fill: f64, seed: u64 },
+    Rmat { scale: u32, edgefactor: usize, seed: u64 },
+    /// A named matrix from the paper's suite analogs.
+    Suite { name: String, scale_shift: i32 },
+    Data { nrows: usize, ncols: usize, rowptr: Vec<i64>, colind: Vec<i32>, vals: Vec<f32> },
+}
+
+impl CsrSource {
+    pub fn materialize(&self) -> Result<Csr> {
+        use crate::matrix::{gen, suite};
+        Ok(match self {
+            CsrSource::ErdosRenyi { n, avg_deg, seed } => gen::erdos_renyi(*n, *avg_deg, *seed),
+            CsrSource::Banded { n, band, fill, seed } => gen::banded(*n, *band, *fill, *seed),
+            CsrSource::Rmat { scale, edgefactor, seed } => {
+                gen::rmat(*scale, *edgefactor, 0.57, 0.19, 0.19, *seed)
+            }
+            CsrSource::Suite { name, scale_shift } => suite::analog_scaled(name, *scale_shift),
+            CsrSource::Data { nrows, ncols, rowptr, colind, vals } => {
+                let m = Csr {
+                    nrows: *nrows,
+                    ncols: *ncols,
+                    rowptr: rowptr.clone(),
+                    colind: colind.clone(),
+                    vals: vals.clone(),
+                };
+                ensure_csr(&m)?;
+                m
+            }
+        })
+    }
+
+    fn to_json(&self) -> Jv {
+        match self {
+            CsrSource::ErdosRenyi { n, avg_deg, seed } => Jv::obj(vec![
+                ("gen", Jv::str("erdos_renyi")),
+                ("n", Jv::Int(*n as i64)),
+                ("avg_deg", Jv::Int(*avg_deg as i64)),
+                ("seed", Jv::Int(*seed as i64)),
+            ]),
+            CsrSource::Banded { n, band, fill, seed } => Jv::obj(vec![
+                ("gen", Jv::str("banded")),
+                ("n", Jv::Int(*n as i64)),
+                ("band", Jv::Int(*band as i64)),
+                ("fill", Jv::Num(*fill)),
+                ("seed", Jv::Int(*seed as i64)),
+            ]),
+            CsrSource::Rmat { scale, edgefactor, seed } => Jv::obj(vec![
+                ("gen", Jv::str("rmat")),
+                ("scale", Jv::Int(*scale as i64)),
+                ("edgefactor", Jv::Int(*edgefactor as i64)),
+                ("seed", Jv::Int(*seed as i64)),
+            ]),
+            CsrSource::Suite { name, scale_shift } => Jv::obj(vec![
+                ("gen", Jv::str("suite")),
+                ("name", Jv::str(name)),
+                ("scale_shift", Jv::Int(*scale_shift as i64)),
+            ]),
+            CsrSource::Data { nrows, ncols, rowptr, colind, vals } => Jv::obj(vec![
+                ("gen", Jv::str("data")),
+                ("nrows", Jv::Int(*nrows as i64)),
+                ("ncols", Jv::Int(*ncols as i64)),
+                ("rowptr", Jv::ints(rowptr.iter().copied())),
+                ("colind", Jv::ints(colind.iter().map(|&x| x as i64))),
+                ("vals", Jv::nums(vals.iter().map(|&x| x as f64))),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Jv) -> Result<CsrSource> {
+        let gen = v.get("gen").and_then(Jv::as_str).context("source missing \"gen\"")?;
+        Ok(match gen {
+            "erdos_renyi" => CsrSource::ErdosRenyi {
+                n: req_usize(v, "n")?,
+                avg_deg: req_usize(v, "avg_deg")?,
+                seed: req_u64(v, "seed")?,
+            },
+            "banded" => CsrSource::Banded {
+                n: req_usize(v, "n")?,
+                band: req_usize(v, "band")?,
+                fill: v.get("fill").and_then(Jv::as_f64).context("banded needs \"fill\"")?,
+                seed: req_u64(v, "seed")?,
+            },
+            "rmat" => CsrSource::Rmat {
+                scale: req_usize(v, "scale")? as u32,
+                edgefactor: req_usize(v, "edgefactor")?,
+                seed: req_u64(v, "seed")?,
+            },
+            "suite" => CsrSource::Suite {
+                name: v.get("name").and_then(Jv::as_str).context("suite needs \"name\"")?.into(),
+                scale_shift: v.get("scale_shift").and_then(Jv::as_i64).unwrap_or(0) as i32,
+            },
+            "data" => CsrSource::Data {
+                nrows: req_usize(v, "nrows")?,
+                ncols: req_usize(v, "ncols")?,
+                rowptr: int_arr(v, "rowptr")?,
+                colind: int_arr(v, "colind")?.into_iter().map(|x| x as i32).collect(),
+                vals: num_arr(v, "vals")?.into_iter().map(|x| x as f32).collect(),
+            },
+            other => bail!("unknown csr source {other:?}"),
+        })
+    }
+}
+
+/// Reject malformed explicit CSR payloads before they reach a scatter
+/// (which would panic on out-of-range indices).
+fn ensure_csr(m: &Csr) -> Result<()> {
+    anyhow::ensure!(m.rowptr.len() == m.nrows + 1, "rowptr must have nrows+1 entries");
+    anyhow::ensure!(m.rowptr.first() == Some(&0), "rowptr must start at 0");
+    anyhow::ensure!(
+        m.rowptr.windows(2).all(|w| w[0] <= w[1]),
+        "rowptr must be non-decreasing"
+    );
+    let nnz = *m.rowptr.last().unwrap() as usize;
+    anyhow::ensure!(m.colind.len() == nnz && m.vals.len() == nnz, "colind/vals length != nnz");
+    anyhow::ensure!(
+        m.colind.iter().all(|&c| (c as usize) < m.ncols && c >= 0),
+        "column index out of range"
+    );
+    Ok(())
+}
+
+/// How a client describes a dense operand.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DenseSource {
+    Random { nrows: usize, ncols: usize, seed: u64 },
+    Data { nrows: usize, ncols: usize, data: Vec<f32> },
+}
+
+impl DenseSource {
+    pub fn materialize(&self) -> Result<Dense> {
+        Ok(match self {
+            DenseSource::Random { nrows, ncols, seed } => {
+                let mut rng = crate::util::Rng::new(*seed);
+                Dense::random(*nrows, *ncols, &mut rng)
+            }
+            DenseSource::Data { nrows, ncols, data } => {
+                anyhow::ensure!(data.len() == nrows * ncols, "data length != nrows*ncols");
+                Dense { nrows: *nrows, ncols: *ncols, data: data.clone() }
+            }
+        })
+    }
+
+    fn to_json(&self) -> Jv {
+        match self {
+            DenseSource::Random { nrows, ncols, seed } => Jv::obj(vec![
+                ("gen", Jv::str("random")),
+                ("nrows", Jv::Int(*nrows as i64)),
+                ("ncols", Jv::Int(*ncols as i64)),
+                ("seed", Jv::Int(*seed as i64)),
+            ]),
+            DenseSource::Data { nrows, ncols, data } => Jv::obj(vec![
+                ("gen", Jv::str("data")),
+                ("nrows", Jv::Int(*nrows as i64)),
+                ("ncols", Jv::Int(*ncols as i64)),
+                ("data", Jv::nums(data.iter().map(|&x| x as f64))),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Jv) -> Result<DenseSource> {
+        let gen = v.get("gen").and_then(Jv::as_str).context("source missing \"gen\"")?;
+        Ok(match gen {
+            "random" => DenseSource::Random {
+                nrows: req_usize(v, "nrows")?,
+                ncols: req_usize(v, "ncols")?,
+                seed: req_u64(v, "seed")?,
+            },
+            "data" => DenseSource::Data {
+                nrows: req_usize(v, "nrows")?,
+                ncols: req_usize(v, "ncols")?,
+                data: num_arr(v, "data")?.into_iter().map(|x| x as f32).collect(),
+            },
+            other => bail!("unknown dense source {other:?}"),
+        })
+    }
+}
+
+/// One multiply request: operand references plus the run options the
+/// plan builder takes. `output: None` allocates a fresh auto-named
+/// result operand; identical no-output requests from one tenant are
+/// coalescible into a single fabric epoch (see `serve::daemon`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MultiplyReq {
+    pub a: String,
+    pub b: String,
+    pub alg: Alg,
+    pub comm: Comm,
+    pub verify: bool,
+    pub lookahead: usize,
+    pub output: Option<String>,
+    /// Per-request deadline override (milliseconds); the daemon default
+    /// applies when unset.
+    pub timeout_ms: Option<u64>,
+}
+
+impl MultiplyReq {
+    pub fn new(a: &str, b: &str) -> MultiplyReq {
+        let d = ExecOpts::default();
+        MultiplyReq {
+            a: a.to_string(),
+            b: b.to_string(),
+            alg: Alg::StationaryC,
+            comm: d.comm,
+            verify: false,
+            lookahead: d.lookahead,
+            output: None,
+            timeout_ms: None,
+        }
+    }
+
+    /// The coalescing identity: two requests with equal keys from the
+    /// same tenant compute the same result and may share one run.
+    pub fn coalesce_key(&self) -> Option<(String, String, &'static str, &'static str, bool, usize)>
+    {
+        if self.output.is_some() {
+            return None; // named outputs have per-request side effects
+        }
+        Some((
+            self.a.clone(),
+            self.b.clone(),
+            self.alg.name(),
+            self.comm.name(),
+            self.verify,
+            self.lookahead,
+        ))
+    }
+}
+
+/// The command part of a request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Cmd {
+    Ping,
+    LoadCsr { name: String, source: CsrSource },
+    LoadDense { name: String, source: DenseSource },
+    Multiply(MultiplyReq),
+    Unload { name: String },
+    List,
+    /// The caller tenant's BENCH ledger as a schema-v3 document.
+    Bench,
+    Stats,
+    Shutdown,
+}
+
+impl Cmd {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Cmd::Ping => "ping",
+            Cmd::LoadCsr { .. } => "load_csr",
+            Cmd::LoadDense { .. } => "load_dense",
+            Cmd::Multiply(_) => "multiply",
+            Cmd::Unload { .. } => "unload",
+            Cmd::List => "list",
+            Cmd::Bench => "bench",
+            Cmd::Stats => "stats",
+            Cmd::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// One request line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: i64,
+    pub tenant: String,
+    pub cmd: Cmd,
+}
+
+impl Request {
+    pub fn encode(&self) -> String {
+        let mut fields = vec![
+            ("id".to_string(), Jv::Int(self.id)),
+            ("tenant".to_string(), Jv::str(&self.tenant)),
+            ("cmd".to_string(), Jv::str(self.cmd.name())),
+        ];
+        match &self.cmd {
+            Cmd::Ping | Cmd::List | Cmd::Bench | Cmd::Stats | Cmd::Shutdown => {}
+            Cmd::LoadCsr { name, source } => {
+                fields.push(("name".to_string(), Jv::str(name)));
+                fields.push(("source".to_string(), source.to_json()));
+            }
+            Cmd::LoadDense { name, source } => {
+                fields.push(("name".to_string(), Jv::str(name)));
+                fields.push(("source".to_string(), source.to_json()));
+            }
+            Cmd::Unload { name } => fields.push(("name".to_string(), Jv::str(name))),
+            Cmd::Multiply(m) => {
+                fields.push(("a".to_string(), Jv::str(&m.a)));
+                fields.push(("b".to_string(), Jv::str(&m.b)));
+                fields.push(("alg".to_string(), Jv::str(alg_wire_name(m.alg))));
+                fields.push(("comm".to_string(), Jv::str(comm_wire_name(m.comm))));
+                fields.push(("verify".to_string(), Jv::Bool(m.verify)));
+                fields.push(("lookahead".to_string(), Jv::Int(m.lookahead as i64)));
+                if let Some(out) = &m.output {
+                    fields.push(("output".to_string(), Jv::str(out)));
+                }
+                if let Some(t) = m.timeout_ms {
+                    fields.push(("timeout_ms".to_string(), Jv::Int(t as i64)));
+                }
+            }
+        }
+        Jv::Obj(fields).render()
+    }
+
+    pub fn decode(line: &str) -> Result<Request> {
+        let v = crate::coordinator::parse_json(line).context("request is not valid JSON")?;
+        let id = v.get("id").and_then(Jv::as_i64).context("request missing \"id\"")?;
+        let tenant =
+            v.get("tenant").and_then(Jv::as_str).context("request missing \"tenant\"")?;
+        anyhow::ensure!(valid_name(tenant), "bad tenant name {tenant:?}");
+        let cmd_name = v.get("cmd").and_then(Jv::as_str).context("request missing \"cmd\"")?;
+        let cmd = match cmd_name {
+            "ping" => Cmd::Ping,
+            "list" => Cmd::List,
+            "bench" => Cmd::Bench,
+            "stats" => Cmd::Stats,
+            "shutdown" => Cmd::Shutdown,
+            "unload" => Cmd::Unload { name: req_name(&v)? },
+            "load_csr" => Cmd::LoadCsr {
+                name: req_name(&v)?,
+                source: CsrSource::from_json(v.get("source").context("missing \"source\"")?)?,
+            },
+            "load_dense" => Cmd::LoadDense {
+                name: req_name(&v)?,
+                source: DenseSource::from_json(v.get("source").context("missing \"source\"")?)?,
+            },
+            "multiply" => {
+                let a = v.get("a").and_then(Jv::as_str).context("multiply missing \"a\"")?;
+                let b = v.get("b").and_then(Jv::as_str).context("multiply missing \"b\"")?;
+                let mut m = MultiplyReq::new(a, b);
+                if let Some(alg) = v.get("alg").and_then(Jv::as_str) {
+                    m.alg = Alg::from_name(alg)
+                        .with_context(|| format!("unknown alg {alg:?}"))?;
+                }
+                if let Some(comm) = v.get("comm").and_then(Jv::as_str) {
+                    m.comm = Comm::from_name(comm)
+                        .with_context(|| format!("unknown comm mode {comm:?}"))?;
+                }
+                if let Some(x) = v.get("verify").and_then(Jv::as_bool) {
+                    m.verify = x;
+                }
+                if let Some(x) = v.get("lookahead").and_then(Jv::as_i64) {
+                    anyhow::ensure!(x >= 0, "lookahead must be >= 0");
+                    m.lookahead = x as usize;
+                }
+                if let Some(out) = v.get("output").and_then(Jv::as_str) {
+                    m.output = Some(out.to_string());
+                }
+                if let Some(t) = v.get("timeout_ms").and_then(Jv::as_i64) {
+                    anyhow::ensure!(t >= 0, "timeout_ms must be >= 0");
+                    m.timeout_ms = Some(t as u64);
+                }
+                Cmd::Multiply(m)
+            }
+            other => bail!("unknown command {other:?}"),
+        };
+        Ok(Request { id, tenant: tenant.to_string(), cmd })
+    }
+}
+
+/// CLI/wire spelling of an [`Alg`] (inverse of [`Alg::from_name`]).
+pub fn alg_wire_name(alg: Alg) -> &'static str {
+    match alg {
+        Alg::StationaryC => "sc",
+        Alg::StationaryA => "sa",
+        Alg::StationaryB => "sb",
+        Alg::StationaryCUnopt => "sc-unopt",
+        Alg::RandomWs => "rws",
+        Alg::LocalityWsC => "lws-c",
+        Alg::LocalityWsA => "lws-a",
+        Alg::SummaMpi => "summa",
+        Alg::SummaCombBlas => "comblas",
+        Alg::SummaPetsc => "petsc",
+    }
+}
+
+/// Wire spelling of a [`Comm`] (inverse of `Comm::from_name`).
+pub fn comm_wire_name(comm: Comm) -> &'static str {
+    match comm {
+        Comm::FullTile => "full",
+        Comm::RowSelective => "row",
+    }
+}
+
+/// One response line. `body` fields are flattened into the top-level
+/// object next to `id`/`ok`/`kind`.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: i64,
+    pub ok: bool,
+    pub kind: String,
+    /// `(code, message)` when `ok` is false. Codes are stable strings
+    /// the client can branch on: `bad_request`, `not_found`,
+    /// `forbidden`, `exists`, `admission_full`, `shutting_down`,
+    /// `timeout`, `verify_failed`, `exec_error`.
+    pub error: Option<(String, String)>,
+    pub body: Vec<(String, Jv)>,
+}
+
+impl Response {
+    pub fn ok(id: i64, kind: &str, body: Vec<(String, Jv)>) -> Response {
+        Response { id, ok: true, kind: kind.to_string(), error: None, body }
+    }
+
+    pub fn err(id: i64, code: &str, message: &str) -> Response {
+        Response {
+            id,
+            ok: false,
+            kind: "error".to_string(),
+            error: Some((code.to_string(), message.to_string())),
+            body: Vec::new(),
+        }
+    }
+
+    pub fn error_code(&self) -> Option<&str> {
+        self.error.as_ref().map(|(c, _)| c.as_str())
+    }
+
+    /// Body field lookup.
+    pub fn get(&self, key: &str) -> Option<&Jv> {
+        self.body.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn encode(&self) -> String {
+        let mut fields = vec![
+            ("id".to_string(), Jv::Int(self.id)),
+            ("ok".to_string(), Jv::Bool(self.ok)),
+            ("kind".to_string(), Jv::str(&self.kind)),
+        ];
+        if let Some((code, message)) = &self.error {
+            fields.push((
+                "error".to_string(),
+                Jv::obj(vec![("code", Jv::str(code)), ("message", Jv::str(message))]),
+            ));
+        }
+        fields.extend(self.body.iter().cloned());
+        Jv::Obj(fields).render()
+    }
+
+    pub fn decode(line: &str) -> Result<Response> {
+        let v = crate::coordinator::parse_json(line).context("response is not valid JSON")?;
+        let id = v.get("id").and_then(Jv::as_i64).context("response missing \"id\"")?;
+        let ok = v.get("ok").and_then(Jv::as_bool).context("response missing \"ok\"")?;
+        let kind =
+            v.get("kind").and_then(Jv::as_str).context("response missing \"kind\"")?.to_string();
+        let error = v.get("error").map(|e| {
+            (
+                e.get("code").and_then(Jv::as_str).unwrap_or("unknown").to_string(),
+                e.get("message").and_then(Jv::as_str).unwrap_or("").to_string(),
+            )
+        });
+        let body = match v {
+            Jv::Obj(fields) => fields
+                .into_iter()
+                .filter(|(k, _)| !matches!(k.as_str(), "id" | "ok" | "kind" | "error"))
+                .collect(),
+            _ => Vec::new(),
+        };
+        Ok(Response { id, ok, kind, error, body })
+    }
+}
+
+fn req_name(v: &Jv) -> Result<String> {
+    let name = v.get("name").and_then(Jv::as_str).context("missing \"name\"")?;
+    Ok(name.to_string())
+}
+
+fn req_usize(v: &Jv, key: &str) -> Result<usize> {
+    let x = v.get(key).and_then(Jv::as_i64).with_context(|| format!("missing int {key:?}"))?;
+    anyhow::ensure!(x >= 0, "{key} must be >= 0");
+    Ok(x as usize)
+}
+
+fn req_u64(v: &Jv, key: &str) -> Result<u64> {
+    Ok(req_usize(v, key)? as u64)
+}
+
+fn int_arr(v: &Jv, key: &str) -> Result<Vec<i64>> {
+    v.get(key)
+        .and_then(Jv::as_arr)
+        .with_context(|| format!("missing array {key:?}"))?
+        .iter()
+        .map(|x| x.as_i64().with_context(|| format!("non-integer in {key:?}")))
+        .collect()
+}
+
+fn num_arr(v: &Jv, key: &str) -> Result<Vec<f64>> {
+    v.get(key)
+        .and_then(Jv::as_arr)
+        .with_context(|| format!("missing array {key:?}"))?
+        .iter()
+        .map(|x| x.as_f64().with_context(|| format!("non-number in {key:?}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(req: Request) {
+        let line = req.encode();
+        assert!(!line.contains('\n'), "one request per line");
+        let back = Request::decode(&line).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn requests_round_trip_through_the_wire_encoding() {
+        round_trip(Request { id: 1, tenant: "alice".into(), cmd: Cmd::Ping });
+        round_trip(Request { id: 2, tenant: "bob".into(), cmd: Cmd::List });
+        round_trip(Request {
+            id: 3,
+            tenant: "alice".into(),
+            cmd: Cmd::LoadCsr {
+                name: "public/A".into(),
+                source: CsrSource::ErdosRenyi { n: 64, avg_deg: 4, seed: 7 },
+            },
+        });
+        round_trip(Request {
+            id: 4,
+            tenant: "alice".into(),
+            cmd: Cmd::LoadDense {
+                name: "H".into(),
+                source: DenseSource::Data { nrows: 2, ncols: 2, data: vec![1.0, 0.5, -2.0, 0.0] },
+            },
+        });
+        round_trip(Request {
+            id: 5,
+            tenant: "bob".into(),
+            cmd: Cmd::Multiply(MultiplyReq {
+                a: "public/A".into(),
+                b: "H".into(),
+                alg: Alg::RandomWs,
+                comm: Comm::RowSelective,
+                verify: true,
+                lookahead: 3,
+                output: Some("H2".into()),
+                timeout_ms: Some(1500),
+            }),
+        });
+        round_trip(Request { id: 6, tenant: "admin".into(), cmd: Cmd::Shutdown });
+    }
+
+    #[test]
+    fn csr_data_source_round_trips_and_validates() {
+        let src = CsrSource::Data {
+            nrows: 2,
+            ncols: 3,
+            rowptr: vec![0, 2, 3],
+            colind: vec![0, 2, 1],
+            vals: vec![1.0, 2.0, 3.0],
+        };
+        round_trip(Request {
+            id: 9,
+            tenant: "t".into(),
+            cmd: Cmd::LoadCsr { name: "m".into(), source: src.clone() },
+        });
+        let m = src.materialize().unwrap();
+        assert_eq!((m.nrows, m.ncols, m.nnz()), (2, 3, 3));
+        let bad = CsrSource::Data {
+            nrows: 2,
+            ncols: 3,
+            rowptr: vec![0, 2, 3],
+            colind: vec![0, 5, 1], // column 5 out of range
+            vals: vec![1.0, 2.0, 3.0],
+        };
+        assert!(bad.materialize().is_err());
+    }
+
+    #[test]
+    fn responses_round_trip_with_flattened_body() {
+        let ok = Response::ok(
+            7,
+            "multiply",
+            vec![("c".to_string(), Jv::str("alice/tmp0")), ("epoch".to_string(), Jv::Int(3))],
+        );
+        let back = Response::decode(&ok.encode()).unwrap();
+        assert!(back.ok);
+        assert_eq!(back.get("c").and_then(Jv::as_str), Some("alice/tmp0"));
+        assert_eq!(back.get("epoch").and_then(Jv::as_i64), Some(3));
+
+        let err = Response::err(8, "admission_full", "8 plans in flight");
+        let back = Response::decode(&err.encode()).unwrap();
+        assert!(!back.ok);
+        assert_eq!(back.error_code(), Some("admission_full"));
+    }
+
+    #[test]
+    fn bad_lines_are_rejected_not_panicked_on() {
+        for line in [
+            "",
+            "not json",
+            "{}",
+            "{\"id\":1}",
+            "{\"id\":1,\"tenant\":\"a b\",\"cmd\":\"ping\"}", // space in tenant
+            "{\"id\":1,\"tenant\":\"t\",\"cmd\":\"nope\"}",
+            "{\"id\":1,\"tenant\":\"t\",\"cmd\":\"multiply\",\"a\":\"x\"}",
+            "{\"id\":1,\"tenant\":\"t\",\"cmd\":\"multiply\",\"a\":\"x\",\"b\":\"y\",\"alg\":\"zz\"}",
+        ] {
+            assert!(Request::decode(line).is_err(), "accepted {line:?}");
+        }
+    }
+
+    #[test]
+    fn coalesce_key_matches_identical_no_output_requests_only() {
+        let a = MultiplyReq::new("public/A", "H");
+        let mut b = a.clone();
+        b.timeout_ms = Some(99); // deadline differences don't split a batch
+        assert_eq!(a.coalesce_key(), b.coalesce_key());
+        assert!(a.coalesce_key().is_some());
+        let mut c = a.clone();
+        c.verify = true;
+        assert_ne!(a.coalesce_key(), c.coalesce_key());
+        let mut d = a.clone();
+        d.output = Some("out".into());
+        assert_eq!(d.coalesce_key(), None);
+    }
+
+    #[test]
+    fn name_validation() {
+        assert!(valid_name("alice"));
+        assert!(valid_name("A_1.b-2"));
+        assert!(!valid_name(""));
+        assert!(!valid_name("a/b")); // qualified refs are split before validation
+        assert!(!valid_name("a b"));
+        assert!(!valid_name(&"x".repeat(65)));
+    }
+}

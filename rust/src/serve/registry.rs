@@ -1,0 +1,485 @@
+//! Multi-tenant operand registry over one [`Session`] — the daemon's
+//! single-threaded brain.
+//!
+//! Namespacing: every operand lives under `owner/name`. A tenant
+//! resolves unqualified references in its own namespace and may
+//! additionally read (and acquire) anything under the reserved
+//! [`PUBLIC_TENANT`] — the shared residents that make a multiply
+//! service worth running. Loading an existing name is *acquire*
+//! semantics: the refcount rises and the existing resident is reused
+//! (`created: false`); unloading drops one reference and, at zero,
+//! releases the name and its verify host-copies. Symmetric-heap tiles
+//! themselves stay allocated — the fabric is a paper-style persistent
+//! arena — so a released name costs host memory nothing but device
+//! memory until the daemon restarts.
+//!
+//! Per-tenant accounting rides the fabric's stats-epoch mechanism:
+//! every multiply is exactly one `Fabric::launch` epoch, so tagging
+//! each ledger row with its epoch ordinal makes "no cross-tenant stat
+//! bleed" a checkable property — tenants' epoch sets are disjoint and
+//! their per-run byte totals sum to the fabric's lifetime totals.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::report::{BenchDoc, Jv, Report};
+use crate::coordinator::{OperandId, Session};
+
+use super::protocol::{valid_name, CsrSource, DenseSource, MultiplyReq, PUBLIC_TENANT};
+
+/// A named, ref-counted resident operand.
+pub struct NamedOperand {
+    pub id: OperandId,
+    pub refs: usize,
+    pub sparse: bool,
+    pub nrows: usize,
+    pub ncols: usize,
+}
+
+/// One completed multiply in a tenant's ledger.
+pub struct TenantRun {
+    pub label: String,
+    pub matrix: String,
+    pub n_cols: usize,
+    /// 1-based fabric epoch ordinal of this run's launch — the
+    /// no-bleed tag (each epoch's stats belong to exactly one run).
+    pub epoch: u64,
+    pub report: Report,
+}
+
+/// Result summary the daemon sends back for one multiply.
+pub struct RunOutcome {
+    /// Qualified name of the output operand.
+    pub c: String,
+    pub epoch: u64,
+    pub makespan_ns: f64,
+    pub bytes_get: f64,
+    pub flops: f64,
+    pub verified: bool,
+}
+
+pub struct Registry {
+    session: Session,
+    names: HashMap<(String, String), NamedOperand>,
+    ledgers: HashMap<String, Vec<TenantRun>>,
+    anon_counter: u64,
+    /// Queue-backpressure deadline applied to every plan (serve daemons
+    /// run long; smoke setups shrink it).
+    queue_stall_ms: u64,
+    /// Arm span tracing on every plan (the daemon's `--trace`); traces
+    /// flow into the per-tenant BENCH `phases` rows.
+    trace: bool,
+}
+
+impl Registry {
+    pub fn new(session: Session) -> Registry {
+        Registry {
+            session,
+            names: HashMap::new(),
+            ledgers: HashMap::new(),
+            anon_counter: 0,
+            queue_stall_ms: crate::fabric::DEFAULT_QUEUE_STALL_MS,
+            trace: false,
+        }
+    }
+
+    pub fn set_queue_stall_ms(&mut self, ms: u64) {
+        self.queue_stall_ms = ms;
+    }
+
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace = on;
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// Resolve an operand reference to `(owner, base)` and enforce
+    /// visibility: a tenant sees its own namespace plus `public/`.
+    pub fn resolve(&self, tenant: &str, reference: &str) -> Result<(String, String)> {
+        let (owner, base) = match reference.split_once('/') {
+            Some((owner, base)) => (owner.to_string(), base.to_string()),
+            None => (tenant.to_string(), reference.to_string()),
+        };
+        if !valid_name(&owner) || !valid_name(&base) {
+            bail!("bad operand reference {reference:?}");
+        }
+        if owner != tenant && owner != PUBLIC_TENANT {
+            bail!("tenant {tenant:?} may not access {owner}/{base}");
+        }
+        Ok((owner, base))
+    }
+
+    fn lookup(&self, tenant: &str, reference: &str) -> Result<(String, String, &NamedOperand)> {
+        let (owner, base) = self.resolve(tenant, reference)?;
+        match self.names.get(&(owner.clone(), base.clone())) {
+            Some(op) => Ok((owner, base, op)),
+            None => bail!("no operand {owner}/{base}"),
+        }
+    }
+
+    /// Load-or-acquire a sparse operand. Returns `(created, operand)`.
+    pub fn load_csr(
+        &mut self,
+        tenant: &str,
+        name: &str,
+        source: &CsrSource,
+    ) -> Result<(bool, &NamedOperand)> {
+        let (owner, base) = self.resolve(tenant, name)?;
+        let key = (owner, base);
+        let created = if let Some(op) = self.names.get_mut(&key) {
+            if !op.sparse {
+                bail!("{}/{} already loaded as dense", key.0, key.1);
+            }
+            op.refs += 1;
+            false
+        } else {
+            let m = source.materialize()?;
+            let (nrows, ncols) = (m.nrows, m.ncols);
+            let id = self.session.load_csr(&m);
+            self.names
+                .insert(key.clone(), NamedOperand { id, refs: 1, sparse: true, nrows, ncols });
+            true
+        };
+        Ok((created, self.names.get(&key).unwrap()))
+    }
+
+    /// Load-or-acquire a dense operand. Returns `(created, operand)`.
+    pub fn load_dense(
+        &mut self,
+        tenant: &str,
+        name: &str,
+        source: &DenseSource,
+    ) -> Result<(bool, &NamedOperand)> {
+        let (owner, base) = self.resolve(tenant, name)?;
+        let key = (owner, base);
+        let created = if let Some(op) = self.names.get_mut(&key) {
+            if op.sparse {
+                bail!("{}/{} already loaded as sparse", key.0, key.1);
+            }
+            op.refs += 1;
+            false
+        } else {
+            let m = source.materialize()?;
+            let (nrows, ncols) = (m.nrows, m.ncols);
+            let id = self.session.load_dense(&m);
+            self.names
+                .insert(key.clone(), NamedOperand { id, refs: 1, sparse: false, nrows, ncols });
+            true
+        };
+        Ok((created, self.names.get(&key).unwrap()))
+    }
+
+    /// Drop one reference; at zero the name is released and its verify
+    /// host-copies evicted immediately. Returns remaining refs.
+    pub fn unload(&mut self, tenant: &str, name: &str) -> Result<usize> {
+        let (owner, base) = self.resolve(tenant, name)?;
+        let key = (owner, base);
+        let Some(op) = self.names.get_mut(&key) else {
+            bail!("no operand {}/{}", key.0, key.1);
+        };
+        op.refs -= 1;
+        if op.refs == 0 {
+            let id = op.id;
+            self.names.remove(&key);
+            self.session.invalidate_host_copies(id);
+            return Ok(0);
+        }
+        Ok(op.refs)
+    }
+
+    /// Run one multiply for a tenant and record it in that tenant's
+    /// ledger, tagged with its fabric epoch.
+    pub fn multiply(&mut self, tenant: &str, req: &MultiplyReq) -> Result<RunOutcome> {
+        let (_, _, a) = self.lookup(tenant, &req.a)?;
+        let (a_id, a_rows) = (a.id, a.nrows);
+        let (_, _, b) = self.lookup(tenant, &req.b)?;
+        let (b_id, b_cols, b_sparse) = (b.id, b.ncols, b.sparse);
+        // A named output lives in the caller's own namespace (it is a
+        // write, so `public/` outputs are reserved to the public tenant
+        // itself via the same ownership rule as loads).
+        let out = match &req.output {
+            None => None,
+            Some(name) => {
+                let (owner, base) = self.resolve(tenant, name)?;
+                match self.names.get(&(owner.clone(), base.clone())) {
+                    Some(op) => {
+                        if (op.nrows, op.ncols) != (a_rows, b_cols) || op.sparse != b_sparse {
+                            bail!(
+                                "output {owner}/{base} has the wrong shape or kind for this run"
+                            );
+                        }
+                        Some((owner, base, Some(op.id)))
+                    }
+                    None => Some((owner, base, None)),
+                }
+            }
+        };
+        let label = format!("{}:{}x{}", req.a, req.b, super::protocol::alg_wire_name(req.alg));
+        let run = {
+            let (stall_ms, trace) = (self.queue_stall_ms, self.trace);
+            let mut plan = self
+                .session
+                .plan(a_id, b_id)
+                .alg(req.alg)
+                .comm(req.comm)
+                .verify(req.verify)
+                .lookahead(req.lookahead)
+                .stall_ms(stall_ms)
+                .trace(trace)
+                .label(&label)
+                .matrix(tenant);
+            if let Some((_, _, Some(id))) = &out {
+                plan = plan.output(*id);
+            }
+            plan.execute()?
+        };
+        let epoch = self.session.fabric().epochs();
+        let c_name = match out {
+            Some((owner, base, existing)) => {
+                if existing.is_none() {
+                    let (nrows, ncols) = self.session.dims(run.c)?;
+                    self.names.insert(
+                        (owner.clone(), base.clone()),
+                        NamedOperand {
+                            id: run.c,
+                            refs: 1,
+                            sparse: self.session.is_sparse(run.c)?,
+                            nrows,
+                            ncols,
+                        },
+                    );
+                }
+                format!("{owner}/{base}")
+            }
+            None => {
+                let base = format!("tmp{}", self.anon_counter);
+                self.anon_counter += 1;
+                let (nrows, ncols) = self.session.dims(run.c)?;
+                self.names.insert(
+                    (tenant.to_string(), base.clone()),
+                    NamedOperand {
+                        id: run.c,
+                        refs: 1,
+                        sparse: self.session.is_sparse(run.c)?,
+                        nrows,
+                        ncols,
+                    },
+                );
+                format!("{tenant}/{base}")
+            }
+        };
+        let totals = run.report.totals();
+        let outcome = RunOutcome {
+            c: c_name,
+            epoch,
+            makespan_ns: run.report.makespan_ns,
+            bytes_get: totals.bytes_get,
+            flops: totals.flops,
+            verified: req.verify,
+        };
+        self.ledgers.entry(tenant.to_string()).or_default().push(TenantRun {
+            label,
+            matrix: tenant.to_string(),
+            n_cols: if b_sparse { 0 } else { b_cols },
+            epoch,
+            report: run.report,
+        });
+        Ok(outcome)
+    }
+
+    /// Operands visible to a tenant, as `(qualified_name, operand)`.
+    pub fn list(&self, tenant: &str) -> Vec<(String, &NamedOperand)> {
+        let mut out: Vec<(String, &NamedOperand)> = self
+            .names
+            .iter()
+            .filter(|((owner, _), _)| owner == tenant || owner == PUBLIC_TENANT)
+            .map(|((owner, base), op)| (format!("{owner}/{base}"), op))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    pub fn ledger(&self, tenant: &str) -> &[TenantRun] {
+        self.ledgers.get(tenant).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Tenants that have at least one completed run.
+    pub fn tenants_with_runs(&self) -> Vec<String> {
+        let mut t: Vec<String> =
+            self.ledgers.iter().filter(|(_, v)| !v.is_empty()).map(|(k, _)| k.clone()).collect();
+        t.sort();
+        t
+    }
+
+    /// One BENCH document per tenant, artifact `tenant_<name>` — only
+    /// the tenant's own runs, never anyone else's (rows are drawn from
+    /// the per-tenant ledger, which is keyed by the authenticated
+    /// tenant of each request).
+    pub fn bench_doc(&self, tenant: &str) -> Option<BenchDoc> {
+        let runs = self.ledger(tenant);
+        if runs.is_empty() {
+            return None; // a BENCH doc with zero rows fails validation
+        }
+        let mut doc = BenchDoc::new(&format!("tenant_{tenant}"), 0);
+        for r in runs {
+            doc.push_run(&r.label, &r.matrix, r.n_cols, &r.report);
+        }
+        Some(doc)
+    }
+
+    /// Per-tenant and global accounting as response body fields:
+    /// the caller's run count, epoch list, and byte/flop totals, plus
+    /// the fabric's lifetime view and host-cache occupancy.
+    pub fn stats_body(&self, tenant: &str) -> Vec<(String, Jv)> {
+        let runs = self.ledger(tenant);
+        let epochs: Vec<i64> = runs.iter().map(|r| r.epoch as i64).collect();
+        let (mut bytes_get, mut flops, mut makespan_ns) = (0.0, 0.0, 0.0);
+        for r in runs {
+            let t = r.report.totals();
+            bytes_get += t.bytes_get;
+            flops += t.flops;
+            makespan_ns += r.report.makespan_ns;
+        }
+        let life = self.session.fabric().lifetime_stats();
+        vec![
+            ("runs".to_string(), Jv::Int(runs.len() as i64)),
+            ("epochs".to_string(), Jv::ints(epochs)),
+            ("bytes_get".to_string(), Jv::Num(bytes_get)),
+            ("flops".to_string(), Jv::Num(flops)),
+            ("makespan_ns".to_string(), Jv::Num(makespan_ns)),
+            ("fabric_epochs".to_string(), Jv::Int(self.session.fabric().epochs() as i64)),
+            ("lifetime_bytes_get".to_string(), Jv::Num(life.bytes_get)),
+            ("lifetime_flops".to_string(), Jv::Num(life.flops)),
+            ("host_cache_bytes".to_string(), Jv::Int(self.session.host_cache_bytes() as i64)),
+            (
+                "host_cache_cap".to_string(),
+                if self.session.host_cache_cap() == usize::MAX {
+                    Jv::Null
+                } else {
+                    Jv::Int(self.session.host_cache_cap() as i64)
+                },
+            ),
+            (
+                "host_cache_evictions".to_string(),
+                Jv::Int(self.session.host_cache_evictions() as i64),
+            ),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SessionConfig;
+    use crate::fabric::NetProfile;
+
+    fn small_registry() -> Registry {
+        let mut cfg = SessionConfig::new(4, NetProfile::dgx2());
+        cfg.seg_bytes = 64 << 20;
+        Registry::new(Session::new(cfg))
+    }
+
+    fn er(n: usize, seed: u64) -> CsrSource {
+        CsrSource::ErdosRenyi { n, avg_deg: 4, seed }
+    }
+
+    #[test]
+    fn namespace_visibility_and_acquire_semantics() {
+        let mut reg = small_registry();
+        let (created, _) = reg.load_csr("alice", "public/A", &er(48, 1)).unwrap();
+        assert!(created);
+        // Second load of the same name acquires, not re-scatters.
+        let (created, op) = reg.load_csr("bob", "public/A", &er(48, 1)).unwrap();
+        assert!(!created);
+        assert_eq!(op.refs, 2);
+        // Private names are invisible across tenants.
+        reg.load_dense("alice", "H", &DenseSource::Random { nrows: 48, ncols: 8, seed: 2 })
+            .unwrap();
+        assert!(reg.resolve("bob", "alice/H").is_err());
+        assert!(reg.lookup("bob", "H").is_err());
+        assert_eq!(reg.list("bob").len(), 1, "bob sees only public/A");
+        assert_eq!(reg.list("alice").len(), 2);
+        // Kind mismatch on acquire is an error.
+        assert!(reg
+            .load_dense("bob", "public/A", &DenseSource::Random { nrows: 48, ncols: 8, seed: 3 })
+            .is_err());
+    }
+
+    #[test]
+    fn unload_is_refcounted_and_releases_at_zero() {
+        let mut reg = small_registry();
+        reg.load_csr("alice", "public/A", &er(32, 5)).unwrap();
+        reg.load_csr("bob", "public/A", &er(32, 5)).unwrap();
+        assert_eq!(reg.unload("alice", "public/A").unwrap(), 1);
+        assert_eq!(reg.unload("bob", "public/A").unwrap(), 0);
+        assert!(reg.lookup("bob", "public/A").is_err());
+        assert!(reg.unload("bob", "public/A").is_err());
+    }
+
+    #[test]
+    fn multiply_runs_verify_and_ledgers_stay_per_tenant() {
+        let mut reg = small_registry();
+        reg.load_csr("alice", "public/A", &er(48, 7)).unwrap();
+        reg.load_dense("alice", "H", &DenseSource::Random { nrows: 48, ncols: 8, seed: 8 })
+            .unwrap();
+        reg.load_dense("bob", "H", &DenseSource::Random { nrows: 48, ncols: 8, seed: 9 })
+            .unwrap();
+        let mut req = MultiplyReq::new("public/A", "H");
+        req.verify = true;
+        let ra = reg.multiply("alice", &req).unwrap();
+        let rb = reg.multiply("bob", &req).unwrap();
+        assert_ne!(ra.epoch, rb.epoch, "each run is its own stats epoch");
+        assert!(ra.c.starts_with("alice/"));
+        assert!(rb.c.starts_with("bob/"));
+        assert_eq!(reg.ledger("alice").len(), 1);
+        assert_eq!(reg.ledger("bob").len(), 1);
+        assert_eq!(reg.tenants_with_runs(), vec!["alice".to_string(), "bob".to_string()]);
+        // Chaining: the anonymous output resolves in alice's namespace.
+        let chained = MultiplyReq::new("public/A", &ra.c);
+        reg.multiply("alice", &chained).unwrap();
+        // But bob cannot reference alice's output.
+        assert!(reg.multiply("bob", &chained).is_err());
+        // Bench docs exist exactly for tenants with runs and validate.
+        let doc = reg.bench_doc("alice").unwrap();
+        crate::coordinator::validate_bench(&doc.to_json()).unwrap();
+        assert!(reg.bench_doc("carol").is_none());
+    }
+
+    #[test]
+    fn named_output_reuses_shape_checked_operand() {
+        let mut reg = small_registry();
+        reg.load_csr("t", "A", &er(32, 11)).unwrap();
+        reg.load_dense("t", "H", &DenseSource::Random { nrows: 32, ncols: 8, seed: 12 }).unwrap();
+        let mut req = MultiplyReq::new("A", "H");
+        req.output = Some("H2".into());
+        req.verify = true;
+        let r1 = reg.multiply("t", &req).unwrap();
+        assert_eq!(r1.c, "t/H2");
+        // Second run writes the same resident in place.
+        let r2 = reg.multiply("t", &req).unwrap();
+        assert_eq!(r2.c, "t/H2");
+        assert_eq!(reg.list("t").iter().filter(|(n, _)| n == "t/H2").count(), 1);
+        // Wrong-shaped named output is rejected.
+        let mut bad = MultiplyReq::new("A", "H");
+        bad.output = Some("A".into());
+        assert!(reg.multiply("t", &bad).is_err());
+    }
+
+    #[test]
+    fn stats_body_reports_epochs_and_cache_state() {
+        let mut reg = small_registry();
+        reg.load_csr("t", "A", &er(32, 13)).unwrap();
+        let mut req = MultiplyReq::new("A", "A");
+        req.verify = true;
+        reg.multiply("t", &req).unwrap();
+        let body: HashMap<String, Jv> = reg.stats_body("t").into_iter().collect();
+        assert_eq!(body["runs"].as_i64(), Some(1));
+        assert_eq!(body["epochs"].as_arr().map(|a| a.len()), Some(1));
+        assert_eq!(body["fabric_epochs"].as_i64(), Some(1));
+        assert!(body["host_cache_bytes"].as_i64().unwrap() > 0);
+        assert_eq!(body["host_cache_cap"], Jv::Null);
+    }
+}

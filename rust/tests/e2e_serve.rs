@@ -1,0 +1,325 @@
+//! End-to-end tests of `sparta serve`: a real daemon on a loopback
+//! port, real `ServeClient` connections, concurrent tenants sharing
+//! `public/` residents, per-tenant stats-epoch isolation, host-cache
+//! eviction under a byte budget, admission refusal, deadlines, and
+//! graceful shutdown with per-tenant BENCH ledgers.
+
+use std::thread::JoinHandle;
+
+use sparta::coordinator::report::Jv;
+use sparta::coordinator::validate_bench;
+use sparta::serve::{
+    error_code, CsrSource, DenseSource, MultiplyReq, ServeClient, ServeConfig, ServeDaemon,
+    ServeSummary,
+};
+
+/// Bind on a free loopback port, serve on a background thread, and
+/// hand back the address clients should dial.
+fn spawn_daemon(mut cfg: ServeConfig) -> (JoinHandle<anyhow::Result<ServeSummary>>, String) {
+    cfg.addr = "127.0.0.1:0".to_string();
+    let daemon = ServeDaemon::bind(cfg).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || daemon.run());
+    (handle, addr)
+}
+
+fn small_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::new("127.0.0.1:0");
+    cfg.nprocs = 4;
+    cfg.seg_bytes = 64 << 20;
+    // Tests should fail fast, not hang for the 30 s production default.
+    cfg.queue_stall_ms = 5_000;
+    cfg
+}
+
+fn er(n: usize, seed: u64) -> CsrSource {
+    CsrSource::ErdosRenyi { n, avg_deg: 4, seed }
+}
+
+fn rand_dense(nrows: usize, seed: u64) -> DenseSource {
+    DenseSource::Random { nrows, ncols: 8, seed }
+}
+
+fn stat_f64(stats: &[(String, Jv)], key: &str) -> f64 {
+    stats.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_f64()).unwrap()
+}
+
+fn stat_i64(stats: &[(String, Jv)], key: &str) -> i64 {
+    stats.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_i64()).unwrap()
+}
+
+fn stat_epochs(stats: &[(String, Jv)]) -> Vec<i64> {
+    stats
+        .iter()
+        .find(|(k, _)| k == "epochs")
+        .and_then(|(_, v)| v.as_arr())
+        .unwrap()
+        .iter()
+        .map(|e| e.as_i64().unwrap())
+        .collect()
+}
+
+/// The acceptance-criterion scenario: three concurrent clients in two
+/// tenants multiply a shared `public/A`, every run verified, and the
+/// per-tenant ledgers show zero cross-tenant stat bleed.
+#[test]
+fn concurrent_tenants_share_residents_with_no_stat_bleed() {
+    let out_dir =
+        std::env::temp_dir().join(format!("sparta_serve_e2e_{}", std::process::id()));
+    let mut cfg = small_cfg();
+    cfg.out_dir = Some(out_dir.clone());
+    let (daemon, addr) = spawn_daemon(cfg);
+
+    // Seed the shared resident once from an admin connection.
+    let mut admin = ServeClient::connect(&addr, "public").unwrap();
+    let info = admin.load_csr("A", er(64, 7)).unwrap();
+    assert!(info.created);
+    assert_eq!(info.name, "public/A");
+
+    // Three clients, two tenants, all hammering public/A concurrently.
+    let workers: Vec<JoinHandle<()>> = [("alice", 1u64), ("alice", 2), ("bob", 3)]
+        .into_iter()
+        .enumerate()
+        .map(|(i, (tenant, seed))| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = ServeClient::connect(&addr, tenant).unwrap();
+                // Acquire the shared resident and bring a private dense.
+                let a = c.load_csr("public/A", er(64, 7)).unwrap();
+                assert!(!a.created, "public/A already resident: this is an acquire");
+                let h = format!("H{i}");
+                c.load_dense(&h, rand_dense(64, seed)).unwrap();
+                for _ in 0..2 {
+                    let mut req = MultiplyReq::new("public/A", &h);
+                    req.verify = true;
+                    let s = c.multiply(req).unwrap();
+                    assert!(s.verified);
+                    assert!(s.c.starts_with(&format!("{tenant}/")));
+                    assert!(s.flops > 0.0);
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    // Per-tenant stats: epoch sets are disjoint and the per-tenant byte
+    // totals sum to the fabric lifetime — the no-bleed property.
+    let mut alice = ServeClient::connect(&addr, "alice").unwrap();
+    let mut bob = ServeClient::connect(&addr, "bob").unwrap();
+    let sa = alice.stats().unwrap();
+    let sb = bob.stats().unwrap();
+    assert_eq!(stat_i64(&sa, "runs"), 4);
+    assert_eq!(stat_i64(&sb, "runs"), 2);
+    let ea = stat_epochs(&sa);
+    let eb = stat_epochs(&sb);
+    assert!(ea.iter().all(|e| !eb.contains(e)), "epoch sets must be disjoint: {ea:?} {eb:?}");
+    assert_eq!(stat_i64(&sa, "fabric_epochs"), 6, "six runs = six fabric epochs");
+    let lifetime = stat_f64(&sa, "lifetime_bytes_get");
+    let tenant_sum = stat_f64(&sa, "bytes_get") + stat_f64(&sb, "bytes_get");
+    let rel = (lifetime - tenant_sum).abs() / lifetime.max(1.0);
+    assert!(rel < 1e-9, "tenant bytes {tenant_sum} must sum to lifetime {lifetime}");
+
+    // Each tenant's live BENCH doc validates and contains only its runs.
+    let doc = alice.bench().unwrap().expect("alice has runs");
+    validate_bench(&doc).unwrap();
+    assert_eq!(doc.get("artifact").and_then(Jv::as_str), Some("tenant_alice"));
+    assert_eq!(doc.get("rows").and_then(Jv::as_arr).unwrap().len(), 4);
+
+    // Everyone sees public/A; nobody sees the other tenant's operands.
+    let names: Vec<String> = bob
+        .list()
+        .unwrap()
+        .iter()
+        .map(|op| op.get("name").and_then(Jv::as_str).unwrap().to_string())
+        .collect();
+    assert!(names.iter().any(|n| n == "public/A"));
+    assert!(names.iter().all(|n| !n.starts_with("alice/")));
+
+    // Graceful shutdown over the protocol, then the ledger files.
+    bob.shutdown().unwrap();
+    let summary = daemon.join().unwrap().unwrap();
+    assert_eq!(summary.tenants, vec!["alice".to_string(), "bob".to_string()]);
+    assert!(!summary.bench_paths.is_empty());
+    for path in &summary.bench_paths {
+        let text = std::fs::read_to_string(path).unwrap();
+        let doc = sparta::coordinator::parse_json(&text).unwrap();
+        validate_bench(&doc).unwrap();
+        let artifact = doc.get("artifact").and_then(Jv::as_str).unwrap();
+        assert!(artifact == "tenant_alice" || artifact == "tenant_bob");
+    }
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
+/// The host-copy LRU stays under its byte budget while verification
+/// keeps passing — eviction changes memory, never results.
+#[test]
+fn eviction_keeps_host_cache_under_budget_with_correct_results() {
+    let mut cfg = small_cfg();
+    let cap = 4096;
+    cfg.host_cache_bytes = cap;
+    let (daemon, addr) = spawn_daemon(cfg);
+
+    let mut c = ServeClient::connect(&addr, "t").unwrap();
+    c.load_csr("A", er(48, 11)).unwrap();
+    c.load_dense("H", rand_dense(48, 12)).unwrap();
+    for alg in ["sc", "sa", "rws"] {
+        let mut req = MultiplyReq::new("A", "H");
+        req.alg = sparta::algorithms::Alg::from_name(alg).unwrap();
+        req.verify = true;
+        let s = c.multiply(req).unwrap();
+        assert!(s.verified, "{alg} run must verify under eviction pressure");
+    }
+    let stats = c.stats().unwrap();
+    assert_eq!(stat_i64(&stats, "host_cache_cap"), cap as i64);
+    assert!(
+        stat_i64(&stats, "host_cache_bytes") <= cap as i64,
+        "cache exceeded its budget"
+    );
+    assert!(stat_i64(&stats, "host_cache_evictions") > 0, "a 4 KiB budget must evict");
+
+    c.shutdown().unwrap();
+    daemon.join().unwrap().unwrap();
+}
+
+/// Structured refusals: a zero-slot daemon answers `admission_full`
+/// for plans while control commands keep working, and an impossible
+/// deadline answers `timeout` without killing the daemon.
+#[test]
+fn admission_full_and_timeout_are_structured_errors() {
+    let mut cfg = small_cfg();
+    cfg.max_inflight = 0;
+    let (daemon, addr) = spawn_daemon(cfg);
+
+    let mut c = ServeClient::connect(&addr, "t").unwrap();
+    c.load_csr("A", er(32, 21)).unwrap();
+    let err = c.multiply(MultiplyReq::new("A", "A")).unwrap_err();
+    assert_eq!(error_code(&err), Some("admission_full"));
+    c.ping().expect("control commands bypass the plan cap");
+
+    // A 0 ms deadline expires before the engine can possibly answer;
+    // the connection and the daemon survive the dropped reply.
+    let mut req = MultiplyReq::new("A", "A");
+    req.timeout_ms = Some(0);
+    let err = c.multiply(req).unwrap_err();
+    // max_inflight = 0 refuses before the deadline can matter, so both
+    // codes are legal here; what matters is that it is one of the two
+    // structured refusals and the connection still works afterwards.
+    assert!(matches!(error_code(&err), Some("admission_full") | Some("timeout")));
+    c.ping().unwrap();
+
+    c.shutdown().unwrap();
+    daemon.join().unwrap().unwrap();
+}
+
+/// Dedicated deadline test on a daemon that does accept plans.
+#[test]
+fn per_request_deadline_times_out_without_killing_the_daemon() {
+    let (daemon, addr) = spawn_daemon(small_cfg());
+    let mut c = ServeClient::connect(&addr, "t").unwrap();
+    c.load_csr("A", er(48, 31)).unwrap();
+    let mut req = MultiplyReq::new("A", "A");
+    req.timeout_ms = Some(0);
+    let err = c.multiply(req).unwrap_err();
+    assert_eq!(error_code(&err), Some("timeout"));
+    // The daemon is alive and the next well-behaved request succeeds.
+    let s = c.multiply(MultiplyReq::new("A", "A")).unwrap();
+    assert!(s.c.starts_with("t/"));
+    // Unknown operands and foreign namespaces map to stable codes too.
+    let err = c.multiply(MultiplyReq::new("nope", "A")).unwrap_err();
+    assert_eq!(error_code(&err), Some("not_found"));
+    let err = c.multiply(MultiplyReq::new("carol/secret", "A")).unwrap_err();
+    assert_eq!(error_code(&err), Some("forbidden"));
+    c.shutdown().unwrap();
+    daemon.join().unwrap().unwrap();
+}
+
+/// Ref-counted residency over the wire: acquire/release across two
+/// connections, release-at-zero frees the name for reuse.
+#[test]
+fn residency_is_refcounted_across_connections() {
+    let (daemon, addr) = spawn_daemon(small_cfg());
+    let mut c1 = ServeClient::connect(&addr, "public").unwrap();
+    let mut c2 = ServeClient::connect(&addr, "other").unwrap();
+    assert!(c1.load_csr("A", er(32, 41)).unwrap().created);
+    let acq = c2.load_csr("public/A", er(32, 41)).unwrap();
+    assert!(!acq.created);
+    assert_eq!(acq.refs, 2);
+    assert_eq!(c1.unload("A").unwrap(), 1);
+    assert_eq!(c2.unload("public/A").unwrap(), 0);
+    let err = c2.multiply(MultiplyReq::new("public/A", "public/A")).unwrap_err();
+    assert_eq!(error_code(&err), Some("not_found"));
+    // The name is free again.
+    assert!(c2.load_csr("public/A", er(32, 42)).unwrap().created);
+    c1.shutdown().unwrap();
+    daemon.join().unwrap().unwrap();
+}
+
+/// Identical same-tenant requests may coalesce into shared fabric
+/// epochs; however the batching lands, the ledger row count equals the
+/// number of distinct epochs handed out (a coalesced batch is ONE run).
+#[test]
+fn coalesced_requests_share_epochs_and_ledger_rows() {
+    let (daemon, addr) = spawn_daemon(small_cfg());
+    let mut seed_client = ServeClient::connect(&addr, "t").unwrap();
+    seed_client.load_csr("public/A", er(64, 51)).unwrap();
+    seed_client.load_dense("public/H", rand_dense(64, 52)).unwrap();
+    // Occupy the engine so the burst queues up behind one run and the
+    // admission batcher gets a chance to coalesce it.
+    seed_client.multiply(MultiplyReq::new("public/A", "public/H")).unwrap();
+
+    let burst = 4;
+    let epochs: Vec<u64> = (0..burst)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = ServeClient::connect(&addr, "t").unwrap();
+                c.multiply(MultiplyReq::new("public/A", "public/H")).unwrap()
+            })
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| {
+            let s = h.join().unwrap();
+            assert!(s.coalesced >= 1);
+            s.epoch
+        })
+        .collect();
+    let mut distinct = epochs.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    // Timing decides how many coalesce, but the accounting must agree:
+    // one ledger row (and one fabric epoch) per distinct batch.
+    let stats = seed_client.stats().unwrap();
+    assert_eq!(stat_i64(&stats, "runs") as usize, 1 + distinct.len());
+    assert!(distinct.len() <= burst);
+    seed_client.shutdown().unwrap();
+    daemon.join().unwrap().unwrap();
+}
+
+/// Shutdown via the handle (the SIGTERM path minus the signal): the
+/// accept loop notices the flag, drains, and returns a summary.
+#[test]
+fn shutdown_handle_drains_like_a_signal() {
+    let mut cfg = small_cfg();
+    let out_dir =
+        std::env::temp_dir().join(format!("sparta_serve_sig_{}", std::process::id()));
+    cfg.out_dir = Some(out_dir.clone());
+    cfg.addr = "127.0.0.1:0".to_string();
+    let daemon = ServeDaemon::bind(cfg).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let flag = daemon.shutdown_handle();
+    let handle = std::thread::spawn(move || daemon.run());
+
+    let mut c = ServeClient::connect(&addr, "t").unwrap();
+    c.load_csr("A", er(32, 61)).unwrap();
+    c.multiply(MultiplyReq::new("A", "A")).unwrap();
+
+    flag.store(true, std::sync::atomic::Ordering::SeqCst);
+    let summary = handle.join().unwrap().unwrap();
+    assert_eq!(summary.tenants, vec!["t".to_string()]);
+    assert_eq!(summary.bench_paths.len(), 1);
+    assert!(summary.bench_paths[0].exists());
+    std::fs::remove_dir_all(&out_dir).ok();
+}

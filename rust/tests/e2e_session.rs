@@ -105,6 +105,37 @@ fn per_run_reports_match_the_one_shot_driver() {
 }
 
 #[test]
+fn concurrent_independent_sessions_stay_fully_isolated() {
+    // Two sessions on two threads, each with its own fabric: epochs,
+    // ledgers, and stats never cross — the property `sparta serve`
+    // relies on when tests run daemons next to in-process sessions.
+    let handles: Vec<_> = (0..2u64)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let a = gen::erdos_renyi(64, 4, 100 + i);
+                let mut sess = session(4);
+                let da = sess.load_csr(&a);
+                let db = sess.random_dense(a.ncols, 8, i);
+                let runs = 2 + i as usize;
+                for _ in 0..runs {
+                    sess.plan(da, db).verify(true).execute().unwrap();
+                }
+                let bytes = sess.fabric().lifetime_stats().bytes_get;
+                (runs, sess.fabric().epochs() as usize, sess.ledger().len(), bytes)
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (runs, epochs, ledger, bytes) in &results {
+        assert_eq!(epochs, runs, "each session counts only its own launches");
+        assert_eq!(ledger, runs, "each session ledgers only its own runs");
+        assert!(*bytes > 0.0);
+    }
+    // Different run counts ⇒ different totals: nothing was shared.
+    assert_ne!(results[0].1, results[1].1);
+}
+
+#[test]
 fn session_ledger_rolls_up_into_one_bench_doc() {
     let a = gen::erdos_renyi(64, 4, 8);
     let mut sess = session(4);
