@@ -52,10 +52,18 @@ for pid in "${pids[@]}"; do
   wait "$pid" # set -e fails the script on any non-zero client
 done
 
+echo "== non-plus-times multiply over the wire =="
+# min-plus with --verify goes through the exact-equality gate; a daemon
+# that dropped the semiring field would fail this request.
+"$BIN" client multiply public/A public/A --addr "$ADDR" --tenant alice \
+  --semiring min-plus --verify
+"$BIN" client multiply public/A H1 --addr "$ADDR" --tenant bob \
+  --semiring or-and --verify
+
 echo "== live per-tenant ledgers + stats =="
 "$BIN" client bench --addr "$ADDR" --tenant alice --out "$OUT-live"
 test -s "$OUT-live/BENCH_tenant_alice.json"
-"$BIN" client stats --addr "$ADDR" --tenant bob | grep -q '^runs: 3'
+"$BIN" client stats --addr "$ADDR" --tenant bob | grep -q '^runs: 4'
 "$BIN" client list --addr "$ADDR" --tenant alice | grep -q 'public/A'
 
 echo "== graceful shutdown via the protocol =="

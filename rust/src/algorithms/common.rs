@@ -7,7 +7,7 @@ use std::collections::{HashMap, VecDeque};
 use crate::dist::{AccMsg, AccQueues, DistCsr, DistDense, ResGrid2D, ResGrid3D};
 use crate::dist::{CsrTileFuture, DenseTileFuture};
 use crate::fabric::{Kind, Pe};
-use crate::matrix::{local_spmm, Coo, Csr, Dense};
+use crate::matrix::{local_spmm, Coo, Csr, Dense, Semiring};
 use crate::runtime::TileBackend;
 
 /// How remote B tiles are fetched — the communication-mode selector
@@ -68,6 +68,11 @@ pub struct SpmmCtx {
     /// Prefetch depth of the k-lookahead pipeline (0 = blocking fetches
     /// on the critical path; see [`TilePipeline`]).
     pub lookahead: usize,
+    /// The (⊕, ⊗) algebra every local multiply and accumulation runs
+    /// over. Tiling, scheduling, comm mode, and lookahead are
+    /// semiring-oblivious — only the scalar kernels and accumulators
+    /// dispatch on this.
+    pub semiring: Semiring,
 }
 
 /// SpGEMM context (C = A·B, all sparse).
@@ -89,6 +94,8 @@ pub struct SpgemmCtx {
     pub trace: bool,
     /// Prefetch depth of the k-lookahead pipeline (see [`SpmmCtx::lookahead`]).
     pub lookahead: usize,
+    /// The (⊕, ⊗) algebra of this multiply (see [`SpmmCtx::semiring`]).
+    pub semiring: Semiring,
 }
 
 /// Default prefetch depth of the k-lookahead pipeline: double
@@ -118,6 +125,35 @@ pub const DEFAULT_LOOKAHEAD: usize = 2;
 /// The item type is free: algorithms that prefetch A and B together
 /// (stationary-C) issue a future *pair* per step; algorithms that
 /// prefetch only B issue a single future.
+///
+/// # Charging rules (virtual-time accounting)
+///
+/// The pipeline itself charges nothing — every nanosecond is charged
+/// by the futures it holds, under these invariants:
+///
+/// 1. **Issue is free; the transfer is timestamped at issue.** An
+///    async get records its completion time as `issue_clock +
+///    link.xfer_ns(bytes)` the moment it is issued. Prefetching
+///    earlier therefore moves the completion time earlier — that is
+///    the entire mechanism of overlap.
+/// 2. **Wait charges only the remainder.** Waiting a future advances
+///    the PE clock to `max(now, completion_time)`; the gap, if any, is
+///    what the tracer attributes as comm wait. A fetch that finished
+///    during local compute charges zero.
+/// 3. **Bytes and op counts are depth-invariant.** Which bytes move,
+///    how many gets are issued, and what each transfer costs on the
+///    link are decided by the schedule and comm mode alone; depth
+///    decides only *when* the remainder in rule 2 is nonzero. The
+///    depth-equivalence proptest pins this (flops, bytes, get counts,
+///    and comp time bitwise equal across depths).
+/// 4. **Local compute is charged at the multiply, never here** — via
+///    [`local_spmm_charged`] and the SpGEMM merge paths, which also
+///    dispatch on the context's [`Semiring`] (the algebra changes what
+///    is computed, not what is charged: every algebra's scalar op
+///    costs one flop in the model).
+/// 5. **Steal loops fetch at depth 0** deliberately: a lost claim race
+///    would strand speculative prefetches as wasted (but charged)
+///    transfers, breaking rule 3's "bytes never depend on timing".
 pub struct TilePipeline<I, F, T>
 where
     I: Iterator,
@@ -273,30 +309,35 @@ impl PendingTracker {
 }
 
 /// Local dense accumulators for this rank's C tiles (SpMM).
+///
+/// Tiles start from the semiring's additive identity (not 0.0 — a
+/// min-plus accumulator starts at +∞) and partials fold in with ⊕.
 pub struct DenseAccumulators {
     tiles: HashMap<(u32, u32), Dense>,
+    sr: Semiring,
 }
 
 impl DenseAccumulators {
-    pub fn new(c: &DistDense, mine: &[(usize, usize)]) -> Self {
+    pub fn new(c: &DistDense, mine: &[(usize, usize)], sr: Semiring) -> Self {
         let tiles = mine
             .iter()
             .map(|&(i, j)| {
                 let (r, cc) = c.tile_dims(i, j);
-                ((i as u32, j as u32), Dense::zeros(r, cc))
+                ((i as u32, j as u32), Dense::filled(r, cc, sr.zero()))
             })
             .collect();
-        DenseAccumulators { tiles }
+        DenseAccumulators { tiles, sr }
     }
 
     pub fn get_mut(&mut self, i: usize, j: usize) -> &mut Dense {
         self.tiles.get_mut(&(i as u32, j as u32)).expect("not my tile")
     }
 
-    /// Accumulate `part` into tile (i, j), charging the add as `kind`.
+    /// ⊕-accumulate `part` into tile (i, j), charging the add as `kind`.
     pub fn accumulate(&mut self, pe: &Pe, i: usize, j: usize, part: &Dense, kind: Kind) {
+        let sr = self.sr;
         let tile = self.get_mut(i, j);
-        tile.add_assign(part);
+        tile.add_assign_sr(part, sr);
         let elems = part.data.len() as f64;
         pe.charge_kernel_as(elems, 12.0 * elems, kind);
     }
@@ -313,12 +354,13 @@ impl DenseAccumulators {
 /// merged once at the end (cheaper than repeated pairwise adds).
 pub struct SparseAccumulators {
     parts: HashMap<(u32, u32), Vec<Csr>>,
+    sr: Semiring,
 }
 
 impl SparseAccumulators {
-    pub fn new(mine: &[(usize, usize)]) -> Self {
+    pub fn new(mine: &[(usize, usize)], sr: Semiring) -> Self {
         let parts = mine.iter().map(|&(i, j)| ((i as u32, j as u32), Vec::new())).collect();
-        SparseAccumulators { parts }
+        SparseAccumulators { parts, sr }
     }
 
     pub fn push(&mut self, i: usize, j: usize, part: Csr) {
@@ -328,9 +370,10 @@ impl SparseAccumulators {
     /// Merge the partials of each tile and replace it in C. The merge is
     /// charged as accumulation work.
     pub fn flush(&mut self, pe: &Pe, c: &DistCsr, kind: Kind) {
+        let sr = self.sr;
         for (&(i, j), parts) in self.parts.iter_mut() {
             let (tr, tc) = c.tile_dims(i as usize, j as usize);
-            let merged = merge_csr(tr, tc, parts);
+            let merged = merge_csr_sr(tr, tc, parts, sr);
             let nnz_in: usize = parts.iter().map(|p| p.nnz()).sum();
             pe.charge_kernel_as(nnz_in as f64, 16.0 * nnz_in as f64, kind);
             c.replace_tile(pe, i as usize, j as usize, &merged);
@@ -340,6 +383,12 @@ impl SparseAccumulators {
 
 /// Merge sparse partial tiles by concatenation + duplicate summing.
 pub fn merge_csr(nrows: usize, ncols: usize, parts: &[Csr]) -> Csr {
+    merge_csr_sr(nrows, ncols, parts, Semiring::PlusTimes)
+}
+
+/// Merge sparse partial tiles by concatenation + duplicate ⊕-combining
+/// under the semiring (min-plus merges keep the shortest partial).
+pub fn merge_csr_sr(nrows: usize, ncols: usize, parts: &[Csr], sr: Semiring) -> Csr {
     let total: usize = parts.iter().map(|p| p.nnz()).sum();
     let mut coo = Coo::with_capacity(nrows, ncols, total);
     for p in parts {
@@ -351,12 +400,26 @@ pub fn merge_csr(nrows: usize, ncols: usize, parts: &[Csr]) -> Csr {
             }
         }
     }
-    Csr::from_coo(coo)
+    Csr::from_coo_sr(coo, sr)
 }
 
-/// One local SpMM with cost charging, through the selected backend.
-pub fn local_spmm_charged(pe: &Pe, backend: &TileBackend, a: &Csr, b: &Dense, c: &mut Dense) {
-    backend.spmm_acc(a, b, c);
+/// One local SpMM with cost charging, through the selected backend. The
+/// PJRT backend only implements plus-times, so other semirings always
+/// run the native generic kernel (plan execution rejects the Pjrt +
+/// non-plus-times combination up front).
+pub fn local_spmm_charged(
+    pe: &Pe,
+    backend: &TileBackend,
+    a: &Csr,
+    b: &Dense,
+    c: &mut Dense,
+    sr: Semiring,
+) {
+    if sr.is_plus_times() {
+        backend.spmm_acc(a, b, c);
+    } else {
+        local_spmm::spmm_acc_sr(a, b, c, sr);
+    }
     pe.charge_kernel(local_spmm::spmm_flops(a, b.ncols), local_spmm::spmm_bytes(a, b.ncols));
 }
 

@@ -5,7 +5,7 @@
 //! `renew_tiles`.
 
 use crate::fabric::{Kind, Pe, SpanCtx};
-use crate::matrix::{local_spgemm, Csr};
+use crate::matrix::{local_spgemm, Csr, Semiring};
 
 use super::common::{
     drain_spgemm_queue, fetch_spgemm_b, wait_for_contributions, LibOverhead, PendingTracker,
@@ -13,8 +13,8 @@ use super::common::{
 };
 
 /// One local sparse multiply with roofline cost charging.
-fn local_spgemm_charged(pe: &Pe, a: &Csr, b: &Csr) -> Csr {
-    let out = local_spgemm::spgemm(a, b);
+fn local_spgemm_charged(pe: &Pe, a: &Csr, b: &Csr, sr: Semiring) -> Csr {
+    let out = local_spgemm::spgemm_sr(a, b, sr);
     pe.charge_kernel(out.flops, local_spgemm::spgemm_bytes(a, b, out.c.nnz()));
     out.c
 }
@@ -24,7 +24,7 @@ fn local_spgemm_charged(pe: &Pe, a: &Csr, b: &Csr) -> Csr {
 pub fn spgemm_stationary_c(pe: &Pe, ctx: &SpgemmCtx) {
     let t = ctx.a.t();
     let my_c = ctx.c.grid.my_tiles(pe.rank());
-    let mut acc = SparseAccumulators::new(&my_c);
+    let mut acc = SparseAccumulators::new(&my_c, ctx.semiring);
     for &(i, j) in &my_c {
         let k_off = i + j;
         let sched = (0..t).map(|k_| (k_ + k_off) % t);
@@ -34,7 +34,7 @@ pub fn spgemm_stationary_c(pe: &Pe, ctx: &SpgemmCtx) {
         while let Some((fut_a, fut_b)) = pipe.take(pe) {
             let local_a = fut_a.wait(pe);
             let local_b = fut_b.wait(pe);
-            let part = local_spgemm_charged(pe, &local_a, &local_b);
+            let part = local_spgemm_charged(pe, &local_a, &local_b, ctx.semiring);
             if part.nnz() > 0 {
                 acc.push(i, j, part);
             }
@@ -50,7 +50,7 @@ pub fn spgemm_stationary_c(pe: &Pe, ctx: &SpgemmCtx) {
 pub fn spgemm_stationary_a(pe: &Pe, ctx: &SpgemmCtx) {
     let t = ctx.a.t();
     let my_c = ctx.c.grid.my_tiles(pe.rank());
-    let mut acc = SparseAccumulators::new(&my_c);
+    let mut acc = SparseAccumulators::new(&my_c, ctx.semiring);
     let mut pending = PendingTracker::new(&my_c, t);
 
     for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
@@ -62,7 +62,7 @@ pub fn spgemm_stationary_a(pe: &Pe, ctx: &SpgemmCtx) {
         });
         while let Some((j, fut_b)) = pipe.take(pe) {
             let b_tile = fut_b.wait(pe);
-            let part = local_spgemm_charged(pe, &a_tile, &b_tile);
+            let part = local_spgemm_charged(pe, &a_tile, &b_tile, ctx.semiring);
             let owner = ctx.c.owner(i, j);
             if owner == pe.rank() {
                 if part.nnz() > 0 {
@@ -72,7 +72,7 @@ pub fn spgemm_stationary_a(pe: &Pe, ctx: &SpgemmCtx) {
             } else {
                 // Empty partials are still sent: the owner counts t
                 // contributions per tile for termination.
-                ctx.queues.send_sparse_partial(pe, owner, i, j, &part);
+                ctx.queues.send_sparse_partial(pe, owner, i, j, &part, ctx.semiring);
             }
             drain_spgemm_queue(pe, ctx, &mut acc, &mut pending, false);
         }
@@ -94,7 +94,7 @@ pub fn spgemm_summa(pe: &Pe, ctx: &SpgemmCtx, lib: &LibOverhead) {
     let (i, j) = ctx.c.grid.my_tiles(pe.rank())[0];
     let row_team = pe.team("summa-row", i as u64, t);
     let col_team = pe.team("summa-col", j as u64, t);
-    let mut acc = SparseAccumulators::new(&[(i, j)]);
+    let mut acc = SparseAccumulators::new(&[(i, j)], ctx.semiring);
 
     // As in SpMM SUMMA: one-sided gets may be issued ahead across the
     // team barriers; consumption stays bulk-synchronous.
@@ -116,7 +116,7 @@ pub fn spgemm_summa(pe: &Pe, ctx: &SpgemmCtx, lib: &LibOverhead) {
         let b_tile = fut_b.wait(pe);
         lib.charge_tile(pe, b_src, b_bytes);
         pe.barrier_on(&col_team);
-        let part = local_spgemm_charged(pe, &a_tile, &b_tile);
+        let part = local_spgemm_charged(pe, &a_tile, &b_tile, ctx.semiring);
         if part.nnz() > 0 {
             acc.push(i, j, part);
         }
@@ -130,7 +130,7 @@ pub fn spgemm_random_ws_a(pe: &Pe, ctx: &SpgemmCtx) {
     let t = ctx.a.t();
     let res = ctx.res2d.as_ref().expect("random WS needs a 2D reservation grid");
     let my_c = ctx.c.grid.my_tiles(pe.rank());
-    let mut acc = SparseAccumulators::new(&my_c);
+    let mut acc = SparseAccumulators::new(&my_c, ctx.semiring);
     let mut pending = PendingTracker::new(&my_c, t);
 
     let attempt = |pe: &Pe,
@@ -158,7 +158,7 @@ pub fn spgemm_random_ws_a(pe: &Pe, ctx: &SpgemmCtx) {
             // any speculative prefetch — so steal loops fetch at the
             // unified primitive's depth-0 point: issue + immediate wait.
             let b_tile = fetch_spgemm_b(pe, ctx, i, k, j).wait(pe);
-            let part = local_spgemm_charged(pe, a_ref, &b_tile);
+            let part = local_spgemm_charged(pe, a_ref, &b_tile, ctx.semiring);
             let owner = ctx.c.owner(i, j);
             if owner == pe.rank() {
                 if part.nnz() > 0 {
@@ -166,7 +166,7 @@ pub fn spgemm_random_ws_a(pe: &Pe, ctx: &SpgemmCtx) {
                 }
                 pending.record(i, j);
             } else {
-                ctx.queues.send_sparse_partial(pe, owner, i, j, &part);
+                ctx.queues.send_sparse_partial(pe, owner, i, j, &part, ctx.semiring);
             }
             {
                 let mut s = pe.stats_mut();

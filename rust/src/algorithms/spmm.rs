@@ -29,11 +29,11 @@ pub fn spmm_stationary_c(pe: &Pe, ctx: &SpmmCtx) {
             (ctx.a.async_get_tile(pe, i, k), fetch_spmm_b(pe, ctx, i, k, j))
         });
         let (cr, cc) = ctx.c.tile_dims(i, j);
-        let mut local_c = Dense::zeros(cr, cc);
+        let mut local_c = Dense::filled(cr, cc, ctx.semiring.zero());
         while let Some((fut_a, fut_b)) = pipe.take(pe) {
             let local_a = fut_a.wait(pe);
             let local_b = fut_b.wait(pe);
-            local_spmm_charged(pe, &ctx.backend, &local_a, &local_b, &mut local_c);
+            local_spmm_charged(pe, &ctx.backend, &local_a, &local_b, &mut local_c, ctx.semiring);
         }
         ctx.c.put_tile_as(pe, i, j, &local_c, Kind::Comm);
     }
@@ -52,7 +52,7 @@ pub fn spmm_stationary_c_unoptimized(pe: &Pe, ctx: &SpmmCtx) {
     let t = ctx.a.t();
     for (i, j) in ctx.c.grid.my_tiles(pe.rank()) {
         let (cr, cc) = ctx.c.tile_dims(i, j);
-        let mut local_c = Dense::zeros(cr, cc);
+        let mut local_c = Dense::filled(cr, cc, ctx.semiring.zero());
         // Forced depth 0 (and no k offset): every fetch is issued at
         // take and waited immediately — the blocking baseline.
         let mut pipe = TilePipeline::new(pe, 0, 0..t, |pe, k| {
@@ -61,7 +61,7 @@ pub fn spmm_stationary_c_unoptimized(pe: &Pe, ctx: &SpmmCtx) {
         while let Some((fut_a, fut_b)) = pipe.take(pe) {
             let local_a = fut_a.wait(pe);
             let local_b = fut_b.wait(pe);
-            local_spmm_charged(pe, &ctx.backend, &local_a, &local_b, &mut local_c);
+            local_spmm_charged(pe, &ctx.backend, &local_a, &local_b, &mut local_c, ctx.semiring);
         }
         ctx.c.put_tile_as(pe, i, j, &local_c, Kind::Comm);
     }
@@ -77,7 +77,7 @@ pub fn spmm_stationary_c_unoptimized(pe: &Pe, ctx: &SpmmCtx) {
 pub fn spmm_stationary_b(pe: &Pe, ctx: &SpmmCtx) {
     let t = ctx.a.t();
     let my_c = ctx.c.grid.my_tiles(pe.rank());
-    let mut acc = DenseAccumulators::new(&ctx.c, &my_c);
+    let mut acc = DenseAccumulators::new(&ctx.c, &my_c, ctx.semiring);
     let mut pending = PendingTracker::new(&my_c, t);
 
     for (k, j) in ctx.b.grid.my_tiles(pe.rank()) {
@@ -93,14 +93,14 @@ pub fn spmm_stationary_b(pe: &Pe, ctx: &SpmmCtx) {
         while let Some((i, fut_a)) = pipe.take(pe) {
             let a_tile = fut_a.wait(pe);
             let (cr, cc) = ctx.c.tile_dims(i, j);
-            let mut part = Dense::zeros(cr, cc);
-            local_spmm_charged(pe, &ctx.backend, &a_tile, &b_tile, &mut part);
+            let mut part = Dense::filled(cr, cc, ctx.semiring.zero());
+            local_spmm_charged(pe, &ctx.backend, &a_tile, &b_tile, &mut part, ctx.semiring);
             let owner = ctx.c.owner(i, j);
             if owner == pe.rank() {
                 acc.accumulate(pe, i, j, &part, Kind::Acc);
                 pending.record(i, j);
             } else {
-                ctx.queues.send_dense_partial(pe, owner, i, j, &part);
+                ctx.queues.send_dense_partial(pe, owner, i, j, &part, ctx.semiring);
             }
             drain_spmm_queue(pe, ctx, &mut acc, &mut pending, false);
         }
@@ -124,7 +124,7 @@ pub fn spmm_stationary_b(pe: &Pe, ctx: &SpmmCtx) {
 pub fn spmm_stationary_a(pe: &Pe, ctx: &SpmmCtx) {
     let t = ctx.a.t();
     let my_c = ctx.c.grid.my_tiles(pe.rank());
-    let mut acc = DenseAccumulators::new(&ctx.c, &my_c);
+    let mut acc = DenseAccumulators::new(&ctx.c, &my_c, ctx.semiring);
     let mut pending = PendingTracker::new(&my_c, t);
 
     for (i, k) in ctx.a.grid.my_tiles(pe.rank()) {
@@ -137,14 +137,14 @@ pub fn spmm_stationary_a(pe: &Pe, ctx: &SpmmCtx) {
         while let Some((j, fut_b)) = pipe.take(pe) {
             let b_tile = fut_b.wait(pe);
             let (cr, cc) = ctx.c.tile_dims(i, j);
-            let mut part = Dense::zeros(cr, cc);
-            local_spmm_charged(pe, &ctx.backend, &a_tile, &b_tile, &mut part);
+            let mut part = Dense::filled(cr, cc, ctx.semiring.zero());
+            local_spmm_charged(pe, &ctx.backend, &a_tile, &b_tile, &mut part, ctx.semiring);
             let owner = ctx.c.owner(i, j);
             if owner == pe.rank() {
                 acc.accumulate(pe, i, j, &part, Kind::Acc);
                 pending.record(i, j);
             } else {
-                ctx.queues.send_dense_partial(pe, owner, i, j, &part);
+                ctx.queues.send_dense_partial(pe, owner, i, j, &part, ctx.semiring);
             }
             // Interleave: apply any updates that arrived meanwhile.
             drain_spmm_queue(pe, ctx, &mut acc, &mut pending, false);
@@ -176,7 +176,7 @@ pub fn spmm_summa(pe: &Pe, ctx: &SpmmCtx, lib: &LibOverhead) {
     let col_team = pe.team("summa-col", j as u64, t);
 
     let (cr, cc) = ctx.c.tile_dims(i, j);
-    let mut local_c = Dense::zeros(cr, cc);
+    let mut local_c = Dense::filled(cr, cc, ctx.semiring.zero());
     // One-sided gets need no rendezvous, so the lookahead pipeline may
     // issue fetches for future iterations across the team barriers; the
     // barriers still pace the *consumption* of every stage.
@@ -202,7 +202,7 @@ pub fn spmm_summa(pe: &Pe, ctx: &SpmmCtx, lib: &LibOverhead) {
         let b_tile = fut_b.wait(pe);
         lib.charge_tile(pe, b_src, b_bytes);
         pe.barrier_on(&col_team);
-        local_spmm_charged(pe, &ctx.backend, &a_tile, &b_tile, &mut local_c);
+        local_spmm_charged(pe, &ctx.backend, &a_tile, &b_tile, &mut local_c, ctx.semiring);
     }
     ctx.c.put_tile_as(pe, i, j, &local_c, Kind::Comm);
     pe.barrier();

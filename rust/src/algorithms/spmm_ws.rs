@@ -41,7 +41,7 @@ fn deliver(
         acc.accumulate(pe, i, j, part, Kind::Acc);
         pending.record(i, j);
     } else {
-        ctx.queues.send_dense_partial(pe, owner, i, j, part);
+        ctx.queues.send_dense_partial(pe, owner, i, j, part, ctx.semiring);
     }
 }
 
@@ -84,8 +84,8 @@ fn attempt_work_2d(
         // primitive at its depth-0 point: issue + immediate wait.
         let b_tile = fetch_spmm_b(pe, ctx, i, k, j).wait(pe);
         let (cr, cc) = ctx.c.tile_dims(i, j);
-        let mut part = Dense::zeros(cr, cc);
-        local_spmm_charged(pe, &ctx.backend, a_ref, &b_tile, &mut part);
+        let mut part = Dense::filled(cr, cc, ctx.semiring.zero());
+        local_spmm_charged(pe, &ctx.backend, a_ref, &b_tile, &mut part, ctx.semiring);
         deliver(pe, ctx, acc, pending, i, j, &part);
         {
             let mut s = pe.stats_mut();
@@ -103,7 +103,7 @@ fn attempt_work_2d(
 pub fn spmm_random_ws_a(pe: &Pe, ctx: &SpmmCtx) {
     let t = ctx.a.t();
     let my_c = ctx.c.grid.my_tiles(pe.rank());
-    let mut acc = DenseAccumulators::new(&ctx.c, &my_c);
+    let mut acc = DenseAccumulators::new(&ctx.c, &my_c, ctx.semiring);
     let mut pending = PendingTracker::new(&my_c, t);
 
     // Do work for my tiles.
@@ -161,8 +161,8 @@ fn do_component(
         }
     };
     let (cr, cc) = ctx.c.tile_dims(i, j);
-    let mut part = Dense::zeros(cr, cc);
-    local_spmm_charged(pe, &ctx.backend, a_ref, b_ref, &mut part);
+    let mut part = Dense::filled(cr, cc, ctx.semiring.zero());
+    local_spmm_charged(pe, &ctx.backend, a_ref, b_ref, &mut part, ctx.semiring);
     deliver(pe, ctx, acc, pending, i, j, &part);
 }
 
@@ -177,7 +177,7 @@ pub fn spmm_locality_ws(pe: &Pe, ctx: &SpmmCtx, stationary: Stationary) {
     let t = ctx.a.t();
     let res = ctx.res3d.as_ref().expect("locality-aware WS needs a 3D reservation grid");
     let my_c = ctx.c.grid.my_tiles(pe.rank());
-    let mut acc = DenseAccumulators::new(&ctx.c, &my_c);
+    let mut acc = DenseAccumulators::new(&ctx.c, &my_c, ctx.semiring);
     let mut pending = PendingTracker::new(&my_c, t);
 
     // Phase 1: own work.
@@ -367,7 +367,7 @@ mod tests {
         let (_, stats) = fx.fabric.launch(|pe| {
             if pe.rank() == 1 {
                 let my_c = fx.ctx.c.grid.my_tiles(pe.rank());
-                let mut acc = DenseAccumulators::new(&fx.ctx.c, &my_c);
+                let mut acc = DenseAccumulators::new(&fx.ctx.c, &my_c, fx.ctx.semiring);
                 let mut pending = PendingTracker::new(&my_c, t);
                 steal_from_own_b(pe, &fx.ctx, &mut acc, &mut pending);
             }

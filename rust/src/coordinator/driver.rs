@@ -36,6 +36,7 @@ fn session_config(
         seg_bytes,
         backend: backend.clone(),
         pacing: true,
+        host_cache_bytes: usize::MAX,
     }
 }
 
@@ -227,6 +228,7 @@ mod tests {
         assert_eq!(cfg.seed, 0x5EED);
         assert!(matches!(cfg.backend, TileBackend::Native));
         assert_eq!(cfg.lookahead, crate::algorithms::DEFAULT_LOOKAHEAD);
+        assert!(cfg.semiring.is_plus_times());
     }
 
     #[test]

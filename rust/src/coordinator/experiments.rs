@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::algorithms::{Comm, SpgemmAlg, SpmmAlg, DEFAULT_LOOKAHEAD};
 use crate::analysis::loadimb::{grid_load_imbalance, spgemm_tile_flops};
 use crate::fabric::NetProfile;
-use crate::matrix::{local_spgemm, suite};
+use crate::matrix::{local_spgemm, suite, Semiring};
 use crate::roofline;
 use crate::util::fmt_ns;
 
@@ -38,6 +38,11 @@ pub struct ExpOpts {
     /// Prefetch depth of the k-lookahead tile pipeline for every fabric
     /// run (`--lookahead 0` reproduces the blocking-fetch baseline).
     pub lookahead: usize,
+    /// The (⊕, ⊗) algebra for every multiply the harness performs
+    /// (`--semiring min-plus` reruns a figure under the tropical
+    /// algebra). The scenario artifacts (`bfs`, `apsp`, `mcl`) pick
+    /// their own semirings and ignore this.
+    pub semiring: Semiring,
 }
 
 impl Default for ExpOpts {
@@ -49,6 +54,7 @@ impl Default for ExpOpts {
             comm: Comm::FullTile,
             trace: false,
             lookahead: DEFAULT_LOOKAHEAD,
+            semiring: Semiring::default(),
         }
     }
 }
@@ -133,6 +139,7 @@ pub fn fig2(opts: &ExpOpts) -> Result<Vec<RooflinePoint>> {
         cfg.comm = opts.comm;
         cfg.trace = opts.trace;
         cfg.lookahead = opts.lookahead;
+        cfg.semiring = opts.semiring;
         let run = run_spmm(&a, &cfg)?;
         let achieved = run.report.gflops();
         let row = format!(
@@ -182,6 +189,7 @@ pub fn fig2(opts: &ExpOpts) -> Result<Vec<RooflinePoint>> {
         cfg.comm = opts.comm;
         cfg.trace = opts.trace;
         cfg.lookahead = opts.lookahead;
+        cfg.semiring = opts.semiring;
         let run = run_spgemm(&a4, &cfg)?;
         let achieved = run.report.gflops();
         let row = format!(
@@ -266,6 +274,7 @@ fn spmm_sweep(
                         .verify(opts.verify)
                         .trace(opts.trace)
                         .lookahead(opts.lookahead)
+                        .semiring(opts.semiring)
                         .execute()?;
                     let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
@@ -355,6 +364,7 @@ pub fn fig5(opts: &ExpOpts) -> Result<Vec<ScalingRow>> {
                         .verify(opts.verify)
                         .trace(opts.trace)
                         .lookahead(opts.lookahead)
+                        .semiring(opts.semiring)
                         .execute()?;
                     let row = format!(
                         "    {:<16} p={:<3} runtime {:>12}",
@@ -512,6 +522,7 @@ pub fn table2a(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
             cfg.comm = opts.comm;
             cfg.trace = opts.trace;
             cfg.lookahead = opts.lookahead;
+            cfg.semiring = opts.semiring;
             let run = run_spmm(&amazon, &cfg)?;
             rows.push(t2_row(opts, "Summit", "amazon", cfg.n_cols, &run.report));
         }
@@ -528,6 +539,7 @@ pub fn table2a(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
             cfg.comm = opts.comm;
             cfg.trace = opts.trace;
             cfg.lookahead = opts.lookahead;
+            cfg.semiring = opts.semiring;
             let run = run_spmm(&nm7, &cfg)?;
             rows.push(t2_row(opts, "DGX-2", "Nm-7", cfg.n_cols, &run.report));
         }
@@ -554,6 +566,7 @@ pub fn table2b(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
             cfg.comm = opts.comm;
             cfg.trace = opts.trace;
             cfg.lookahead = opts.lookahead;
+            cfg.semiring = opts.semiring;
             let run = run_spgemm(&gene, &cfg)?;
             rows.push(t2_row(opts, env, "Mouse Gene", 0, &run.report));
         }
@@ -565,9 +578,13 @@ pub fn table2b(opts: &ExpOpts) -> Result<Vec<Table2Row>> {
 // Measured-perf pipeline: run a harness, emit BENCH_<artifact>.json
 // ---------------------------------------------------------------------
 
-/// Every figure/table harness with a BENCH emitter, in `repro all` order.
-pub const BENCH_ARTIFACTS: &[&str] =
-    &["fig1", "fig2", "fig3", "fig4", "fig5", "table1", "table2a", "table2b"];
+/// Every figure/table harness with a BENCH emitter, in `repro all`
+/// order. The trailing three are the graph-analytics scenarios
+/// (`coordinator::scenarios`): BFS frontier expansion (or-and), APSP
+/// block relaxation (min-plus) and Markov clustering (plus-times).
+pub const BENCH_ARTIFACTS: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "table1", "table2a", "table2b", "bfs", "apsp", "mcl",
+];
 
 fn scaling_rows_into(doc: &mut BenchDoc, rows: &[ScalingRow]) {
     for row in rows {
@@ -641,6 +658,19 @@ pub fn bench_artifact(artifact: &str, opts: &ExpOpts, out_dir: &Path) -> Result<
                 let label = format!("{} {} {} p={}", row.env, row.matrix, row.alg, row.nprocs);
                 doc.push_run(&label, row.matrix, row.n_cols, &row.report);
             }
+        }
+        "bfs" | "apsp" | "mcl" => {
+            let out = match artifact {
+                "bfs" => super::scenarios::bfs(opts)?,
+                "apsp" => super::scenarios::apsp(opts)?,
+                _ => super::scenarios::mcl(opts)?,
+            };
+            for row in &out.rows {
+                doc.push_run(&row.label, &row.matrix, row.n_cols, &row.report);
+            }
+            let named: Vec<(&str, f64)> =
+                out.metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+            doc.push_metrics(&format!("{artifact} checks"), &named);
         }
         other => {
             anyhow::bail!("unknown bench artifact {other:?} (expected one of {BENCH_ARTIFACTS:?})")

@@ -9,6 +9,7 @@
 pub mod driver;
 pub mod experiments;
 pub mod report;
+pub mod scenarios;
 pub mod session;
 pub mod testutil;
 pub mod trace_export;

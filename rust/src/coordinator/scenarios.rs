@@ -1,0 +1,417 @@
+//! Graph-analytics scenarios on the session engine — the semiring
+//! tentpole's end-to-end workloads. Each scenario chains multiplies on
+//! ONE [`Session`] (resident operands, no gather/re-scatter between
+//! steps), verifies every distributed multiply in-session, and
+//! additionally checks the *application-level* result against an
+//! independent host algorithm:
+//!
+//! - [`bfs`]: multi-source BFS frontier expansion under the **or-and**
+//!   boolean semiring. With self-loops, `f_k = (A ∨ I)^k f_0` is the
+//!   indicator of "within k hops"; each step is checked against
+//!   queue-based BFS levels.
+//! - [`apsp`]: all-pairs shortest paths by repeated squaring of the
+//!   distance matrix under **min-plus**. Integer edge weights make
+//!   every path sum exact in f32, so the ⌈log₂ n⌉ squarings must match
+//!   Floyd–Warshall *bitwise* (unreachable = implicit +∞).
+//! - [`mcl`]: Markov clustering under ordinary **plus-times** — the
+//!   `examples/markov_clustering.rs` flow re-chained through the bench
+//!   pipeline: distributed expansion (C = A·A), host-side inflation and
+//!   pruning, attractor count as the cluster-structure check.
+//!
+//! `bench_artifact("bfs" | "apsp" | "mcl", ..)` wraps each scenario
+//! into a schema-v3 `BENCH_<scenario>.json`: one `run` row per
+//! distributed multiply plus a `metrics` row of scenario-level checks.
+
+use anyhow::{ensure, Result};
+
+use crate::algorithms::Alg;
+use crate::fabric::NetProfile;
+use crate::matrix::{gen, Coo, Csr, Dense, Semiring};
+use crate::util::Rng;
+
+use super::experiments::ExpOpts;
+use super::report::Report;
+use super::session::{Gathered, Session, SessionConfig};
+
+/// One BENCH `run` row produced by a scenario step.
+pub struct ScenarioRow {
+    pub label: String,
+    pub matrix: String,
+    pub n_cols: usize,
+    pub report: Report,
+}
+
+/// A scenario's output: per-multiply rows plus scenario-level metrics
+/// (sizes, step counts, and the host-check verdicts, all asserted
+/// before return — a failed check is an `Err`, not a metric).
+pub struct ScenarioOut {
+    pub rows: Vec<ScenarioRow>,
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// Workload size under the `--scale` knob (same convention as the
+/// figure harnesses: negative shrinks, floor keeps the distributed
+/// path non-degenerate on a 16-PE grid).
+fn scaled(base: usize, shift: i32) -> usize {
+    if shift >= 0 {
+        base << shift.min(3) as usize
+    } else {
+        (base >> (-shift).min(3) as usize).max(64)
+    }
+}
+
+fn scenario_session(nprocs: usize) -> SessionConfig {
+    let mut cfg = SessionConfig::new(nprocs, NetProfile::dgx2());
+    cfg.seg_bytes = 1 << 30;
+    cfg
+}
+
+fn ledger_rows(sess: &Session) -> Vec<ScenarioRow> {
+    sess.ledger()
+        .iter()
+        .map(|e| ScenarioRow {
+            label: e.label.clone(),
+            matrix: e.matrix.clone(),
+            n_cols: e.n_cols,
+            report: e.report.clone(),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// BFS — or-and frontier expansion
+// ---------------------------------------------------------------------
+
+/// Symmetrized Erdős–Rényi graph with unit edge values and self-loops:
+/// the or-and iteration matrix whose k-th power indicates k-hop
+/// reachability.
+fn bfs_graph(n: usize, avg_deg: usize, seed: u64) -> Csr {
+    let a = gen::erdos_renyi(n, avg_deg, seed);
+    let mut g = a.add(&a.transpose());
+    for v in g.vals.iter_mut() {
+        *v = 1.0;
+    }
+    g.add(&Csr::eye(n))
+}
+
+/// Queue BFS from `src` over the adjacency of `g`; `usize::MAX` marks
+/// unreachable vertices.
+fn host_bfs_levels(g: &Csr, src: usize) -> Vec<usize> {
+    let mut dist = vec![usize::MAX; g.nrows];
+    let mut queue = std::collections::VecDeque::new();
+    dist[src] = 0;
+    queue.push_back(src);
+    while let Some(u) = queue.pop_front() {
+        let (cols, _) = g.row(u);
+        for &c in cols {
+            let v = c as usize;
+            if dist[v] == usize::MAX {
+                dist[v] = dist[u] + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+/// Multi-source BFS by repeated or-and SpMM: the n×s frontier block
+/// (one column per source) expands one hop per multiply, chained
+/// through the session with the output resident as the next input.
+/// Every distributed step is verified in-session (exact equality) AND
+/// each frontier is checked against queue-BFS levels.
+pub fn bfs(opts: &ExpOpts) -> Result<ScenarioOut> {
+    let n = scaled(512, opts.scale_shift);
+    let n_sources = 4usize;
+    let g = bfs_graph(n, 4, 0xBF5);
+    let sources: Vec<usize> = (0..n_sources).map(|i| i * n / n_sources).collect();
+    let dist: Vec<Vec<usize>> = sources.iter().map(|&s| host_bfs_levels(&g, s)).collect();
+
+    let mut sess = Session::new(scenario_session(16));
+    let ga = sess.load_csr(&g);
+    let mut frontier = Dense::zeros(n, n_sources);
+    for (si, &src) in sources.iter().enumerate() {
+        frontier.data[src * n_sources + si] = 1.0;
+    }
+    let mut f_id = sess.load_dense(&frontier);
+
+    let mut reached_prev = n_sources;
+    let mut reached = n_sources;
+    let mut steps = 0usize;
+    let mut converged = false;
+    let max_steps = 24;
+    while steps < max_steps {
+        let run = sess
+            .plan(ga, f_id)
+            .alg(Alg::StationaryC)
+            .semiring(Semiring::OrAnd)
+            .comm(opts.comm)
+            .lookahead(opts.lookahead)
+            .trace(opts.trace)
+            .verify(true)
+            .label(&format!("bfs hop {}", steps + 1))
+            .matrix("er-sym")
+            .execute()?;
+        steps += 1;
+        let f = run.gathered.and_then(Gathered::into_dense).expect("verified runs gather C");
+        for v in 0..n {
+            for (si, d) in dist.iter().enumerate() {
+                let want = d[v] <= steps;
+                let got = f.data[v * n_sources + si] != 0.0;
+                ensure!(
+                    got == want,
+                    "BFS frontier disagrees with queue BFS: vertex {v}, source {si}, hop {steps}"
+                );
+            }
+        }
+        reached = f.data.iter().filter(|&&x| x != 0.0).count();
+        f_id = run.c;
+        if reached == reached_prev {
+            converged = true; // self-loops make frontiers monotone: fixpoint = done
+            break;
+        }
+        reached_prev = reached;
+    }
+    ensure!(converged, "BFS did not converge in {max_steps} hops");
+    let rows = ledger_rows(&sess);
+    Ok(ScenarioOut {
+        rows,
+        metrics: vec![
+            ("vertices".to_string(), n as f64),
+            ("sources".to_string(), n_sources as f64),
+            ("hops".to_string(), steps as f64),
+            ("reached".to_string(), reached as f64),
+            ("levels_match".to_string(), 1.0),
+        ],
+    })
+}
+
+// ---------------------------------------------------------------------
+// APSP — min-plus block relaxation (repeated squaring)
+// ---------------------------------------------------------------------
+
+/// Weighted digraph with small-integer weights (exact in f32) and an
+/// explicit all-zero diagonal; duplicate edges keep the shortest
+/// (merged under min by `from_coo_sr`). Implicit entries are +∞ under
+/// min-plus.
+fn apsp_graph(n: usize, avg_deg: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * (avg_deg + 1));
+    for i in 0..n {
+        coo.push(i, i, 0.0);
+        for _ in 0..avg_deg {
+            coo.push(i, rng.below_usize(n), 1.0 + rng.below_usize(8) as f32);
+        }
+    }
+    Csr::from_coo_sr(coo, Semiring::MinPlus)
+}
+
+/// Floyd–Warshall on the host: the independent reference algorithm.
+/// Integer weights make every finite distance an exact small integer,
+/// so this matches repeated squaring bitwise.
+fn host_floyd_warshall(g: &Csr) -> Dense {
+    let n = g.nrows;
+    let mut d = Dense::filled(n, n, f32::INFINITY);
+    for i in 0..n {
+        let (cols, vals) = g.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            let j = c as usize;
+            d.data[i * n + j] = d.data[i * n + j].min(v);
+        }
+    }
+    for k in 0..n {
+        for i in 0..n {
+            let dik = d.data[i * n + k];
+            if !dik.is_finite() {
+                continue;
+            }
+            for j in 0..n {
+                let nd = dik + d.data[k * n + j];
+                if nd < d.data[i * n + j] {
+                    d.data[i * n + j] = nd;
+                }
+            }
+        }
+    }
+    d
+}
+
+/// APSP by min-plus repeated squaring: D ← D ⊗ D doubles the covered
+/// path length, so ⌈log₂(n−1)⌉ distributed SpGEMMs compute all-pairs
+/// distances. Each squaring chains the resident output as both inputs
+/// of the next plan; the final distance matrix must equal
+/// Floyd–Warshall exactly (min-plus is bitwise deterministic).
+pub fn apsp(opts: &ExpOpts) -> Result<ScenarioOut> {
+    let n = scaled(96, opts.scale_shift);
+    let g = apsp_graph(n, 3, 0xA5B);
+    let want = host_floyd_warshall(&g);
+
+    let mut sess = Session::new(scenario_session(16));
+    let mut d_id = sess.load_csr(&g);
+    let mut iters = 0usize;
+    let mut span = 1usize;
+    while span < n.saturating_sub(1) {
+        let run = sess
+            .plan(d_id, d_id)
+            .alg(Alg::StationaryC)
+            .semiring(Semiring::MinPlus)
+            .comm(opts.comm)
+            .lookahead(opts.lookahead)
+            .trace(opts.trace)
+            .verify(true)
+            .label(&format!("squaring {}", iters + 1))
+            .matrix("weighted-er")
+            .execute()?;
+        d_id = run.c;
+        span *= 2;
+        iters += 1;
+    }
+    let got = sess.gather_csr(d_id)?.to_dense_sr(Semiring::MinPlus);
+    ensure!(got.exact_eq(&want), "APSP repeated squaring differs from Floyd–Warshall");
+    let reachable = want.data.iter().filter(|x| x.is_finite()).count();
+    let rows = ledger_rows(&sess);
+    Ok(ScenarioOut {
+        rows,
+        metrics: vec![
+            ("vertices".to_string(), n as f64),
+            ("squarings".to_string(), iters as f64),
+            ("reachable_pairs".to_string(), reachable as f64),
+            ("matches_floyd_warshall".to_string(), 1.0),
+        ],
+    })
+}
+
+// ---------------------------------------------------------------------
+// MCL — Markov clustering (plus-times expansion chain)
+// ---------------------------------------------------------------------
+
+/// MCL inflation: entrywise square, then column-normalize (same
+/// preprocessing as `examples/markov_clustering.rs`).
+fn inflate(m: &Csr) -> Csr {
+    let mut colsum = vec![0f64; m.ncols];
+    for k in 0..m.vals.len() {
+        let c = m.colind[k] as usize;
+        colsum[c] += (m.vals[k] * m.vals[k]) as f64;
+    }
+    let mut out = m.clone();
+    for k in 0..out.vals.len() {
+        let c = out.colind[k] as usize;
+        out.vals[k] = ((m.vals[k] * m.vals[k]) as f64 / colsum[c].max(1e-30)) as f32;
+    }
+    out
+}
+
+/// Markov clustering on a block-community graph: four expansion
+/// (C = A·A) iterations on one session, inflation + pruning on the
+/// host between them. The cluster-structure check counts attractor
+/// rows (rows whose max entry is the diagonal).
+pub fn mcl(opts: &ExpOpts) -> Result<ScenarioOut> {
+    let n = scaled(512, opts.scale_shift);
+    let coupling = (n / 7).max(8);
+    let mut a = gen::block_components(n, 6, 0.02, coupling, 11);
+    a = a.add(&Csr::eye(n)); // self-loops: standard MCL preprocessing
+
+    let mut sess = Session::new(scenario_session(16));
+    for iter in 0..4 {
+        let da = sess.load_csr(&a);
+        let run = sess
+            .plan(da, da)
+            .alg(Alg::StationaryC)
+            .comm(opts.comm)
+            .lookahead(opts.lookahead)
+            .trace(opts.trace)
+            .verify(true)
+            .label(&format!("expansion {iter}"))
+            .matrix("block-community")
+            .execute()?;
+        let c = run.gathered.and_then(Gathered::into_csr).expect("verified runs gather C");
+        a = inflate(&c).prune(1e-4);
+    }
+    let mut attractors = 0usize;
+    for r in 0..a.nrows {
+        let (cs, vs) = a.row(r);
+        if let Some(maxi) =
+            vs.iter().enumerate().max_by(|x, y| x.1.total_cmp(y.1)).map(|(i, _)| i)
+        {
+            if cs[maxi] as usize == r {
+                attractors += 1;
+            }
+        }
+    }
+    ensure!(attractors > 0, "MCL produced no attractors on a block-community graph");
+    let rows = ledger_rows(&sess);
+    Ok(ScenarioOut {
+        rows,
+        metrics: vec![
+            ("vertices".to_string(), n as f64),
+            ("expansions".to_string(), 4.0),
+            ("attractors".to_string(), attractors as f64),
+            ("final_nnz".to_string(), a.nnz() as f64),
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_opts() -> ExpOpts {
+        ExpOpts { scale_shift: -3, print: false, ..ExpOpts::default() }
+    }
+
+    #[test]
+    fn bfs_scenario_converges_and_matches_queue_bfs() {
+        let out = bfs(&smoke_opts()).unwrap();
+        assert!(!out.rows.is_empty());
+        let hops = out.metrics.iter().find(|(k, _)| k == "hops").unwrap().1;
+        assert!(hops >= 1.0);
+        assert_eq!(out.rows.len(), hops as usize, "one BENCH row per hop");
+    }
+
+    #[test]
+    fn apsp_scenario_matches_floyd_warshall() {
+        let out = apsp(&smoke_opts()).unwrap();
+        let m = out.metrics.iter().find(|(k, _)| k == "matches_floyd_warshall").unwrap().1;
+        assert_eq!(m, 1.0);
+        assert!(!out.rows.is_empty());
+    }
+
+    #[test]
+    fn mcl_scenario_finds_attractors() {
+        let out = mcl(&smoke_opts()).unwrap();
+        assert_eq!(out.rows.len(), 4, "four expansion rows");
+        let att = out.metrics.iter().find(|(k, _)| k == "attractors").unwrap().1;
+        assert!(att > 0.0);
+    }
+
+    #[test]
+    fn host_bfs_and_floyd_warshall_agree_on_hop_counts() {
+        // On a unit-weight graph, min-plus distance == BFS level.
+        let g = bfs_graph(64, 3, 7);
+        let mut unit = g.clone();
+        for v in unit.vals.iter_mut() {
+            *v = 1.0;
+        }
+        // Zero diagonal for the distance algebra.
+        let mut coo = Coo::new(64, 64);
+        for i in 0..unit.nrows {
+            coo.push(i, i, 0.0);
+            let (cs, vs) = unit.row(i);
+            for (&c, &v) in cs.iter().zip(vs) {
+                if c as usize != i {
+                    coo.push(i, c as usize, v);
+                }
+            }
+        }
+        let dg = Csr::from_coo_sr(coo, Semiring::MinPlus);
+        let fw = host_floyd_warshall(&dg);
+        let levels = host_bfs_levels(&g, 0);
+        for v in 0..64 {
+            let d = fw.data[v];
+            if levels[v] == usize::MAX {
+                assert!(!d.is_finite());
+            } else {
+                assert_eq!(d, levels[v] as f32, "vertex {v}");
+            }
+        }
+    }
+}

@@ -51,7 +51,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::algorithms::{Alg, Comm, Op, SpgemmCtx, SpmmCtx, DEFAULT_LOOKAHEAD};
 use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
 use crate::fabric::{Fabric, FabricConfig, NetProfile, DEFAULT_QUEUE_STALL_MS, DEFAULT_TRACE_CAP};
-use crate::matrix::{local_spgemm, local_spmm, Csr, Dense};
+use crate::matrix::{local_spgemm, local_spmm, Csr, Dense, Semiring};
 use crate::runtime::TileBackend;
 use crate::util::Rng;
 
@@ -64,6 +64,16 @@ pub const VERIFY_TOL: f64 = 1e-4;
 /// back-compat `run_spmm` / `run_spgemm` drivers) funnels through here.
 fn check_verified(alg: &str, rel_err: f64) -> Result<()> {
     ensure!(rel_err <= VERIFY_TOL, "verification failed for {alg}: rel err {rel_err:.3e}");
+    Ok(())
+}
+
+/// Exact-equality gate for the non-plus-times semirings. min/max/or are
+/// exactly associative in f32 and every product is computed identically
+/// on all paths, so the distributed result is bitwise reproducible —
+/// any difference from the host reference is a real bug, and relative
+/// error is unusable anyway once ±∞ identities appear (∞−∞ = NaN).
+fn check_verified_exact(alg: &str, sr: Semiring, equal: bool) -> Result<()> {
+    ensure!(equal, "verification failed for {alg} ({}): result differs from exact reference", sr.name());
     Ok(())
 }
 
@@ -99,6 +109,12 @@ pub struct ExecOpts {
     /// runs raise this; smoke tests shrink it so a genuine wedge fails
     /// in milliseconds instead of 30 seconds.
     pub queue_stall_ms: u64,
+    /// The (⊕, ⊗) algebra of the multiply (default: ordinary
+    /// plus-times). Tiling, scheduling, communication and lookahead are
+    /// semiring-oblivious; only the local kernels, partial-tile
+    /// accumulation and verification change. The PJRT backend supports
+    /// plus-times only — plans reject other semirings on it up front.
+    pub semiring: Semiring,
 }
 
 impl Default for ExecOpts {
@@ -111,6 +127,7 @@ impl Default for ExecOpts {
             verify: false,
             lookahead: DEFAULT_LOOKAHEAD,
             queue_stall_ms: DEFAULT_QUEUE_STALL_MS,
+            semiring: Semiring::default(),
         }
     }
 }
@@ -213,7 +230,8 @@ impl Gathered {
 
 /// The session's verify-side cache: host copies of resident operands
 /// (keyed by operand index) and single-node reference products (keyed
-/// by `(a, b)` operand indices), under one shared LRU byte budget.
+/// by `(a, b, semiring)` — the same operand pair has a distinct
+/// reference product per algebra), under one shared LRU byte budget.
 /// Verification against the same residents gathers/computes each entry
 /// once; when a budget is set, least-recently-used entries are dropped
 /// first and simply rebuilt on next use — results are never affected,
@@ -224,7 +242,7 @@ struct HostCache {
     /// Monotonic use counter; higher = more recently used.
     tick: u64,
     ops: HashMap<usize, (Gathered, usize, u64)>,
-    refs: HashMap<(usize, usize), (Gathered, usize, u64)>,
+    refs: HashMap<(usize, usize, Semiring), (Gathered, usize, u64)>,
     evictions: u64,
 }
 
@@ -253,7 +271,7 @@ impl HostCache {
         })
     }
 
-    fn get_ref(&mut self, key: (usize, usize)) -> Option<&Gathered> {
+    fn get_ref(&mut self, key: (usize, usize, Semiring)) -> Option<&Gathered> {
         let tick = self.bump();
         self.refs.get_mut(&key).map(|e| {
             e.2 = tick;
@@ -269,7 +287,7 @@ impl HostCache {
         self.evict_to_fit();
     }
 
-    fn put_ref(&mut self, key: (usize, usize), g: Gathered) {
+    fn put_ref(&mut self, key: (usize, usize, Semiring), g: Gathered) {
         self.remove_ref(key);
         let (b, tick) = (g.host_bytes(), self.bump());
         self.bytes += b;
@@ -283,7 +301,7 @@ impl HostCache {
         }
     }
 
-    fn remove_ref(&mut self, key: (usize, usize)) {
+    fn remove_ref(&mut self, key: (usize, usize, Semiring)) {
         if let Some((_, b, _)) = self.refs.remove(&key) {
             self.bytes -= b;
         }
@@ -292,8 +310,8 @@ impl HostCache {
     /// Drop every cached artifact derived from operand `id`.
     fn invalidate(&mut self, id: usize) {
         self.remove_op(id);
-        let stale: Vec<(usize, usize)> =
-            self.refs.keys().filter(|&&(x, y)| x == id || y == id).copied().collect();
+        let stale: Vec<(usize, usize, Semiring)> =
+            self.refs.keys().filter(|&&(x, y, _)| x == id || y == id).copied().collect();
         for key in stale {
             self.remove_ref(key);
         }
@@ -649,6 +667,13 @@ impl Session {
                 self.grid.nprocs
             );
         }
+        if !opts.semiring.is_plus_times() && matches!(self.backend, TileBackend::Pjrt(_)) {
+            bail!(
+                "the PJRT backend compiles plus-times kernels only; \
+                 {} multiplies need the native backend",
+                opts.semiring.name()
+            );
+        }
         if let Some(out) = output {
             ensure!(out != a && out != b, "output operand must not alias an input");
             ensure!(
@@ -702,6 +727,7 @@ impl Session {
             comm: opts.comm,
             trace: opts.trace,
             lookahead: opts.lookahead,
+            semiring: opts.semiring,
         };
         self.fabric.set_tracing(if opts.trace { DEFAULT_TRACE_CAP } else { 0 });
         let t0 = Instant::now();
@@ -712,20 +738,25 @@ impl Session {
             .with_traces(self.fabric.take_trace());
         let mut gathered = None;
         if opts.verify {
-            let cached = match self.cache.get_ref((a.0, b.0)) {
+            let sr = opts.semiring;
+            let cached = match self.cache.get_ref((a.0, b.0, sr)) {
                 Some(Gathered::Dense(w)) => Some(w.clone()),
                 _ => None,
             };
             let want = match cached {
                 Some(w) => w,
                 None => {
-                    let w = local_spmm::spmm(&self.host_csr(a)?, &self.host_dense(b)?);
-                    self.cache.put_ref((a.0, b.0), Gathered::Dense(w.clone()));
+                    let w = local_spmm::spmm_sr(&self.host_csr(a)?, &self.host_dense(b)?, sr);
+                    self.cache.put_ref((a.0, b.0, sr), Gathered::Dense(w.clone()));
                     w
                 }
             };
             let got = ctx.c.gather(&self.fabric);
-            check_verified(spmm_alg.name(), got.rel_err(&want))?;
+            if sr.exact_verify() {
+                check_verified_exact(spmm_alg.name(), sr, got.exact_eq(&want))?;
+            } else {
+                check_verified(spmm_alg.name(), got.rel_err(&want))?;
+            }
             self.cache.put_op(c_id.0, Gathered::Dense(got.clone()));
             gathered = Some(Gathered::Dense(got));
         }
@@ -773,6 +804,7 @@ impl Session {
             comm: opts.comm,
             trace: opts.trace,
             lookahead: opts.lookahead,
+            semiring: opts.semiring,
         };
         self.fabric.set_tracing(if opts.trace { DEFAULT_TRACE_CAP } else { 0 });
         let t0 = Instant::now();
@@ -783,7 +815,8 @@ impl Session {
             .with_traces(self.fabric.take_trace());
         let mut gathered = None;
         if opts.verify {
-            let cached = match self.cache.get_ref((a.0, b.0)) {
+            let sr = opts.semiring;
+            let cached = match self.cache.get_ref((a.0, b.0, sr)) {
                 Some(Gathered::Csr(w)) => Some(w.clone()),
                 _ => None,
             };
@@ -793,13 +826,21 @@ impl Session {
                     // host_csr caches, so C = A·A gathers its operand once.
                     let ga = self.host_csr(a)?;
                     let gb = if b == a { ga.clone() } else { self.host_csr(b)? };
-                    let w = local_spgemm::spgemm(&ga, &gb).c;
-                    self.cache.put_ref((a.0, b.0), Gathered::Csr(w.clone()));
+                    let w = local_spgemm::spgemm_sr(&ga, &gb, sr).c;
+                    self.cache.put_ref((a.0, b.0, sr), Gathered::Csr(w.clone()));
                     w
                 }
             };
             let got = ctx.c.gather(&self.fabric);
-            check_verified(spgemm_alg.name(), got.to_dense().rel_err(&want.to_dense()))?;
+            if sr.exact_verify() {
+                // Implicit zeros are the semiring's additive identity
+                // (e.g. +∞ for min-plus), so densify semiring-aware and
+                // compare exactly — rel err is meaningless with ±∞.
+                let equal = got.to_dense_sr(sr).exact_eq(&want.to_dense_sr(sr));
+                check_verified_exact(spgemm_alg.name(), sr, equal)?;
+            } else {
+                check_verified(spgemm_alg.name(), got.to_dense().rel_err(&want.to_dense()))?;
+            }
             self.cache.put_op(c_id.0, Gathered::Csr(got.clone()));
             gathered = Some(Gathered::Csr(got));
         }
@@ -889,6 +930,17 @@ impl MultiplyPlan<'_> {
     /// [`ExecOpts::queue_stall_ms`]).
     pub fn stall_ms(mut self, ms: u64) -> Self {
         self.opts.queue_stall_ms = ms;
+        self
+    }
+
+    /// Select the (⊕, ⊗) algebra of the multiply (default: ordinary
+    /// plus-times). Min-plus gives shortest-path relaxation, or-and
+    /// gives boolean reachability (BFS frontiers), max-min gives
+    /// bottleneck paths. Scheduling, communication mode and lookahead
+    /// are unaffected; verification switches to exact equality for the
+    /// non-plus-times algebras (see [`crate::matrix::Semiring`]).
+    pub fn semiring(mut self, sr: Semiring) -> Self {
+        self.opts.semiring = sr;
         self
     }
 
@@ -1065,6 +1117,36 @@ mod tests {
         assert!(tr.n_selective_gets > 0);
         assert!(tr.bytes_saved_sparsity > 0.0);
         assert_eq!(tf.flops, tr.flops, "same multiplies either way");
+    }
+
+    #[test]
+    fn non_plus_times_semirings_execute_and_verify_exactly() {
+        // verify(true) routes the three exact algebras through the
+        // bitwise-equality gate — any scheduling/comm-order sensitivity
+        // would fail here, not just drift within a tolerance.
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&gen::erdos_renyi(48, 4, 61));
+        let b = sess.random_dense(48, 8, 62);
+        for sr in [Semiring::MinPlus, Semiring::OrAnd, Semiring::MaxMin] {
+            for alg in [Alg::StationaryC, Alg::StationaryA] {
+                sess.plan(a, b).alg(alg).semiring(sr).verify(true).execute().unwrap();
+                sess.plan(a, a).alg(alg).semiring(sr).verify(true).execute().unwrap();
+            }
+        }
+        assert_eq!(sess.ledger().len(), 12);
+    }
+
+    #[test]
+    fn semiring_reference_products_cached_per_algebra() {
+        // The same (a, b) pair verified under two algebras must not
+        // reuse one algebra's reference for the other.
+        let mut sess = small_session(4);
+        let a = sess.load_csr(&gen::erdos_renyi(40, 4, 63));
+        let b = sess.random_dense(40, 8, 64);
+        sess.plan(a, b).verify(true).execute().unwrap();
+        sess.plan(a, b).semiring(Semiring::MinPlus).verify(true).execute().unwrap();
+        sess.plan(a, b).semiring(Semiring::OrAnd).verify(true).execute().unwrap();
+        assert_eq!(sess.ledger().len(), 3);
     }
 
     /// The tracing invariant: spans are complete per PE (one per clock

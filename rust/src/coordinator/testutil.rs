@@ -6,7 +6,7 @@ use std::sync::Arc;
 use crate::algorithms::{Comm, SpgemmCtx, SpmmCtx, DEFAULT_LOOKAHEAD};
 use crate::dist::{AccQueues, DistCsr, DistDense, ProcGrid, ResGrid2D, ResGrid3D};
 use crate::fabric::{Fabric, FabricConfig, NetProfile};
-use crate::matrix::{gen, local_spgemm, local_spmm, Coo, Csr, Dense};
+use crate::matrix::{gen, local_spgemm, local_spmm, Coo, Csr, Dense, Semiring};
 use crate::runtime::TileBackend;
 use crate::util::Rng;
 
@@ -36,6 +36,7 @@ fn build_spmm(nprocs: usize, a: Csr, b: Dense) -> (SpmmFixture, Dense) {
         comm: Comm::FullTile,
         trace: false,
         lookahead: DEFAULT_LOOKAHEAD,
+        semiring: Semiring::default(),
     };
     (SpmmFixture { fabric, ctx }, want)
 }
@@ -119,6 +120,7 @@ fn build_spgemm(nprocs: usize, a: Csr) -> (SpgemmFixture, Csr) {
         comm: Comm::FullTile,
         trace: false,
         lookahead: DEFAULT_LOOKAHEAD,
+        semiring: Semiring::default(),
     };
     (SpgemmFixture { fabric, ctx }, want)
 }

@@ -15,19 +15,24 @@
 use std::sync::Arc;
 
 use crate::fabric::{Fabric, GlobalPtr, Kind, Pe, QueueHandle, QueueItem};
-use crate::matrix::{Csr, Dense};
+use crate::matrix::{Csr, Dense, Semiring};
 
 /// Descriptor of one partial-result tile awaiting accumulation.
 ///
 /// Dense partials carry one payload pointer (`data`); sparse partials
 /// carry the three CSR arrays (`rowptr`, `colind`, and `data` doubling
-/// as the values array).
+/// as the values array). The payload values are f32 for *every*
+/// semiring (see `matrix::semiring`); the descriptor carries a 2-bit
+/// tag naming the algebra the partial was produced under, so a
+/// mis-routed cross-semiring partial is detectable at the owner.
 #[derive(Clone, Copy, Debug)]
 pub struct AccMsg {
     /// Target C tile row.
     pub ti: u32,
     /// Target C tile column.
     pub tj: u32,
+    /// The (⊕, ⊗) algebra this partial was produced under.
+    pub semiring: Semiring,
     nrows: u32,
     ncols: u32,
     sparse: bool,
@@ -45,21 +50,29 @@ fn wire_u32(v: usize, what: &str) -> u32 {
     v as u32
 }
 
-/// Tile rows share their wire word with the sparse flag, so they get
-/// one bit less than the other fields.
+/// Tile rows share their wire word with the sparse flag and the 2-bit
+/// semiring tag, so they get three bits less than the other fields.
 fn wire_ti(v: usize) -> u32 {
-    assert!(v < 1 << 31, "tile row {v} exceeds the encodable range (31 bits)");
+    assert!(v < 1 << 29, "tile row {v} exceeds the encodable range (29 bits)");
     v as u32
 }
 
 impl AccMsg {
     /// Checked descriptor for a dense partial tile. Every field is
-    /// validated against the wire format (ti: 31 bits; tj, nrows,
+    /// validated against the wire format (ti: 29 bits; tj, nrows,
     /// ncols: 32 bits) instead of silently truncating.
-    pub fn dense(ti: usize, tj: usize, nrows: usize, ncols: usize, data: GlobalPtr<f32>) -> AccMsg {
+    pub fn dense(
+        ti: usize,
+        tj: usize,
+        nrows: usize,
+        ncols: usize,
+        data: GlobalPtr<f32>,
+        sr: Semiring,
+    ) -> AccMsg {
         AccMsg {
             ti: wire_ti(ti),
             tj: wire_u32(tj, "tile col"),
+            semiring: sr,
             nrows: wire_u32(nrows, "nrows"),
             ncols: wire_u32(ncols, "ncols"),
             sparse: false,
@@ -78,10 +91,12 @@ impl AccMsg {
         rowptr: GlobalPtr<i64>,
         colind: GlobalPtr<i32>,
         vals: GlobalPtr<f32>,
+        sr: Semiring,
     ) -> AccMsg {
         AccMsg {
             ti: wire_ti(ti),
             tj: wire_u32(tj, "tile col"),
+            semiring: sr,
             nrows: wire_u32(nrows, "nrows"),
             ncols: wire_u32(ncols, "ncols"),
             sparse: true,
@@ -117,7 +132,8 @@ impl AccMsg {
 }
 
 // Queue wire format, 8 words:
-//   [0] sparse flag (bit 63) | ti (bits 32..62) | tj (bits 0..31)
+//   [0] sparse flag (bit 63) | semiring tag (bits 61..62)
+//       | ti (bits 32..60) | tj (bits 0..31)
 //   [1] nrows (high 32) | ncols (low 32)
 //   [2..4] data ptr, [4..6] rowptr ptr, [6..8] colind ptr
 impl QueueItem for AccMsg {
@@ -125,11 +141,15 @@ impl QueueItem for AccMsg {
 
     fn encode(&self, out: &mut [u64]) {
         // Symmetric wire validation: ti shares word 0 with the sparse
-        // flag (31 bits); tj / nrows / ncols occupy full 32-bit lanes,
-        // so their `u32` type is exactly the wire range — the checked
-        // constructors above guard the usize boundary.
-        assert!(self.ti < (1 << 31), "tile row {} exceeds encodable range", self.ti);
-        out[0] = ((self.sparse as u64) << 63) | ((self.ti as u64) << 32) | self.tj as u64;
+        // flag and semiring tag (29 bits); tj / nrows / ncols occupy
+        // full 32-bit lanes, so their `u32` type is exactly the wire
+        // range — the checked constructors above guard the usize
+        // boundary.
+        assert!(self.ti < (1 << 29), "tile row {} exceeds encodable range", self.ti);
+        out[0] = ((self.sparse as u64) << 63)
+            | (self.semiring.index() << 61)
+            | ((self.ti as u64) << 32)
+            | self.tj as u64;
         out[1] = ((self.nrows as u64) << 32) | self.ncols as u64;
         let d = self.data.encode();
         let r = self.rowptr.encode();
@@ -145,7 +165,8 @@ impl QueueItem for AccMsg {
     fn decode(w: &[u64]) -> Self {
         AccMsg {
             sparse: w[0] >> 63 != 0,
-            ti: ((w[0] >> 32) & 0x7FFF_FFFF) as u32,
+            semiring: Semiring::from_index((w[0] >> 61) & 0b11),
+            ti: ((w[0] >> 32) & 0x1FFF_FFFF) as u32,
             tj: w[0] as u32,
             nrows: (w[1] >> 32) as u32,
             ncols: w[1] as u32,
@@ -188,20 +209,36 @@ impl AccQueues {
     /// Publish a dense partial for C tile (i, j) and enqueue its
     /// descriptor on `owner`'s queue. Cost: one local put (publish) +
     /// one remote FAA + one remote put (the queue push).
-    pub fn send_dense_partial(&self, pe: &Pe, owner: usize, i: usize, j: usize, part: &Dense) {
+    pub fn send_dense_partial(
+        &self,
+        pe: &Pe,
+        owner: usize,
+        i: usize,
+        j: usize,
+        part: &Dense,
+        sr: Semiring,
+    ) {
         let data = pe.publish(&part.data, Kind::Acc);
-        let msg = AccMsg::dense(i, j, part.nrows, part.ncols, data);
+        let msg = AccMsg::dense(i, j, part.nrows, part.ncols, data, sr);
         self.queues[owner].push(pe, &msg);
     }
 
     /// Publish a sparse partial for C tile (i, j) and enqueue its
     /// descriptor on `owner`'s queue. Empty partials are sent too — the
     /// owner counts contributions for termination.
-    pub fn send_sparse_partial(&self, pe: &Pe, owner: usize, i: usize, j: usize, part: &Csr) {
+    pub fn send_sparse_partial(
+        &self,
+        pe: &Pe,
+        owner: usize,
+        i: usize,
+        j: usize,
+        part: &Csr,
+        sr: Semiring,
+    ) {
         let rowptr = pe.publish(&part.rowptr, Kind::Acc);
         let colind = pe.publish(&part.colind, Kind::Acc);
         let vals = pe.publish(&part.vals, Kind::Acc);
-        let msg = AccMsg::sparse(i, j, part.nrows, part.ncols, rowptr, colind, vals);
+        let msg = AccMsg::sparse(i, j, part.nrows, part.ncols, rowptr, colind, vals, sr);
         self.queues[owner].push(pe, &msg);
     }
 
@@ -238,6 +275,7 @@ mod tests {
         let dense = AccMsg {
             ti: 3,
             tj: 7,
+            semiring: Semiring::PlusTimes,
             nrows: 16,
             ncols: 9,
             sparse: false,
@@ -250,6 +288,7 @@ mod tests {
         let back = AccMsg::decode(&w);
         assert_eq!((back.ti, back.tj, back.nrows, back.ncols), (3, 7, 16, 9));
         assert!(!back.sparse);
+        assert_eq!(back.semiring, Semiring::PlusTimes);
         assert_eq!(back.data, dense.data);
         assert!(back.rowptr.is_null() && back.colind.is_null());
 
@@ -258,6 +297,35 @@ mod tests {
         let back = AccMsg::decode(&w);
         assert!(back.sparse);
         assert_eq!(back.rowptr, sparse.rowptr);
+    }
+
+    /// Every semiring's 2-bit tag survives the wire, for both partial
+    /// flavors and at the ti extreme that shares its word (the tag sits
+    /// between the sparse flag and the 29-bit tile row).
+    #[test]
+    fn semiring_tag_roundtrips_for_every_semiring() {
+        let mut w = [0u64; AccMsg::WORDS];
+        for sr in Semiring::ALL {
+            for sparse in [false, true] {
+                let msg = AccMsg {
+                    ti: (1 << 29) - 1,
+                    tj: u32::MAX,
+                    semiring: sr,
+                    nrows: 8,
+                    ncols: 8,
+                    sparse,
+                    data: GlobalPtr::new(1, 128, 64),
+                    rowptr: GlobalPtr::null(),
+                    colind: GlobalPtr::null(),
+                };
+                msg.encode(&mut w);
+                let back = AccMsg::decode(&w);
+                assert_eq!(back.semiring, sr, "{sr:?} sparse={sparse}");
+                assert_eq!(back.sparse, sparse, "{sr:?} sparse={sparse}");
+                assert_eq!(back.ti, (1 << 29) - 1, "{sr:?} sparse={sparse}");
+                assert_eq!(back.tj, u32::MAX, "{sr:?} sparse={sparse}");
+            }
+        }
     }
 
     #[test]
@@ -287,8 +355,9 @@ mod tests {
                     }
                 };
                 AccMsg {
-                    ti: pick(rng, (1 << 31) - 1) as u32,
+                    ti: pick(rng, (1 << 29) - 1) as u32,
                     tj: pick(rng, u32::MAX as u64) as u32,
+                    semiring: Semiring::from_index(rng.below(4)),
                     nrows: pick(rng, u32::MAX as u64) as u32,
                     ncols: pick(rng, u32::MAX as u64) as u32,
                     sparse,
@@ -301,8 +370,8 @@ mod tests {
                 let mut w = [0u64; AccMsg::WORDS];
                 m.encode(&mut w);
                 let back = AccMsg::decode(&w);
-                let same = (back.ti, back.tj, back.nrows, back.ncols, back.sparse)
-                    == (m.ti, m.tj, m.nrows, m.ncols, m.sparse)
+                let same = (back.ti, back.tj, back.nrows, back.ncols, back.sparse, back.semiring)
+                    == (m.ti, m.tj, m.nrows, m.ncols, m.sparse, m.semiring)
                     && back.data == m.data
                     && back.rowptr.encode() == m.rowptr.encode()
                     && back.colind.encode() == m.colind.encode();
@@ -318,13 +387,14 @@ mod tests {
     #[test]
     #[should_panic(expected = "exceeds the encodable range")]
     fn oversized_tile_row_is_rejected_at_construction() {
-        let _ = AccMsg::dense(1 << 31, 0, 4, 4, GlobalPtr::null());
+        let _ = AccMsg::dense(1 << 29, 0, 4, 4, GlobalPtr::null(), Semiring::PlusTimes);
     }
 
     #[test]
     #[should_panic(expected = "exceeds the AccMsg wire format")]
     fn oversized_tile_col_is_rejected_at_construction() {
-        let _ = AccMsg::dense(0, (u32::MAX as usize) + 1, 4, 4, GlobalPtr::null());
+        let _ =
+            AccMsg::dense(0, (u32::MAX as usize) + 1, 4, 4, GlobalPtr::null(), Semiring::PlusTimes);
     }
 
     #[test]
@@ -334,7 +404,7 @@ mod tests {
         f.launch(|pe| {
             if pe.rank() == 1 {
                 let part = Dense::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-                q.send_dense_partial(pe, 0, 1, 2, &part);
+                q.send_dense_partial(pe, 0, 1, 2, &part, Semiring::PlusTimes);
             }
             pe.barrier();
             if pe.rank() == 0 {
@@ -356,7 +426,7 @@ mod tests {
         let (counts, stats) = f.launch(|pe| {
             if pe.rank() != 0 {
                 for s in 0..10 {
-                    q.send_sparse_partial(pe, 0, s % 3, pe.rank(), &part);
+                    q.send_sparse_partial(pe, 0, s % 3, pe.rank(), &part, Semiring::MinPlus);
                 }
                 pe.barrier();
                 0usize
@@ -392,7 +462,7 @@ mod tests {
         let (_, stats) = f.launch(|pe| {
             if pe.rank() == 1 {
                 let part = Dense::from_vec(4, 4, vec![2.0; 16]);
-                q.send_dense_partial(pe, 0, 0, 0, &part);
+                q.send_dense_partial(pe, 0, 0, 0, &part, Semiring::PlusTimes);
             }
             pe.barrier();
             if pe.rank() == 0 {
@@ -416,7 +486,7 @@ mod tests {
             f.launch(|pe| {
                 if pe.rank() == 1 {
                     let part = Dense::from_vec(1, 2, vec![1.0, 2.0]);
-                    q.send_dense_partial(pe, 0, 0, 0, &part);
+                    q.send_dense_partial(pe, 0, 0, 0, &part, Semiring::PlusTimes);
                 }
                 pe.barrier();
                 if pe.rank() == 0 {
@@ -435,7 +505,7 @@ mod tests {
         let q = AccQueues::create(&f, 4);
         f.launch(|pe| {
             if pe.rank() == 1 {
-                q.send_sparse_partial(pe, 0, 0, 0, &Csr::zero(5, 5));
+                q.send_sparse_partial(pe, 0, 0, 0, &Csr::zero(5, 5), Semiring::OrAnd);
             }
             pe.barrier();
             if pe.rank() == 0 {

@@ -11,15 +11,20 @@
 //!   matrix data structures over an RDMA-style fabric ([`fabric`],
 //!   [`dist`]), the asynchronous stationary-C/A/B and workstealing
 //!   algorithms plus bulk-synchronous SUMMA baselines ([`algorithms`]),
-//!   the inter-node roofline model ([`roofline`]), and the experiment
-//!   harness ([`coordinator`]).
+//!   semiring-generic local kernels and formats ([`matrix`], including
+//!   [`matrix::Semiring`] — every multiply runs over a pluggable
+//!   (⊕, ⊗) algebra), the inter-node roofline model ([`roofline`]),
+//!   the session engine, experiment harnesses, and graph-analytics
+//!   scenario suite ([`coordinator`]), and the multi-tenant multiply
+//!   daemon ([`serve`]).
 //! * **L2/L1 (python, build-time only)**: the local compute hot-spot as
 //!   JAX + Pallas kernels, AOT-lowered to HLO text and executed from
 //!   Rust via PJRT ([`runtime`]).
 //!
-//! See `DESIGN.md` for the full system inventory and the substitutions
-//! made for GPU/NVSHMEM hardware, and `EXPERIMENTS.md` for
-//! paper-vs-measured results for every figure and table.
+//! See `DESIGN.md` for the full system inventory, the substitutions
+//! made for GPU/NVSHMEM hardware, and (§9) the semiring contract the
+//! graph algebras rely on; measured-performance artifacts are the
+//! `BENCH_*.json` documents `sparta bench` writes (schema in §4).
 
 pub mod algorithms;
 pub mod analysis;

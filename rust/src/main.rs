@@ -18,9 +18,11 @@
 //!
 //! Common options: `--scale-shift <i>` (workload downscaling, default 0),
 //! `--verify`, `--comm full|row` (full-tile vs row-selective B fetches),
-//! and for `run`/`chain`: `--alg`, `--nprocs`, `--matrix`, `--ncols`,
-//! `--profile summit|dgx2|flat:<GBps>`, `--pjrt`; `chain` adds
-//! `--steps <n>` and `--out DIR` (BENCH JSON of the whole chain).
+//! `--semiring plus-times|min-plus|or-and|max-min` (the multiply
+//! algebra, DESIGN.md §9), and for `run`/`chain`: `--alg`, `--nprocs`,
+//! `--matrix`, `--ncols`, `--profile summit|dgx2|flat:<GBps>`, `--pjrt`;
+//! `chain` adds `--steps <n>` and `--out DIR` (BENCH JSON of the whole
+//! chain).
 //!
 //! `run`, `chain`, and `bench` accept `--trace[=DIR]`: record per-PE
 //! span traces (see `fabric::trace`), print an in-terminal profile
@@ -37,7 +39,7 @@ use sparta::coordinator::{check_bench_dir, print_profile, write_chrome_trace};
 use sparta::coordinator::{run_spgemm, run_spmm, SpgemmConfig, SpmmConfig};
 use sparta::coordinator::{Jv, Session, SessionConfig};
 use sparta::fabric::{NetProfile, PeTrace, DEFAULT_QUEUE_STALL_MS};
-use sparta::matrix::{mm_io, suite, Csr};
+use sparta::matrix::{mm_io, suite, Csr, Semiring};
 use sparta::runtime::TileBackend;
 use sparta::serve::{CsrSource, DenseSource, MultiplyReq, ServeClient, ServeConfig, ServeDaemon};
 
@@ -134,6 +136,15 @@ fn parse_lookahead(opts: &Opts) -> Result<usize> {
     opts.get("lookahead", DEFAULT_LOOKAHEAD)
 }
 
+/// `--semiring NAME`: the (⊕, ⊗) algebra every multiply runs over
+/// (default plus-times; min-plus, or-and, max-min are the graph
+/// algebras — see DESIGN.md §9).
+fn parse_semiring(opts: &Opts) -> Result<Semiring> {
+    let s = opts.str("semiring", "plus-times");
+    Semiring::from_name(&s)
+        .with_context(|| format!("bad --semiring {s:?} (plus-times|min-plus|or-and|max-min)"))
+}
+
 /// `--trace[=DIR]`: the boolean enables span recording + the terminal
 /// profile; the `=DIR` form additionally names a directory for the
 /// Chrome/Perfetto `TRACE_*.json` timeline.
@@ -197,6 +208,8 @@ fn dispatch(args: &[String]) -> Result<()> {
             println!("spgemm algorithms: sc sa rws summa petsc");
             println!("profiles: summit dgx2 wallclock flat:<GBps>");
             println!("comm modes: full row (row-selective B fetches)");
+            let names: Vec<&str> = Semiring::ALL.iter().map(|sr| sr.name()).collect();
+            println!("semirings: {} (DESIGN.md §9)", names.join(" "));
             Ok(())
         }
         "help" | "--help" | "-h" => {
@@ -216,6 +229,7 @@ fn repro(opts: &Opts) -> Result<()> {
         comm: parse_comm(opts)?,
         trace: false,
         lookahead: parse_lookahead(opts)?,
+        semiring: parse_semiring(opts)?,
     };
     let run_one = |w: &str| -> Result<()> {
         match w {
@@ -277,6 +291,7 @@ fn bench(opts: &Opts) -> Result<()> {
         comm: parse_comm(opts)?,
         trace: traced,
         lookahead: parse_lookahead(opts)?,
+        semiring: parse_semiring(opts)?,
     };
     let out_dir = std::path::PathBuf::from(opts.str("out", "bench-out"));
     let artifacts: Vec<&str> = if what == "all" {
@@ -331,6 +346,7 @@ fn run(opts: &Opts) -> Result<()> {
             cfg.comm = parse_comm(opts)?;
             cfg.trace = traced;
             cfg.lookahead = parse_lookahead(opts)?;
+            cfg.semiring = parse_semiring(opts)?;
             cfg.queue_stall_ms = opts.get("stall-ms", DEFAULT_QUEUE_STALL_MS)?;
             if opts.has("pjrt") {
                 cfg.backend = TileBackend::pjrt(std::path::Path::new("artifacts"))?;
@@ -359,6 +375,7 @@ fn run(opts: &Opts) -> Result<()> {
             cfg.comm = parse_comm(opts)?;
             cfg.trace = traced;
             cfg.lookahead = parse_lookahead(opts)?;
+            cfg.semiring = parse_semiring(opts)?;
             cfg.queue_stall_ms = opts.get("stall-ms", DEFAULT_QUEUE_STALL_MS)?;
             let run = run_spgemm(&a, &cfg)?;
             println!("{}", run.report.row());
@@ -400,6 +417,7 @@ fn chain(opts: &Opts) -> Result<()> {
         .context("bad --alg (sc|sa|rws|lws-c|lws-a|summa|comblas|petsc)")?;
     let comm = parse_comm(opts)?;
     let lookahead = parse_lookahead(opts)?;
+    let semiring = parse_semiring(opts)?;
     let stall_ms: u64 = opts.get("stall-ms", DEFAULT_QUEUE_STALL_MS)?;
 
     let mut cfg = SessionConfig::new(nprocs, profile);
@@ -434,6 +452,7 @@ fn chain(opts: &Opts) -> Result<()> {
             .verify(verify)
             .trace(traced)
             .lookahead(lookahead)
+            .semiring(semiring)
             .stall_ms(stall_ms)
             .label(&format!("step {step}"))
             .matrix(&matrix)
@@ -586,6 +605,7 @@ fn client(opts: &Opts) -> Result<()> {
             req.alg = Alg::from_name(&opts.str("alg", "sc"))
                 .context("bad --alg (sc|sa|sb|sc-unopt|rws|lws-c|lws-a|summa|comblas|petsc)")?;
             req.comm = parse_comm(opts)?;
+            req.semiring = parse_semiring(opts)?;
             req.verify = opts.has("verify");
             req.lookahead = parse_lookahead(opts)?;
             if opts.has("output") {
@@ -660,11 +680,11 @@ SUBCOMMANDS:
 
 USAGE:
   sparta repro <fig1|fig2|fig3|fig4|fig5|table1|table2a|table2b|all> [--scale-shift N] [--verify] [--comm full|row] [--lookahead N]
-  sparta bench [fig1|...|table2b|all] [--smoke] [--scale-shift N] [--out DIR] [--quiet] [--comm full|row] [--lookahead N] [--trace] [--check BASELINE_DIR]
-  sparta run spmm   --alg sc --nprocs 24 --matrix amazon --ncols 128 --profile summit [--pjrt] [--verify] [--comm full|row] [--lookahead N] [--trace[=DIR]]
-  sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify] [--comm full|row] [--lookahead N] [--trace[=DIR]]
-  sparta chain spmm --steps 3 --alg sc --nprocs 16 --matrix amazon --ncols 128 [--verify] [--out DIR] [--lookahead N] [--trace[=DIR]]
-  sparta chain spgemm --steps 3 --alg sc --nprocs 16 --matrix mouse_gene [--verify] [--out DIR] [--lookahead N] [--trace[=DIR]]
+  sparta bench [fig1|...|table2b|bfs|apsp|mcl|all] [--smoke] [--scale-shift N] [--out DIR] [--quiet] [--comm full|row] [--lookahead N] [--trace] [--check BASELINE_DIR]
+  sparta run spmm   --alg sc --nprocs 24 --matrix amazon --ncols 128 --profile summit [--pjrt] [--verify] [--comm full|row] [--semiring SR] [--lookahead N] [--trace[=DIR]]
+  sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify] [--comm full|row] [--semiring SR] [--lookahead N] [--trace[=DIR]]
+  sparta chain spmm --steps 3 --alg sc --nprocs 16 --matrix amazon --ncols 128 [--verify] [--out DIR] [--semiring SR] [--lookahead N] [--trace[=DIR]]
+  sparta chain spgemm --steps 3 --alg sc --nprocs 16 --matrix mouse_gene [--verify] [--out DIR] [--semiring SR] [--lookahead N] [--trace[=DIR]]
   sparta serve [--addr HOST:PORT] [--nprocs N] [--profile P] [--seg-mb N] [--cache-mb N] [--max-inflight N] [--batch N] [--timeout-ms N] [--stall-ms N] [--trace] [--out DIR]
   sparta client [ACTION] [--addr HOST:PORT] [--tenant NAME] — actions: ping | load-csr NAME | load-dense NAME | multiply A B | unload NAME | list | bench | stats | shutdown
   sparta list
@@ -672,6 +692,15 @@ USAGE:
 `--comm row` switches every remote B-tile fetch to the sparsity-aware
 row-selective gather (only the rows each consumer's A tile references
 move; hybrid fallback to a full get when selective would cost more).
+
+`--semiring SR` (run/chain/client multiply; SR one of plus-times,
+min-plus, or-and, max-min) selects the (⊕, ⊗) algebra every local
+multiply and accumulation runs over. min-plus is APSP path relaxation,
+or-and is boolean reachability (BFS frontiers), max-min is bottleneck
+capacity; the three graph algebras are exact in f32, so --verify
+demands bitwise equality with the host reference. The scenario bench
+artifacts (bfs, apsp, mcl) run whole graph algorithms end-to-end over
+these algebras and self-check against host references (DESIGN.md §9).
 
 `--lookahead N` sets the prefetch depth of the k-lookahead tile
 pipeline (default 2): while a PE multiplies tile k, the async gets for

@@ -41,6 +41,17 @@ impl Coo {
 
     /// Sort by (row, col) and sum duplicate entries in place.
     pub fn sum_duplicates(&mut self) {
+        self.merge_duplicates(|a, b| a + b);
+    }
+
+    /// Sort by (row, col) and ⊕-combine duplicate entries in place —
+    /// `sum_duplicates` under an arbitrary semiring's addition (e.g.
+    /// min-plus keeps the *shortest* of duplicate edges).
+    pub fn sum_duplicates_sr(&mut self, sr: super::semiring::Semiring) {
+        self.merge_duplicates(|a, b| sr.add(a, b));
+    }
+
+    fn merge_duplicates(&mut self, combine: impl Fn(f32, f32) -> f32) {
         if self.nnz() == 0 {
             return;
         }
@@ -56,7 +67,8 @@ impl Coo {
             let (r, c, v) = (self.rows[i], self.cols[i], self.vals[i]);
             if let (Some(&lr), Some(&lc)) = (rows.last(), cols.last()) {
                 if lr == r && lc == c {
-                    *vals.last_mut().unwrap() += v;
+                    let last = vals.last_mut().unwrap();
+                    *last = combine(*last, v);
                     continue;
                 }
             }

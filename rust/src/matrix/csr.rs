@@ -36,6 +36,17 @@ impl Csr {
     /// Build from triplets (duplicates are summed).
     pub fn from_coo(mut coo: Coo) -> Self {
         coo.sum_duplicates();
+        Self::from_merged_coo(coo)
+    }
+
+    /// Build from triplets, ⊕-combining duplicates under `sr` (min-plus
+    /// keeps the shortest duplicate edge rather than summing weights).
+    pub fn from_coo_sr(mut coo: Coo, sr: super::semiring::Semiring) -> Self {
+        coo.sum_duplicates_sr(sr);
+        Self::from_merged_coo(coo)
+    }
+
+    fn from_merged_coo(coo: Coo) -> Self {
         let mut rowptr = vec![0i64; coo.nrows + 1];
         for &r in &coo.rows {
             rowptr[r as usize + 1] += 1;
@@ -161,6 +172,21 @@ impl Csr {
             let (cs, vs) = self.row(r);
             for (&c, &v) in cs.iter().zip(vs) {
                 d[(r, c as usize)] += v;
+            }
+        }
+        d
+    }
+
+    /// Densify under a semiring: absent entries become the semiring's
+    /// additive identity (∞ for min-plus, −∞ for max-min), which is
+    /// what makes dense comparisons of sparse semiring results sound.
+    pub fn to_dense_sr(&self, sr: super::semiring::Semiring) -> Dense {
+        let mut d = Dense::filled(self.nrows, self.ncols, sr.zero());
+        for r in 0..self.nrows {
+            let (cs, vs) = self.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                let cell = &mut d[(r, c as usize)];
+                *cell = sr.add(*cell, v);
             }
         }
         d

@@ -31,6 +31,12 @@ impl Dense {
         Dense { nrows, ncols, data: vec![1.0; nrows * ncols] }
     }
 
+    /// Every element set to `v` — accumulator tiles start from the
+    /// semiring's additive identity, which is not 0.0 for min-plus/max-min.
+    pub fn filled(nrows: usize, ncols: usize, v: f32) -> Self {
+        Dense { nrows, ncols, data: vec![v; nrows * ncols] }
+    }
+
     pub fn bytes(&self) -> usize {
         self.data.len() * 4
     }
@@ -61,6 +67,25 @@ impl Dense {
         for (a, b) in self.data.iter_mut().zip(&other.data) {
             *a += b;
         }
+    }
+
+    /// In-place ⊕-accumulate under a semiring: self = self ⊕ other.
+    pub fn add_assign_sr(&mut self, other: &Dense, sr: super::semiring::Semiring) {
+        if sr.is_plus_times() {
+            return self.add_assign(other);
+        }
+        assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a = sr.add(*a, b);
+        }
+    }
+
+    /// Bitwise element equality (∞ == ∞ holds; NaN anywhere fails).
+    /// The verification comparator for exactly-reproducible semirings,
+    /// where difference-based metrics would produce ∞−∞ = NaN.
+    pub fn exact_eq(&self, other: &Dense) -> bool {
+        (self.nrows, self.ncols) == (other.nrows, other.ncols)
+            && self.data.iter().zip(&other.data).all(|(a, b)| a == b)
     }
 
     /// Write `block` into position (r0, c0).

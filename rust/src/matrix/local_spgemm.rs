@@ -5,6 +5,7 @@
 //! the compression factor `cf` (flops per nonzero output, Gu et al.).
 
 use super::csr::Csr;
+use super::semiring::Semiring;
 
 /// Result of a local SpGEMM with its measured work statistics.
 #[derive(Clone, Debug)]
@@ -65,6 +66,68 @@ pub fn spgemm(a: &Csr, b: &Csr) -> SpgemmOut {
         // (downstream `Csr::submatrix` relies on sorted rows). For dense
         // rows a linear scan over the SPA beats sorting; for sparse rows
         // the comparison sort wins (adaptive cutoff measured in §Perf).
+        if row_cols.len() * 8 > n {
+            for j in 0..n {
+                if marker[j] == gen {
+                    colind.push(j as i32);
+                    vals.push(acc[j]);
+                }
+            }
+        } else {
+            row_cols.sort_unstable();
+            colind.extend_from_slice(&row_cols);
+            vals.extend(row_cols.iter().map(|&j| acc[j as usize]));
+        }
+        rowptr.push(colind.len() as i64);
+    }
+
+    let c = Csr { nrows: a.nrows, ncols: n, rowptr, colind, vals };
+    let flops = 2.0 * mults as f64;
+    let cf = if c.nnz() == 0 { 0.0 } else { flops / (2.0 * c.nnz() as f64) };
+    SpgemmOut { c, flops, cf }
+}
+
+/// Gustavson SpGEMM under an arbitrary semiring. `PlusTimes` dispatches
+/// to the specialized kernel above; the generic path runs the same SPA
+/// structure with ⊕/⊗ dispatched per scalar. Output structure (which
+/// entries exist) is the expansion of A's and B's patterns — an entry
+/// whose accumulated value happens to equal the semiring zero is kept
+/// explicit, exactly as the plus-times kernel keeps exact-zero sums.
+pub fn spgemm_sr(a: &Csr, b: &Csr, sr: Semiring) -> SpgemmOut {
+    if sr.is_plus_times() {
+        return spgemm(a, b);
+    }
+    assert_eq!(a.ncols, b.nrows, "spgemm inner dimension mismatch");
+    let n = b.ncols;
+    let mut rowptr = Vec::with_capacity(a.nrows + 1);
+    rowptr.push(0i64);
+    let mut colind: Vec<i32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+
+    let mut acc = vec![sr.zero(); n];
+    let mut marker = vec![u32::MAX; n];
+    let mut row_cols: Vec<i32> = Vec::new();
+    let mut mults: u64 = 0;
+
+    for i in 0..a.nrows {
+        row_cols.clear();
+        let gen = i as u32;
+        let (acs, avs) = a.row(i);
+        for (&k, &av) in acs.iter().zip(avs) {
+            let (bcs, bvs) = b.row(k as usize);
+            mults += bcs.len() as u64;
+            for (&j, &bv) in bcs.iter().zip(bvs) {
+                let j = j as usize;
+                debug_assert!(j < n);
+                if marker[j] != gen {
+                    marker[j] = gen;
+                    acc[j] = sr.mul(av, bv);
+                    row_cols.push(j as i32);
+                } else {
+                    acc[j] = sr.add(acc[j], sr.mul(av, bv));
+                }
+            }
+        }
         if row_cols.len() * 8 > n {
             for j in 0..n {
                 if marker[j] == gen {

@@ -5,6 +5,7 @@
 
 use super::csr::Csr;
 use super::dense::Dense;
+use super::semiring::Semiring;
 
 /// C += A * B. Shapes: A (m×k), B (k×n), C (m×n).
 pub fn spmm_acc(a: &Csr, b: &Dense, c: &mut Dense) {
@@ -45,6 +46,42 @@ pub fn spmm_acc(a: &Csr, b: &Dense, c: &mut Dense) {
 pub fn spmm(a: &Csr, b: &Dense) -> Dense {
     let mut c = Dense::zeros(a.nrows, b.ncols);
     spmm_acc(a, b, &mut c);
+    c
+}
+
+/// C = C ⊕ (A ⊗ B) under an arbitrary semiring. `PlusTimes` dispatches
+/// to the unrolled fast kernel above (bitwise-identical results); the
+/// generic path trades the two-nonzero unroll for algebra dispatch —
+/// acceptable because the scenario workloads it serves are
+/// communication-bound, not kernel-bound.
+pub fn spmm_acc_sr(a: &Csr, b: &Dense, c: &mut Dense, sr: Semiring) {
+    if sr.is_plus_times() {
+        return spmm_acc(a, b, c);
+    }
+    assert_eq!(a.ncols, b.nrows, "spmm inner dimension mismatch");
+    assert_eq!(a.nrows, c.nrows, "spmm output rows mismatch");
+    assert_eq!(b.ncols, c.ncols, "spmm output cols mismatch");
+    let n = b.ncols;
+    for i in 0..a.nrows {
+        let lo = a.rowptr[i] as usize;
+        let hi = a.rowptr[i + 1] as usize;
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for p in lo..hi {
+            let col = a.colind[p] as usize;
+            let av = a.vals[p];
+            let brow = &b.data[col * n..col * n + n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv = sr.add(*cv, sr.mul(av, bv));
+            }
+        }
+    }
+}
+
+/// C = A ⊗ B under a semiring (fresh output, filled with the semiring's
+/// additive identity — ∞ for min-plus, not 0).
+pub fn spmm_sr(a: &Csr, b: &Dense, sr: Semiring) -> Dense {
+    let mut c = Dense::filled(a.nrows, b.ncols, sr.zero());
+    spmm_acc_sr(a, b, &mut c, sr);
     c
 }
 

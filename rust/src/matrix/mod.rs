@@ -8,6 +8,7 @@ pub mod gen;
 pub mod local_spgemm;
 pub mod local_spmm;
 pub mod mm_io;
+pub mod semiring;
 pub mod suite;
 
 pub use coo::Coo;
@@ -15,3 +16,4 @@ pub use csr::Csr;
 pub use dense::Dense;
 pub use local_spgemm::{spgemm, spgemm_flops, SpgemmOut};
 pub use local_spmm::{spmm, spmm_acc, spmm_flops};
+pub use semiring::Semiring;

@@ -1,0 +1,253 @@
+//! Semirings: the (⊕, ⊗) algebra every multiply runs over.
+//!
+//! The distributed algorithms never touch `+`/`*` directly — every
+//! accumulation site goes through [`Semiring::add`] / [`Semiring::mul`]
+//! (or a kernel specialized for [`Semiring::PlusTimes`], the default).
+//! Values stay `f32` on the wire for every semiring: min-plus and
+//! max-min use IEEE ±∞ as their additive identities, and the boolean
+//! semiring encodes truth as `1.0` / `0.0`. That keeps tile payloads,
+//! `AccMsg` frames, and the symmetric-heap layout byte-identical across
+//! semirings; only a 2-bit tag in the `AccMsg` header records which
+//! algebra a partial was produced under (see `dist::accum`).
+//!
+//! ## Contract
+//!
+//! For each variant, `add` is associative and commutative with identity
+//! [`Semiring::zero`], `mul` is associative with identity
+//! [`Semiring::one`], `mul` distributes over `add`, and `zero` is an
+//! annihilator (`mul(zero, x) = zero`). The *sparse* zero — the value
+//! an absent matrix entry stands for — is `zero()`, not `0.0`: a
+//! min-plus CSR with no entry at (i,j) means "distance ∞", so dense
+//! materializations and accumulator tiles must be filled with
+//! `zero()` (see [`Semiring::exact_verify`] for the verification
+//! consequence).
+//!
+//! ## Determinism
+//!
+//! `PlusTimes` over f32 is only approximately associative, so results
+//! depend on accumulation order and distributed runs are verified with
+//! a relative-error tolerance. The three other semirings are *exactly*
+//! associative/commutative in floating point — `min`/`max` are order
+//! independent, and each product `a ⊗ b` is computed identically on
+//! every path — so distributed results are bitwise equal to a host
+//! reference regardless of tiling, comm mode, or lookahead depth, and
+//! verification compares exactly (`exact_verify`).
+
+/// A semiring (⊕, ⊗) over `f32`-encoded values.
+///
+/// Runtime-dispatched enum rather than a generic type parameter: the
+/// wire format, heap layout, and the plus-times fast-path kernels stay
+/// untouched, and serve requests can pick an algebra per multiply.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Semiring {
+    /// Standard arithmetic (+, ×): zero = 0, one = 1. Approximate in
+    /// f32; all pre-semiring behavior.
+    #[default]
+    PlusTimes,
+    /// Tropical (min, +): zero = +∞, one = 0. Shortest paths / APSP
+    /// block relaxation.
+    MinPlus,
+    /// Boolean (∨, ∧) with truth encoded as 1.0 / 0.0 (any nonzero is
+    /// true): zero = 0, one = 1. Reachability / BFS frontiers.
+    OrAnd,
+    /// Bottleneck (max, min): zero = −∞, one = +∞. Widest paths.
+    MaxMin,
+}
+
+impl Semiring {
+    /// Every semiring, in wire-tag order (see [`Semiring::index`]).
+    pub const ALL: [Semiring; 4] =
+        [Semiring::PlusTimes, Semiring::MinPlus, Semiring::OrAnd, Semiring::MaxMin];
+
+    /// Additive identity ⊕-zero — also the value an absent sparse
+    /// entry denotes.
+    #[inline]
+    pub fn zero(self) -> f32 {
+        match self {
+            Semiring::PlusTimes => 0.0,
+            Semiring::MinPlus => f32::INFINITY,
+            Semiring::OrAnd => 0.0,
+            Semiring::MaxMin => f32::NEG_INFINITY,
+        }
+    }
+
+    /// Multiplicative identity ⊗-one.
+    #[inline]
+    pub fn one(self) -> f32 {
+        match self {
+            Semiring::PlusTimes => 1.0,
+            Semiring::MinPlus => 0.0,
+            Semiring::OrAnd => 1.0,
+            Semiring::MaxMin => f32::INFINITY,
+        }
+    }
+
+    /// a ⊕ b.
+    #[inline]
+    pub fn add(self, a: f32, b: f32) -> f32 {
+        match self {
+            Semiring::PlusTimes => a + b,
+            Semiring::MinPlus => a.min(b),
+            Semiring::OrAnd => {
+                if a != 0.0 || b != 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Semiring::MaxMin => a.max(b),
+        }
+    }
+
+    /// a ⊗ b.
+    #[inline]
+    pub fn mul(self, a: f32, b: f32) -> f32 {
+        match self {
+            Semiring::PlusTimes => a * b,
+            Semiring::MinPlus => a + b,
+            Semiring::OrAnd => {
+                if a != 0.0 && b != 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Semiring::MaxMin => a.min(b),
+        }
+    }
+
+    /// CLI / wire name (`--semiring <name>`, serve `semiring` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Semiring::PlusTimes => "plus-times",
+            Semiring::MinPlus => "min-plus",
+            Semiring::OrAnd => "or-and",
+            Semiring::MaxMin => "max-min",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Semiring> {
+        match s {
+            "plus-times" => Some(Semiring::PlusTimes),
+            "min-plus" => Some(Semiring::MinPlus),
+            "or-and" => Some(Semiring::OrAnd),
+            "max-min" => Some(Semiring::MaxMin),
+            _ => None,
+        }
+    }
+
+    /// 2-bit wire tag carried in the `AccMsg` header.
+    #[inline]
+    pub fn index(self) -> u64 {
+        match self {
+            Semiring::PlusTimes => 0,
+            Semiring::MinPlus => 1,
+            Semiring::OrAnd => 2,
+            Semiring::MaxMin => 3,
+        }
+    }
+
+    /// Inverse of [`Semiring::index`]; panics outside 0..=3 (the wire
+    /// tag is masked to 2 bits before decode).
+    #[inline]
+    pub fn from_index(i: u64) -> Semiring {
+        match i {
+            0 => Semiring::PlusTimes,
+            1 => Semiring::MinPlus,
+            2 => Semiring::OrAnd,
+            3 => Semiring::MaxMin,
+            _ => panic!("semiring wire tag {i} out of range"),
+        }
+    }
+
+    #[inline]
+    pub fn is_plus_times(self) -> bool {
+        matches!(self, Semiring::PlusTimes)
+    }
+
+    /// Whether distributed results are bitwise reproducible and must be
+    /// verified with exact equality. True for every semiring whose ⊕ is
+    /// exactly associative in f32 (min/max/or); false for `PlusTimes`,
+    /// where rounding makes accumulation order visible and verification
+    /// uses a relative-error tolerance instead. Exactness also sidesteps
+    /// the ∞−∞ = NaN hazard a difference-based check would hit on
+    /// min-plus/max-min identities.
+    #[inline]
+    pub fn exact_verify(self) -> bool {
+        !self.is_plus_times()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identities_and_annihilators() {
+        for sr in Semiring::ALL {
+            for x in [0.0f32, 1.0, -2.5, 7.0] {
+                assert_eq!(sr.add(sr.zero(), x), sr.add(x, sr.zero()));
+                // zero is the ⊕ identity…
+                if sr != Semiring::OrAnd || x == 0.0 || x == 1.0 {
+                    assert_eq!(sr.add(sr.zero(), x), x, "{sr:?} add-identity on {x}");
+                    // …and one is the ⊗ identity (on canonical booleans
+                    // for OrAnd, where any nonzero normalizes to 1).
+                    assert_eq!(sr.mul(sr.one(), x), x, "{sr:?} mul-identity on {x}");
+                }
+                // zero annihilates under ⊗.
+                assert_eq!(sr.mul(sr.zero(), x), sr.zero(), "{sr:?} annihilator on {x}");
+                assert_eq!(sr.mul(x, sr.zero()), sr.zero(), "{sr:?} annihilator on {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_is_commutative_and_associative() {
+        let xs = [0.0f32, 1.0, 3.0, -4.0, 0.5];
+        for sr in Semiring::ALL {
+            for &a in &xs {
+                for &b in &xs {
+                    assert_eq!(sr.add(a, b), sr.add(b, a), "{sr:?} comm {a} {b}");
+                    for &c in &xs {
+                        if sr == Semiring::PlusTimes {
+                            continue; // only approximately associative
+                        }
+                        assert_eq!(
+                            sr.add(sr.add(a, b), c),
+                            sr.add(a, sr.add(b, c)),
+                            "{sr:?} assoc {a} {b} {c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for sr in Semiring::ALL {
+            assert_eq!(Semiring::from_name(sr.name()), Some(sr));
+            assert_eq!(Semiring::from_index(sr.index()), sr);
+        }
+        assert_eq!(Semiring::from_name("nope"), None);
+        assert_eq!(Semiring::default(), Semiring::PlusTimes);
+    }
+
+    #[test]
+    fn min_plus_is_shortest_path_algebra() {
+        let sr = Semiring::MinPlus;
+        assert_eq!(sr.add(3.0, 5.0), 3.0);
+        assert_eq!(sr.mul(3.0, 5.0), 8.0);
+        assert_eq!(sr.mul(sr.zero(), 5.0), f32::INFINITY);
+        assert_eq!(sr.add(sr.zero(), 5.0), 5.0);
+    }
+
+    #[test]
+    fn max_min_is_bottleneck_algebra() {
+        let sr = Semiring::MaxMin;
+        assert_eq!(sr.add(3.0, 5.0), 5.0);
+        assert_eq!(sr.mul(3.0, 5.0), 3.0);
+        assert_eq!(sr.mul(sr.zero(), 5.0), sr.zero());
+        assert_eq!(sr.add(sr.zero(), 5.0), 5.0);
+    }
+}

@@ -24,7 +24,50 @@
 //!
 //! [`ServeClient`] (`serve::client`) is the matching blocking client,
 //! used by the `sparta client` subcommand and the e2e tests. See
-//! DESIGN.md §8 for the protocol grammar and lifecycle rules.
+//! DESIGN.md §8 for the full lifecycle rules.
+//!
+//! # Wire grammar
+//!
+//! One JSON object per line, one request per line, one response per
+//! line (every byte outside a string literal is ASCII; newlines only
+//! as terminators):
+//!
+//! ```text
+//! request  := { "id": int, "tenant": name, "cmd": cmd, ...cmd fields }
+//! cmd      := "ping" | "load_csr" | "load_dense" | "multiply"
+//!           | "unload" | "list" | "bench" | "stats" | "shutdown"
+//! response := { "id": int, "ok": bool, "kind": string,
+//!               "error"?: { "code": string, "message": string },
+//!               ...body fields (flattened) }
+//! name     := [A-Za-z0-9_.-]{1,64}
+//! operand  := name | owner "/" name     (unqualified ⇒ caller tenant)
+//! ```
+//!
+//! `multiply` carries `a`, `b`, `alg`, `comm`, `semiring` (absent ⇒
+//! `plus-times` — pre-semiring clients keep working; DESIGN.md §9),
+//! `verify`, `lookahead`, optional `output` and `timeout_ms`.
+//! `load_csr`/`load_dense` carry a `source` object (generator variants
+//! or explicit validated payloads).
+//!
+//! # Stable error codes
+//!
+//! The `error.code` strings are a versioned API surface clients branch
+//! on — they never change meaning; new failures get new codes:
+//!
+//! | code | meaning | typical trigger |
+//! |---|---|---|
+//! | `bad_request` | request malformed or semantically invalid | unknown cmd, bad name, invalid source, unknown alg/semiring |
+//! | `not_found` | operand name does not resolve | multiply/unload of a never-loaded or released name |
+//! | `forbidden` | cross-tenant access outside `public/` | reading another tenant's operand |
+//! | `exists` | name collision on load with incompatible shape | `output` name already bound to a different shape |
+//! | `admission_full` | in-flight plan budget exhausted | more than `max_inflight` unanswered multiplies |
+//! | `shutting_down` | daemon is draining | submission after SIGTERM/`shutdown` |
+//! | `timeout` | reply deadline expired | `timeout_ms` (or daemon default) elapsed before the engine answered |
+//! | `verify_failed` | result mismatched the host reference | `verify: true` and a tolerance (plus-times) or exact (graph algebras) failure |
+//! | `exec_error` | the multiply itself failed | shape mismatch, segment exhaustion, backend refusal (e.g. PJRT × non-plus-times) |
+//!
+//! A malformed line or failed command always produces a structured
+//! error response — the daemon never dies on client input.
 
 pub mod admission;
 pub mod client;

@@ -23,7 +23,7 @@ use anyhow::{bail, Context, Result};
 use crate::algorithms::{Alg, Comm};
 use crate::coordinator::report::Jv;
 use crate::coordinator::ExecOpts;
-use crate::matrix::{Csr, Dense};
+use crate::matrix::{Csr, Dense, Semiring};
 
 /// Tenant and operand base names: non-empty `[A-Za-z0-9_.-]`, so names
 /// compose into `tenant/name` references and BENCH artifact file names
@@ -230,6 +230,9 @@ pub struct MultiplyReq {
     pub b: String,
     pub alg: Alg,
     pub comm: Comm,
+    /// The multiply's (⊕, ⊗) algebra. Absent on the wire means
+    /// plus-times, so pre-semiring clients keep working unchanged.
+    pub semiring: Semiring,
     pub verify: bool,
     pub lookahead: usize,
     pub output: Option<String>,
@@ -246,6 +249,7 @@ impl MultiplyReq {
             b: b.to_string(),
             alg: Alg::StationaryC,
             comm: d.comm,
+            semiring: d.semiring,
             verify: false,
             lookahead: d.lookahead,
             output: None,
@@ -255,8 +259,10 @@ impl MultiplyReq {
 
     /// The coalescing identity: two requests with equal keys from the
     /// same tenant compute the same result and may share one run.
-    pub fn coalesce_key(&self) -> Option<(String, String, &'static str, &'static str, bool, usize)>
-    {
+    #[allow(clippy::type_complexity)]
+    pub fn coalesce_key(
+        &self,
+    ) -> Option<(String, String, &'static str, &'static str, &'static str, bool, usize)> {
         if self.output.is_some() {
             return None; // named outputs have per-request side effects
         }
@@ -265,6 +271,7 @@ impl MultiplyReq {
             self.b.clone(),
             self.alg.name(),
             self.comm.name(),
+            self.semiring.name(),
             self.verify,
             self.lookahead,
         ))
@@ -333,6 +340,7 @@ impl Request {
                 fields.push(("b".to_string(), Jv::str(&m.b)));
                 fields.push(("alg".to_string(), Jv::str(alg_wire_name(m.alg))));
                 fields.push(("comm".to_string(), Jv::str(comm_wire_name(m.comm))));
+                fields.push(("semiring".to_string(), Jv::str(m.semiring.name())));
                 fields.push(("verify".to_string(), Jv::Bool(m.verify)));
                 fields.push(("lookahead".to_string(), Jv::Int(m.lookahead as i64)));
                 if let Some(out) = &m.output {
@@ -379,6 +387,10 @@ impl Request {
                 if let Some(comm) = v.get("comm").and_then(Jv::as_str) {
                     m.comm = Comm::from_name(comm)
                         .with_context(|| format!("unknown comm mode {comm:?}"))?;
+                }
+                if let Some(sr) = v.get("semiring").and_then(Jv::as_str) {
+                    m.semiring = Semiring::from_name(sr)
+                        .with_context(|| format!("unknown semiring {sr:?}"))?;
                 }
                 if let Some(x) = v.get("verify").and_then(Jv::as_bool) {
                     m.verify = x;
@@ -576,6 +588,7 @@ mod tests {
                 b: "H".into(),
                 alg: Alg::RandomWs,
                 comm: Comm::RowSelective,
+                semiring: Semiring::MinPlus,
                 verify: true,
                 lookahead: 3,
                 output: Some("H2".into()),
@@ -583,6 +596,22 @@ mod tests {
             }),
         });
         round_trip(Request { id: 6, tenant: "admin".into(), cmd: Cmd::Shutdown });
+    }
+
+    #[test]
+    fn every_semiring_round_trips_and_absent_means_plus_times() {
+        for sr in Semiring::ALL {
+            let mut m = MultiplyReq::new("A", "B");
+            m.semiring = sr;
+            round_trip(Request { id: 10, tenant: "t".into(), cmd: Cmd::Multiply(m) });
+        }
+        // A pre-semiring client line (no "semiring" field) decodes to
+        // plus-times — wire back-compat.
+        let line = "{\"id\":1,\"tenant\":\"t\",\"cmd\":\"multiply\",\"a\":\"x\",\"b\":\"y\"}";
+        match Request::decode(line).unwrap().cmd {
+            Cmd::Multiply(m) => assert!(m.semiring.is_plus_times()),
+            other => panic!("decoded {other:?}"),
+        }
     }
 
     #[test]
@@ -640,6 +669,7 @@ mod tests {
             "{\"id\":1,\"tenant\":\"t\",\"cmd\":\"nope\"}",
             "{\"id\":1,\"tenant\":\"t\",\"cmd\":\"multiply\",\"a\":\"x\"}",
             "{\"id\":1,\"tenant\":\"t\",\"cmd\":\"multiply\",\"a\":\"x\",\"b\":\"y\",\"alg\":\"zz\"}",
+            "{\"id\":1,\"tenant\":\"t\",\"cmd\":\"multiply\",\"a\":\"x\",\"b\":\"y\",\"semiring\":\"zz\"}",
         ] {
             assert!(Request::decode(line).is_err(), "accepted {line:?}");
         }
@@ -655,6 +685,9 @@ mod tests {
         let mut c = a.clone();
         c.verify = true;
         assert_ne!(a.coalesce_key(), c.coalesce_key());
+        let mut sr = a.clone();
+        sr.semiring = Semiring::OrAnd; // a different algebra is a different result
+        assert_ne!(a.coalesce_key(), sr.coalesce_key());
         let mut d = a.clone();
         d.output = Some("out".into());
         assert_eq!(d.coalesce_key(), None);

@@ -225,6 +225,7 @@ impl Registry {
                 .plan(a_id, b_id)
                 .alg(req.alg)
                 .comm(req.comm)
+                .semiring(req.semiring)
                 .verify(req.verify)
                 .lookahead(req.lookahead)
                 .stall_ms(stall_ms)
@@ -446,6 +447,27 @@ mod tests {
         let doc = reg.bench_doc("alice").unwrap();
         crate::coordinator::validate_bench(&doc.to_json()).unwrap();
         assert!(reg.bench_doc("carol").is_none());
+    }
+
+    #[test]
+    fn multiply_honors_the_requested_semiring() {
+        use crate::matrix::Semiring;
+        let mut reg = small_registry();
+        reg.load_csr("t", "A", &er(48, 21)).unwrap();
+        reg.load_dense("t", "H", &DenseSource::Random { nrows: 48, ncols: 8, seed: 22 }).unwrap();
+        // verify(true) routes non-plus-times algebras through the exact
+        // equality gate, so a dropped semiring would fail the run.
+        for sr in [Semiring::MinPlus, Semiring::OrAnd, Semiring::MaxMin] {
+            let mut req = MultiplyReq::new("A", "H");
+            req.semiring = sr;
+            req.verify = true;
+            reg.multiply("t", &req).unwrap();
+            let mut sq = MultiplyReq::new("A", "A");
+            sq.semiring = sr;
+            sq.verify = true;
+            reg.multiply("t", &sq).unwrap();
+        }
+        assert_eq!(reg.ledger("t").len(), 6);
     }
 
     #[test]

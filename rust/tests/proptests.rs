@@ -518,6 +518,65 @@ fn prop_lookahead_depth_is_timing_only() {
 }
 
 #[test]
+fn prop_semirings_match_host_reference_across_comm_and_lookahead() {
+    // Tentpole invariant of the semiring engine: the comm-mode and
+    // lookahead machinery (and every algorithm's scheduling) is
+    // algebra-oblivious. min, max, and or are exactly associative and
+    // commutative in f32 and each ⊗ product is a single binary op, so
+    // for the three graph algebras the distributed result must match
+    // the host reference *bitwise* — even for stationary-A, whose queue
+    // arrival order is timing-dependent (DESIGN.md §9). `verify = true`
+    // routes through the session's exact-equality gate for these
+    // algebras, so a mismatch fails the run itself.
+    use sparta::algorithms::Comm;
+    use sparta::matrix::Semiring;
+
+    check(
+        "min-plus/or-and/max-min == host reference (exact)",
+        6,
+        0x5117,
+        |rng| {
+            let sr = [Semiring::MinPlus, Semiring::OrAnd, Semiring::MaxMin][rng.below_usize(3)];
+            let nprocs = [4usize, 6, 9][rng.below_usize(3)];
+            let a = if rng.below(2) == 0 {
+                gen::erdos_renyi(24 + 8 * rng.below_usize(6), 2, rng.next_u64())
+            } else {
+                gen::rmat(6, 3, 0.5, 0.17, 0.17, rng.next_u64())
+            };
+            let comm = if rng.below(2) == 0 { Comm::FullTile } else { Comm::RowSelective };
+            (sr, a, nprocs, comm)
+        },
+        |(sr, a, nprocs, comm)| {
+            for depth in [0usize, 2] {
+                for alg in [SpmmAlg::StationaryC, SpmmAlg::StationaryA] {
+                    let mut cfg = SpmmConfig::new(alg, *nprocs, NetProfile::dgx2(), 8);
+                    cfg.verify = true;
+                    cfg.seg_bytes = 32 << 20;
+                    cfg.comm = *comm;
+                    cfg.lookahead = depth;
+                    cfg.semiring = *sr;
+                    run_spmm(a, &cfg).map(|_| ()).map_err(|e| {
+                        format!("spmm {} {} {:?} depth={depth}: {e}", alg.name(), sr.name(), comm)
+                    })?;
+                }
+                for alg in [SpgemmAlg::StationaryC, SpgemmAlg::StationaryA] {
+                    let mut cfg = SpgemmConfig::new(alg, *nprocs, NetProfile::dgx2());
+                    cfg.verify = true;
+                    cfg.seg_bytes = 64 << 20;
+                    cfg.comm = *comm;
+                    cfg.lookahead = depth;
+                    cfg.semiring = *sr;
+                    run_spgemm(a, &cfg).map(|_| ()).map_err(|e| {
+                        format!("spgemm {} {} {:?} depth={depth}: {e}", alg.name(), sr.name(), comm)
+                    })?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_comm_modes_produce_identical_results() {
     // The tentpole invariant: `Comm::RowSelective` is a pure
     // communication optimization. Against random Erdős–Rényi and R-MAT
