@@ -1,0 +1,245 @@
+//! `sparta check --lint` — dependency-free source-level memory-model
+//! lint.
+//!
+//! The fabric's happens-before contract (DESIGN.md §10) is only
+//! checkable at runtime for code paths a run actually takes; this pass
+//! enforces the *structural* half of the contract over the whole source
+//! tree with a plain line scanner, so violations fail CI even in code
+//! no test exercises:
+//!
+//! 1. **No `Ordering::*` outside `fabric/`** — memory-ordering
+//!    decisions live in the fabric layer only. Host-side code with a
+//!    documented reason opts out per line with `// memmodel-ok: <why>`.
+//! 2. **No raw `std::sync` primitives in `algorithms/` or `dist/`** —
+//!    Mutex/RwLock/Condvar/atomics there bypass the simulated fabric
+//!    (and its race detector). Same opt-out marker.
+//! 3. **Every blocking fabric call in `algorithms/`/`dist/` must be
+//!    span-attributed** — the bare `.get_vec(` / `.get_into(` /
+//!    `.put(` forms carry no `SpanCtx`, so races and stalls in them
+//!    report as anonymous sites; use the `*_as` forms under a
+//!    `trace_note`, or mark the line.
+//!
+//! `#[cfg(test)] mod tests` blocks are exempt (the scan stops at a
+//! line-initial `mod tests`), as is this file itself. A whole file opts
+//! out with `// memmodel-ok-file: <why>` near the top.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint violation.
+#[derive(Clone, Debug)]
+pub struct LintFinding {
+    /// Path relative to the scanned source root.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Which rule fired.
+    pub rule: &'static str,
+    /// The offending line, trimmed.
+    pub text: String,
+}
+
+impl fmt::Display for LintFinding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.text)
+    }
+}
+
+/// Per-line opt-out marker (same or immediately preceding line).
+const MARKER: &str = "memmodel-ok:";
+/// Whole-file opt-out marker.
+const FILE_MARKER: &str = "memmodel-ok-file:";
+
+/// The crate's `src/` directory as compiled (CI and dev checkouts).
+pub fn default_src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+/// Scan a source tree; returns all findings, sorted by file then line.
+pub fn lint_tree(src_root: &Path) -> std::io::Result<Vec<LintFinding>> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for f in files {
+        let rel = f
+            .strip_prefix(src_root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        // The lint's own pattern tables would trip every rule.
+        if rel == "analysis/memlint.rs" {
+            continue;
+        }
+        let text = std::fs::read_to_string(&f)?;
+        lint_file(&rel, &text, &mut findings);
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Rule applicability by zone (path relative to `src/`).
+fn in_fabric(rel: &str) -> bool {
+    rel.starts_with("fabric/") || rel == "fabric.rs"
+}
+
+fn in_restricted(rel: &str) -> bool {
+    rel.starts_with("algorithms/") || rel.starts_with("dist/")
+}
+
+/// Scan one file's text; pushes findings.
+pub fn lint_file(rel: &str, text: &str, findings: &mut Vec<LintFinding>) {
+    let rule1 = !in_fabric(rel);
+    let rule23 = in_restricted(rel);
+    if !rule1 && !rule23 {
+        return;
+    }
+    let raw_sync = ["Mutex", "RwLock", "Condvar", "Atomic"];
+    let unattributed = [".get_vec(", ".get_into(", ".put("];
+    let mut prev_escaped = false;
+    for (i, line) in text.lines().enumerate() {
+        if line.contains(FILE_MARKER) {
+            return;
+        }
+        // Test modules restate protocols freely (including deliberately
+        // broken ones); the contract applies to shipped code.
+        if line.trim_start() == "mod tests {" || line.trim_start().starts_with("mod tests") {
+            return;
+        }
+        let escaped = line.contains(MARKER) || prev_escaped;
+        prev_escaped = line.contains(MARKER) && !code_part(line).chars().any(|c| !c.is_whitespace());
+        if escaped {
+            continue;
+        }
+        let code = code_part(line);
+        let mut hit = |rule: &'static str| {
+            findings.push(LintFinding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule,
+                text: line.trim().to_string(),
+            });
+        };
+        if rule1 && code.contains("Ordering::") {
+            hit("ordering-outside-fabric");
+        }
+        if rule23 && raw_sync.iter().any(|p| code.contains(p)) {
+            hit("raw-sync-in-algorithms");
+        }
+        if rule23 && unattributed.iter().any(|p| code.contains(p)) {
+            hit("unattributed-fabric-call");
+        }
+    }
+}
+
+/// The line with any trailing `//` comment stripped (string literals
+/// containing `//` are rare enough in this tree to accept the
+/// imprecision — the scanner is a tripwire, not a parser).
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(idx) => &line[..idx],
+        None => line,
+    }
+}
+
+/// Render findings as a CI-friendly report; `Ok` text when clean.
+pub fn render(findings: &[LintFinding]) -> String {
+    if findings.is_empty() {
+        return "memlint: clean".to_string();
+    }
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{f}\n"));
+    }
+    out.push_str(&format!("memlint: {} violation(s)", findings.len()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(rel: &str, text: &str) -> Vec<LintFinding> {
+        let mut fs = Vec::new();
+        lint_file(rel, text, &mut fs);
+        fs
+    }
+
+    #[test]
+    fn ordering_outside_fabric_is_flagged() {
+        let fs = run("serve/x.rs", "use std::sync::atomic::Ordering;\nx.load(Ordering::Relaxed);\n");
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, "ordering-outside-fabric");
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn ordering_inside_fabric_is_allowed() {
+        assert!(run("fabric/segment.rs", "x.load(Ordering::Relaxed);\n").is_empty());
+    }
+
+    #[test]
+    fn raw_sync_in_dist_is_flagged_and_marker_exempts() {
+        let flagged = run("dist/x.rs", "let m = Mutex::new(0);\n");
+        assert_eq!(flagged.len(), 1);
+        assert_eq!(flagged[0].rule, "raw-sync-in-algorithms");
+        let same_line = run("dist/x.rs", "let m = Mutex::new(0); // memmodel-ok: host-side cache\n");
+        assert!(same_line.is_empty(), "{same_line:?}");
+        let prev_line = run("dist/x.rs", "// memmodel-ok: host-side cache\nlet m = Mutex::new(0);\n");
+        assert!(prev_line.is_empty(), "{prev_line:?}");
+    }
+
+    #[test]
+    fn raw_sync_outside_restricted_zones_is_allowed() {
+        assert!(run("serve/daemon_x.rs", "let m = Mutex::new(0);\n").is_empty());
+    }
+
+    #[test]
+    fn unattributed_fabric_calls_flagged_only_in_restricted_zones() {
+        let fs = run("algorithms/x.rs", "let v = pe.get_vec(gp);\n");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "unattributed-fabric-call");
+        // The *_as forms carry a Kind and run under trace_note: allowed.
+        assert!(run("algorithms/x.rs", "let v = pe.get_vec_as(gp, Kind::Comm);\n").is_empty());
+        assert!(run("algorithms/x.rs", "pe.put_as(gp, &xs, Kind::Acc);\n").is_empty());
+        assert!(run("coordinator/x.rs", "let v = pe.get_vec(gp);\n").is_empty());
+    }
+
+    #[test]
+    fn comments_do_not_trip_rules() {
+        assert!(run("dist/x.rs", "// Ordering::Relaxed would be wrong here\n").is_empty());
+        assert!(run("dist/x.rs", "// a Mutex is not allowed here\n").is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let text = "fn a() {}\nmod tests {\n    use std::sync::Mutex;\n}\n";
+        assert!(run("dist/x.rs", text).is_empty());
+    }
+
+    #[test]
+    fn file_marker_exempts_whole_file() {
+        let text = "// memmodel-ok-file: generated shim\nlet m = RwLock::new(0);\n";
+        assert!(run("dist/x.rs", text).is_empty());
+    }
+
+    #[test]
+    fn real_tree_is_clean() {
+        // The shipped source must pass its own lint (markers included).
+        let findings = lint_tree(&default_src_root()).expect("scan src tree");
+        assert!(findings.is_empty(), "\n{}", render(&findings));
+    }
+}

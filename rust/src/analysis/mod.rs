@@ -1,3 +1,5 @@
-//! Offline analyses: load-imbalance measurement (Fig 1, Table 1).
+//! Offline analyses: load-imbalance measurement (Fig 1, Table 1) and
+//! the source-level memory-model lint behind `sparta check --lint`.
 
 pub mod loadimb;
+pub mod memlint;

@@ -1,0 +1,165 @@
+//! The checker-armed regression matrix behind `sparta check`.
+//!
+//! One session, checker armed once, then every shipped protocol
+//! combination — both multiply shapes, both B-tile communication
+//! modes, blocking and deep-lookahead pipelines, and the
+//! workstealing variants — runs back to back with verification on.
+//! The suite's contract is *zero races anywhere*: the fabric's
+//! happens-before discipline (DESIGN.md §10) must hold on every code
+//! path a real multiply takes, not just in the unit-level protocol
+//! tests. Per-run race deltas pin a regression to the exact
+//! (op, alg, comm, lookahead) combination that introduced it.
+
+use anyhow::{Context, Result};
+
+use crate::algorithms::{Alg, Comm};
+use crate::fabric::{NetProfile, RaceReport};
+use crate::matrix::gen;
+
+use super::session::{Session, SessionConfig};
+
+/// Suite knobs. The defaults match the CI smoke invocation
+/// (`sparta check --nprocs 4`): a grid small enough to run in seconds
+/// but with real cross-PE traffic on every protocol.
+#[derive(Clone, Debug)]
+pub struct CheckSuiteConfig {
+    /// Simulated PEs; the grid must be square (1, 4, 9, 16, ...).
+    pub nprocs: usize,
+    /// RMAT scale of the sparse operands (2^scale rows).
+    pub scale: u32,
+    /// Dense-operand width for the SpMM runs.
+    pub n_cols: usize,
+}
+
+impl Default for CheckSuiteConfig {
+    fn default() -> Self {
+        CheckSuiteConfig { nprocs: 4, scale: 8, n_cols: 32 }
+    }
+}
+
+/// One armed run of the matrix.
+pub struct CheckRun {
+    /// "spmm/S-C RDMA/full-tile/la0"-style identifier.
+    pub label: String,
+    /// Races newly detected during this run (dedup is global, so a
+    /// repeat of an earlier run's race pair does not re-count here).
+    pub races: usize,
+}
+
+/// The suite verdict: per-run deltas plus the full race reports.
+pub struct CheckSuiteOutcome {
+    pub runs: Vec<CheckRun>,
+    /// Total distinct races across the whole suite (the gate: 0).
+    pub total_races: usize,
+    /// Dual-site reports for every detected race.
+    pub reports: Vec<RaceReport>,
+}
+
+impl CheckSuiteOutcome {
+    pub fn clean(&self) -> bool {
+        self.total_races == 0
+    }
+
+    /// Human-readable verdict for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.runs {
+            let mark = if r.races == 0 { "ok   " } else { "RACE " };
+            out.push_str(&format!("  {mark}{}", r.label));
+            if r.races > 0 {
+                out.push_str(&format!("  (+{} race(s))", r.races));
+            }
+            out.push('\n');
+        }
+        if self.clean() {
+            out.push_str(&format!("check suite: {} runs, no races detected\n", self.runs.len()));
+        } else {
+            out.push_str(&format!(
+                "check suite: {} runs, {} distinct race(s):\n",
+                self.runs.len(),
+                self.total_races
+            ));
+            for rep in &self.reports {
+                out.push_str(&format!("  {rep}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// The (op, alg) combinations the suite exercises — every shipped
+/// algorithm that goes through the queue/reservation protocols, for
+/// both shapes. SpGEMM supports the subset below (see `SpgemmAlg`).
+fn spmm_algs() -> &'static [Alg] {
+    &[Alg::StationaryC, Alg::StationaryA, Alg::RandomWs, Alg::LocalityWsC, Alg::LocalityWsA]
+}
+
+fn spgemm_algs() -> &'static [Alg] {
+    &[Alg::StationaryC, Alg::StationaryA, Alg::RandomWs]
+}
+
+/// Run the armed matrix: 2 comm modes × 2 lookahead depths ×
+/// (5 SpMM + 3 SpGEMM algorithms) = 32 verified multiplies on one
+/// session with the race detector recording throughout.
+pub fn run_check_suite(cfg: &CheckSuiteConfig) -> Result<CheckSuiteOutcome> {
+    let mut scfg = SessionConfig::new(cfg.nprocs, NetProfile::dgx2());
+    scfg.seg_bytes = 64 << 20;
+    let mut sess = Session::new(scfg);
+    let ck = sess.fabric().arm_check();
+
+    let n = 1usize << cfg.scale;
+    let a = sess.load_csr(&gen::rmat(cfg.scale, 8, 0.57, 0.19, 0.19, 42));
+    let b_dense = sess.random_dense(n, cfg.n_cols, 7);
+    let b_sparse = sess.load_csr(&gen::rmat(cfg.scale, 4, 0.45, 0.22, 0.22, 43));
+
+    let mut runs = Vec::new();
+    let mut seen = 0usize;
+    for &comm in &[Comm::FullTile, Comm::RowSelective] {
+        for &lookahead in &[0usize, 2] {
+            for (op, b, algs) in
+                [("spmm", b_dense, spmm_algs()), ("spgemm", b_sparse, spgemm_algs())]
+            {
+                for &alg in algs {
+                    let label =
+                        format!("{op}/{}/{}/la{lookahead}", alg.name(), comm.name());
+                    sess.plan(a, b)
+                        .alg(alg)
+                        .comm(comm)
+                        .lookahead(lookahead)
+                        .verify(true)
+                        .label(&label)
+                        .execute()
+                        .with_context(|| format!("check-suite run {label}"))?;
+                    let now = ck.race_count();
+                    runs.push(CheckRun { label, races: now - seen });
+                    seen = now;
+                }
+            }
+        }
+    }
+
+    Ok(CheckSuiteOutcome { runs, total_races: ck.race_count(), reports: ck.reports() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A trimmed matrix (one comm × one lookahead, tiny operands) so
+    /// the unit tier stays fast; the full 32-run suite is the
+    /// `e2e_check` integration test and the CI smoke run.
+    #[test]
+    fn trimmed_armed_suite_is_race_free() {
+        let cfg = CheckSuiteConfig { nprocs: 4, scale: 6, n_cols: 8 };
+        let mut scfg = SessionConfig::new(cfg.nprocs, NetProfile::dgx2());
+        scfg.seg_bytes = 16 << 20;
+        let mut sess = Session::new(scfg);
+        let ck = sess.fabric().arm_check();
+        let a = sess.load_csr(&gen::rmat(cfg.scale, 4, 0.57, 0.19, 0.19, 42));
+        let b = sess.random_dense(1 << cfg.scale, cfg.n_cols, 7);
+        for alg in [Alg::StationaryC, Alg::RandomWs] {
+            sess.plan(a, b).alg(alg).verify(true).execute().unwrap();
+        }
+        assert_eq!(ck.race_count(), 0, "{}", ck.summary());
+    }
+}

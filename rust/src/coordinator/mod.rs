@@ -6,6 +6,7 @@
 //! `coordinator::session`); `run_spmm` / `run_spgemm` remain as thin
 //! one-shot wrappers over a throwaway session.
 
+pub mod checksuite;
 pub mod driver;
 pub mod experiments;
 pub mod report;
@@ -14,6 +15,7 @@ pub mod session;
 pub mod testutil;
 pub mod trace_export;
 
+pub use checksuite::{run_check_suite, CheckRun, CheckSuiteConfig, CheckSuiteOutcome};
 pub use driver::{run_spgemm, run_spmm, SpgemmConfig, SpgemmRun, SpmmConfig, SpmmRun};
 pub use experiments::{bench_artifact, BENCH_ARTIFACTS};
 pub use report::{

@@ -96,6 +96,27 @@ impl ResGrid3D {
         pe.fetch_add(self.cells[(i * self.t + j) * self.t + k], 0, 1) == 0
     }
 
+    /// SEEDED FAULT (tests only) — PR-4 bug class "double claim": a
+    /// claim implemented as a plain read-then-write instead of the
+    /// atomic fetch-and-add. Two PEs can both observe 0 and both "win";
+    /// `fabric::check` must flag the unordered data accesses on the
+    /// flag word whether or not the double-win manifests in this run.
+    #[cfg(test)]
+    pub(crate) fn try_claim_broken(&self, pe: &Pe, i: usize, j: usize, k: usize) -> bool {
+        use crate::fabric::SpanCtx;
+        let cell = self.cells[(i * self.t + j) * self.t + k];
+        pe.trace_note(SpanCtx::new("claim_broken"));
+        // memmodel-ok: seeded fault — deliberately unattributed data access
+        let seen = pe.get_vec(cell)[0];
+        let won = seen == 0;
+        if won {
+            // memmodel-ok: seeded fault — deliberately unattributed data access
+            pe.put(cell, &[1i64]);
+        }
+        pe.trace_done();
+        won
+    }
+
     /// Zero every claim flag in place (setup phase, untimed) so the grid
     /// can be reused by the next multiply run on the same session.
     pub fn reset(&self, fabric: &Fabric) {
@@ -208,6 +229,46 @@ mod tests {
             }
             pe.barrier();
         });
+    }
+
+    #[test]
+    fn seeded_broken_claim_is_flagged_with_dual_attribution() {
+        let f = fab(2);
+        let ck = f.arm_check();
+        let grid = ProcGrid::for_nprocs(2);
+        let res = ResGrid3D::create(&f, grid);
+        // Both PEs contend for the same component with the non-atomic
+        // claim. Regardless of which interleaving this run takes, the
+        // two PEs' read/write pairs on the flag word are unordered.
+        f.launch(|pe| {
+            let _ = res.try_claim_broken(pe, 0, 0, 0);
+        });
+        assert!(ck.race_count() >= 1, "non-atomic double-claim not detected");
+        let reps = ck.reports();
+        let hit = reps
+            .iter()
+            .any(|r| r.prev.label == "claim_broken" && r.cur.label == "claim_broken");
+        assert!(hit, "missing dual-site attribution:\n{}", ck.summary());
+    }
+
+    #[test]
+    fn clean_claims_report_zero_races() {
+        let f = fab(4);
+        let ck = f.arm_check();
+        let grid = ProcGrid::for_nprocs(4);
+        let t = grid.t;
+        let res = ResGrid3D::create(&f, grid);
+        f.launch(|pe| {
+            for i in 0..t {
+                for j in 0..t {
+                    for k in 0..t {
+                        let _ = res.try_claim(pe, i, j, k);
+                    }
+                }
+            }
+            pe.barrier();
+        });
+        assert_eq!(ck.race_count(), 0, "{}", ck.summary());
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! the fabric's bulk chunk-copy fast path (one bulk transfer per
 //! array), not per-word round trips.
 
+// memmodel-ok: host-side tile directory, not symmetric-heap state
 use std::sync::{Arc, RwLock};
 
 use crate::fabric::{Fabric, GetFuture, GlobalPtr, Kind, Pe};
@@ -81,6 +82,7 @@ pub struct DistCsr {
     /// Mutable directory: tile (i, j)'s handle and sparsity summaries at
     /// `tiles[i * t + j]`. Owners update entries via `replace_tile`;
     /// everyone else reads.
+    // memmodel-ok: host-side tile directory, not symmetric-heap state
     tiles: Arc<Vec<RwLock<TileSlot>>>,
 }
 
@@ -196,6 +198,7 @@ impl DistCsr {
                 let (c0, c1) = grid.block(m.ncols, j);
                 let tile = m.submatrix(r0, r1, c0, c1);
                 let h = store_tile(fabric, grid.owner(i, j), &tile);
+                // memmodel-ok: host-side tile directory, not symmetric-heap state
                 tiles.push(RwLock::new(TileSlot::new(h, &tile)));
             }
         }

@@ -1,0 +1,724 @@
+//! `fabric::check` — a happens-before race detector for the simulated
+//! one-sided fabric.
+//!
+//! The paper's asynchronous algorithms rest entirely on hand-rolled
+//! publication protocols (queue sequence words, reservation-grid FAA
+//! claims, barrier phases). This module gives the fabric a vector-clock
+//! shadow memory so those protocols are *machine-checked*: every
+//! one-sided access is recorded against per-word shadow state, every
+//! synchronizing operation creates a happens-before edge, and any
+//! unordered conflicting pair is reported with both sites' span
+//! attribution (thread, label, peer, tile, bytes).
+//!
+//! Model (DESIGN.md §10 has the full contract):
+//!
+//! * Each thread (one per PE, plus the coordinator) carries a vector
+//!   clock. A thread's component advances on every *release* (atomic
+//!   store, FAA, barrier departure).
+//! * `Pe::atomic_store` is a release; `Pe::atomic_load` is an acquire;
+//!   `Pe::fetch_add` is both (acquire-release RMW) — matching the
+//!   `Segment` orderings they map to.
+//! * `ClockBarrier` waits join every participant's clock into the
+//!   barrier and back out, ordering everything before any arrival
+//!   before everything after any departure.
+//! * `Fabric::launch` is a fork/join: PE clocks start from the
+//!   coordinator's clock (ordering untimed setup writes before the
+//!   run) and fold back into it at the end (ordering the run before
+//!   verification gathers and inter-run resets).
+//! * Bulk puts/gets are plain data accesses at 8-byte word granularity
+//!   (the segment's last-writer-wins unit).
+//!
+//! Two accesses to the same word **race** when neither happens before
+//! the other, they come from different threads, at least one writes,
+//! and they are not both atomic (atomic/atomic pairs are ordered by the
+//! hardware word lock; mixed atomic/data pairs are exactly the
+//! "published with a plain put" bug class and *are* flagged).
+//!
+//! The checker is disarmed by default and costs one `Option` branch per
+//! hook (the same pattern as span tracing). It never advances virtual
+//! clocks or touches `Stats`, so armed and disarmed runs are
+//! bit-identical in makespan and op counts by construction.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use super::trace::SpanCtx;
+
+/// Shadow-state shard count (locks are per-shard, never nested).
+const NSHARDS: usize = 64;
+
+/// Reports kept after per-(thread-pair, label-pair) deduplication.
+const MAX_REPORTS: usize = 200;
+
+/// Component-wise max of two vector clocks.
+fn join(dst: &mut [u32], src: &[u32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        if *s > *d {
+            *d = *s;
+        }
+    }
+}
+
+/// One recorded access to one shadow word.
+#[derive(Clone, Copy, Debug)]
+struct Access {
+    tid: usize,
+    clk: u32,
+    atomic: bool,
+    write: bool,
+    ctx: SpanCtx,
+}
+
+/// Shadow state of one 8-byte word: the last write, the reads since
+/// that write (at most one data + one atomic entry per thread — a
+/// later same-kind read by the same thread subsumes the earlier one),
+/// and the release vector clock acquirers join with.
+#[derive(Default)]
+struct WordState {
+    last_write: Option<Access>,
+    reads: Vec<Access>,
+    sync: Vec<u32>,
+}
+
+/// One side of a reported race, resolved for display.
+#[derive(Clone, Debug)]
+pub struct AccessInfo {
+    /// `"pe<rank>"` or `"coordinator"`.
+    pub thread: String,
+    /// The accessing thread's clock component at the access.
+    pub clk: u32,
+    pub atomic: bool,
+    pub write: bool,
+    /// Span attribution captured from the ambient trace context.
+    pub label: &'static str,
+    pub peer: i32,
+    pub tile: [i32; 3],
+    pub bytes: f64,
+}
+
+impl AccessInfo {
+    fn new(names: &Checker, a: &Access) -> AccessInfo {
+        AccessInfo {
+            thread: names.thread_name(a.tid),
+            clk: a.clk,
+            atomic: a.atomic,
+            write: a.write,
+            label: a.ctx.label,
+            peer: a.ctx.peer,
+            tile: a.ctx.tile,
+            bytes: a.ctx.bytes,
+        }
+    }
+}
+
+impl fmt::Display for AccessInfo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let kind = match (self.atomic, self.write) {
+            (true, true) => "atomic write",
+            (true, false) => "atomic read",
+            (false, true) => "write",
+            (false, false) => "read",
+        };
+        write!(f, "{:<12} {} [{}", self.thread, kind, self.label)?;
+        if self.peer >= 0 {
+            write!(f, " peer={}", self.peer)?;
+        }
+        if self.tile != super::trace::NO_TILE {
+            write!(f, " tile=({},{},{})", self.tile[0], self.tile[1], self.tile[2])?;
+        }
+        if self.bytes > 0.0 {
+            write!(f, " {}B", self.bytes)?;
+        }
+        write!(f, "] @clk {}", self.clk)
+    }
+}
+
+/// An unordered conflicting pair on one shadow word.
+#[derive(Clone, Debug)]
+pub struct RaceReport {
+    /// Segment (PE rank) the word lives on.
+    pub rank: usize,
+    /// 8-byte word index within the segment.
+    pub word: usize,
+    /// The access recorded earlier (in shadow order).
+    pub prev: AccessInfo,
+    /// The access that detected the race.
+    pub cur: AccessInfo,
+}
+
+impl fmt::Display for RaceReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "data race on rank {} word {} (byte {:#x}):", self.rank, self.word, self.word * 8)?;
+        writeln!(f, "  {}", self.prev)?;
+        write!(f, "  {}", self.cur)
+    }
+}
+
+/// The detector: shadow vector clocks for one fabric. Created by
+/// [`super::Fabric::arm_check`]; shared by every PE handle of every
+/// launch until disarmed.
+pub struct Checker {
+    /// PE threads `0..nprocs`, coordinator thread `nprocs`.
+    nthreads: usize,
+    shards: Vec<Mutex<HashMap<(usize, usize), WordState>>>,
+    /// Per-barrier gather clocks, keyed by the `ClockBarrier` address
+    /// (barriers live for the fabric's lifetime, so addresses are
+    /// stable and unique).
+    barriers: Mutex<HashMap<usize, Vec<u32>>>,
+    /// The coordinator's vector clock (fork source / join sink).
+    coord: Mutex<Vec<u32>>,
+    reports: Mutex<Vec<RaceReport>>,
+    /// Dedup: one report per (threads, labels) signature.
+    seen: Mutex<HashSet<(usize, usize, &'static str, &'static str)>>,
+}
+
+impl Checker {
+    pub fn new(nprocs: usize) -> Checker {
+        let nthreads = nprocs + 1;
+        Checker {
+            nthreads,
+            shards: (0..NSHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            barriers: Mutex::new(HashMap::new()),
+            coord: Mutex::new(vec![0; nthreads]),
+            reports: Mutex::new(Vec::new()),
+            seen: Mutex::new(HashSet::new()),
+        }
+    }
+
+    fn ctid(&self) -> usize {
+        self.nthreads - 1
+    }
+
+    fn thread_name(&self, tid: usize) -> String {
+        if tid == self.ctid() {
+            "coordinator".to_string()
+        } else {
+            format!("pe{tid}")
+        }
+    }
+
+    fn shard(&self, rank: usize, word: usize) -> &Mutex<HashMap<(usize, usize), WordState>> {
+        let h = word.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_right(32) ^ rank;
+        &self.shards[h & (NSHARDS - 1)]
+    }
+
+    /// Unordered conflicting pairs found so far (after dedup).
+    pub fn race_count(&self) -> usize {
+        self.reports.lock().unwrap().len()
+    }
+
+    /// The reports themselves, in detection order.
+    pub fn reports(&self) -> Vec<RaceReport> {
+        self.reports.lock().unwrap().clone()
+    }
+
+    fn report(&self, rank: usize, word: usize, prev: &Access, cur: &Access) {
+        let key = (prev.tid, cur.tid, prev.ctx.label, cur.ctx.label);
+        if !self.seen.lock().unwrap().insert(key) {
+            return;
+        }
+        let mut reps = self.reports.lock().unwrap();
+        if reps.len() < MAX_REPORTS {
+            reps.push(RaceReport {
+                rank,
+                word,
+                prev: AccessInfo::new(self, prev),
+                cur: AccessInfo::new(self, cur),
+            });
+        }
+    }
+
+    /// Flag every recorded access of `st` that conflicts with and is
+    /// unordered against the new access (`vc` is the accessor's clock).
+    fn check_against(
+        &self,
+        vc: &[u32],
+        cur: &Access,
+        rank: usize,
+        word: usize,
+        st: &WordState,
+    ) {
+        if let Some(w) = &st.last_write {
+            if w.tid != cur.tid && !(w.atomic && cur.atomic) && w.clk > vc[w.tid] {
+                self.report(rank, word, w, cur);
+            }
+        }
+        if cur.write {
+            for r in &st.reads {
+                if r.tid != cur.tid && !(r.atomic && cur.atomic) && r.clk > vc[r.tid] {
+                    self.report(rank, word, r, cur);
+                }
+            }
+        }
+    }
+
+    fn record(st: &mut WordState, a: Access) {
+        if a.write {
+            st.last_write = Some(a);
+            st.reads.clear();
+        } else if let Some(r) =
+            st.reads.iter_mut().find(|r| r.tid == a.tid && r.atomic == a.atomic)
+        {
+            *r = a;
+        } else {
+            st.reads.push(a);
+        }
+    }
+
+    /// Plain data access covering every word the byte span touches.
+    fn data_range(
+        &self,
+        vc: &[u32],
+        tid: usize,
+        rank: usize,
+        byte0: usize,
+        nbytes: usize,
+        write: bool,
+        ctx: SpanCtx,
+    ) {
+        if nbytes == 0 {
+            return;
+        }
+        let (w0, w1) = (byte0 / 8, (byte0 + nbytes - 1) / 8);
+        for word in w0..=w1 {
+            let cur = Access { tid, clk: vc[tid], atomic: false, write, ctx };
+            let mut sh = self.shard(rank, word).lock().unwrap();
+            let st = sh.entry((rank, word)).or_default();
+            self.check_against(vc, &cur, rank, word, st);
+            Self::record(st, cur);
+        }
+    }
+
+    /// Acquire: race-check, record the read, then join the word's
+    /// release clock into the caller. The check runs *before* the join
+    /// on purpose — an edge that exists only because of this very
+    /// acquire (e.g. a flag published with a plain put) must not order
+    /// the pair retroactively.
+    fn atomic_load(&self, vc: &mut [u32], tid: usize, rank: usize, byte_off: usize, ctx: SpanCtx) {
+        let word = byte_off / 8;
+        let cur = Access { tid, clk: vc[tid], atomic: true, write: false, ctx };
+        let mut sh = self.shard(rank, word).lock().unwrap();
+        let st = sh.entry((rank, word)).or_default();
+        self.check_against(vc, &cur, rank, word, st);
+        Self::record(st, cur);
+        if !st.sync.is_empty() {
+            join(vc, &st.sync);
+        }
+    }
+
+    /// Release: race-check, publish the caller's clock on the word,
+    /// record the write, then advance the caller's component (so later
+    /// same-thread accesses are distinguishable from released ones).
+    fn atomic_store(&self, vc: &mut Vec<u32>, tid: usize, rank: usize, byte_off: usize, ctx: SpanCtx) {
+        let word = byte_off / 8;
+        let cur = Access { tid, clk: vc[tid], atomic: true, write: true, ctx };
+        let mut sh = self.shard(rank, word).lock().unwrap();
+        let st = sh.entry((rank, word)).or_default();
+        self.check_against(vc, &cur, rank, word, st);
+        if st.sync.is_empty() {
+            st.sync = vc.clone();
+        } else {
+            join(&mut st.sync, vc);
+        }
+        Self::record(st, cur);
+        vc[tid] += 1;
+    }
+
+    /// Acquire-release RMW (fetch-and-add): both of the above.
+    fn atomic_rmw(&self, vc: &mut Vec<u32>, tid: usize, rank: usize, byte_off: usize, ctx: SpanCtx) {
+        let word = byte_off / 8;
+        let cur = Access { tid, clk: vc[tid], atomic: true, write: true, ctx };
+        let mut sh = self.shard(rank, word).lock().unwrap();
+        let st = sh.entry((rank, word)).or_default();
+        self.check_against(vc, &cur, rank, word, st);
+        if !st.sync.is_empty() {
+            join(vc, &st.sync);
+        }
+        if st.sync.is_empty() {
+            st.sync = vc.clone();
+        } else {
+            join(&mut st.sync, vc);
+        }
+        let cur = Access { clk: vc[tid], ..cur };
+        Self::record(st, cur);
+        vc[tid] += 1;
+    }
+
+    /// Barrier arrival: fold the participant's clock into the barrier.
+    /// Called strictly before `ClockBarrier::wait`, so by the time the
+    /// barrier releases a generation, every participant's clock is in.
+    fn barrier_arrive(&self, vc: &[u32], key: usize) {
+        let mut bs = self.barriers.lock().unwrap();
+        let c = bs.entry(key).or_insert_with(|| vec![0; self.nthreads]);
+        join(c, vc);
+    }
+
+    /// Barrier departure: everything any participant did before
+    /// arriving now happens before everything this thread does next.
+    /// (Reusing the gather clock across generations only *adds* edges —
+    /// the checker errs toward false negatives, never false positives.)
+    fn barrier_depart(&self, vc: &mut [u32], tid: usize, key: usize) {
+        {
+            let bs = self.barriers.lock().unwrap();
+            if let Some(c) = bs.get(&key) {
+                join(vc, c);
+            }
+        }
+        vc[tid] += 1;
+    }
+
+    /// Fork a PE clock for a new launch epoch: the child starts ordered
+    /// after everything the coordinator has done (setup writes, queue
+    /// and grid resets).
+    pub(crate) fn fork_vc(&self, tid: usize) -> Vec<u32> {
+        let mut v = self.coord.lock().unwrap().clone();
+        v[tid] += 1;
+        v
+    }
+
+    /// Join a finished PE's clock back into the coordinator.
+    pub(crate) fn join_vc(&self, vc: &[u32]) {
+        join(&mut self.coord.lock().unwrap(), vc);
+    }
+
+    /// Close a launch epoch (after all PE joins): the coordinator's
+    /// subsequent accesses are ordered after the whole run.
+    pub(crate) fn epoch_end(&self) {
+        let mut c = self.coord.lock().unwrap();
+        let t = self.nthreads - 1;
+        c[t] += 1;
+    }
+
+    /// Coordinator-side data access (`Fabric::read` / `Fabric::write`).
+    pub(crate) fn coord_data(
+        &self,
+        rank: usize,
+        byte0: usize,
+        nbytes: usize,
+        write: bool,
+        label: &'static str,
+    ) {
+        let vc = self.coord.lock().unwrap().clone();
+        self.data_range(&vc, self.ctid(), rank, byte0, nbytes, write, SpanCtx::new(label));
+    }
+
+    /// One human-readable block per report.
+    pub fn summary(&self) -> String {
+        let reps = self.reports();
+        if reps.is_empty() {
+            return "no races detected".to_string();
+        }
+        let mut out = String::new();
+        for r in &reps {
+            out.push_str(&format!("{r}\n"));
+        }
+        out.push_str(&format!("{} race(s) detected", reps.len()));
+        out
+    }
+}
+
+/// Per-PE handle: the thread's vector clock plus a mirror of the
+/// ambient trace context (so reports carry span attribution even when
+/// tracing itself is off). Lives on [`super::Pe`] as an `Option` —
+/// `None` when the fabric is disarmed.
+pub struct CheckHandle {
+    checker: Arc<Checker>,
+    tid: usize,
+    vc: RefCell<Vec<u32>>,
+    ctx: Cell<Option<SpanCtx>>,
+}
+
+impl CheckHandle {
+    pub(crate) fn new(checker: Arc<Checker>, tid: usize) -> CheckHandle {
+        let vc = RefCell::new(checker.fork_vc(tid));
+        CheckHandle { checker, tid, vc, ctx: Cell::new(None) }
+    }
+
+    pub(crate) fn set_ctx(&self, ctx: SpanCtx) {
+        self.ctx.set(Some(ctx));
+    }
+
+    pub(crate) fn clear_ctx(&self) {
+        self.ctx.set(None);
+    }
+
+    fn ctx_or(&self, fallback: &'static str) -> SpanCtx {
+        self.ctx.get().unwrap_or_else(|| SpanCtx::new(fallback))
+    }
+
+    /// Record a bulk data access (put/get/gather span) on `rank`'s
+    /// segment.
+    pub(crate) fn data(
+        &self,
+        rank: usize,
+        byte0: usize,
+        nbytes: usize,
+        write: bool,
+        fallback: &'static str,
+    ) {
+        let vc = self.vc.borrow();
+        self.checker.data_range(&vc, self.tid, rank, byte0, nbytes, write, self.ctx_or(fallback));
+    }
+
+    pub(crate) fn atomic_load(&self, rank: usize, byte_off: usize, fallback: &'static str) {
+        let mut vc = self.vc.borrow_mut();
+        self.checker.atomic_load(&mut vc, self.tid, rank, byte_off, self.ctx_or(fallback));
+    }
+
+    pub(crate) fn atomic_store(&self, rank: usize, byte_off: usize, fallback: &'static str) {
+        let mut vc = self.vc.borrow_mut();
+        self.checker.atomic_store(&mut vc, self.tid, rank, byte_off, self.ctx_or(fallback));
+    }
+
+    pub(crate) fn atomic_rmw(&self, rank: usize, byte_off: usize, fallback: &'static str) {
+        let mut vc = self.vc.borrow_mut();
+        self.checker.atomic_rmw(&mut vc, self.tid, rank, byte_off, self.ctx_or(fallback));
+    }
+
+    pub(crate) fn barrier_arrive(&self, key: usize) {
+        self.checker.barrier_arrive(&self.vc.borrow(), key);
+    }
+
+    pub(crate) fn barrier_depart(&self, key: usize) {
+        let mut vc = self.vc.borrow_mut();
+        self.checker.barrier_depart(&mut vc, self.tid, key);
+    }
+
+    /// Deposit the PE's final clock at the end of a launch (join edge).
+    pub(crate) fn finish(&self) {
+        self.checker.join_vc(&self.vc.borrow());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Fabric, FabricConfig, Kind, NetProfile};
+    use std::sync::Arc as StdArc;
+
+    // -- pure vector-clock tests (no fabric, miri-friendly) ----------
+
+    fn ck(n: usize) -> Checker {
+        Checker::new(n)
+    }
+
+    fn ctx(label: &'static str) -> SpanCtx {
+        SpanCtx::new(label)
+    }
+
+    #[test]
+    fn vc_unordered_writes_race_once() {
+        let c = ck(2);
+        let v0 = c.fork_vc(0);
+        let v1 = c.fork_vc(1);
+        c.data_range(&v0, 0, 0, 0, 8, true, ctx("w0"));
+        c.data_range(&v1, 1, 0, 0, 8, true, ctx("w1"));
+        assert_eq!(c.race_count(), 1);
+        // The reverse-direction pair is a new signature...
+        c.data_range(&v0, 0, 0, 0, 8, true, ctx("w0"));
+        assert_eq!(c.race_count(), 2);
+        // ...but repeating a signature is deduped.
+        c.data_range(&v1, 1, 0, 0, 8, true, ctx("w1"));
+        assert_eq!(c.race_count(), 2);
+        let r = &c.reports()[0];
+        assert_eq!((r.prev.label, r.cur.label), ("w0", "w1"));
+        assert_eq!((r.prev.thread.as_str(), r.cur.thread.as_str()), ("pe0", "pe1"));
+    }
+
+    #[test]
+    fn vc_release_acquire_orders_data() {
+        let c = ck(2);
+        let mut v0 = c.fork_vc(0);
+        let mut v1 = c.fork_vc(1);
+        // t0: write payload (word 1), release flag (word 0).
+        c.data_range(&v0, 0, 0, 8, 8, true, ctx("payload_put"));
+        c.atomic_store(&mut v0, 0, 0, 0, ctx("flag_store"));
+        // t1: acquire flag, read payload — fully ordered.
+        c.atomic_load(&mut v1, 1, 0, 0, ctx("flag_load"));
+        c.data_range(&v1, 1, 0, 8, 8, false, ctx("payload_get"));
+        assert_eq!(c.race_count(), 0, "{}", c.summary());
+    }
+
+    #[test]
+    fn vc_missing_acquire_races() {
+        let c = ck(2);
+        let mut v0 = c.fork_vc(0);
+        let v1 = c.fork_vc(1);
+        c.data_range(&v0, 0, 0, 8, 8, true, ctx("payload_put"));
+        c.atomic_store(&mut v0, 0, 0, 0, ctx("flag_store"));
+        // t1 reads the payload without acquiring the flag.
+        c.data_range(&v1, 1, 0, 8, 8, false, ctx("payload_get"));
+        assert_eq!(c.race_count(), 1);
+    }
+
+    #[test]
+    fn vc_atomic_atomic_never_races() {
+        let c = ck(2);
+        let mut v0 = c.fork_vc(0);
+        let mut v1 = c.fork_vc(1);
+        c.atomic_store(&mut v0, 0, 0, 0, ctx("s0"));
+        c.atomic_store(&mut v1, 1, 0, 0, ctx("s1"));
+        c.atomic_load(&mut v0, 0, 0, 0, ctx("l0"));
+        assert_eq!(c.race_count(), 0);
+    }
+
+    #[test]
+    fn vc_mixed_atomic_data_races() {
+        let c = ck(2);
+        let mut v0 = c.fork_vc(0);
+        let v1 = c.fork_vc(1);
+        c.atomic_store(&mut v0, 0, 0, 0, ctx("flag_store"));
+        c.data_range(&v1, 1, 0, 0, 8, false, ctx("flag_raw_read"));
+        assert_eq!(c.race_count(), 1, "plain read of an atomically-published word must flag");
+    }
+
+    #[test]
+    fn vc_rmw_chain_orders_protected_writes() {
+        let c = ck(2);
+        let mut v0 = c.fork_vc(0);
+        let mut v1 = c.fork_vc(1);
+        // t0: write word 1 under the claim, then release via RMW.
+        c.data_range(&v0, 0, 0, 8, 8, true, ctx("w0"));
+        c.atomic_rmw(&mut v0, 0, 0, 0, ctx("claim0"));
+        // t1: RMW acquires t0's release, then writes word 1.
+        c.atomic_rmw(&mut v1, 1, 0, 0, ctx("claim1"));
+        c.data_range(&v1, 1, 0, 8, 8, true, ctx("w1"));
+        assert_eq!(c.race_count(), 0, "{}", c.summary());
+    }
+
+    #[test]
+    fn vc_barrier_orders_both_sides() {
+        let c = ck(2);
+        let mut v0 = c.fork_vc(0);
+        let mut v1 = c.fork_vc(1);
+        c.data_range(&v0, 0, 0, 0, 8, true, ctx("before"));
+        c.barrier_arrive(&v0, 42);
+        c.barrier_arrive(&v1, 42);
+        c.barrier_depart(&mut v0, 0, 42);
+        c.barrier_depart(&mut v1, 1, 42);
+        c.data_range(&v1, 1, 0, 0, 8, false, ctx("after"));
+        assert_eq!(c.race_count(), 0, "{}", c.summary());
+        // And the reverse direction without a second barrier: a *write*
+        // after the barrier still conflicts with nothing (the pre-write
+        // is ordered), so stays clean.
+        c.data_range(&v1, 1, 0, 0, 8, true, ctx("after_w"));
+        assert_eq!(c.race_count(), 0);
+    }
+
+    #[test]
+    fn vc_fork_join_orders_coordinator_accesses() {
+        let c = ck(1);
+        c.coord_data(0, 0, 8, true, "setup_write");
+        let mut v0 = c.fork_vc(0);
+        c.data_range(&v0, 0, 0, 0, 8, false, ctx("pe_read"));
+        c.data_range(&v0, 0, 0, 0, 8, true, ctx("pe_write"));
+        v0[0] += 1;
+        c.join_vc(&v0);
+        c.epoch_end();
+        c.coord_data(0, 0, 8, false, "gather");
+        c.coord_data(0, 0, 8, true, "reset");
+        assert_eq!(c.race_count(), 0, "{}", c.summary());
+    }
+
+    #[test]
+    fn vc_word_granularity_spans_whole_range() {
+        let c = ck(2);
+        let v0 = c.fork_vc(0);
+        let v1 = c.fork_vc(1);
+        // t0 writes bytes [0, 32); t1 writes bytes [24, 40): they share
+        // word 3 only.
+        c.data_range(&v0, 0, 0, 0, 32, true, ctx("bulk0"));
+        c.data_range(&v1, 1, 0, 24, 16, true, ctx("bulk1"));
+        assert_eq!(c.race_count(), 1);
+        assert_eq!(c.reports()[0].word, 3);
+    }
+
+    // -- fabric-integrated seeded fault: stale flag read -------------
+
+    /// PR-4 bug class 3: a consumer that polls a published flag with a
+    /// plain data get (instead of `Pe::atomic_load`) reads a stale
+    /// value without any happens-before edge. The checker must flag the
+    /// mixed atomic/data pair with both sites attributed.
+    #[test]
+    fn seeded_stale_flag_read_is_flagged_with_dual_attribution() {
+        let f = Fabric::new(FabricConfig {
+            nprocs: 2,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 1 << 20,
+            pacing: false,
+        });
+        let ck = f.arm_check();
+        let payload = f.alloc_on::<i64>(0, 8);
+        let flag = f.alloc_on::<i64>(0, 1);
+        f.launch(|pe| {
+            if pe.rank() == 0 {
+                pe.put_as(payload, &[7i64; 8], Kind::Acc);
+                pe.trace_note(SpanCtx::new("flag_publish"));
+                pe.atomic_store(flag, 0, 1);
+                pe.trace_done();
+            } else {
+                // SEEDED FAULT: plain data read of the flag word.
+                pe.trace_note(SpanCtx::new("flag_poll"));
+                let _ = pe.get_vec(flag);
+                pe.trace_done();
+            }
+        });
+        assert!(ck.race_count() >= 1, "stale-flag read not detected");
+        let reps = ck.reports();
+        let hit = reps.iter().any(|r| {
+            let labels = [r.prev.label, r.cur.label];
+            labels.contains(&"flag_publish") && labels.contains(&"flag_poll")
+        });
+        assert!(hit, "missing dual-site attribution: {}", ck.summary());
+    }
+
+    /// The clean version of the same protocol (atomic flag poll, then
+    /// an ordered payload get) must report nothing.
+    #[test]
+    fn clean_flag_protocol_reports_zero_races() {
+        let f = Fabric::new(FabricConfig {
+            nprocs: 2,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 1 << 20,
+            pacing: false,
+        });
+        let ck = f.arm_check();
+        let payload = f.alloc_on::<i64>(0, 8);
+        let flag = f.alloc_on::<i64>(0, 1);
+        f.launch(|pe| {
+            if pe.rank() == 0 {
+                pe.put_as(payload, &[9i64; 8], Kind::Acc);
+                pe.atomic_store(flag, 0, 1);
+            } else {
+                while pe.atomic_load(flag, 0) != 1 {
+                    pe.fabric().check_abort();
+                    std::thread::yield_now();
+                }
+                let v = pe.get_vec(payload);
+                assert_eq!(v, vec![9i64; 8]);
+            }
+        });
+        assert_eq!(ck.race_count(), 0, "{}", ck.summary());
+    }
+
+    #[test]
+    fn disarmed_fabric_has_no_checker() {
+        let f = Fabric::new(FabricConfig {
+            nprocs: 1,
+            profile: NetProfile::dgx2(),
+            seg_capacity: 1 << 20,
+            pacing: false,
+        });
+        assert!(!f.check_armed());
+        assert!(f.checker().is_none());
+        let ck = f.arm_check();
+        assert!(f.check_armed());
+        f.disarm_check();
+        assert!(!f.check_armed());
+        // Reports survive disarming for post-run collection.
+        assert_eq!(ck.race_count(), 0);
+        assert!(StdArc::ptr_eq(&ck, &f.checker().unwrap()));
+    }
+}

@@ -31,7 +31,9 @@
 //! ```
 
 pub mod barrier;
+pub mod check;
 pub mod gptr;
+pub mod model;
 pub mod pe;
 pub mod queue;
 pub mod segment;
@@ -40,6 +42,7 @@ pub mod topology;
 pub mod trace;
 
 pub use barrier::ClockBarrier;
+pub use check::{AccessInfo, CheckHandle, Checker, RaceReport};
 pub use gptr::{GlobalPtr, Pod};
 pub use pe::{GetFuture, Pe};
 pub use queue::{QueueHandle, QueueItem};
@@ -116,6 +119,12 @@ pub struct Fabric {
     /// cleared at the start of every launch, drained by
     /// [`Fabric::take_trace`].
     trace_sink: Mutex<Vec<PeTrace>>,
+    /// Happens-before race detector (see [`check`]). Armed explicitly;
+    /// kept after disarming so reports can still be collected.
+    checker: Mutex<Option<Arc<Checker>>>,
+    /// Fast-path flag: hooks fire only while armed. Same zero-cost-off
+    /// pattern as tracing.
+    check_armed: std::sync::atomic::AtomicBool,
 }
 
 impl Fabric {
@@ -141,7 +150,53 @@ impl Fabric {
             trace_cap: AtomicUsize::new(0),
             queue_stall_ms: AtomicU64::new(DEFAULT_QUEUE_STALL_MS),
             trace_sink: Mutex::new(Vec::new()),
+            checker: Mutex::new(None),
+            check_armed: std::sync::atomic::AtomicBool::new(false),
         })
+    }
+
+    // ---------------------------------------------------------------
+    // Memory-model checker (fabric::check).
+    // ---------------------------------------------------------------
+
+    /// Arm the happens-before race detector for subsequent launches and
+    /// coordinator accesses. Always installs a *fresh* [`Checker`]
+    /// (prior shadow state would manufacture stale-epoch reports) and
+    /// returns it for report collection. The checker never advances
+    /// virtual clocks or touches `Stats`, so armed and disarmed runs
+    /// are bit-identical in makespan and op counts.
+    pub fn arm_check(&self) -> Arc<Checker> {
+        let ck = Arc::new(Checker::new(self.nprocs));
+        *self.checker.lock().unwrap() = Some(Arc::clone(&ck));
+        self.check_armed.store(true, Ordering::Release);
+        ck
+    }
+
+    /// Stop recording. The checker (and its reports) stays retrievable
+    /// via [`Fabric::checker`] until the next [`Fabric::arm_check`].
+    pub fn disarm_check(&self) {
+        self.check_armed.store(false, Ordering::Release);
+    }
+
+    /// Whether hooks are currently recording.
+    pub fn check_armed(&self) -> bool {
+        self.check_armed.load(Ordering::Acquire)
+    }
+
+    /// The most recently armed checker, if any.
+    pub fn checker(&self) -> Option<Arc<Checker>> {
+        self.checker.lock().unwrap().clone()
+    }
+
+    /// Checker when armed (hook fast path).
+    pub(crate) fn checker_if_armed(&self) -> Option<Arc<Checker>> {
+        if self.check_armed() { self.checker() } else { None }
+    }
+
+    /// Fork a per-PE [`CheckHandle`] for a new launch, or `None` when
+    /// disarmed.
+    pub(crate) fn check_handle(&self, rank: usize) -> Option<CheckHandle> {
+        self.checker_if_armed().map(|ck| CheckHandle::new(ck, rank))
     }
 
     /// Set the queue-backpressure stall deadline for subsequent pushes
@@ -266,9 +321,17 @@ impl Fabric {
     /// Untimed write (setup only). Uses the bulk chunk-copy path.
     pub fn write<T: Pod>(&self, gp: GlobalPtr<T>, src: &[T]) {
         assert_eq!(src.len(), gp.len());
+        // Safety: `T: Pod` guarantees no padding and no invalid bit
+        // patterns, so viewing the slice's memory as initialized bytes
+        // is sound; the byte slice borrows `src` and dies before it.
         let bytes = unsafe {
             std::slice::from_raw_parts(src.as_ptr() as *const u8, std::mem::size_of_val(src))
         };
+        // Shadow-record BEFORE the real write: any reader that observes
+        // the published value is then guaranteed to see this record.
+        if let Some(ck) = self.checker_if_armed() {
+            ck.coord_data(gp.rank(), gp.byte_offset(), bytes.len(), true, "setup_write");
+        }
         self.segments[gp.rank()].write_bytes_bulk(gp.byte_offset(), bytes);
         self.setup_writes.fetch_add(1, Ordering::Relaxed);
         self.setup_write_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
@@ -278,6 +341,9 @@ impl Fabric {
     /// chunk-copy path.
     pub fn read<T: Pod>(&self, gp: GlobalPtr<T>) -> Vec<T> {
         let mut out = vec![T::zeroed(); gp.len()];
+        // Safety: `out` is fully initialized (zeroed) and exclusively
+        // borrowed; `T: Pod` makes every byte pattern written back a
+        // valid `T`. The byte view dies before `out` is returned.
         let bytes = unsafe {
             std::slice::from_raw_parts_mut(
                 out.as_mut_ptr() as *mut u8,
@@ -285,8 +351,13 @@ impl Fabric {
             )
         };
         self.segments[gp.rank()].read_bytes_bulk(gp.byte_offset(), bytes);
-        self.setup_reads.fetch_add(1, Ordering::Relaxed);
         let nbytes = (out.len() * std::mem::size_of::<T>()) as u64;
+        // Shadow-record AFTER the real read (read-record-after pairs
+        // with write-record-before for deterministic detection).
+        if let Some(ck) = self.checker_if_armed() {
+            ck.coord_data(gp.rank(), gp.byte_offset(), nbytes as usize, false, "setup_read");
+        }
+        self.setup_reads.fetch_add(1, Ordering::Relaxed);
         self.setup_read_bytes.fetch_add(nbytes, Ordering::Relaxed);
         out
     }
@@ -341,6 +412,13 @@ impl Fabric {
             }
         }
         self.launches.fetch_add(1, Ordering::Relaxed);
+        // Close the happens-before epoch: each PE joined its clock into
+        // the coordinator in `Pe::finish`; advancing the coordinator's
+        // component here orders post-run gathers and inter-run resets
+        // after everything the launch did.
+        if let Some(ck) = self.checker_if_armed() {
+            ck.epoch_end();
+        }
         (rs, stats)
     }
 }
@@ -353,6 +431,9 @@ impl Fabric {
 // unaffected; see `Segment::read_bytes_bulk`.
 impl Pe {
     pub(crate) fn copy_out<T: Pod>(&self, gp: GlobalPtr<T>, dst: &mut [T]) {
+        // Safety: `dst` is exclusively borrowed and `T: Pod` makes any
+        // byte pattern the segment copies in a valid `T`; the byte view
+        // does not outlive the call.
         let bytes = unsafe {
             std::slice::from_raw_parts_mut(
                 dst.as_mut_ptr() as *mut u8,
@@ -360,12 +441,24 @@ impl Pe {
             )
         };
         self.fabric().segment(gp.rank()).read_bytes_bulk(gp.byte_offset(), bytes);
+        // Read-record-after: by recording once the value is in hand,
+        // a read that observed a publication is guaranteed to find the
+        // writer's (write-record-before) shadow entry.
+        if let Some(ck) = self.check() {
+            ck.data(gp.rank(), gp.byte_offset(), bytes.len(), false, "data_get");
+        }
     }
 
     pub(crate) fn copy_in<T: Pod>(&self, gp: GlobalPtr<T>, src: &[T]) {
+        // Safety: `T: Pod` (no padding, no invalid bit patterns) makes
+        // the read-only byte view of `src` sound; it dies before `src`.
         let bytes = unsafe {
             std::slice::from_raw_parts(src.as_ptr() as *const u8, std::mem::size_of_val(src))
         };
+        // Write-record-before the real store (see copy_out).
+        if let Some(ck) = self.check() {
+            ck.data(gp.rank(), gp.byte_offset(), bytes.len(), true, "data_put");
+        }
         self.fabric().segment(gp.rank()).write_bytes_bulk(gp.byte_offset(), bytes);
     }
 }

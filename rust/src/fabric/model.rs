@@ -1,0 +1,588 @@
+//! `fabric::model` — bounded interleaving exploration for the fabric's
+//! synchronization protocols (a dependency-free mini-loom).
+//!
+//! The race detector ([`super::check`]) observes the *one* interleaving
+//! a run happens to take. This module complements it: each sync
+//! primitive's protocol is restated as a small explicit state machine
+//! ([`Model`]) whose steps are the protocol's atomic units (one remote
+//! word op, or one mutex-held critical section), and an [`Explorer`]
+//! enumerates every thread interleaving up to a bounded depth, checking
+//! an invariant at the end of each complete schedule and flagging
+//! deadlocks (all live threads blocked).
+//!
+//! Three protocols are modeled, each with a `broken_*` variant
+//! re-introducing a PR-4 bug class so tests can prove the explorer
+//! actually finds the losing schedule:
+//!
+//! * [`QueueModel`] — MPSC queue push/pop ticket protocol
+//!   (`broken_publish`: sequence word published before the payload).
+//! * [`ResGridModel`] — reservation-grid claim
+//!   (`broken` claim: plain read-then-write instead of fetch-and-add).
+//! * [`BarrierModel`] — split-phase clock barrier across generations
+//!   (`broken_no_reset`: gathering max not reset on release).
+//!
+//! State spaces here are tiny (tens to a few thousand schedules), so
+//! plain DFS with cloned states is exhaustive well inside the bounds.
+
+/// Result of letting one thread take its next atomic step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepResult {
+    /// The thread performed a step and has more to do.
+    Progressed,
+    /// The thread cannot step in the current state (e.g. a gate not yet
+    /// open). The explorer does not recurse — the state is unchanged.
+    Blocked,
+    /// The thread performed its final step.
+    Done,
+}
+
+/// A protocol restated as an explorable state machine. `Clone` is the
+/// branching mechanism: the explorer clones the state before each
+/// candidate step.
+pub trait Model: Clone {
+    /// Number of threads participating.
+    fn threads(&self) -> usize;
+    /// Let thread `t` take its next atomic step.
+    fn step(&mut self, t: usize) -> StepResult;
+    /// Invariant checked at the end of every complete schedule.
+    fn check_final(&self) -> Result<(), String>;
+}
+
+/// A schedule that violated the model's invariant (or deadlocked).
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// The thread choices (in order) that reached the violation.
+    pub schedule: Vec<usize>,
+    pub message: String,
+}
+
+/// Exploration result.
+#[derive(Clone, Debug, Default)]
+pub struct Outcome {
+    /// Complete schedules checked.
+    pub schedules: u64,
+    /// True when a bound (depth or schedule budget) cut the search off —
+    /// a clean `violation: None` is then not a proof.
+    pub truncated: bool,
+    /// First violating schedule found, if any.
+    pub violation: Option<Violation>,
+}
+
+/// Depth-first exhaustive interleaving search with bounds.
+pub struct Explorer {
+    /// Maximum schedule length (steps across all threads).
+    pub max_depth: usize,
+    /// Maximum complete schedules to check.
+    pub max_schedules: u64,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Explorer { max_depth: 256, max_schedules: 200_000 }
+    }
+}
+
+impl Explorer {
+    /// Explore all interleavings of `model` from its initial state.
+    pub fn explore<M: Model>(&self, model: &M) -> Outcome {
+        let mut out = Outcome::default();
+        let done = vec![false; model.threads()];
+        let mut sched = Vec::new();
+        self.dfs(model, &done, &mut sched, &mut out);
+        out
+    }
+
+    fn dfs<M: Model>(&self, m: &M, done: &[bool], sched: &mut Vec<usize>, out: &mut Outcome) {
+        if out.violation.is_some() {
+            return;
+        }
+        if done.iter().all(|&d| d) {
+            out.schedules += 1;
+            if let Err(message) = m.check_final() {
+                out.violation = Some(Violation { schedule: sched.clone(), message });
+            }
+            return;
+        }
+        if out.schedules >= self.max_schedules || sched.len() >= self.max_depth {
+            out.truncated = true;
+            return;
+        }
+        let mut any_ran = false;
+        for t in 0..m.threads() {
+            if done[t] {
+                continue;
+            }
+            let mut next = m.clone();
+            let r = next.step(t);
+            if r == StepResult::Blocked {
+                continue;
+            }
+            any_ran = true;
+            let mut done_next = done.to_vec();
+            if r == StepResult::Done {
+                done_next[t] = true;
+            }
+            sched.push(t);
+            self.dfs(&next, &done_next, sched, out);
+            sched.pop();
+            if out.violation.is_some() {
+                return;
+            }
+        }
+        if !any_ran {
+            out.violation = Some(Violation {
+                schedule: sched.clone(),
+                message: "deadlock: every unfinished thread is blocked".to_string(),
+            });
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// Queue push/pop ticket protocol (QueueHandle, one slot in flight).
+// -------------------------------------------------------------------
+
+/// One producer pushing one item through a `QueueHandle` slot while the
+/// owner polls and pops: each step is one remote word operation, the
+/// protocol's real atomic granularity. The invariant is that the popped
+/// payload is the pushed one — under `broken_publish` (sequence word
+/// stored before the payload put) a schedule exists where the consumer
+/// passes the gate and reads the unwritten slot.
+#[derive(Clone, Debug)]
+pub struct QueueModel {
+    broken_publish: bool,
+    // Shared words.
+    tail: u64,
+    head: u64,
+    seq: u64,
+    payload: u64,
+    // Thread program counters and consumer result.
+    pc: [usize; 2],
+    got: Option<u64>,
+}
+
+/// The payload value the producer publishes.
+const QUEUE_PAYLOAD: u64 = 42;
+
+impl QueueModel {
+    pub fn correct() -> Self {
+        Self::new(false)
+    }
+
+    /// PR-4 bug class "dropped release edge": the publish ordering is
+    /// inverted, so the gate can open before the payload exists.
+    pub fn broken_publish() -> Self {
+        Self::new(true)
+    }
+
+    fn new(broken_publish: bool) -> Self {
+        QueueModel {
+            broken_publish,
+            tail: 0,
+            head: 0,
+            seq: 0,
+            payload: 0,
+            pc: [0; 2],
+            got: None,
+        }
+    }
+}
+
+impl Model for QueueModel {
+    fn threads(&self) -> usize {
+        2
+    }
+
+    fn step(&mut self, t: usize) -> StepResult {
+        let pc = self.pc[t];
+        self.pc[t] += 1;
+        if t == 0 {
+            // Producer: FAA tail, put payload, release seq.
+            let (second, third) = if self.broken_publish {
+                // Inverted publish: seq first, payload second.
+                (true, false)
+            } else {
+                (false, true)
+            };
+            match pc {
+                0 => {
+                    self.tail += 1;
+                    StepResult::Progressed
+                }
+                1 => {
+                    if second {
+                        self.seq = 1;
+                    } else {
+                        self.payload = QUEUE_PAYLOAD;
+                    }
+                    StepResult::Progressed
+                }
+                2 => {
+                    if third {
+                        self.seq = 1;
+                    } else {
+                        self.payload = QUEUE_PAYLOAD;
+                    }
+                    StepResult::Done
+                }
+                _ => unreachable!("producer stepped past Done"),
+            }
+        } else {
+            // Consumer (owner): gate on seq, read payload, clear seq,
+            // advance head.
+            match pc {
+                0 => {
+                    if self.seq != self.head + 1 {
+                        self.pc[t] = 0; // gate closed: retry this step
+                        return StepResult::Blocked;
+                    }
+                    StepResult::Progressed
+                }
+                1 => {
+                    self.got = Some(self.payload);
+                    StepResult::Progressed
+                }
+                2 => {
+                    self.seq = 0;
+                    StepResult::Progressed
+                }
+                3 => {
+                    self.head += 1;
+                    StepResult::Done
+                }
+                _ => unreachable!("consumer stepped past Done"),
+            }
+        }
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        if self.got == Some(QUEUE_PAYLOAD) {
+            Ok(())
+        } else {
+            Err(format!(
+                "consumer popped {:?}, expected Some({QUEUE_PAYLOAD}): \
+                 payload read before it was written",
+                self.got
+            ))
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// Reservation-grid claim (ResGrid3D::try_claim).
+// -------------------------------------------------------------------
+
+/// N contenders claiming one component flag. The correct protocol is a
+/// single fetch-and-add step; the broken variant splits it into a plain
+/// read step and a write step (PR-4 bug class "double claim"), so a
+/// schedule exists where several threads observe 0 and all win.
+#[derive(Clone, Debug)]
+pub struct ResGridModel {
+    broken: bool,
+    cell: u64,
+    /// Per-thread: the value read in the broken variant's first step.
+    seen: Vec<Option<u64>>,
+    won: Vec<bool>,
+    pc: Vec<usize>,
+}
+
+impl ResGridModel {
+    pub fn correct(threads: usize) -> Self {
+        Self::new(threads, false)
+    }
+
+    /// PR-4 bug class "double claim": read-then-write instead of FAA.
+    pub fn broken(threads: usize) -> Self {
+        Self::new(threads, true)
+    }
+
+    fn new(threads: usize, broken: bool) -> Self {
+        assert!(threads >= 2);
+        ResGridModel {
+            broken,
+            cell: 0,
+            seen: vec![None; threads],
+            won: vec![false; threads],
+            pc: vec![0; threads],
+        }
+    }
+}
+
+impl Model for ResGridModel {
+    fn threads(&self) -> usize {
+        self.pc.len()
+    }
+
+    fn step(&mut self, t: usize) -> StepResult {
+        let pc = self.pc[t];
+        self.pc[t] += 1;
+        if !self.broken {
+            // One atomic FAA: observe-and-increment in a single step.
+            assert_eq!(pc, 0);
+            self.won[t] = self.cell == 0;
+            self.cell += 1;
+            return StepResult::Done;
+        }
+        match pc {
+            0 => {
+                self.seen[t] = Some(self.cell);
+                StepResult::Progressed
+            }
+            1 => {
+                if self.seen[t] == Some(0) {
+                    self.won[t] = true;
+                    self.cell = 1;
+                }
+                StepResult::Done
+            }
+            _ => unreachable!("claimer stepped past Done"),
+        }
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        let winners = self.won.iter().filter(|&&w| w).count();
+        if winners == 1 {
+            Ok(())
+        } else {
+            Err(format!("{winners} threads won the claim, expected exactly 1"))
+        }
+    }
+}
+
+// -------------------------------------------------------------------
+// Split-phase clock barrier (ClockBarrier) across generations.
+// -------------------------------------------------------------------
+
+/// N participants crossing the clock barrier twice. Steps mirror the
+/// real lock granularity of `ClockBarrier::wait`: the arrive step is
+/// the whole mutex-held body (fold clock, count, release-if-last), the
+/// wait step is one condvar wakeup check. The invariant is that every
+/// participant observes exactly its round's clock max — the
+/// `broken_no_reset` variant (gathering max not cleared on release)
+/// leaks round 0's max into round 1.
+#[derive(Clone, Debug)]
+pub struct BarrierModel {
+    broken_no_reset: bool,
+    n: usize,
+    // BarState mirror.
+    arrived: usize,
+    generation: u64,
+    gathering_max: f64,
+    released_max: f64,
+    // Per-thread per-round clocks and observations.
+    clocks: Vec<[f64; 2]>,
+    observed: Vec<[f64; 2]>,
+    my_gen: Vec<u64>,
+    pc: Vec<usize>,
+}
+
+impl BarrierModel {
+    pub fn correct(n: usize) -> Self {
+        Self::new(n, false)
+    }
+
+    /// Bug class "stale state across generations": the gathering max is
+    /// not reset when a generation releases.
+    pub fn broken_no_reset(n: usize) -> Self {
+        Self::new(n, true)
+    }
+
+    fn new(n: usize, broken_no_reset: bool) -> Self {
+        assert!(n >= 2);
+        // Round 0 clocks dominate round 1's, so a leaked round-0 max is
+        // observable in round 1.
+        let clocks: Vec<[f64; 2]> =
+            (0..n).map(|t| [100.0 + t as f64 * 10.0, 1.0 + t as f64]).collect();
+        BarrierModel {
+            broken_no_reset,
+            n,
+            arrived: 0,
+            generation: 0,
+            gathering_max: f64::MIN,
+            released_max: f64::MIN,
+            clocks,
+            observed: vec![[f64::MIN; 2]; n],
+            my_gen: vec![0; n],
+            pc: vec![0; n],
+        }
+    }
+
+    fn round_max(&self, r: usize) -> f64 {
+        self.clocks.iter().map(|c| c[r]).fold(f64::MIN, f64::max)
+    }
+
+    /// The mutex-held arrive body of `ClockBarrier::wait`.
+    fn arrive(&mut self, t: usize, round: usize) {
+        self.my_gen[t] = self.generation;
+        self.gathering_max = self.gathering_max.max(self.clocks[t][round]);
+        self.arrived += 1;
+        if self.arrived == self.n {
+            self.released_max = self.gathering_max;
+            if !self.broken_no_reset {
+                self.gathering_max = f64::MIN;
+            }
+            self.arrived = 0;
+            self.generation += 1;
+        }
+    }
+
+    /// One condvar wakeup check: has my generation been released?
+    fn wait_check(&mut self, t: usize, round: usize) -> bool {
+        if self.generation == self.my_gen[t] {
+            return false;
+        }
+        self.observed[t][round] = self.released_max;
+        true
+    }
+}
+
+impl Model for BarrierModel {
+    fn threads(&self) -> usize {
+        self.n
+    }
+
+    fn step(&mut self, t: usize) -> StepResult {
+        match self.pc[t] {
+            0 => {
+                self.arrive(t, 0);
+                self.pc[t] = 1;
+                StepResult::Progressed
+            }
+            1 => {
+                if self.wait_check(t, 0) {
+                    self.pc[t] = 2;
+                    StepResult::Progressed
+                } else {
+                    StepResult::Blocked
+                }
+            }
+            2 => {
+                self.arrive(t, 1);
+                self.pc[t] = 3;
+                StepResult::Progressed
+            }
+            3 => {
+                if self.wait_check(t, 1) {
+                    self.pc[t] = 4;
+                    StepResult::Done
+                } else {
+                    StepResult::Blocked
+                }
+            }
+            _ => unreachable!("participant stepped past Done"),
+        }
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        for r in 0..2 {
+            let expect = self.round_max(r);
+            for t in 0..self.n {
+                let got = self.observed[t][r];
+                if got != expect {
+                    return Err(format!(
+                        "round {r}: thread {t} observed barrier max {got}, expected {expect}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_protocol_is_clean_under_all_interleavings() {
+        let out = Explorer::default().explore(&QueueModel::correct());
+        assert!(out.violation.is_none(), "{:?}", out.violation);
+        assert!(!out.truncated);
+        // The seq gate blocks the consumer until the producer's final
+        // (release) step, so the correct protocol admits exactly one
+        // complete schedule — the serialization IS the correctness.
+        assert_eq!(out.schedules, 1);
+    }
+
+    #[test]
+    fn queue_broken_publish_has_a_losing_schedule() {
+        let out = Explorer::default().explore(&QueueModel::broken_publish());
+        let v = out.violation.expect("inverted publish must be caught");
+        assert!(v.message.contains("expected Some(42)"), "{}", v.message);
+        assert!(!v.schedule.is_empty());
+    }
+
+    #[test]
+    fn claim_faa_is_clean_for_three_contenders() {
+        let out = Explorer::default().explore(&ResGridModel::correct(3));
+        assert!(out.violation.is_none(), "{:?}", out.violation);
+        assert!(!out.truncated);
+        // 3 single-step threads: exactly 3! complete schedules.
+        assert_eq!(out.schedules, 6);
+    }
+
+    #[test]
+    fn claim_read_then_write_double_claims() {
+        let out = Explorer::default().explore(&ResGridModel::broken(2));
+        let v = out.violation.expect("read-then-write double claim must be caught");
+        assert!(v.message.contains("expected exactly 1"), "{}", v.message);
+    }
+
+    #[test]
+    fn barrier_two_rounds_clean() {
+        let out = Explorer::default().explore(&BarrierModel::correct(2));
+        assert!(out.violation.is_none(), "{:?}", out.violation);
+        assert!(!out.truncated);
+    }
+
+    #[test]
+    fn barrier_three_participants_clean() {
+        let out = Explorer::default().explore(&BarrierModel::correct(3));
+        assert!(out.violation.is_none(), "{:?}", out.violation);
+        assert!(!out.truncated);
+    }
+
+    #[test]
+    fn barrier_without_gather_reset_leaks_round_max() {
+        let out = Explorer::default().explore(&BarrierModel::broken_no_reset(2));
+        let v = out.violation.expect("leaked gathering max must be caught");
+        assert!(v.message.contains("round 1"), "{}", v.message);
+    }
+
+    #[test]
+    fn deadlock_is_reported() {
+        // A producer that never opens the consumer's gate: every
+        // interleaving ends with the consumer blocked forever.
+        #[derive(Clone)]
+        struct Stuck {
+            pc: [usize; 2],
+        }
+        impl Model for Stuck {
+            fn threads(&self) -> usize {
+                2
+            }
+            fn step(&mut self, t: usize) -> StepResult {
+                if t == 0 {
+                    self.pc[0] += 1;
+                    StepResult::Done // finishes without signaling
+                } else {
+                    StepResult::Blocked // waits for a signal that never comes
+                }
+            }
+            fn check_final(&self) -> Result<(), String> {
+                Ok(())
+            }
+        }
+        let out = Explorer::default().explore(&Stuck { pc: [0; 2] });
+        let v = out.violation.expect("deadlock must be reported");
+        assert!(v.message.contains("deadlock"), "{}", v.message);
+    }
+
+    #[test]
+    fn truncation_is_flagged() {
+        let tight = Explorer { max_depth: 2, max_schedules: 1_000 };
+        let out = tight.explore(&QueueModel::correct());
+        assert!(out.truncated, "depth 2 cannot finish a 7-step protocol");
+        assert_eq!(out.schedules, 0);
+    }
+}

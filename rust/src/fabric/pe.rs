@@ -10,6 +10,7 @@ use std::cell::{Cell, RefCell};
 use std::sync::Arc;
 
 use super::barrier::ClockBarrier;
+use super::check::CheckHandle;
 use super::gptr::{GlobalPtr, Pod};
 use super::stats::{Kind, Stats};
 use super::trace::{SpanCtx, Tracer, NO_TILE};
@@ -48,6 +49,11 @@ pub struct Pe {
     /// when off, and recording never performs fabric operations or
     /// clock charges.
     trace: Option<Tracer>,
+    /// Happens-before shadow clock, present only while the fabric's
+    /// race detector is armed ([`Fabric::arm_check`]). Same zero-cost
+    /// `Option` pattern as `trace`; recording never charges the clock
+    /// or touches `Stats`, so armed runs are bit-identical to disarmed.
+    check: Option<CheckHandle>,
 }
 
 /// A non-blocking get in flight. Data is materialized eagerly (the
@@ -115,6 +121,7 @@ impl<T> GetFuture<T> {
 impl Pe {
     pub(super) fn new(rank: usize, fabric: Arc<Fabric>, epoch: std::time::Instant) -> Self {
         let cap = fabric.trace_cap();
+        let check = fabric.check_handle(rank);
         Pe {
             rank,
             fabric,
@@ -124,7 +131,13 @@ impl Pe {
             nvlink_free_at: Cell::new(0.0),
             epoch,
             trace: (cap > 0).then(|| Tracer::new(cap)),
+            check,
         }
+    }
+
+    /// The race-detector handle, when the fabric is armed.
+    pub(crate) fn check(&self) -> Option<&CheckHandle> {
+        self.check.as_ref()
     }
 
     /// Whether span tracing is active for this PE.
@@ -139,12 +152,20 @@ impl Pe {
         if let Some(tr) = &self.trace {
             tr.set_ctx(ctx);
         }
+        // The checker mirrors the ambient context so race reports carry
+        // span attribution even when tracing itself is off.
+        if let Some(ck) = &self.check {
+            ck.set_ctx(ctx);
+        }
     }
 
     /// Clear the ambient trace context. No-op when tracing is off.
     pub fn trace_done(&self) {
         if let Some(tr) = &self.trace {
             tr.clear_ctx();
+        }
+        if let Some(ck) = &self.check {
+            ck.clear_ctx();
         }
     }
 
@@ -275,11 +296,16 @@ impl Pe {
     /// Take the stats out at the end of a run; deposits this PE's spans
     /// in the fabric's trace sink when tracing was on.
     pub(super) fn finish(self) -> Stats {
-        let Pe { rank, fabric, clock, stats, trace, .. } = self;
+        let Pe { rank, fabric, clock, stats, trace, check, .. } = self;
         let mut s = stats.into_inner();
         s.final_clock_ns = clock.get();
         if let Some(tr) = trace {
             fabric.push_trace(tr.into_trace(rank));
+        }
+        // Join edge: everything this PE did happens before whatever the
+        // coordinator does after the launch returns.
+        if let Some(ck) = check {
+            ck.finish();
         }
         s
     }
@@ -358,6 +384,9 @@ impl Pe {
         let sz = std::mem::size_of::<T>();
         let total: usize = ranges.iter().map(|&(_, l)| l).sum();
         let mut data = vec![T::zeroed(); total];
+        // Safety: `data` is fully initialized and exclusively borrowed;
+        // `T: Pod` makes every byte pattern copied in a valid `T`. The
+        // byte view dies before `data` is returned.
         let dst = unsafe {
             std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, total * sz)
         };
@@ -380,6 +409,11 @@ impl Pe {
             let span = (lead + len * sz).div_ceil(8) * 8;
             scratch.resize(span, 0);
             seg.read_bytes_bulk(byte0 - lead, &mut scratch);
+            // Read-record-after, one record per DMA segment of the
+            // gather list, at the word-widened wire span.
+            if let Some(ck) = self.check() {
+                ck.data(gp.rank(), byte0 - lead, span, false, "gather");
+            }
             dst[out..out + len * sz].copy_from_slice(&scratch[lead..lead + len * sz]);
             out += len * sz;
             wire += span;
@@ -476,6 +510,13 @@ impl Pe {
     pub fn fetch_add(&self, gp: GlobalPtr<i64>, idx: usize, val: i64) -> i64 {
         assert!(idx < gp.len(), "fetch_add index out of bounds");
         let off = gp.byte_offset() + idx * 8;
+        // Acquire-release RMW edge; recorded before the real FAA (the
+        // shadow order of two concurrent RMWs may invert their real
+        // order — harmless: RMW/RMW pairs never race, and the sync
+        // clocks only merge; see DESIGN.md §10 caveats).
+        if let Some(ck) = self.check() {
+            ck.atomic_rmw(gp.rank(), off, "fetch_add");
+        }
         let prev = self.fabric.segment(gp.rank()).fetch_add_i64(off, val);
         let link = self.fabric.profile().link(self.rank, gp.rank());
         self.advance(Kind::Queue, 2.0 * link.lat_ns + ISSUE_NS);
@@ -490,6 +531,11 @@ impl Pe {
         assert!(idx < gp.len());
         let off = gp.byte_offset() + idx * 8;
         let v = self.fabric.segment(gp.rank()).load_i64(off);
+        // Acquire edge, recorded after the real load: if we observed a
+        // released value, the releaser's shadow clock is already there.
+        if let Some(ck) = self.check() {
+            ck.atomic_load(gp.rank(), off, "atomic_load");
+        }
         let link = self.fabric.profile().link(self.rank, gp.rank());
         self.advance(Kind::Queue, 2.0 * link.lat_ns);
         self.stats.borrow_mut().n_word_ops += 1;
@@ -500,6 +546,11 @@ impl Pe {
     pub fn atomic_store(&self, gp: GlobalPtr<i64>, idx: usize, val: i64) {
         assert!(idx < gp.len());
         let off = gp.byte_offset() + idx * 8;
+        // Release edge, recorded before the real store: any acquirer
+        // that observes `val` then finds this clock published.
+        if let Some(ck) = self.check() {
+            ck.atomic_store(gp.rank(), off, "atomic_store");
+        }
         self.fabric.segment(gp.rank()).store_i64(off, val);
         let link = self.fabric.profile().link(self.rank, gp.rank());
         self.advance(Kind::Queue, link.lat_ns);
@@ -537,7 +588,18 @@ impl Pe {
     /// Barrier on an explicit team (row/column communicators in SUMMA).
     pub fn barrier_on(&self, b: &ClockBarrier) {
         let mine = self.clock.get();
+        // Happens-before: fold our clock into the barrier before any
+        // participant can be released, pull the merged clock after.
+        // Keyed by barrier address (barriers live as long as the
+        // fabric, so addresses are stable and unique).
+        let bkey = b as *const ClockBarrier as usize;
+        if let Some(ck) = self.check() {
+            ck.barrier_arrive(bkey);
+        }
         let max = b.wait(mine);
+        if let Some(ck) = self.check() {
+            ck.barrier_depart(bkey);
+        }
         if self.fabric.profile().timed {
             let lost = max - mine;
             if lost > 0.0 {

@@ -179,6 +179,33 @@ impl<T: QueueItem> QueueHandle<T> {
         pe.trace_done();
     }
 
+    /// SEEDED FAULT (tests only) — PR-4 bug class "dropped release
+    /// edge": a push that publishes the sequence word with a plain data
+    /// put instead of the Release store. The consumer's acquire then
+    /// observes the ticket without any happens-before edge to the
+    /// payload put, and `fabric::check` must flag both the seq word and
+    /// the payload words as mixed/unordered pairs.
+    #[cfg(test)]
+    pub(crate) fn push_norelease(&self, pe: &Pe, item: &T) {
+        pe.trace_note(SpanCtx {
+            label: "queue_push_norelease",
+            peer: self.owner() as i32,
+            tile: NO_TILE,
+            bytes: ((1 + T::WORDS) * 8) as f64,
+        });
+        let t = pe.fetch_add(self.base, TAIL, 1);
+        let sb = self.slot_base(t);
+        let mut buf = vec![0u64; 1 + T::WORDS];
+        buf[0] = pe.now().to_bits();
+        item.encode(&mut buf[1..]);
+        let payload: Vec<i64> = buf.iter().map(|&w| w as i64).collect();
+        pe.put_as(self.base.slice(sb + 1, 1 + T::WORDS), &payload, Kind::Queue);
+        // The bug: seq published as data, not as a Release store.
+        pe.put_as(self.base.slice(sb, 1), &[t + 1], Kind::Queue);
+        pe.stats_mut().n_queue_push += 1;
+        pe.trace_done();
+    }
+
     /// Pop an item (owner only). Returns None when the queue is
     /// currently empty. Non-blocking — algorithms interleave pops with
     /// their regular work, as in the paper.
@@ -209,6 +236,14 @@ impl<T: QueueItem> QueueHandle<T> {
         let seq = word(sb);
         if seq != h + 1 {
             return None; // empty, or the next payload is still in flight
+        }
+        // Acquire edge on the seq word: observing seq == h+1 proves the
+        // pusher's Release store happened, so join its clock before
+        // touching the payload. (The raw `word()` polls above are the
+        // owner's local reads — unhooked reads can only miss races,
+        // never invent them; a poll that returns early records nothing.)
+        if let Some(ck) = pe.check() {
+            ck.atomic_load(self.owner(), self.base.byte_offset() + sb * 8, "queue_pop_seq");
         }
         // Virtual arrival time = pusher's clock + one-way latency. A
         // non-blocking poll cannot observe a message "from the future":
@@ -527,5 +562,63 @@ mod tests {
         f.launch(|pe| {
             assert!(q.try_pop(pe).is_none());
         });
+    }
+
+    #[test]
+    fn seeded_norelease_push_is_flagged_with_dual_attribution() {
+        let f = fab(2);
+        let ck = f.arm_check();
+        let q = QueueHandle::<Msg>::create(&f, 0, 4);
+        f.launch(|pe| {
+            if pe.rank() == 1 {
+                q.push_norelease(pe, &Msg { a: 1, b: 2, c: 3 });
+            } else {
+                let mut got = None;
+                while got.is_none() {
+                    got = q.pop_wait(pe);
+                    pe.fabric().check_abort();
+                    std::thread::yield_now();
+                }
+                // The payload still arrives (the simulator's word ops
+                // are sequentially consistent) — the *protocol* is what
+                // is broken, and only the checker can see that.
+                assert_eq!(got.unwrap(), Msg { a: 1, b: 2, c: 3 });
+            }
+        });
+        assert!(ck.race_count() >= 1, "dropped release edge not detected");
+        let reps = ck.reports();
+        let hit = reps.iter().any(|r| {
+            let labels = [r.prev.label, r.cur.label];
+            labels.contains(&"queue_push_norelease")
+                && (labels.contains(&"queue_pop_seq") || labels.contains(&"queue_pop"))
+        });
+        assert!(hit, "missing dual-site attribution:\n{}", ck.summary());
+    }
+
+    #[test]
+    fn clean_queue_protocol_reports_zero_races() {
+        // Multi-producer wraparound through a tiny queue, checker
+        // armed: slot reuse is ordered by the pushers' HEAD acquire
+        // against the owner's HEAD release, payloads by the seq
+        // release/acquire pair — zero reports expected.
+        let f = fab(3);
+        let ck = f.arm_check();
+        let q = QueueHandle::<Msg>::create(&f, 0, 4);
+        f.launch(|pe| {
+            if pe.rank() == 0 {
+                let mut got = 0;
+                while got < 40 {
+                    if q.pop_wait(pe).is_some() {
+                        got += 1;
+                    }
+                    pe.fabric().check_abort();
+                }
+            } else {
+                for i in 0..20u64 {
+                    q.push(pe, &Msg { a: pe.rank() as u64, b: i, c: 0 });
+                }
+            }
+        });
+        assert_eq!(ck.race_count(), 0, "{}", ck.summary());
     }
 }

@@ -57,9 +57,17 @@ pub struct Segment {
     max_chunks: usize,
 }
 
-// Safety: all interior data is atomics; raw pointers point into boxes kept
-// alive by `chunks` for the Segment's lifetime.
+// Safety: `Segment` is only non-auto-Send/Sync because of the raw
+// pointers in `chunk_ptrs`. Those pointers (a) are published with
+// Release after the pointee chunk is fully constructed and read with
+// Acquire, (b) point into `Box<[AtomicU64]>` allocations owned by
+// `chunks` that are never dropped or moved for the Segment's lifetime
+// (append-only Vec of Boxes; a Box's heap allocation is stable), and
+// (c) are only ever dereferenced as `&AtomicU64`, whose shared-access
+// concurrency is handled by the atomics themselves.
 unsafe impl Send for Segment {}
+// Safety: see the Send rationale above — all shared mutable state is
+// behind atomics or the `chunks` mutex.
 unsafe impl Sync for Segment {}
 
 impl Segment {
@@ -85,6 +93,8 @@ impl Segment {
 
     /// Bytes currently allocated.
     pub fn allocated(&self) -> usize {
+        // Relaxed: a monotone diagnostic counter — no memory is accessed
+        // through the value, so no ordering is needed.
         self.top.load(Ordering::Relaxed)
     }
 
@@ -93,6 +103,9 @@ impl Segment {
     /// similarly fails hard when GPU memory runs out).
     pub fn alloc(&self, len: usize) -> usize {
         let len = len.div_ceil(8) * 8;
+        // Relaxed: the FAA's atomicity alone makes offsets disjoint;
+        // accessing the allocated words is gated on chunk commitment,
+        // which has its own Acquire/Release pair below.
         let off = self.top.fetch_add(len, Ordering::Relaxed);
         let end = off + len;
         assert!(
@@ -126,12 +139,23 @@ impl Segment {
         debug_assert!(c < self.n_chunks.load(Ordering::Acquire), "access beyond committed chunks");
         let ptr = self.chunk_ptrs[c].load(Ordering::Acquire);
         debug_assert!(!ptr.is_null());
+        // Safety: `w < CHUNK_WORDS`, and the Acquire load above pairs
+        // with the Release publication in `alloc`, so `ptr` points to a
+        // fully-initialized `[AtomicU64; CHUNK_WORDS]` that lives (and
+        // never moves) as long as `self` — the borrow is tied to
+        // `&self` by the signature.
         unsafe { &*ptr.add(w) }
     }
 
     /// One-sided bulk read: copy `dst.len()` bytes starting at `byte_off`
     /// into `dst`. `byte_off` must be 8-aligned (all allocations are).
     pub fn read_bytes(&self, byte_off: usize, dst: &mut [u8]) {
+        // Relaxed word loads throughout: the data path deliberately has
+        // NO ordering semantics — one-sided RDMA payloads are plain
+        // data, and every publication protocol built on top must order
+        // them through `load_i64`/`store_i64`/`fetch_add_i64`
+        // (Acquire/Release/AcqRel). `fabric::check` enforces exactly
+        // this contract; see DESIGN.md §10.
         let n = dst.len();
         let mut i = 0;
         // Whole words.
@@ -151,6 +175,9 @@ impl Segment {
     /// One-sided bulk write: copy `src` into the segment at `byte_off`
     /// (8-aligned). A partial tail word is read-modify-written.
     pub fn write_bytes(&self, byte_off: usize, src: &[u8]) {
+        // Relaxed word stores: see `read_bytes` — data-path writes carry
+        // no release semantics by design; publication goes through the
+        // atomic word ops.
         let n = src.len();
         let mut i = 0;
         while i + 8 <= n {
@@ -197,8 +224,11 @@ impl Segment {
             let span = (CHUNK_WORDS - w).min((n - i) / 8);
             let base = self.chunk_base(c);
             for (k, out) in dst[i..i + span * 8].chunks_exact_mut(8).enumerate() {
-                // Safety: w + k < CHUNK_WORDS and chunk c is committed,
-                // so the pointer stays inside one chunk's word array.
+                // Safety: w + k < CHUNK_WORDS (span is clamped to the
+                // chunk end) and chunk c is committed — `chunk_base`'s
+                // Acquire load pairs with `alloc`'s Release publication
+                // — so the pointer stays inside one live chunk's word
+                // array. Relaxed load: data path, see `read_bytes`.
                 let word = unsafe { &*base.add(w + k) }.load(Ordering::Relaxed);
                 out.copy_from_slice(&word.to_le_bytes());
             }
@@ -227,7 +257,9 @@ impl Segment {
             for (k, inp) in src[i..i + span * 8].chunks_exact(8).enumerate() {
                 let mut b = [0u8; 8];
                 b.copy_from_slice(inp);
-                // Safety: as in read_bytes_bulk.
+                // Safety: as in read_bytes_bulk — in-bounds within one
+                // committed chunk. Relaxed store: data path carries no
+                // release semantics by design (see `write_bytes`).
                 unsafe { &*base.add(w + k) }.store(u64::from_le_bytes(b), Ordering::Relaxed);
             }
             i += span * 8;

@@ -26,6 +26,8 @@
 //! graph algebras rely on; measured-performance artifacts are the
 //! `BENCH_*.json` documents `sparta bench` writes (schema in §4).
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod algorithms;
 pub mod analysis;
 pub mod coordinator;

@@ -171,6 +171,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("bench", "run the harnesses, write BENCH_<artifact>.json, optional perf gate (--check)"),
     ("run", "one SpMM/SpGEMM experiment run on a throwaway session"),
     ("chain", "N-step multiply pipeline on one session (operands stay resident)"),
+    ("check", "memory-model gate: interleaving models, source lint, checker-armed run matrix"),
     ("serve", "long-lived multi-tenant multiply daemon over a TCP line protocol"),
     ("client", "drive a running serve daemon (ping/load/multiply/bench/stats/shutdown)"),
     ("list", "available matrices, algorithms, profiles, comm modes"),
@@ -196,6 +197,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "bench" => bench(&Opts::parse(rest, &["smoke", "verify", "quiet", "trace"])?),
         "run" => run(&Opts::parse(rest, &["verify", "pjrt", "quiet", "trace"])?),
         "chain" => chain(&Opts::parse(rest, &["verify", "pjrt", "quiet", "trace"])?),
+        "check" => check(&Opts::parse(rest, &["lint", "models-only", "quiet"])?),
         "serve" => serve(&Opts::parse(rest, &["trace"])?),
         "client" => client(&Opts::parse(rest, &["verify"])?),
         "list" => {
@@ -505,6 +507,127 @@ fn chain(opts: &Opts) -> Result<()> {
     Ok(())
 }
 
+/// `sparta check`: the fabric memory-model gate (DESIGN.md §10).
+///
+/// Three stages, any failure exits nonzero:
+/// 1. **Interleaving models** — exhaustively explore the queue,
+///    reservation-claim and barrier protocols under every thread
+///    interleaving (`fabric::model`); the correct protocols must be
+///    violation-free and the seeded-broken variants must be caught
+///    (a broken variant slipping through means the explorer itself
+///    regressed).
+/// 2. **Source lint** — the `memlint` line scanner over `--src`
+///    (default: this crate's `src/`).
+/// 3. **Armed run matrix** — the checker-armed multiply suite
+///    (`coordinator::checksuite`); must report zero races.
+///
+/// `--lint` runs stage 2 only (the clippy CI job); `--models-only`
+/// runs stage 1 only. `--nprocs/--scale/--ncols` size stage 3.
+fn check(opts: &Opts) -> Result<()> {
+    use sparta::analysis::memlint;
+    use sparta::coordinator::{run_check_suite, CheckSuiteConfig};
+    use sparta::fabric::model::{BarrierModel, Explorer, QueueModel, ResGridModel};
+
+    let quiet = opts.has("quiet");
+    let lint_only = opts.has("lint");
+    let models_only = opts.has("models-only");
+
+    if !lint_only {
+        let ex = Explorer::default();
+        let mut failures = 0usize;
+        let mut model_line = |name: &str, ok: bool, detail: String| {
+            if !ok {
+                failures += 1;
+            }
+            if !quiet {
+                println!("  {} {name}: {detail}", if ok { "ok  " } else { "FAIL" });
+            }
+        };
+        if !quiet {
+            println!("interleaving models (bounded exhaustive exploration):");
+        }
+        let q = ex.explore(&QueueModel::correct());
+        model_line(
+            "queue protocol",
+            q.violation.is_none(),
+            format!("{} schedules", q.schedules),
+        );
+        let qb = ex.explore(&QueueModel::broken_publish());
+        model_line(
+            "queue seeded fault (inverted publish)",
+            qb.violation.is_some(),
+            "caught".to_string(),
+        );
+        let r = ex.explore(&ResGridModel::correct(3));
+        model_line(
+            "reservation claim",
+            r.violation.is_none(),
+            format!("{} schedules", r.schedules),
+        );
+        let rb = ex.explore(&ResGridModel::broken(3));
+        model_line(
+            "reservation seeded fault (read-then-write claim)",
+            rb.violation.is_some(),
+            "caught".to_string(),
+        );
+        let b = ex.explore(&BarrierModel::correct(3));
+        model_line(
+            "split-phase barrier",
+            b.violation.is_none(),
+            format!("{} schedules", b.schedules),
+        );
+        let bb = ex.explore(&BarrierModel::broken_no_reset(2));
+        model_line(
+            "barrier seeded fault (missing gather reset)",
+            bb.violation.is_some(),
+            "caught".to_string(),
+        );
+        if failures > 0 {
+            bail!("{failures} interleaving-model check(s) failed");
+        }
+        if models_only {
+            return Ok(());
+        }
+    }
+
+    if !models_only {
+        let src = std::path::PathBuf::from(
+            opts.str("src", &memlint::default_src_root().to_string_lossy()),
+        );
+        let findings = memlint::lint_tree(&src)
+            .with_context(|| format!("scanning {}", src.display()))?;
+        if !quiet || !findings.is_empty() {
+            println!("{}", memlint::render(&findings));
+        }
+        if !findings.is_empty() {
+            bail!("memory-model lint failed ({} violation(s))", findings.len());
+        }
+        if lint_only {
+            return Ok(());
+        }
+    }
+
+    let cfg = CheckSuiteConfig {
+        nprocs: opts.get("nprocs", 4)?,
+        scale: opts.get("scale", 8)?,
+        n_cols: opts.get("ncols", 32)?,
+    };
+    if !quiet {
+        println!(
+            "checker-armed run matrix ({} PEs, scale {}, {} cols):",
+            cfg.nprocs, cfg.scale, cfg.n_cols
+        );
+    }
+    let out = run_check_suite(&cfg)?;
+    if !quiet || !out.clean() {
+        print!("{}", out.render());
+    }
+    if !out.clean() {
+        bail!("race detector reported {} race(s)", out.total_races);
+    }
+    Ok(())
+}
+
 /// `sparta serve`: run the multi-tenant multiply daemon until SIGTERM,
 /// Ctrl-C, or a protocol `shutdown` — then drain, write per-tenant
 /// BENCH ledgers (with `--out`), and exit 0.
@@ -685,6 +808,7 @@ USAGE:
   sparta run spgemm --alg sa --nprocs 16 --matrix mouse_gene --profile dgx2 [--verify] [--comm full|row] [--semiring SR] [--lookahead N] [--trace[=DIR]]
   sparta chain spmm --steps 3 --alg sc --nprocs 16 --matrix amazon --ncols 128 [--verify] [--out DIR] [--semiring SR] [--lookahead N] [--trace[=DIR]]
   sparta chain spgemm --steps 3 --alg sc --nprocs 16 --matrix mouse_gene [--verify] [--out DIR] [--semiring SR] [--lookahead N] [--trace[=DIR]]
+  sparta check [--lint | --models-only] [--nprocs N] [--scale N] [--ncols N] [--src DIR] [--quiet]
   sparta serve [--addr HOST:PORT] [--nprocs N] [--profile P] [--seg-mb N] [--cache-mb N] [--max-inflight N] [--batch N] [--timeout-ms N] [--stall-ms N] [--trace] [--out DIR]
   sparta client [ACTION] [--addr HOST:PORT] [--tenant NAME] — actions: ping | load-csr NAME | load-dense NAME | multiply A B | unload NAME | list | bench | stats | shutdown
   sparta list
@@ -727,6 +851,15 @@ summary (per-kind p50/p95/max, top comm waits), and folds a `phases`
 section into the BENCH rows. --trace=DIR (run/chain) also writes a
 Chrome/Perfetto TRACE_*.json timeline; bench writes TRACE files next
 to the BENCH files under --out. Open them at https://ui.perfetto.dev.
+
+`sparta check` is the fabric memory-model gate (DESIGN.md §10): it
+exhaustively explores the queue/claim/barrier protocols under every
+bounded thread interleaving, lints the source tree for memory-model
+contract violations (--lint runs only this stage — the CI hook), and
+replays the full multiply matrix (both ops, both comm modes, blocking
+and deep lookahead, all workstealing variants) with the happens-before
+race detector armed. Any seeded fault missed, lint violation, or
+detected race exits nonzero.
 
 `sparta serve` keeps one fabric and its resident operands alive across
 many multiplies and many clients: tenant/name operand namespaces with

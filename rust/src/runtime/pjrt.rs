@@ -123,10 +123,12 @@ mod xla_backend {
         }
 
         pub fn executions(&self) -> u64 {
+            // memmodel-ok: host-side diagnostic counter, not fabric state
             self.executions.load(Ordering::Relaxed)
         }
 
         pub fn fallbacks(&self) -> u64 {
+            // memmodel-ok: host-side diagnostic counter, not fabric state
             self.fallbacks.load(Ordering::Relaxed)
         }
 
@@ -144,6 +146,7 @@ mod xla_backend {
             let art = match self.pick(a.nrows, max_row_nnz, a.ncols, b.ncols) {
                 Some(art) => art,
                 None => {
+                    // memmodel-ok: host-side diagnostic counter, not fabric state
                     self.fallbacks.fetch_add(1, Ordering::Relaxed);
                     crate::matrix::local_spmm::spmm_acc(a, b, c);
                     return;
@@ -151,11 +154,13 @@ mod xla_backend {
             };
             match self.run_artifact(art, a, b, c) {
                 Ok(()) => {
+                    // memmodel-ok: host-side diagnostic counter, not fabric state
                     self.executions.fetch_add(1, Ordering::Relaxed);
                 }
                 Err(e) => {
                     // PJRT failure is loud but non-fatal: numerics fall back.
                     eprintln!("warning: PJRT execution failed ({e}); using native kernel");
+                    // memmodel-ok: host-side diagnostic counter, not fabric state
                     self.fallbacks.fetch_add(1, Ordering::Relaxed);
                     crate::matrix::local_spmm::spmm_acc(a, b, c);
                 }

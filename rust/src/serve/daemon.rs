@@ -145,6 +145,7 @@ impl ServeDaemon {
 
         self.listener.set_nonblocking(true).context("nonblocking listener")?;
         loop {
+            // memmodel-ok: daemon shutdown flag, host-side not fabric state
             if self.shutdown.load(Ordering::SeqCst) || signals::triggered() {
                 break;
             }
@@ -206,6 +207,7 @@ fn handle_batch(registry: &mut Registry, admission: &Admission, batch: Vec<Job>)
     let plans = batch.iter().filter(|j| j.is_plan()).count();
     let live: Vec<&Job> = batch
         .iter()
+        // memmodel-ok: per-job cancel flag, host-side not fabric state
         .filter(|j| !j.cancelled.load(Ordering::SeqCst))
         .collect();
     if !live.is_empty() {
@@ -395,6 +397,7 @@ fn handle_line(
     if matches!(req.cmd, Cmd::Shutdown) {
         // Close admissions first so nothing slips in behind the flag.
         admission.close();
+        // memmodel-ok: daemon shutdown flag, host-side not fabric state
         shutdown.store(true, Ordering::SeqCst);
         return Response::ok(id, "shutdown", vec![("draining".to_string(), Jv::Bool(true))]);
     }
@@ -414,6 +417,7 @@ fn handle_line(
             // Tell the engine nobody is listening; if the run already
             // started it completes (a fabric launch cannot be torn out
             // from under its PE threads) but the reply is dropped.
+            // memmodel-ok: per-job cancel flag, host-side not fabric state
             cancelled.store(true, Ordering::SeqCst);
             Response::err(id, "timeout", &format!("no reply within {timeout_ms} ms"))
         }
@@ -434,6 +438,7 @@ mod signals {
     }
 
     extern "C" fn on_signal(_sig: i32) {
+        // memmodel-ok: async-signal flag, host-side not fabric state
         TRIGGERED.store(true, Ordering::SeqCst);
     }
 
@@ -448,6 +453,7 @@ mod signals {
     }
 
     pub fn triggered() -> bool {
+        // memmodel-ok: async-signal flag, host-side not fabric state
         TRIGGERED.load(Ordering::SeqCst)
     }
 }

@@ -1,0 +1,64 @@
+//! End-to-end tests of the fabric memory-model checker (DESIGN.md §10):
+//! the full checker-armed multiply matrix must be race-free, and
+//! arming the checker must not perturb the simulation — virtual time
+//! and one-sided op counts are bit-identical armed vs disarmed.
+
+use sparta::algorithms::Alg;
+use sparta::coordinator::{run_check_suite, CheckSuiteConfig, Session, SessionConfig};
+use sparta::fabric::{NetProfile, Stats};
+use sparta::matrix::gen;
+
+/// The whole shipped protocol surface under the armed detector: both
+/// ops × both comm modes × lookahead {0, 2} × the workstealing
+/// variants, every run verified. The contract is zero races anywhere.
+#[test]
+fn armed_full_matrix_reports_zero_races() {
+    let cfg = CheckSuiteConfig { nprocs: 4, scale: 7, n_cols: 16 };
+    let out = run_check_suite(&cfg).expect("check suite runs");
+    assert_eq!(out.runs.len(), 32, "2 comm × 2 lookahead × (5 spmm + 3 spgemm) algs");
+    assert!(out.clean(), "armed matrix found races:\n{}", out.render());
+}
+
+fn run_pair(armed: bool) -> (f64, Stats, f64, Stats) {
+    let mut cfg = SessionConfig::new(4, NetProfile::dgx2());
+    cfg.seg_bytes = 64 << 20;
+    let mut sess = Session::new(cfg);
+    if armed {
+        sess.fabric().arm_check();
+    }
+    let a = sess.load_csr(&gen::rmat(7, 6, 0.55, 0.15, 0.15, 3));
+    let b = sess.random_dense(1 << 7, 16, 0x5EED);
+    let sc = sess.plan(a, b).alg(Alg::StationaryC).execute().unwrap().report;
+    let su = sess.plan(a, b).alg(Alg::SummaMpi).execute().unwrap().report;
+    (sc.makespan_ns, sc.totals(), su.makespan_ns, su.totals())
+}
+
+/// Arming the checker adds shadow state only — it never advances a
+/// virtual clock or touches Stats. Two fresh sessions with identical
+/// seeds, one armed and one not, must agree bitwise on makespan and on
+/// every one-sided op count, for both an async RDMA algorithm and a
+/// bulk-synchronous baseline.
+#[test]
+fn armed_and_disarmed_runs_are_bit_identical() {
+    let (on_sc_ms, on_sc, on_su_ms, on_su) = run_pair(true);
+    let (off_sc_ms, off_sc, off_su_ms, off_su) = run_pair(false);
+    for (label, on_ms, on, off_ms, off) in [
+        ("StationaryC", on_sc_ms, on_sc, off_sc_ms, off_sc),
+        ("SummaMpi", on_su_ms, on_su, off_su_ms, off_su),
+    ] {
+        assert_eq!(
+            on_ms.to_bits(),
+            off_ms.to_bits(),
+            "{label}: arming the checker moved virtual time ({on_ms} vs {off_ms})"
+        );
+        assert_eq!(on.n_gets, off.n_gets, "{label}: n_gets");
+        assert_eq!(on.n_puts, off.n_puts, "{label}: n_puts");
+        assert_eq!(on.n_faa, off.n_faa, "{label}: n_faa");
+        assert_eq!(on.n_word_ops, off.n_word_ops, "{label}: n_word_ops");
+        assert_eq!(on.n_queue_push, off.n_queue_push, "{label}: n_queue_push");
+        assert_eq!(on.n_queue_pop, off.n_queue_pop, "{label}: n_queue_pop");
+        assert_eq!(on.bytes_get.to_bits(), off.bytes_get.to_bits(), "{label}: bytes_get");
+        assert_eq!(on.bytes_put.to_bits(), off.bytes_put.to_bits(), "{label}: bytes_put");
+        assert_eq!(on.flops.to_bits(), off.flops.to_bits(), "{label}: flops");
+    }
+}
